@@ -1,0 +1,47 @@
+"""End-to-end model benchmark — Fig. 1 + Fig. 8 analogue.
+
+Snitch/Occamy 16-cluster cycle model for GPT-2, GPT-3-XL, ViT-Base and
+ViT-Huge (non-autoregressive, seq 2048 / 197): runtime + energy, baseline
+vs softmax-optimized, including the runtime-share breakdown of Fig. 1
+(softmax share before/after GEMM optimization).
+"""
+
+from __future__ import annotations
+
+from . import snitch_model as sm
+
+
+def fig1_shares(name="gpt3-xl"):
+    """Softmax share of runtime with unoptimized vs optimized GEMMs
+    (Fig. 1: ~30% before GEMM acceleration, ~70% after, at seq 2048)."""
+    m = sm.E2E_MODELS[name]
+    c = sm.e2e_cycles(m, "baseline")
+    share_opt_gemm = c["softmax"] / c["total"]
+    # unoptimized GEMM: ~8x slower (no FREP/SSR/SIMD, per [5])
+    slow = {"gemm": c["gemm"] * 8, "softmax": c["softmax"],
+            "other": c["other"] * 8}
+    share_unopt_gemm = slow["softmax"] / sum(slow.values())
+    return {"softmax_share_unopt_gemm": share_unopt_gemm,
+            "softmax_share_opt_gemm": share_opt_gemm}
+
+
+def report():
+    rows = []
+    paper = {"gpt2-small": (5.8, 3.6), "gpt3-xl": (2.9, 1.7),
+             "vit-base": (1.9, 1.4), "vit-huge": (1.4, 1.2)}
+    for name, (lat_t, en_t) in paper.items():
+        rows.append((f"e2e_{name}_latency_x", sm.e2e_speedup(name),
+                     f"paper Fig.8: {lat_t}x"))
+        rows.append((f"e2e_{name}_energy_x", sm.e2e_energy_ratio(name),
+                     f"paper Fig.8: {en_t}x"))
+    sh = fig1_shares()
+    rows.append(("fig1_softmax_share_unopt_gemm",
+                 sh["softmax_share_unopt_gemm"], "paper Fig.1: ~0.3"))
+    rows.append(("fig1_softmax_share_opt_gemm",
+                 sh["softmax_share_opt_gemm"], "paper Fig.1: ~0.7"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in report():
+        print(f"{name:40s} {val:10.3f}  {note}")

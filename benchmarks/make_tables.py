@@ -1,0 +1,102 @@
+"""Emit the EXPERIMENTS.md markdown tables from the dry-run/perf artifacts.
+
+  PYTHONPATH=src python -m benchmarks.make_tables [dryrun|roofline|perf]
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from .roofline import (build_table, load_artifacts, PEAK_FLOPS, HBM_BW,
+                       LINK_BW)
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def fmt_bytes(b):
+    if b is None or b < 0:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table():
+    rows = []
+    for mesh in ("single", "multi"):
+        for (arch, shape), rec in sorted(load_artifacts(mesh).items()):
+            st = rec.get("analytic_state", {})
+            coll = rec.get("collectives", {})
+            ctypes = "+".join(
+                f"{k}:{coll[k + '_count']}" for k in
+                ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                 "collective-permute") if k in coll)
+            mem = rec.get("memory_analysis", {})
+            rows.append(
+                f"| {arch} | {shape} | {mesh} | "
+                f"{'OK' if rec['ok'] else 'FAIL'} | "
+                f"{rec.get('compile_s', '-')}s | "
+                f"{fmt_bytes(st.get('total_state_bytes_per_device'))} | "
+                f"{fmt_bytes(mem.get('temp_size_in_bytes'))} | "
+                f"{ctypes} |")
+    print("| arch | shape | mesh | status | compile | state/dev | "
+          "temp/dev | collectives (count) |")
+    print("|---|---|---|---|---|---|---|---|")
+    print("\n".join(rows))
+
+
+def roofline_table():
+    rows = build_table()
+    print("| arch | shape | compute_s | memory_s | collective_s | "
+          "bottleneck | MODEL_FLOPS/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+              f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+              f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+              f"{r['roofline_fraction']:.3f} |")
+
+
+def perf_table():
+    print("| tag | GFLOP/chip | GB/chip | t_compute | t_memory | change |")
+    print("|---|---|---|---|---|---|")
+    for f in sorted(glob.glob(os.path.join(ART, "perf", "*.json"))):
+        r = json.load(open(f))
+        fl, by = r["flops_per_chip"], r["bytes_per_chip"]
+        print(f"| {r['tag']} | {fl/1e9:.1f} | {by/1e9:.2f} | "
+              f"{fl/PEAK_FLOPS:.4f}s | {by/HBM_BW:.4f}s | {r['desc']} |")
+
+
+def skips_table():
+    from repro.configs import REGISTRY, SHAPES
+    print("| arch | shape | status |")
+    print("|---|---|---|")
+    for arch, cfg in sorted(REGISTRY.items()):
+        if arch == "gpt2-small":
+            continue
+        for s in SHAPES:
+            if s in cfg.shapes:
+                print(f"| {arch} | {s} | run |")
+            else:
+                print(f"| {arch} | {s} | SKIP: {cfg.skip_notes[s]} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("dryrun", "all"):
+        print("### Dry-run matrix\n")
+        dryrun_table()
+    if which in ("roofline", "all"):
+        print("\n### Roofline\n")
+        roofline_table()
+    if which in ("perf", "all"):
+        print("\n### Perf iterations\n")
+        perf_table()
+    if which in ("skips", "all"):
+        print("\n### Shape applicability\n")
+        skips_table()

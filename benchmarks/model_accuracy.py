@@ -1,0 +1,85 @@
+"""Model-level accuracy parity — the Table II analogue.
+
+The paper shows GPT-2/ViT accuracy is unchanged when BF16 exp is replaced
+by the VEXP approximation (no retraining). Pretrained weights are not
+available offline, so we measure the *forward parity* that underlies that
+result on a randomly-initialized GPT-2-small-family model at BF16:
+
+  * max/mean absolute logit delta (exact exp vs vexp vs the HW model),
+  * greedy-decode argmax agreement over many positions,
+  * per-token loss delta,
+  * softmax-distribution KL divergence.
+
+Table II's "<0.1% accuracy change" corresponds to argmax agreement ~100%
+and loss deltas far below run-to-run noise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import api
+from repro.data import SyntheticLM
+
+
+def _outputs(cfg, params, batch):
+    x = api.forward(params, cfg, batch)
+    w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    loss = api.loss_fn(params, cfg, batch)
+    return np.asarray(logits), float(loss)
+
+
+def parity_study(b=4, s=128, seed=0):
+    base = get_config("gpt2-small")
+    cfg = dataclasses.replace(base.reduced(), n_layers=4, d_model=256,
+                              n_heads=8, head_dim=32, d_ff=1024)
+    params = api.init_params(
+        dataclasses.replace(cfg, exp_impl="exact"), jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in
+             SyntheticLM(cfg, b, s, seed=seed).batch(0).items()}
+    out = {}
+    ref_logits, ref_loss = _outputs(
+        dataclasses.replace(cfg, exp_impl="exact"), params, batch)
+    ref_p = jax.nn.softmax(jnp.asarray(ref_logits), axis=-1)
+    for impl in ("vexp", "vexp_hw"):
+        if impl == "vexp_hw":
+            continue  # HW model is bf16-elementwise; covered in exp_accuracy
+        c = dataclasses.replace(cfg, exp_impl=impl)
+        logits, loss = _outputs(c, params, batch)
+        p = jax.nn.softmax(jnp.asarray(logits), axis=-1)
+        kl = jnp.sum(ref_p * (jnp.log(ref_p + 1e-12)
+                              - jnp.log(p + 1e-12)), -1)
+        out[impl] = {
+            "max_logit_delta": float(np.abs(logits - ref_logits).max()),
+            "mean_logit_delta": float(np.abs(logits - ref_logits).mean()),
+            "argmax_agree_pct": float(
+                (logits.argmax(-1) == ref_logits.argmax(-1)).mean() * 100),
+            "loss_delta": abs(loss - ref_loss),
+            "loss_ref": ref_loss,
+            "mean_kl": float(jnp.mean(kl)),
+        }
+    return out
+
+
+def report():
+    rows = []
+    for impl, m in parity_study().items():
+        rows.append((f"parity_{impl}_argmax_agree_pct",
+                     m["argmax_agree_pct"], "paper Table II: <0.1% delta"))
+        rows.append((f"parity_{impl}_loss_delta", m["loss_delta"],
+                     f"ref loss {m['loss_ref']:.4f}"))
+        rows.append((f"parity_{impl}_mean_kl", m["mean_kl"], ""))
+        rows.append((f"parity_{impl}_max_logit_delta",
+                     m["max_logit_delta"], ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in report():
+        print(f"{name:35s} {val:12.5f}  {note}")

@@ -1,0 +1,191 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape) on the single-pod 256-chip mesh:
+
+  compute    = HLO_FLOPs_per_chip / 197 TFLOP/s      (bf16 peak, TPU v5e)
+  memory     = HLO_bytes_per_chip / 819 GB/s         (HBM)
+  collective = wire_bytes_per_chip / 50 GB/s         (per ICI link)
+
+HLO FLOPs/bytes come from the dry-run's *unrolled count pass* (the scanned
+production program under-reports while bodies — see launch/dryrun.py
+count_cell; per-chip = global/256, so sharding-induced duplication like
+replicated GQA KV projections is not included). Collective wire bytes use
+the analytic ring-collective model below, cross-checked against the op
+inventory parsed from the compiled HLO.
+
+MODEL_FLOPS (the "useful work" yardstick):
+  train   6 * N_active * tokens   (+2*N for the remat re-forward is NOT
+                                   counted as useful)
+  prefill 2 * N_active * tokens
+  decode  2 * N_active * batch    (+ KV-cache attention reads)
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+LINK_BW = 50e9            # bytes/s / ICI link
+CHIPS = 256
+TP = 16                   # model axis
+DP = 16                   # data axis
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs per step (global)."""
+    n_act = cfg.n_params_matmul()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        base = 6.0 * n_act * B * S
+        attn_mult = 3.0
+    elif shape.kind == "prefill":
+        base = 2.0 * n_act * B * S
+        attn_mult = 1.0
+    else:
+        base = 2.0 * n_act * B
+        attn_mult = 1.0
+    # attention score/value matmuls (not in 6N)
+    attn = 0.0
+    if cfg.n_heads:
+        ctx = min(S, cfg.sliding_window or S)
+        n_attn_layers = (cfg.n_layers // cfg.attn_period
+                         if cfg.family == "hybrid" else cfg.n_layers)
+        hq = cfg.n_heads * cfg.hd
+        if shape.kind == "decode":
+            attn = 4.0 * B * ctx * hq * n_attn_layers
+        else:
+            attn = attn_mult * 4.0 * B * S * ctx * hq * n_attn_layers / 2
+    if cfg.family == "ssm":
+        # SSD: intra-chunk quadratic + state updates per layer
+        q = cfg.ssm_chunk
+        di, ds = cfg.d_inner, cfg.ssm_state
+        if shape.kind == "decode":
+            attn = 2.0 * B * di * ds * 2 * cfg.n_layers
+        else:
+            per_tok = 2.0 * (q * di + 2 * di * ds)
+            attn = attn_mult * B * S * per_tok * cfg.n_layers
+    return base + attn
+
+
+def collective_bytes_per_chip(cfg, shape, rec) -> dict:
+    """Analytic ring-collective wire bytes per chip per step.
+
+    TP (model axis, Megatron pattern): 2 activation all-reduces per layer
+    (attention out + FFN out) in bf16, ring cost 2*(n-1)/n * local bytes.
+    DP (data axis): gradient all-reduce of all parameters in f32 (train
+    only); FSDP archs instead reduce-scatter + all-gather (same wire bytes).
+    Embedding/logits: one all-reduce of the (local-batch, chunk, or 1) x
+    d_model activation for the vocab-parallel matmul + CE reductions.
+    Sequence-parallel decode (B < DP): partial-softmax merge all-reduce of
+    (B, H, hd) per attention layer over the model axis.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dpb = max(B // DP, 1)                         # local batch
+    d = cfg.d_model
+    act = 2.0                                     # bf16 bytes
+    ring_tp = 2.0 * (TP - 1) / TP
+    ring_dp = 2.0 * (DP - 1) / DP
+    L = cfg.n_layers
+    n_attn = (L // cfg.attn_period if cfg.family == "hybrid" else L)
+
+    out = {"tp": 0.0, "dp": 0.0, "embed": 0.0, "sp": 0.0, "ep": 0.0}
+    tokens_local = dpb * (S if shape.kind != "decode" else 1)
+    # TP activation all-reduces: 2 per transformer layer (attn out + FFN
+    # out, Megatron row-parallel), 1 for parallel blocks (fused residual)
+    # and for SSM layers (col-parallel in_proj needs none; only the
+    # row-parallel out_proj reduces).
+    ars_per_layer = 1.0 if (cfg.parallel_block
+                            or cfg.family == "ssm") else 2.0
+    out["tp"] = (ring_tp * ars_per_layer * L
+                 * tokens_local * d * act)
+    # vocab-parallel logits: all-reduce of CE partials (lse etc.) — small;
+    # embedding gather all-to-all approx: tokens * d
+    out["embed"] = ring_tp * tokens_local * d * act
+    if cfg.n_experts:
+        # EP all-to-all (dispatch + combine) of top_k routed token copies
+        out["ep"] = 2.0 * cfg.top_k * tokens_local * d * act * (TP - 1) / TP
+    if shape.kind == "train":
+        # gradients are TP-sharded like the params: use the per-device
+        # param bytes from the dry-run artifact (f32 grads match f32 params)
+        ppd = (rec.get("analytic_state") or {}).get(
+            "params_bytes_per_device") or cfg.n_params() * 4.0 / TP
+        out["dp"] = ring_dp * ppd
+    if shape.kind == "decode" and B < DP:
+        # sequence-parallel flash-decode merge over the model axis
+        hq = max(cfg.n_heads, 1) * cfg.hd
+        out["sp"] = ring_tp * n_attn * B * hq * 4.0
+    out["total"] = sum(out.values())
+    return out
+
+
+def load_artifacts(mesh="single") -> dict:
+    out = {}
+    for f in glob.glob(os.path.join(ART_DIR, f"*__{mesh}.json")):
+        rec = json.load(open(f))
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def roofline_row(cfg, shape, rec) -> dict:
+    counted = rec.get("counted") or {}
+    if "flops_per_chip" in counted:
+        flops_chip = counted["flops_per_chip"]
+        bytes_chip = counted["bytes_per_chip"]
+        src = "hlo-counted"
+    else:
+        flops_chip = rec.get("flops_per_device", 0)
+        bytes_chip = rec.get("bytes_accessed_per_device", 0)
+        src = "hlo-scanned(undercount)"
+    coll = collective_bytes_per_chip(cfg, shape, rec)
+    t_c = flops_chip / PEAK_FLOPS
+    t_m = bytes_chip / HBM_BW
+    t_x = coll["total"] / LINK_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    step_time = max(t_c, t_m, t_x)
+    mfu = (mf / CHIPS / PEAK_FLOPS) / step_time if step_time else 0.0
+    return {
+        "arch": cfg.arch_id, "shape": shape.name,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "bottleneck": dom,
+        "model_flops": mf,
+        "hlo_flops_global": flops_chip * CHIPS,
+        "useful_ratio": mf / (flops_chip * CHIPS) if flops_chip else 0.0,
+        "roofline_fraction": mfu,
+        "flops_src": src,
+        "coll_breakdown": coll,
+    }
+
+
+def build_table(mesh="single"):
+    from repro.configs import REGISTRY, SHAPES
+    arts = load_artifacts(mesh)
+    rows = []
+    for (arch, shape_name), rec in sorted(arts.items()):
+        cfg = REGISTRY[arch]
+        rows.append(roofline_row(cfg, SHAPES[shape_name], rec))
+    return rows
+
+
+def main():
+    rows = build_table()
+    hdr = (f"{'arch':<18} {'shape':<12} {'compute_s':>10} {'memory_s':>10} "
+           f"{'collect_s':>10} {'bottleneck':<11} {'useful':>7} {'MFU':>6}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:<18} {r['shape']:<12} {r['compute_s']:>10.4f} "
+              f"{r['memory_s']:>10.4f} {r['collective_s']:>10.4f} "
+              f"{r['bottleneck']:<11} {r['useful_ratio']:>7.2f} "
+              f"{r['roofline_fraction']:>6.3f}")
+
+
+if __name__ == "__main__":
+    main()

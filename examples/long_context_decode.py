@@ -1,0 +1,62 @@
+"""Long-context decode demo: the sequence-parallel flash-decode path.
+
+Shows the paper's partial-softmax merge doing real distributed work: a KV
+cache sharded along the *sequence* axis produces per-shard (m, l, acc)
+partial softmax statistics that merge through an all-reduce — numerically
+identical to replicated decode. Runs on 8 fake host devices.
+
+  python examples/long_context_decode.py     (sets its own XLA_FLAGS)
+"""
+
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import api
+from repro.distributed import sharding as shd
+
+
+def main():
+    cfg = get_config("gpt2-small").reduced()
+    b, s, smax = 1, 48, 64
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    _, cache = api.prefill(params, cfg, {"tokens": toks})
+    ck = jnp.zeros((cfg.n_layers, b, smax, cfg.n_kv_heads, cfg.hd),
+                   jnp.bfloat16).at[:, :, :s].set(cache["k"])
+    cv = jnp.zeros_like(ck).at[:, :, :s].set(cache["v"])
+    cache = {"k": ck, "v": cv}
+    tok = toks[:, -1:]
+    f = lambda p, t, c, pos: api.decode_step(p, cfg, t, c, pos)
+    ref, _ = jax.jit(f)(params, tok, cache, jnp.int32(s - 1))
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with mesh:
+        cs = {"k": P(None, None, "model", None, None),
+              "v": P(None, None, "model", None, None)}
+        cc = jax.device_put(cache, shd.named(mesh, cs))
+        pp = jax.device_put(params,
+                            shd.named(mesh, shd.param_specs(cfg, mesh)))
+        out, _ = jax.jit(f)(pp, tok, cc, jnp.int32(s - 1))
+    delta = float(jnp.abs(ref - out).max())
+    print(f"[long-context] KV cache sharded over 'model' (seq axis), "
+          f"batch=1 at 8 devices")
+    print(f"[long-context] max |replicated - seq-parallel| logits delta: "
+          f"{delta:.2e}")
+    assert delta < 1e-2
+    print("[long-context] sequence-parallel flash-decode == replicated  OK")
+
+
+if __name__ == "__main__":
+    main()

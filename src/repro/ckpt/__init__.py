@@ -1,0 +1,2 @@
+from .checkpoint import (save, restore, latest_step, unflatten_like,
+                         reshard, AsyncCheckpointer)

@@ -1,0 +1,21 @@
+"""Config registry: one module per assigned architecture (+ the paper's)."""
+
+from .base import ModelConfig, InputShape, SHAPES
+
+from . import (command_r_35b, h2o_danube3_4b, phi3_medium_14b, stablelm_3b,
+               grok1_314b, dbrx_132b, recurrentgemma_9b, internvl2_1b,
+               mamba2_1_3b, hubert_xlarge, gpt2_small)
+
+REGISTRY = {m.CONFIG.arch_id: m.CONFIG for m in (
+    command_r_35b, h2o_danube3_4b, phi3_medium_14b, stablelm_3b,
+    grok1_314b, dbrx_132b, recurrentgemma_9b, internvl2_1b,
+    mamba2_1_3b, hubert_xlarge, gpt2_small)}
+
+ASSIGNED = [a for a in REGISTRY if a != "gpt2-small"]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        return REGISTRY[arch_id]
+    except KeyError:
+        raise ValueError(f"unknown arch {arch_id!r}; one of {list(REGISTRY)}")

@@ -1,0 +1,192 @@
+"""Model configuration schema + the assigned input-shape sets.
+
+One ``ModelConfig`` per assigned architecture lives in
+``src/repro/configs/<arch_id>.py``; all register into ``configs.REGISTRY``.
+Every config provides ``reduced()`` — a tiny same-family variant used by the
+CPU smoke tests (full configs are exercised only via the dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+
+# The assigned LM-family shape set (seq_len, global_batch, kind).
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                     # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    causal: bool = True             # False for encoder-only (hubert)
+    rope_theta: float = 10000.0
+    rope_pct: float = 1.0           # fraction of head_dim rotated (stablelm)
+    sliding_window: Optional[int] = None
+    parallel_block: bool = False    # command-r style parallel attn+FFN
+    use_bias: bool = False
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    act: str = "swiglu"             # swiglu | gelu
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    logit_softcap: float = 0.0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # hybrid (recurrentgemma / griffin)
+    attn_period: int = 0            # 1 attention layer per `attn_period`
+    lru_width: int = 0
+    conv_width: int = 4
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 256
+    ssm_ngroups: int = 1
+    # modality stubs
+    n_vision_tokens: int = 0        # vlm: precomputed patch embeddings
+    vision_embed_dim: int = 0
+    frame_input_dim: int = 0        # audio: precomputed frame features
+    # numerics / execution
+    exp_impl: str = "vexp"          # the paper's knob: vexp | exact | vexp_hw
+    attention_impl: str = "flash"   # flash | xla | pallas
+    # perf knobs (EXPERIMENTS.md §Perf): matmul input dtype for attention
+    # score/PV and decode cache reads ("bf16" = MXU-native inputs with f32
+    # accumulation; "f32" = conservative upcast-everything baseline), and
+    # the FlashAttention KV block size (acc rescale traffic ~ Sk/block).
+    attn_mm_dtype: str = "f32"
+    attn_block_k: int = 512
+    logits_mm_dtype: str = "f32"    # serving logits matmul input dtype
+    # decode KV-cache layout: "bshd" (seq-major, baseline) or "bhsd"
+    # (head-major: no transpose before the decode einsums, and the head
+    # dim shards over `model` when n_kv_heads divides it) — §Perf iter C3.
+    kv_cache_layout: str = "bshd"
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    loss_chunk: int = 512           # chunked cross-entropy seq chunk
+    # dry-run cost accounting: unroll every internal scan so XLA's
+    # HloCostAnalysis (which counts while bodies once) sees the full work.
+    unroll_scans: bool = False
+    # which assigned shapes apply (others recorded as skipped + why)
+    shapes: tuple = ("train_4k", "prefill_32k", "decode_32k")
+    skip_notes: dict = field(default_factory=dict)
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding-table rows padded to 256 so the vocab dim shards
+        evenly on any mesh axis (standard large-scale practice). Logits in
+        the padded range are masked to -inf at the serving boundary."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def n_params(self) -> float:
+        """Approximate total parameter count (for roofline MODEL_FLOPS)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd, h, hkv = self.hd, self.n_heads, self.n_kv_heads
+        attn = d * hd * (h + 2 * hkv) + h * hd * d
+        if self.family == "ssm":
+            di, ds, nh = self.d_inner, self.ssm_state, self.ssm_nheads
+            ng = self.ssm_ngroups
+            per = d * (2 * di + 2 * ng * ds + nh) + di * d + di + nh * 2
+            return self.n_layers * per + 2 * v * d
+        n_mats = 3 if self.act == "swiglu" else 2
+        if self.family == "moe":
+            ffn = n_mats * d * f * self.n_experts + d * self.n_experts
+        else:
+            ffn = n_mats * d * f
+        per = attn + ffn
+        if self.family == "hybrid":
+            # attn only on every attn_period-th layer; others RG-LRU
+            w = self.lru_width or d
+            rec = d * w * 2 + w * d + 3 * w + w * self.conv_width + 3 * d * f
+            n_attn = self.n_layers // max(self.attn_period, 1)
+            n_rec = self.n_layers - n_attn
+            return n_attn * per + n_rec * rec + 2 * v * d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per + emb
+
+    def n_params_active(self) -> float:
+        """Active params per token (MoE counts top_k experts only)."""
+        if self.family != "moe":
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        n_mats = 3 if self.act == "swiglu" else 2
+        dense_ffn = n_mats * d * f * (self.n_experts - self.top_k)
+        return self.n_params() - self.n_layers * dense_ffn
+
+    def n_params_matmul(self) -> float:
+        """Active params that participate in matmuls (excludes the
+        embedding lookup table — gathers contribute no FLOPs)."""
+        return self.n_params_active() - self.vocab * self.d_model
+
+    def optimized(self) -> "ModelConfig":
+        """The beyond-paper perf configuration (EXPERIMENTS.md §Perf):
+        bf16 matmul inputs with f32 accumulation, larger FA KV blocks,
+        head-major decode cache. The paper-faithful baseline is the
+        default construction."""
+        return replace(self, attn_mm_dtype="bf16", attn_block_k=2048,
+                       logits_mm_dtype="bf16", kv_cache_layout="bhsd")
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        return replace(
+            self,
+            n_layers=max(2, min(self.n_layers, 2) if self.attn_period == 0
+                         else self.attn_period + 1),  # +1 => tail covered
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads < self.n_heads
+            else 4,
+            head_dim=32,
+            d_ff=256 if self.d_ff else 0,
+            vocab=512,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            lru_width=128 if self.lru_width else 0,
+            sliding_window=16 if self.sliding_window else None,
+            ssm_headdim=32 if self.ssm_state else 64,
+            ssm_state=min(self.ssm_state, 32),
+            ssm_chunk=16,
+            n_vision_tokens=min(self.n_vision_tokens, 8),
+            vision_embed_dim=min(self.vision_embed_dim, 64),
+            frame_input_dim=min(self.frame_input_dim, 64),
+            loss_chunk=64,
+            remat=False,
+        )

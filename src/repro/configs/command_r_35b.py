@@ -1,0 +1,19 @@
+"""command-r-35b [dense]: 40L d=8192 64H GQA(kv=8) ff=22528 V=256000.
+
+GQA, no-bias, parallel attention+FFN blocks, non-tied large vocab.
+[hf:CohereForAI/c4ai-command-r-v01; unverified]
+long_500k skipped: pure full attention (quadratic) — see DESIGN.md §4.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="command-r-35b", family="dense",
+    n_layers=40, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22528, vocab=256000, head_dim=128,
+    parallel_block=True, use_bias=False, norm="layernorm", act="swiglu",
+    rope_theta=8_000_000.0,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes={"long_500k": "pure full-attention arch (quadratic); "
+                             "sub-quadratic required for 500k decode"},
+    source="hf:CohereForAI/c4ai-command-r-v01",
+)

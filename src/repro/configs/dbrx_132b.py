@@ -1,0 +1,17 @@
+"""dbrx-132b [moe]: 40L d=6144 48H GQA(kv=8) ff=10752 V=100352, 16e top-4.
+
+Fine-grained MoE: 16 experts / top-4 — E=16 divides the model axis exactly,
+so expert parallelism is the natural sharding. [hf:databricks/dbrx-base;
+unverified]. long_500k skipped: full attention.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=10752, vocab=100352, head_dim=128,
+    n_experts=16, top_k=4, act="swiglu",
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes={"long_500k": "pure full-attention arch (quadratic)"},
+    source="hf:databricks/dbrx-base",
+)

@@ -1,0 +1,16 @@
+"""gpt2-small — the paper's own evaluation model (GPT-2 Small, head dim 64).
+
+Used by the FlashAttention-2 and end-to-end benchmarks to mirror the
+paper's GPT-2 configuration (12L, d=768, 12H, MHA).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="gpt2-small", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+    d_ff=3072, vocab=50257, head_dim=64,
+    act="gelu", norm="layernorm", use_bias=True, tie_embeddings=True,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes={"long_500k": "pure full-attention arch (quadratic)"},
+    source="paper (GPT-2 small)",
+)

@@ -1,0 +1,17 @@
+"""grok-1-314b [moe]: 64L d=6144 48H GQA(kv=8) ff=32768 V=131072, 8e top-2.
+
+8 experts / top-2. E=8 does not divide the model axis (16), so the sharding
+rules use TP-inside-expert (d_ff 32768/16) instead of pure EP.
+[hf:xai-org/grok-1; unverified]. long_500k skipped: full attention.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=32768, vocab=131072, head_dim=128,
+    n_experts=8, top_k=2, act="gelu", logit_softcap=30.0,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes={"long_500k": "pure full-attention arch (quadratic)"},
+    source="hf:xai-org/grok-1",
+)

@@ -1,0 +1,15 @@
+"""h2o-danube-3-4b [dense]: 24L d=3840 32H GQA(kv=8) ff=10240 V=32000.
+
+llama+mistral mix with sliding-window attention. [arXiv:2401.16818;
+unverified]. SWA => O(window) decode, so long_500k RUNS for this arch.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="h2o-danube3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8,
+    d_ff=10240, vocab=32000, head_dim=120,
+    sliding_window=4096, act="swiglu", rope_theta=10000.0,
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    source="arXiv:2401.16818",
+)

@@ -1,0 +1,20 @@
+"""hubert-xlarge [audio]: 48L d=1280 16H MHA ff=5120 V=504 classes.
+
+Encoder-only (bidirectional); conv feature extractor is a STUB —
+input_specs() provides precomputed 512-dim frame features, projected to
+d_model with learned positions. No decode step => decode_32k / long_500k
+skipped. [arXiv:2106.07447; unverified]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+    d_ff=5120, vocab=504, head_dim=80,
+    causal=False, rope_pct=0.0, act="gelu", norm="layernorm", use_bias=True,
+    frame_input_dim=512,
+    shapes=("train_4k", "prefill_32k"),
+    skip_notes={"decode_32k": "encoder-only arch: no autoregressive decode",
+                "long_500k": "encoder-only arch: no decode shapes"},
+    source="arXiv:2106.07447",
+)

@@ -1,0 +1,19 @@
+"""internvl2-1b [vlm]: 24L d=896 14H GQA(kv=2) ff=4864 V=151655.
+
+InternViT frontend is a STUB: input_specs() provides precomputed patch
+embeddings (256 tokens, 1024-dim) projected into the LM. The backbone is
+the InternLM2/Qwen2-style LM given above. [arXiv:2404.16821; hf]
+long_500k skipped: pure full attention.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="internvl2-1b", family="vlm",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+    d_ff=4864, vocab=151655, head_dim=64,
+    act="swiglu", rope_theta=1_000_000.0,
+    n_vision_tokens=256, vision_embed_dim=1024,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes={"long_500k": "pure full-attention arch (quadratic)"},
+    source="arXiv:2404.16821",
+)

@@ -1,0 +1,17 @@
+"""mamba2-1.3b [ssm]: 48L d=2048 attn-free, state=128 (SSD). V=50280.
+
+State-space duality; expand=2 => d_inner 4096, headdim 64 => 64 heads.
+Attention-free => softmax kernel inapplicable (DESIGN.md §4) but the SSD
+decays/softplus/silu all use vexp. Sub-quadratic => long_500k RUNS.
+[arXiv:2405.21060; unverified]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="mamba2-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab=50280,
+    ssm_state=128, ssm_expand=2, ssm_headdim=64, ssm_chunk=256,
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    source="arXiv:2405.21060",
+)

@@ -1,0 +1,16 @@
+"""phi3-medium-14b [dense]: 40L d=5120 40H GQA(kv=10) ff=17920 V=100352.
+
+RoPE + SwiGLU + GQA. [arXiv:2404.14219; unverified]
+long_500k skipped: pure full attention.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi3-medium-14b", family="dense",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=10,
+    d_ff=17920, vocab=100352, head_dim=128,
+    act="swiglu", rope_theta=10000.0,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes={"long_500k": "pure full-attention arch (quadratic)"},
+    source="arXiv:2404.14219",
+)

@@ -1,0 +1,16 @@
+"""recurrentgemma-9b [hybrid]: 38L d=4096 16H MQA(kv=1) ff=12288 V=256000.
+
+RG-LRU + local attention, pattern (rec, rec, attn) => attn_period=3,
+window 2048. Sub-quadratic => long_500k RUNS. [arXiv:2402.19427; unverified]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="recurrentgemma-9b", family="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1,
+    d_ff=12288, vocab=256000, head_dim=256,
+    attn_period=3, lru_width=4096, sliding_window=2048,
+    act="gelu", rope_pct=0.5, logit_softcap=30.0,
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    source="arXiv:2402.19427",
+)

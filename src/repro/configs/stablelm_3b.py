@@ -1,0 +1,16 @@
+"""stablelm-3b [dense]: 32L d=2560 32H GQA(kv=32=MHA) ff=6912 V=50304.
+
+Partial rotary (25%) per the stablelm family. [hf:stabilityai/stablelm-2;
+unverified]. long_500k skipped: pure full attention.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="stablelm-3b", family="dense",
+    n_layers=32, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=6912, vocab=50304, head_dim=80,
+    rope_pct=0.25, act="swiglu", norm="layernorm", use_bias=False,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes={"long_500k": "pure full-attention arch (quadratic)"},
+    source="hf:stabilityai/stablelm-2-1_6b",
+)

@@ -1,0 +1,15 @@
+"""Core: the paper's contribution — VEXP exponential, softmax, attention.
+
+Function exports avoid shadowing the ``softmax`` / ``attention`` submodules:
+use ``repro.core.softmax.softmax(...)`` / ``repro.core.attention.attention``
+or the aliases ``vexp_softmax`` / ``vexp_attention`` below.
+"""
+
+from . import vexp, softmax, attention
+from .vexp import (vexp_f32, vexp_bf16, vexp_bf16_fixedpoint, exact_exp,
+                   get_exp_fn, EXP_FNS, ALPHA, BETA, GAMMA1, GAMMA2)
+from .softmax import (log_softmax, SoftmaxStats, stats_init,
+                      stats_update, stats_merge)
+from .softmax import softmax as vexp_softmax
+from .attention import (attention_xla, attention_flash, decode_attention)
+from .attention import attention as vexp_attention

@@ -1,0 +1,215 @@
+"""Attention with VEXP softmax: reference, FlashAttention-2, and decode paths.
+
+Shape convention: q, k, v are (B, S, H, D) / (B, S, H_kv, D). GQA is handled
+by grouping query heads over KV heads (no materialized KV repeat).
+
+Three implementations, selected by ``impl``:
+
+``"xla"``     plain materialized-scores attention (oracle; XLA fuses this
+              well for short sequences under remat),
+``"flash"``   FlashAttention-2 structured scan over KV blocks with online
+              (m, l) statistics — the paper's partial softmax (§III-B/IV-D),
+``"pallas"``  the Pallas TPU kernel (kernels/flash_attention), gated behind
+              a flag because this container lowers for CPU.
+
+``decode_attention`` is the single-token path used by serve_step: it supports
+a sequence-sharded KV cache (sequence-parallel "flash-decode"); because it is
+written as max/sum reductions over the cache's sequence axis, GSPMD lowers
+the sharded reduction to the partial-softmax merge + all-reduce automatically.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .vexp import get_exp_fn
+
+NEG_INF = -1e30  # finite mask value: keeps vexp branches NaN-free
+
+
+def _resolve(exp_impl) -> Callable:
+    return exp_impl if callable(exp_impl) else get_exp_fn(exp_impl)
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, scale: float) -> jax.Array:
+    """(B,Sq,H,D) x (B,Sk,Hkv,D) -> scores (B, Hkv, G, Sq, Sk)."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k) * scale
+
+
+def _mask(sq: int, sk: int, *, causal: bool, window: Optional[int],
+          q_offset: int | jax.Array = 0) -> Optional[jax.Array]:
+    """Boolean (Sq, Sk) mask (True = keep). q_offset is the absolute position
+    of q[0] minus that of k[0] (for prefill/decode with caches)."""
+    if not causal and window is None:
+        return None
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    keep = jnp.ones((sq, sk), bool)
+    if causal:
+        keep &= kpos <= qpos
+    if window is not None:
+        keep &= kpos > qpos - window
+    return keep
+
+
+def attention_xla(q, k, v, *, causal=True, window=None, exp_impl="vexp",
+                  q_offset=0, sm_scale=None):
+    """Reference attention: materializes the score matrix."""
+    exp_fn = _resolve(exp_impl)
+    d = q.shape[-1]
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    s = _gqa_scores(q.astype(jnp.float32), k.astype(jnp.float32), scale)
+    msk = _mask(q.shape[1], k.shape[1], causal=causal, window=window,
+                q_offset=q_offset)
+    if msk is not None:
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+    m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    p = exp_fn(s - m)
+    if msk is not None:
+        p = jnp.where(msk[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p * (1.0 / jnp.maximum(l, 1e-30))          # NORM: reciprocal-multiply
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    b, sq, hkv, g, dd = o.shape
+    return o.reshape(b, sq, hkv * g, dd).astype(q.dtype)
+
+
+def attention_flash(q, k, v, *, causal=True, window=None, exp_impl="vexp",
+                    q_offset=0, sm_scale=None, block_k=512, unroll=False,
+                    mm_dtype="f32"):
+    """FlashAttention-2-structured attention (pure JAX scan over KV blocks).
+
+    Maintains per-row running (m, l, acc); each block applies the paper's
+    partial-softmax update: rescale by exp(m_old - m_new), accumulate
+    exp(s - m_new) and its V-weighted sum. Never materializes (Sq, Sk).
+
+    mm_dtype="bf16" feeds the score/PV matmuls MXU-native bf16 inputs with
+    f32 accumulation (preferred_element_type) — (m, l, acc) statistics stay
+    f32, so only matmul *inputs* lose precision (§Perf iteration A1).
+    """
+    exp_fn = _resolve(exp_impl)
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    mdt = jnp.bfloat16 if mm_dtype == "bf16" else jnp.float32
+    block_k = min(block_k, sk)
+    nblk = -(-sk // block_k)
+    pad = nblk * block_k - sk
+    if pad:
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        kp, vp = k, v
+    kb = kp.reshape(b, nblk, block_k, hkv, d).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(b, nblk, block_k, hkv, d).transpose(1, 0, 2, 3, 4)
+    qg = (q.astype(jnp.float32) * scale).astype(mdt) \
+        .reshape(b, sq, hkv, g, d)
+
+    qpos = jnp.arange(sq) + q_offset
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, iblk = blk
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kblk.astype(mdt),
+                       preferred_element_type=jnp.float32)
+        kpos = iblk * block_k + jnp.arange(block_k)
+        keep = kpos[None, :] < sk
+        if causal:
+            keep &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            keep &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(keep[None, None, None], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        alpha = exp_fn(m - m_new)
+        p = exp_fn(s - m_new[..., None])
+        p = jnp.where(keep[None, None, None], p, 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(mdt), vblk.astype(mdt),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(nblk)), unroll=unroll)
+    out = acc * (1.0 / jnp.maximum(l, 1e-30))[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, exp_impl="vexp",
+              q_offset=0, sm_scale=None, impl="flash", block_k=512,
+              unroll=False, mm_dtype="f32"):
+    if impl == "xla":
+        return attention_xla(q, k, v, causal=causal, window=window,
+                             exp_impl=exp_impl, q_offset=q_offset,
+                             sm_scale=sm_scale)
+    if impl == "flash":
+        return attention_flash(q, k, v, causal=causal, window=window,
+                               exp_impl=exp_impl, q_offset=q_offset,
+                               sm_scale=sm_scale, block_k=block_k,
+                               unroll=unroll, mm_dtype=mm_dtype)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                      sm_scale=sm_scale)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                     exp_impl="vexp", sm_scale=None, mm_dtype="f32",
+                     layout="bshd"):
+    """Single-token decode attention over a (possibly sequence-sharded) cache.
+
+    q: (B, 1, H, D); caches: (B, S_max, Hkv, D); cache_len: scalar or (B,)
+    number of valid positions (the new token's K/V must already be written).
+
+    Written as pure max/sum reductions over the cache sequence axis so that a
+    cache sharded along S lowers to partial (m, l, acc) per shard + a cheap
+    all-reduce merge — the paper's partial-softmax algebra as SPMD collective.
+    """
+    exp_fn = _resolve(exp_impl)
+    b, _, h, d = q.shape
+    if layout == "bhsd":
+        hkv, smax = k_cache.shape[1], k_cache.shape[2]
+    else:
+        smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    mdt = jnp.bfloat16 if mm_dtype == "bf16" else jnp.float32
+    qg = (q.astype(jnp.float32) * scale).astype(mdt).reshape(b, hkv, g, d)
+    # cache reads stay in their storage dtype under mm_dtype="bf16": no
+    # materialized f32 copy of the cache (§Perf iter C1); the "bhsd"
+    # layout feeds the einsum directly — no cache transpose (§Perf C3)
+    eq_s = "bkgd,bktd->bkgt" if layout == "bhsd" else "bkgd,btkd->bkgt"
+    s = jnp.einsum(eq_s, qg, k_cache.astype(mdt),
+                   preferred_element_type=jnp.float32)
+    pos = jnp.arange(smax)
+    cl = jnp.asarray(cache_len)
+    keep = pos[None, :] < (cl.reshape(-1, 1) if cl.ndim else cl[None, None])
+    if window is not None:
+        start = (cl.reshape(-1, 1) if cl.ndim else cl[None, None]) - window
+        keep = keep & (pos[None, :] >= start)
+    s = jnp.where(keep[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = exp_fn(s - m)
+    p = jnp.where(keep[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p * (1.0 / jnp.maximum(l, 1e-30))
+    eq_o = "bkgt,bktd->bkgd" if layout == "bhsd" else "bkgt,btkd->bkgd"
+    o = jnp.einsum(eq_o, p.astype(mdt), v_cache.astype(mdt),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,106 @@
+"""Softmax built on the VEXP exponential, plus online (partial) softmax algebra.
+
+Implements the paper's optimized kernel structure (§IV-C):
+
+  MAX  — row max (numerical stability),
+  EXP  — vexp(x - max) with fused sum accumulation,
+  NORM — one reciprocal per row, then pointwise multiply
+         (never a per-element divide; Snitch's divider is unpipelined and the
+         TPU VPU's divide is similarly much slower than multiply).
+
+The *online* variants maintain FlashAttention-style running statistics
+(m = running max, l = running sum of exponentials) and a merge rule that is
+associative and commutative — the same algebra the paper uses for partial
+softmax on SPM tiles, and that we additionally exploit for sequence-parallel
+(KV-sharded) decode where each shard computes partial (m, l, acc) and the
+merge happens through an all-reduce.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .vexp import get_exp_fn
+
+
+def softmax(x: jax.Array, axis: int = -1, *, exp_impl: str | Callable = "vexp",
+            where=None) -> jax.Array:
+    """Numerically-stable softmax with a pluggable exp backend.
+
+    exp_impl: "vexp" (paper's approximation), "exact" (transcendental),
+    "vexp_hw" (bit-exact hardware model), or a callable.
+    """
+    exp_fn = exp_impl if callable(exp_impl) else get_exp_fn(exp_impl)
+    if where is not None:
+        x = jnp.where(where, x, -jnp.inf)
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    m = jnp.where(jnp.isfinite(m), m, 0.0)  # all-masked rows
+    e = exp_fn(x - m)
+    if where is not None:
+        e = jnp.where(where, e, 0.0)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    # NORM: reciprocal once, multiply everywhere.
+    return e * (1.0 / s)
+
+
+def log_softmax(x: jax.Array, axis: int = -1, *,
+                exp_impl: str | Callable = "vexp") -> jax.Array:
+    """log softmax; the log itself stays exact (only exp is approximated)."""
+    exp_fn = exp_impl if callable(exp_impl) else get_exp_fn(exp_impl)
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    shifted = x - m
+    s = jnp.sum(exp_fn(shifted), axis=axis, keepdims=True)
+    return shifted - jnp.log(s)
+
+
+class SoftmaxStats(NamedTuple):
+    """Online softmax running statistics for a row (or batch of rows)."""
+    m: jax.Array    # running max
+    l: jax.Array    # running sum of exp(x - m)
+
+
+def stats_init(shape, dtype=jnp.float32) -> SoftmaxStats:
+    return SoftmaxStats(m=jnp.full(shape, -jnp.inf, dtype),
+                        l=jnp.zeros(shape, dtype))
+
+
+def stats_update(stats: SoftmaxStats, x_blk: jax.Array, axis: int = -1, *,
+                 exp_fn: Callable) -> tuple[SoftmaxStats, jax.Array, jax.Array]:
+    """Absorb one block of scores; returns (new_stats, p_blk, alpha).
+
+    p_blk = exp(x_blk - m_new) and alpha = exp(m_old - m_new) is the
+    correction factor the caller applies to any accumulator keyed on m_old
+    (the FlashAttention-2 rescale).
+    """
+    m_blk = jnp.max(x_blk, axis=axis)
+    m_new = jnp.maximum(stats.m, m_blk)
+    # Guard -inf - -inf = nan for fully-masked blocks.
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = exp_fn(jnp.where(jnp.isfinite(stats.m), stats.m - safe_m, -jnp.inf))
+    alpha = jnp.where(jnp.isfinite(stats.m), alpha, 0.0)
+    p_blk = exp_fn(x_blk - jnp.expand_dims(safe_m, axis))
+    p_blk = jnp.where(jnp.isfinite(x_blk), p_blk, 0.0)
+    l_new = stats.l * alpha + jnp.sum(p_blk, axis=axis)
+    return SoftmaxStats(m=m_new, l=l_new), p_blk, alpha
+
+
+def stats_merge(a: SoftmaxStats, b: SoftmaxStats, *,
+                exp_fn: Callable) -> tuple[SoftmaxStats, jax.Array, jax.Array]:
+    """Merge two partial softmaxes; returns (merged, alpha_a, alpha_b).
+
+    alpha_* rescale accumulators built against each partial max. Associative
+    + commutative, so it is safe inside tree reductions / all-reduces
+    (sequence-parallel decode) exactly like the paper's tile merge.
+    """
+    m = jnp.maximum(a.m, b.m)
+    safe_m = jnp.where(jnp.isfinite(m), m, 0.0)
+
+    def _alpha(mm):
+        al = exp_fn(jnp.where(jnp.isfinite(mm), mm - safe_m, -jnp.inf))
+        return jnp.where(jnp.isfinite(mm), al, 0.0)
+
+    aa, ab = _alpha(a.m), _alpha(b.m)
+    return SoftmaxStats(m=m, l=a.l * aa + b.l * ab), aa, ab

@@ -1,0 +1,206 @@
+"""VEXP: fast exponential approximation (Schraudolph + Belano polynomial).
+
+This is the paper's core contribution, adapted for TPU. Two implementations:
+
+``vexp_f32``
+    The *deployable* TPU path. Schraudolph's method computed in f32 on the
+    VPU: ``x' = x*log2(e)``, split into integer/fraction, two-branch quadratic
+    mantissa correction P(frac) (paper Eq. 2), and the result ``2^i * (1+P)``
+    reconstructed with integer bit manipulation (no transcendental unit).
+    Ops used: mul, floor, cmp/select, int shift/and/add, bitcast — all cheap
+    single-issue VPU ops.
+
+``vexp_bf16_fixedpoint``
+    A bit-level model of the paper's hardware datapath (Fig. 3c-e): BF16
+    decomposition, Q-format fixed-point multiply by log2(e), shift/round to a
+    Q?.15 fixed-point x', fixed-point P(x) with ``not()`` complements standing
+    in for ``1-x``, and round-to-nearest-7-bit mantissa reconstruction.
+    Used for accuracy studies ("what would the silicon produce").
+
+Both satisfy the paper's accuracy envelope (~0.14% mean / ~0.78% max relative
+error vs. the true exponential; see benchmarks/exp_accuracy.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Paper §III-D constants (Belano et al., Monte-Carlo optimized).
+ALPHA = 0.21875        # = 7/32,  exact in binary
+BETA = 0.4375          # = 7/16,  exact in binary
+GAMMA1 = 3.296875      # = 211/64, exact in binary
+GAMMA2 = 2.171875      # = 139/64, exact in binary
+LOG2E = 1.4426950408889634
+
+# Fixed-point constants (hardware model). Fraction is Q0.15 as in the paper's
+# "first 15 bits of the shifted mantissa".
+_F = 15                      # fraction bits of x'
+_LOG2E_Q15 = 47274           # round(log2(e) * 2**15)
+_ALPHA_Q15 = 7168            # 0.21875  * 2**15 (exact)
+_BETA_Q15 = 14336            # 0.4375   * 2**15 (exact)
+_GAMMA1_Q15 = 108032         # 3.296875 * 2**15 (exact)
+_GAMMA2_Q15 = 71168          # 2.171875 * 2**15 (exact)
+
+
+def _pcorr_f32(f: jax.Array) -> jax.Array:
+    """Two-branch mantissa-correction polynomial P(f), f in [0, 1) (Eq. 2).
+
+    Approximates 2**f - 1. Branch selected by f's MSB (f >= 0.5 in hardware);
+    ``not(x)`` in the paper is the fixed-point complement of x, i.e. 1-x up to
+    one ULP — here modeled exactly as 1-x in float.
+    """
+    lo = ALPHA * f * (f + GAMMA1)
+    hi = 1.0 - BETA * (1.0 - f) * (f + GAMMA2)
+    return jnp.where(f < 0.5, lo, hi)
+
+
+@jax.custom_jvp
+def vexp_f32(x: jax.Array) -> jax.Array:
+    """Schraudolph+P(x) exponential on f32 (TPU-deployable path).
+
+    Accepts any float dtype; computes in f32 and returns the input dtype.
+    Handles overflow (+inf), underflow/subnormal flush (0.0) and NaN
+    propagation per the paper's BF16 simplifications.
+
+    Differentiation: the value is reconstructed through an integer
+    bitcast, which XLA treats as non-differentiable (silent zero grads —
+    it would freeze every softmax/attention weight during training). The
+    mathematically correct surrogate is exp' = exp: the custom JVP reuses
+    the approximation itself, so training with vexp works end to end.
+    """
+    orig_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    # Clip so int conversion below stays in range; true saturation handled
+    # explicitly from the unclipped input afterwards.
+    xp = jnp.clip(xf, -200.0, 200.0) * jnp.float32(LOG2E)
+    i = jnp.floor(xp)
+    f = xp - i
+    m = 1.0 + _pcorr_f32(f)                      # in [1, 2)
+    # Clamp to the representable exponent window so (ii << 23) + mbits stays
+    # inside int32; the boundary values exactly trigger the saturation
+    # selects below.
+    ii = jnp.clip(i.astype(jnp.int32), -127, 128)
+    # Reconstruct 2**i * m: add i to m's biased exponent field.
+    mbits = jax.lax.bitcast_convert_type(m, jnp.int32)
+    out = jax.lax.bitcast_convert_type(mbits + (ii << 23), jnp.float32)
+    # Saturation: i <= -127 would produce a subnormal/zero exponent -> flush;
+    # i >= 128 overflows -> +inf. (m's own exponent is 127 so field = 127+i.)
+    out = jnp.where(ii <= -127, 0.0, out)
+    out = jnp.where(ii >= 128, jnp.inf, out)
+    out = jnp.where(xf <= -126.0 * 0.6931471805599453, 0.0, out)
+    out = jnp.where(xf >= 128.0 * 0.6931471805599453, jnp.inf, out)
+    out = jnp.where(jnp.isnan(xf), jnp.nan, out)
+    return out.astype(orig_dtype)
+
+
+@vexp_f32.defjvp
+def _vexp_f32_jvp(primals, tangents):
+    (x,), (xdot,) = primals, tangents
+    y = vexp_f32(x)
+    # d/dx exp(x) = exp(x); guard inf*0 at the saturated tails.
+    ydot = jnp.where(jnp.isfinite(y), y, 0.0).astype(x.dtype) * xdot
+    return y, ydot
+
+
+def vexp_bf16(x: jax.Array) -> jax.Array:
+    """BF16-in/BF16-out convenience wrapper over the f32 datapath."""
+    return vexp_f32(x.astype(jnp.bfloat16)).astype(jnp.bfloat16)
+
+
+def _round_shift_right(v: jax.Array, k: jax.Array) -> jax.Array:
+    """Arithmetic right shift with round-to-nearest (ties away from zero).
+
+    k is clamped to [0, 30]; callers guarantee v >= 0.
+    """
+    k = jnp.clip(k, 0, 30)
+    bias = jnp.where(k > 0, (1 << jnp.maximum(k - 1, 0)), 0)
+    return jax.lax.shift_right_arithmetic(v + bias, k)
+
+
+def _pcorr_q15(f: jax.Array) -> jax.Array:
+    """Fixed-point P(f): f is Q0.15 in [0, 2**15). Returns Q0.15.
+
+    Mirrors the RTL: branch on the MSB of the fraction; ``not(x)`` is the
+    bitwise complement (= 1 - x - 2**-15 in Q0.15), as in the paper.
+    """
+    # Clamp each branch's operand into its own domain so the int32 products
+    # cannot overflow (jnp.where evaluates both branches).
+    fl = jnp.minimum(f, (1 << 14) - 1)            # [0, 0.5)
+    fh = jnp.maximum(f, 1 << 14)                  # [0.5, 1)
+    # Branch [0, 0.5): alpha * f * (f + gamma1)
+    t1 = jax.lax.shift_right_logical(fl * (fl + _GAMMA1_Q15), 15)  # Q?.15
+    lo = jax.lax.shift_right_logical(_ALPHA_Q15 * t1, 15)
+    # Branch [0.5, 1): not(beta * not(f) * (f + gamma2))
+    nf = 0x7FFF - fh                                               # not(f)
+    t2 = jax.lax.shift_right_logical(nf * (fh + _GAMMA2_Q15), 15)
+    hi = 0x7FFF - jax.lax.shift_right_logical(_BETA_Q15 * t2, 15)
+    return jnp.where(f < (1 << 14), lo, hi)
+
+
+def vexp_bf16_fixedpoint(x: jax.Array) -> jax.Array:
+    """Bit-level model of the paper's EXP arithmetic block (Fig. 3c-e).
+
+    Input/output BF16. All arithmetic is int32 fixed point, mirroring the
+    two cascaded stages exps(x) (Schraudolph in hardware) and P(x) (mantissa
+    correction), including subnormal flush-to-zero and overflow detection.
+    """
+    assert x.dtype == jnp.bfloat16, "hardware model is BF16-only"
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.int32)
+    sign = jax.lax.shift_right_logical(bits, 15) & 1
+    e = jax.lax.shift_right_logical(bits, 7) & 0xFF
+    mant = (bits & 0x7F) | 0x80                        # Q1.7 in [1, 2)
+
+    # |x'| = |x| * log2(e) = mant * LOG2E_Q15 * 2**(e - 127 - 7 - 15)
+    # As Q(_F)=Q.15 fixed point: xq = prod * 2**(e - 134), e <= 134 here
+    # (e >= 135 means |x| >= 256 -> guaranteed overflow/underflow).
+    prod = mant * _LOG2E_Q15                           # <= 2**23.6
+    k = 134 - jnp.minimum(e, 134)
+    xq = _round_shift_right(prod, k)                   # Q0.15 magnitude of x'
+    xq = jnp.where(sign == 1, -xq, xq)
+    i = jax.lax.shift_right_arithmetic(xq, _F)         # floor(x')
+    f = xq & 0x7FFF                                    # frac(x') in Q0.15
+
+    p = _pcorr_q15(f)                                  # Q0.15, approximates 2**f - 1
+    # Round the corrected mantissa to BF16's 7 bits (round-to-nearest).
+    m7 = jax.lax.shift_right_logical(p + (1 << 7), 8)  # could be 128 (carry)
+    carry = jax.lax.shift_right_logical(m7, 7)         # 0 or 1
+    m7 = jnp.where(carry == 1, 0, m7)
+    new_e = i + 127 + carry
+
+    out_bits = jax.lax.shift_left(new_e, 7) | m7
+    # Saturation & specials.
+    pos_over = (sign == 0) & ((e >= 135) | (new_e >= 255))
+    under = (sign == 1) & ((e >= 135) | (new_e <= 0))
+    under = under | ((sign == 0) & (new_e <= 0))       # cannot happen, safety
+    out_bits = jnp.where(pos_over, 0x7F80, out_bits)   # +inf
+    out_bits = jnp.where(under, 0, out_bits)           # flush to zero
+    is_nan = (e == 255) & ((bits & 0x7F) != 0)
+    neg_inf = (e == 255) & ((bits & 0x7F) == 0) & (sign == 1)
+    pos_inf = (e == 255) & ((bits & 0x7F) == 0) & (sign == 0)
+    out_bits = jnp.where(is_nan, 0x7FC0, out_bits)     # qNaN
+    out_bits = jnp.where(neg_inf, 0, out_bits)
+    out_bits = jnp.where(pos_inf, 0x7F80, out_bits)
+    # exp(0) == 1 exactly (xq == 0 path already yields e=127, m=0 -> 1.0).
+    return jax.lax.bitcast_convert_type(
+        out_bits.astype(jnp.uint16), jnp.bfloat16)
+
+
+def exact_exp(x: jax.Array) -> jax.Array:
+    """The baseline transcendental exp (XLA's polynomial), for comparison."""
+    return jnp.exp(x)
+
+
+# Registry used by softmax/attention/model layers to select the exp backend.
+EXP_FNS = {
+    "exact": exact_exp,
+    "vexp": vexp_f32,
+    "vexp_hw": vexp_bf16_fixedpoint,
+}
+
+
+def get_exp_fn(name: str):
+    try:
+        return EXP_FNS[name]
+    except KeyError:
+        raise ValueError(f"unknown exp impl {name!r}; one of {list(EXP_FNS)}")

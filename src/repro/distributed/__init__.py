@@ -1,0 +1,3 @@
+from . import sharding, compression
+from .sharding import (param_specs, opt_specs, cache_specs, batch_specs,
+                       batch_spec, dp_axes, named)

@@ -1,0 +1,1 @@
+from .runtime import PreemptionGuard, StragglerDetector, run_supervised

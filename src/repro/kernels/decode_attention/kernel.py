@@ -1,0 +1,101 @@
+"""Fused decode-attention Pallas kernel (flash-decode, VEXP partial softmax).
+
+Substantiates EXPERIMENTS.md §Perf iteration C4: one decode step reads the
+KV cache exactly once from HBM — the (m, l, acc) online-softmax statistics
+live in VMEM scratch across the KV-block sweep, and the cache is consumed
+in its storage dtype (bf16) with f32 accumulation. Head-major ("bhsd")
+cache layout: (B, Hkv, S, hd), the §Perf C3 layout.
+
+Grid = (B, Hkv, nS) with the KV sweep innermost; each program handles one
+KV head's query group (GQA: G = H // Hkv query rows).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.vexp import vexp_f32
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_S = 512
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, block_s: int, ns: int,
+                   sm_scale: float):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cache_len = len_ref[0]
+    start = si * block_s
+
+    @pl.when(start < cache_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale     # (G, d)
+        k = k_ref[0, 0]                                    # (bs, d) bf16/f32
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q.astype(k.dtype), k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (G, bs)
+        kpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < cache_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = vexp_f32(m_prev - m_new)
+        p = vexp_f32(s - m_new)
+        p = jnp.where(kpos < cache_len, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        inv = 1.0 / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] * inv).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "block_s",
+                                             "interpret"))
+def decode_attention_bhsd(q, k_cache, v_cache, cache_len, *,
+                          sm_scale: float,
+                          block_s: int = DEFAULT_BLOCK_S,
+                          interpret: bool = False):
+    """q: (B, Hkv, G, d); caches: (B, Hkv, S, d); cache_len: (1,) int32.
+    Returns (B, Hkv, G, d). S divisible by block_s; d lane-padded by ops."""
+    b, hkv, g, d = q.shape
+    smax = k_cache.shape[2]
+    bs = min(block_s, smax)
+    ns = smax // bs
+    kernel = functools.partial(_decode_kernel, block_s=bs, ns=ns,
+                               sm_scale=sm_scale)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=(b, hkv, ns),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda bb, hh, si: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda bb, hh, si: (bb, hh, si, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda bb, hh, si: (bb, hh, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bb, hh, si: (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_len, q, k_cache, v_cache)

@@ -1,0 +1,42 @@
+"""jit'd public wrapper: (B, 1, H, d) queries over a (B, Hkv, S, d) cache."""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "block_s",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, cache_len, *, sm_scale=None,
+                     block_s=512, interpret=None):
+    """Fused flash-decode. q: (B, 1, H, d); caches: (B, Hkv, S, d) (bhsd);
+    cache_len: scalar int32 of valid positions. Returns (B, 1, H, d)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, _, h, d = q.shape
+    hkv, smax = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, g, d)
+    d_pad = -(-d // 128) * 128
+    s_pad = -(-smax // min(block_s, smax)) * min(block_s, smax)
+
+    def pad(x, s_axis_target, d_axis_target):
+        pads = [(0, 0)] * 4
+        pads[2] = (0, s_axis_target - x.shape[2])
+        pads[3] = (0, d_axis_target - x.shape[3])
+        return jnp.pad(x, pads)
+
+    qp = jnp.pad(qg, [(0, 0), (0, 0), (0, 0), (0, d_pad - d)])
+    kp = pad(k_cache, s_pad, d_pad)
+    vp = pad(v_cache, s_pad, d_pad)
+    clen = jnp.asarray(cache_len, jnp.int32).reshape(1)
+    out = decode_attention_bhsd(qp, kp, vp, clen, sm_scale=scale,
+                                block_s=block_s, interpret=interpret)
+    return out[..., :d].reshape(b, 1, h, d)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+
+from repro.core.attention import decode_attention
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *, sm_scale=None):
+    """Oracle with identical math: (B,1,H,d) q over a bhsd cache."""
+    return decode_attention(q, k_cache, v_cache, cache_len,
+                            exp_impl="vexp", sm_scale=sm_scale,
+                            mm_dtype="f32", layout="bhsd")

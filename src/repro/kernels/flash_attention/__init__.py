@@ -1,0 +1,2 @@
+from .ops import flash_attention
+from .ref import flash_attention_ref, attention_exact_ref

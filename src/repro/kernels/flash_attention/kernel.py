@@ -1,0 +1,141 @@
+"""FlashAttention-2 forward Pallas kernel with the VEXP partial softmax.
+
+TPU adaptation of the paper's optimized FlashAttention-2 (§IV-D): the Snitch
+implementation streams K/V tiles HBM→SPM with DMA double-buffering and runs
+the partial softmax (partial MAX / EXP / NORM with VFEXP) per tile; here the
+Pallas grid walks KV blocks with the same online (m, l, acc) statistics,
+Q/K/V tiles staged HBM→VMEM by the pipeline emitter, scores computed on the
+MXU and the exp on the VPU via the bit-twiddled VEXP datapath.
+
+Layout: q (B, H, Sq, D), k/v (B, Hkv, Sk, D), GQA resolved in the index maps
+(query head h reads KV head h // group). Grid = (B, H, nQ, nK), KV innermost
+so the VMEM scratch carries (m, l, acc) across the KV sweep.
+
+Causal/windowed masking skips fully-masked KV blocks via pl.when — the same
+work-skipping the paper gets from FlashAttention's tile scheduling.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.vexp import vexp_f32
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               sm_scale: float, causal: bool, window, block_q: int,
+               block_k: int, nk: int, sk_valid: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Static-shape bounds check: is any (q, k) pair in this tile live?
+    # q position >= k position for causal; within window if windowed.
+    live = k_start < sk_valid
+    if causal:
+        live &= k_start <= q_start + block_q - 1
+    if window is not None:
+        live &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        keep = kpos < sk_valid
+        if causal:
+            keep &= kpos <= qpos
+        if window is not None:
+            keep &= kpos > qpos - window
+        s = jnp.where(keep, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_blk = jnp.max(s, axis=-1, keepdims=True)          # partial MAX
+        m_new = jnp.maximum(m_prev, m_blk)
+        alpha = vexp_f32(m_prev - m_new)                    # rescale
+        p = vexp_f32(s - m_new)                             # partial EXP
+        p = jnp.where(keep, p, 0.0)
+        l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        # partial NORM: one reciprocal per row, multiply through.
+        l = l_ref[...]
+        inv = 1.0 / jnp.maximum(l, 1e-30)
+        o_ref[0, 0] = (acc_ref[...] * inv).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "causal", "window", "block_q", "block_k",
+                     "sk_valid", "interpret"))
+def flash_attention_bhsd(q, k, v, *, sm_scale: float, causal: bool,
+                         window, sk_valid: int,
+                         block_q: int = DEFAULT_BLOCK_Q,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool = False):
+    """q (B,H,Sq,D); k,v (B,Hkv,Sk,D); dims divisible by blocks/lane tiles.
+
+    sk_valid: number of valid KV positions (Sk may be padded above it).
+    """
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = h // hkv
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    nq, nk = sq // bq, sk // bk
+    grid = (b, h, nq, nk)
+
+    kernel = functools.partial(
+        _fa_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, nk=nk, sk_valid=sk_valid)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        scratch_shapes=[
+            pltpu_scratch((bq, 1)),
+            pltpu_scratch((bq, 1)),
+            pltpu_scratch((bq, d)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def pltpu_scratch(shape):
+    """VMEM f32 scratch (indirection keeps the TPU import optional on CPU)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

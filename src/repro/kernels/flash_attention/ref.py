@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the FlashAttention-2 kernel."""
+
+from repro.core.attention import attention_flash, attention_xla
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, sm_scale=None):
+    """Oracle with identical math (vexp partial softmax), (B,S,H,D) layout."""
+    return attention_flash(q, k, v, causal=causal, window=window,
+                           sm_scale=sm_scale, exp_impl="vexp")
+
+
+def attention_exact_ref(q, k, v, *, causal=True, window=None, sm_scale=None):
+    """Exact-exp materialized attention, for accuracy comparisons."""
+    return attention_xla(q, k, v, causal=causal, window=window,
+                         sm_scale=sm_scale, exp_impl="exact")

@@ -1,0 +1,2 @@
+from .ops import softmax
+from .ref import softmax_ref, softmax_exact_ref

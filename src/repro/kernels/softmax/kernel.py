@@ -1,0 +1,56 @@
+"""Fused row-softmax Pallas kernel with the VEXP exponential.
+
+TPU counterpart of the paper's optimized Softmax kernel (§IV-C, Fig. 4):
+one VMEM pass per row block performs
+
+  MAX   row max (the paper's VFMAX/FREP loop),
+  EXP   vexp(x - max) with the sum accumulated in the same pass
+        (the paper's VFEXP + VFADD inside one FREP loop),
+  NORM  a single reciprocal then a pointwise multiply (VFMUL), never a
+        per-element divide.
+
+Rows live entirely in VMEM for one grid step, so HBM traffic is exactly
+read-once/write-once — the same property the Snitch kernel gets from its
+SSR-streamed SPM tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.vexp import vexp_f32
+
+NEG_INF = -1e30
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)                   # MAX
+    e = vexp_f32(x - m)                                      # EXP (+ sum)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (e * (1.0 / s)).astype(o_ref.dtype)         # NORM
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def softmax_rows(x: jax.Array, *, block_rows: int = 64,
+                 interpret: bool = False) -> jax.Array:
+    """Softmax along the last axis of a 2D array.
+
+    The row length must be lane-aligned (padding handled by ops.py with
+    NEG_INF so padded lanes contribute exp() = 0 to the sum).
+    """
+    m, n = x.shape
+    bm = min(block_rows, m)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _softmax_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x)

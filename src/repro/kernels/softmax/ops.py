@@ -1,0 +1,48 @@
+"""jit'd public wrapper for the fused softmax kernel (arbitrary shapes)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import softmax_rows, NEG_INF
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "interpret"))
+def softmax(x: jax.Array, axis: int = -1, *,
+            interpret: bool | None = None) -> jax.Array:
+    """Fused VEXP softmax along ``axis`` for any-rank inputs.
+
+    Moves ``axis`` last, flattens leading dims, pads the reduction dim to a
+    lane multiple with NEG_INF (whose vexp is exactly 0, so padding does not
+    perturb the denominator), runs the kernel, and restores layout.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    axis = axis % x.ndim
+    perm = None
+    if axis != x.ndim - 1:
+        perm = list(range(x.ndim))
+        perm[axis], perm[-1] = perm[-1], perm[axis]
+        x = jnp.transpose(x, perm)
+    shape = x.shape
+    n = shape[-1]
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, n)
+    n_pad = -(-n // 128) * 128
+    if n_pad != n:
+        x2 = jnp.pad(x2, ((0, 0), (0, n_pad - n)),
+                     constant_values=jnp.asarray(NEG_INF, x.dtype))
+    block_rows = max(1, min(64, rows))
+    rows_pad = -(-rows // block_rows) * block_rows
+    if rows_pad != rows:
+        x2 = jnp.pad(x2, ((0, rows_pad - rows), (0, 0)))
+    out = softmax_rows(x2, block_rows=block_rows, interpret=interpret)
+    out = out[:rows, :n].reshape(shape)
+    if perm is not None:
+        out = jnp.transpose(out, perm)
+    return out

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused softmax kernel."""
+
+import jax.numpy as jnp
+
+from repro.core.vexp import vexp_f32
+
+
+def softmax_ref(x, axis=-1):
+    """Same algorithm (max-subtract, vexp, reciprocal-multiply), un-tiled."""
+    xf = x.astype(jnp.float32)
+    m = jnp.max(xf, axis=axis, keepdims=True)
+    e = vexp_f32(xf - m)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return (e * (1.0 / s)).astype(x.dtype)
+
+
+def softmax_exact_ref(x, axis=-1):
+    import jax
+    return jax.nn.softmax(x.astype(jnp.float32), axis=axis).astype(x.dtype)

@@ -1,0 +1,2 @@
+from .ops import vexp
+from .ref import vexp_ref, exp_exact_ref

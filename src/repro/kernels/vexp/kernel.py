@@ -1,0 +1,45 @@
+"""Pallas TPU kernel for the VEXP elementwise exponential.
+
+This is the TPU counterpart of the paper's VFEXP instruction: where Snitch
+packs 4×BF16 lanes into a 64-bit FPU register and retires one SIMD exp per
+two cycles, the TPU VPU processes (8, 128) vregs of the same bit-twiddled
+Schraudolph+P(x) datapath. The kernel body is the *same* jnp program as the
+core implementation (mul / floor / select / int add / shift / bitcast — no
+transcendental), tiled through VMEM with an explicit BlockSpec.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.vexp import vexp_f32
+
+# Block shape: sublane×lane aligned; 512 rows × 512 lanes = 1 MiB f32,
+# comfortably inside the ~16 MiB/core VMEM with double buffering.
+DEFAULT_BLOCK = (256, 512)
+
+
+def _vexp_kernel(x_ref, o_ref):
+    o_ref[...] = vexp_f32(x_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def vexp_2d(x: jax.Array, *, block=DEFAULT_BLOCK,
+            interpret: bool = False) -> jax.Array:
+    """vexp over a 2D array; shape must be divisible by ``block``
+    (ops.py handles padding/reshaping for arbitrary shapes)."""
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _vexp_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(x)

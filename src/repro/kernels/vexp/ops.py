@@ -1,0 +1,40 @@
+"""jit'd public wrapper for the vexp Pallas kernel: arbitrary shapes/dtypes."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import vexp_2d, DEFAULT_BLOCK
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def vexp(x: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """VEXP exponential via the Pallas kernel, any shape, float dtypes.
+
+    Pads/reshapes to a lane-aligned 2D layout, runs the tiled kernel, and
+    restores the original shape. ``interpret=None`` auto-selects interpreter
+    mode on CPU hosts (this container) and compiled mode on TPU.
+    """
+    if interpret is None:
+        interpret = _is_cpu()
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    # Choose a 2D factorization with a 512-wide lane dim.
+    lanes = 512 if n >= 512 else 128
+    rows = -(-n // lanes)
+    bm = min(DEFAULT_BLOCK[0], rows)
+    rows_pad = -(-rows // bm) * bm
+    padded = jnp.pad(flat, (0, rows_pad * lanes - n),
+                     constant_values=jnp.asarray(0, x.dtype))
+    out = vexp_2d(padded.reshape(rows_pad, lanes),
+                  block=(bm, min(DEFAULT_BLOCK[1], lanes)),
+                  interpret=interpret)
+    return out.reshape(-1)[:n].reshape(orig_shape)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the vexp kernel."""
+
+import jax.numpy as jnp
+
+from repro.core.vexp import vexp_f32
+
+
+def vexp_ref(x):
+    """Oracle: the same algorithm, un-tiled (XLA executes it directly)."""
+    return vexp_f32(x)
+
+
+def exp_exact_ref(x):
+    """The transcendental baseline, for accuracy comparisons."""
+    return jnp.exp(x)

@@ -1,0 +1,329 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 placeholder host devices, jits the production
+step (train_step with optimizer / prefill / decode) with explicit
+in/out shardings, compiles, and records:
+
+  * cost_analysis (per-device HLO FLOPs / bytes accessed),
+  * memory_analysis (when the backend provides it) + analytic bytes/device,
+  * the collective schedule (per-op-type byte totals parsed from the
+    optimized HLO) for the roofline's collective term.
+
+Artifacts land in benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json
+and feed benchmarks/roofline.py and EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internvl2-1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import REGISTRY, SHAPES, get_config
+from repro.models import api
+from repro import optim
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "artifacts", "dryrun")
+
+# archs large enough to need ZeRO-3 parameter sharding on the data axis
+FSDP_ARCHS = {"command-r-35b", "grok-1-314b", "dbrx-132b"}
+
+_COLL_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16, "token": 0}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the (per-device)
+    optimized HLO, keyed by op type."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, op = m.groups()
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out[op] = out.get(op, 0) + n * nbytes
+        out[op + "_count"] = out.get(op + "_count", 0) + 1
+    return out
+
+
+def analytic_state_bytes(cfg, mesh, fsdp: bool) -> dict:
+    """Per-device bytes for params + optimizer state given the specs."""
+    pspecs = shd.param_specs(cfg, mesh, fsdp=fsdp)
+    shapes = jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+
+    def per_device(leaf, spec):
+        shards = 1
+        for ax in spec:
+            if ax is not None:
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                for a in axes:
+                    shards *= mesh.shape[a]
+        return leaf.size * leaf.dtype.itemsize / shards
+
+    leaves = jax.tree.leaves(jax.tree.map(per_device, shapes, pspecs,
+                                          is_leaf=lambda x: hasattr(x, "shape")))
+    param_b = float(np.sum(leaves))
+    # AdamW: two f32 moments per f32 param element
+    return {"params_bytes_per_device": param_b,
+            "opt_state_bytes_per_device": 2.0 * param_b,
+            "total_state_bytes_per_device": 3.0 * param_b}
+
+
+def build_cell(cfg, shape, mesh, fsdp: bool):
+    """Returns (jitted_fn, example_inputs_as_ShapeDtypeStructs)."""
+    specs = api.input_specs(cfg, shape)
+    if shape.kind == "train":
+        opt_cfg = optim.OptConfig(total_steps=1000)
+        accum = 4 if fsdp else 1       # microbatch the biggest archs
+        pspecs = shd.param_specs(cfg, mesh, fsdp=fsdp)
+        ospecs = shd.opt_specs(cfg, mesh, pspecs)
+        bspecs = shd.batch_specs(cfg, mesh, "train")
+        bspecs = {k: bspecs[k] for k in specs["batch"]}
+        stat_specs = {"grad_norm": P(), "lr": P(), "clip_scale": P(),
+                      "loss": P()}
+
+        from repro.launch.train import make_train_step
+        train_step = make_train_step(cfg, opt_cfg, accum_steps=accum)
+
+        params = jax.eval_shape(
+            lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+        opt_state = jax.eval_shape(lambda: optim.init(params, opt_cfg))
+        fn = jax.jit(
+            train_step,
+            in_shardings=(shd.named(mesh, pspecs), shd.named(mesh, ospecs),
+                          shd.named(mesh, bspecs)),
+            out_shardings=(shd.named(mesh, pspecs), shd.named(mesh, ospecs),
+                           shd.named(mesh, stat_specs)),
+            donate_argnums=(0, 1))
+        return fn, (params, opt_state, specs["batch"])
+
+    pspecs = shd.param_specs(cfg, mesh, fsdp=fsdp)
+    params = jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+
+    if shape.kind == "prefill":
+        bspecs = shd.batch_specs(cfg, mesh, "prefill")
+        bspecs = {k: bspecs[k] for k in specs["batch"]}
+        fn = jax.jit(
+            lambda p, b: api.prefill(p, cfg, b),
+            in_shardings=(shd.named(mesh, pspecs), shd.named(mesh, bspecs)))
+        return fn, (params, specs["batch"])
+
+    # decode
+    B = shape.global_batch
+    dp_size = int(np.prod([mesh.shape[a] for a in shd.dp_axes(mesh)]))
+    cspecs = shd.cache_specs(cfg, mesh, B)
+    tok_spec = P(shd.dp_axes(mesh), None) if B >= dp_size else P(None, None)
+    logit_spec = (P(shd.dp_axes(mesh), None, "model") if B >= dp_size
+                  else P(None, None, "model"))
+    fn = jax.jit(
+        lambda p, t, c, pos: api.decode_step(p, cfg, t, c, pos),
+        in_shardings=(shd.named(mesh, pspecs),
+                      NamedSharding(mesh, tok_spec),
+                      shd.named(mesh, cspecs),
+                      NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, logit_spec),
+                       shd.named(mesh, cspecs)),
+        donate_argnums=(2,))
+    return fn, (params, specs["token"], specs["cache"], specs["pos"])
+
+
+def _count_unit(cfg) -> int:
+    """The repeated unit for cost extrapolation: a layer, or a period for
+    hybrids (tail layers approximated as fractional periods)."""
+    return cfg.attn_period if cfg.family == "hybrid" else 1
+
+
+def _with_units(cfg, n_units: int):
+    import dataclasses
+    return dataclasses.replace(cfg, n_layers=n_units * _count_unit(cfg),
+                               unroll_scans=True)
+
+
+def count_cell(cfg, shape, chips: int) -> dict:
+    """HLO-derived FLOP/byte counts via unrolled single-device compiles.
+
+    XLA's HloCostAnalysis counts while-loop bodies once, so the scanned
+    production program under-reports by ~n_layers x. Here every internal
+    scan (layers, CE chunks, FA KV blocks, SSD chunks) is unrolled at
+    n_units in {1, 2} and the per-unit slope extrapolates to the full
+    depth:  total = f(1) + (n_units-1) * (f(2) - f(1)).
+    Single-device lowering: global FLOPs/bytes; per-chip = /chips
+    (sharding-induced duplication, e.g. replicated GQA KV projections,
+    is therefore *not* counted — noted in EXPERIMENTS.md).
+    """
+    import dataclasses
+    unit = _count_unit(cfg)
+    if cfg.family == "hybrid":
+        total_units = cfg.n_layers / unit      # fractional tail
+    else:
+        total_units = cfg.n_layers
+    vals = {}
+    for n in (1, 2):
+        c = _with_units(cfg, n)
+        specs = api.input_specs(c, shape)
+        if shape.kind == "train":
+            opt_cfg = optim.OptConfig(total_steps=1000)
+
+            def train_step(params, opt_state, batch, c=c):
+                loss, grads = jax.value_and_grad(
+                    lambda p: api.loss_fn(p, c, batch))(params)
+                return optim.update(grads, opt_state, params, opt_cfg)
+
+            params = jax.eval_shape(
+                lambda c=c: api.init_params(c, jax.random.PRNGKey(0)))
+            opt_state = jax.eval_shape(lambda: optim.init(params, opt_cfg))
+            compiled = jax.jit(train_step).lower(
+                params, opt_state, specs["batch"]).compile()
+        elif shape.kind == "prefill":
+            params = jax.eval_shape(
+                lambda c=c: api.init_params(c, jax.random.PRNGKey(0)))
+            compiled = jax.jit(
+                lambda p, b, c=c: api.prefill(p, c, b)).lower(
+                    params, specs["batch"]).compile()
+        else:
+            params = jax.eval_shape(
+                lambda c=c: api.init_params(c, jax.random.PRNGKey(0)))
+            compiled = jax.jit(
+                lambda p, t, ca, pos, c=c: api.decode_step(p, c, t, ca, pos)
+            ).lower(params, specs["token"], specs["cache"],
+                    specs["pos"]).compile()
+        cost = compiled.cost_analysis() or {}
+        vals[n] = (float(cost.get("flops", 0)),
+                   float(cost.get("bytes accessed", 0)))
+    slope_f = vals[2][0] - vals[1][0]
+    slope_b = vals[2][1] - vals[1][1]
+    flops = vals[1][0] + slope_f * (total_units - 1)
+    bytes_ = vals[1][1] + slope_b * (total_units - 1)
+    return {"flops_global": flops, "bytes_global": bytes_,
+            "flops_per_unit": slope_f, "bytes_per_unit": slope_b,
+            "base_flops": vals[1][0], "units": total_units,
+            "flops_per_chip": flops / chips,
+            "bytes_per_chip": bytes_ / chips}
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: str = ART_DIR, force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            cached = json.load(f)
+        if cached.get("ok"):              # failures always retry
+            return cached
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    fsdp = arch in FSDP_ARCHS
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "mesh_shape": dict(mesh.shape), "fsdp": fsdp,
+           "kind": shape.kind, "ok": False}
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, inputs = build_cell(cfg, shape, mesh, fsdp)
+            lowered = fn.lower(*inputs)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            cost = compiled.cost_analysis() or {}
+            try:
+                mem = compiled.memory_analysis()
+                mem_d = {a: getattr(mem, a) for a in dir(mem)
+                         if a.endswith("_in_bytes")} if mem else {}
+            except Exception:
+                mem_d = {}
+            hlo = compiled.as_text()
+            rec.update({
+                "ok": True,
+                "lower_s": round(t1 - t0, 2),
+                "compile_s": round(t2 - t1, 2),
+                "flops_per_device": float(cost.get("flops", -1)),
+                "bytes_accessed_per_device": float(
+                    cost.get("bytes accessed", -1)),
+                "cost_analysis": {k: float(v) for k, v in cost.items()
+                                  if isinstance(v, (int, float))},
+                "memory_analysis": mem_d,
+                "collectives": parse_collectives(hlo),
+                "analytic_state": analytic_state_bytes(cfg, mesh, fsdp),
+                "hlo_bytes": len(hlo),
+            })
+            print(compiled.memory_analysis())
+        if mesh_name == "single":     # counts are mesh-independent
+            try:
+                rec["counted"] = count_cell(
+                    cfg, shape, int(np.prod(list(mesh.shape.values()))))
+            except Exception as e:
+                rec["counted"] = {"error": f"{type(e).__name__}: {e}"}
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = round(time.time() - t0, 2)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK" if rec["ok"] else f"FAIL ({rec.get('error', '?')[:120]})"
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: {status} "
+          f"({rec['wall_s']}s)")
+    return rec
+
+
+def all_cells():
+    for arch, cfg in REGISTRY.items():
+        if arch == "gpt2-small":
+            continue
+        for shape_name in cfg.shapes:
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out-dir", default=ART_DIR)
+    args = ap.parse_args()
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    fails = 0
+    if args.all:
+        for arch, shape_name in all_cells():
+            for m in meshes:
+                rec = run_cell(arch, shape_name, m, args.out_dir, args.force)
+                fails += 0 if rec["ok"] else 1
+    else:
+        for m in meshes:
+            rec = run_cell(args.arch, args.shape, m, args.out_dir,
+                           args.force)
+            fails += 0 if rec["ok"] else 1
+    if fails:
+        raise SystemExit(f"{fails} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from . import api, layers, transformer, moe, ssm, hybrid
+from .api import (init_params, loss_fn, forward, prefill, decode_step,
+                  init_cache, input_specs)

@@ -1,0 +1,118 @@
+"""Family-dispatching model API: init / loss / prefill / decode / specs.
+
+This is the single entry point the trainer, server, dry-run and tests use.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer, ssm, hybrid
+
+
+def _mod(cfg):
+    if cfg.family == "ssm":
+        return ssm
+    if cfg.family == "hybrid":
+        return hybrid
+    return transformer       # dense | moe | vlm | audio
+
+
+def init_params(cfg, key):
+    return _mod(cfg).init_params(cfg, key)
+
+
+def loss_fn(params, cfg, batch):
+    return _mod(cfg).loss_fn(params, cfg, batch)
+
+
+def forward(params, cfg, batch):
+    m = _mod(cfg)
+    if cfg.family in ("vlm", "audio"):
+        out = m.forward(params, cfg, batch.get("tokens"),
+                        batch.get("extra"))
+    else:
+        out = m.forward(params, cfg, batch["tokens"])
+    return out[0] if isinstance(out, tuple) else out
+
+
+def prefill(params, cfg, batch):
+    m = _mod(cfg)
+    if cfg.family == "audio":
+        # encoder-only: "prefill" is a full encode; no cache/decode exists.
+        from .layers import mask_padded_logits
+        x, _ = transformer.forward(params, cfg, None, batch["extra"])
+        logits = (x.astype(jnp.float32)
+                  @ params["unembed"].astype(jnp.float32))
+        return mask_padded_logits(logits, cfg.vocab), None
+    if cfg.family == "vlm":
+        return transformer.prefill(params, cfg, batch["tokens"],
+                                   batch.get("extra"))
+    return m.prefill(params, cfg, batch["tokens"])
+
+
+def init_cache(cfg, batch_size, seq_len):
+    if cfg.family == "ssm":
+        return ssm.init_state(cfg, batch_size)
+    if cfg.family == "hybrid":
+        return hybrid.init_cache(cfg, batch_size, seq_len)
+    if cfg.family == "audio":
+        raise ValueError("encoder-only arch has no decode cache")
+    return transformer.init_cache(cfg, batch_size, seq_len)
+
+
+def decode_step(params, cfg, token, cache, pos):
+    m = _mod(cfg)
+    if cfg.family == "audio":
+        raise ValueError("encoder-only arch has no decode step")
+    return m.decode_step(params, cfg, token, cache, pos)
+
+
+# ----------------------------------------------------------- input specs
+
+def input_specs(cfg, shape, *, for_dryrun=True):
+    """ShapeDtypeStruct stand-ins for every model input of a given shape.
+
+    Returns a dict: for train -> {"batch": {...}}; for prefill -> prompt
+    inputs; for decode -> {"token", "cache", "pos"}. Used by the dry-run
+    (no allocation) and mirrored by data.synthetic for real arrays.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    extra = None
+    s_txt = S
+    if cfg.family == "vlm":
+        nv = cfg.n_vision_tokens
+        s_txt = S - nv
+        extra = jax.ShapeDtypeStruct((B, nv, cfg.vision_embed_dim),
+                                     jnp.float32)
+    if cfg.family == "audio":
+        extra = jax.ShapeDtypeStruct((B, S, cfg.frame_input_dim),
+                                     jnp.float32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tok(B, s_txt), "labels": tok(B, s_txt)}
+        if extra is not None:
+            batch["extra"] = extra
+        if cfg.family == "audio":
+            batch["tokens"] = tok(B, S)   # unused; labels drive the loss
+            batch["labels"] = tok(B, S)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": tok(B, s_txt)}
+        if extra is not None:
+            batch["extra"] = extra
+        if cfg.family == "audio":
+            batch.pop("tokens")
+        return {"batch": batch}
+
+    # decode: token + cache at full context length
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return {"token": tok(B, 1), "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), i32)}

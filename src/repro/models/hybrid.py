@@ -1,0 +1,351 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern is 1 local-attention layer per ``cfg.attn_period`` (= 3 for
+recurrentgemma: rec, rec, attn), scanned over whole periods with the tail
+(n_layers % period, recurrent) handled explicitly.
+
+Arch-applicability (DESIGN.md §4): the paper's softmax kernel applies to the
+local-attention layers and final logits; the RG-LRU gates are
+sigmoid/softplus — also exponential-family, computed via the same VEXP
+primitive:  a_t = exp(c · r_t · log a)  is literally a vexp call on a
+non-positive argument (vexp's best-accuracy range).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vexp import get_exp_fn
+from .layers import (dense_init, embed_init, norm_init, norm_apply,
+                     vexp_sigmoid, gelu, mlp_init, mlp_apply, cross_entropy,
+                     mask_padded_logits)
+from .transformer import (attn_init, attn_apply, attn_decode)
+
+RG_LRU_C = 8.0     # Griffin's fixed exponent scale
+
+
+# ------------------------------------------------------------ RG-LRU block
+
+def rec_layer_init(key, cfg, dtype=jnp.float32):
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 8)
+    # Lambda init so that a = sigmoid(lam) in [0.9, 0.999] (Griffin app. A)
+    u = jax.random.uniform(ks[6], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** 2 / (1 - u ** 2))
+    return {
+        "ln": norm_init(d, cfg.norm),
+        "wx": dense_init(ks[0], d, w, dtype),          # recurrent branch
+        "wy": dense_init(ks[1], d, w, dtype),          # gate branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_input_gate": dense_init(ks[3], w, w, dtype),
+        "w_rec_gate": dense_init(ks[4], w, w, dtype),
+        "lam": lam,
+        "w_out": dense_init(ks[5], w, d, dtype),
+        "ln_mlp": norm_init(d, cfg.norm),
+        "mlp": mlp_init(ks[7], d, cfg.d_ff, cfg.act, cfg.use_bias, dtype),
+    }
+
+
+def _rg_lru(xw, p, cfg, h0=None):
+    """RG-LRU over a sequence. xw: (B, S, W). Returns (y, h_last).
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    log a_t = -c * r_t * softplus(-lam)  (= c*r_t*log sigmoid(lam) <= 0).
+    Parallelized with an associative scan in the log-decay domain.
+    """
+    exp_fn = get_exp_fn(cfg.exp_impl)
+    xf = xw.astype(jnp.float32)
+    r = vexp_sigmoid(xf @ p["w_rec_gate"].astype(jnp.float32), exp_fn)
+    i = vexp_sigmoid(xf @ p["w_input_gate"].astype(jnp.float32), exp_fn)
+    log_a_base = -jnp.logaddexp(0.0, -p["lam"])       # log sigmoid(lam) <= 0
+    log_a = RG_LRU_C * r * log_a_base                 # (B, S, W)
+    a = exp_fn(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - exp_fn(2.0 * log_a), 0.0)) * (i * xf)
+
+    # associative scan over seq: elements (log_a, b); an initial state h0
+    # contributes prod(a_{1..t}) * h0, added after the scan.
+    def combine(e1, e2):
+        la1, b1 = e1
+        la2, b2 = e2
+        return la1 + la2, exp_fn(la2) * b1 + b2
+
+    la_acc, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    if h0 is not None:
+        h = h + exp_fn(la_acc) * h0[:, None, :]
+    return h.astype(xw.dtype), h[:, -1]
+
+
+def rec_layer_apply(x, p, cfg, h0=None, conv_state=None):
+    """Full-sequence recurrent block. Returns (y, (h_last, conv_state))."""
+    exp_fn = get_exp_fn(cfg.exp_impl)
+    hin = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
+    u = hin @ p["wx"]
+    # temporal conv (depthwise, causal)
+    from .ssm import _causal_conv
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    y, h_last = _rg_lru(u, p, cfg, h0)
+    gate = gelu(hin @ p["wy"])
+    out = (y * gate) @ p["w_out"]
+    x = x + out
+    h2 = norm_apply(x, p["ln_mlp"], cfg.norm, cfg.norm_eps)
+    x = x + mlp_apply(h2, p["mlp"], cfg.act, cfg.exp_impl)
+    return x, (h_last, conv_state)
+
+
+def rec_layer_decode(x, p, cfg, state):
+    """Single-token decode. state: {"h": (B, W), "conv": (B, W-1, W)}."""
+    exp_fn = get_exp_fn(cfg.exp_impl)
+    hin = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
+    u = hin @ p["wx"]
+    from .ssm import _causal_conv
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], state["conv"])
+    uf = u[:, 0].astype(jnp.float32)
+    r = vexp_sigmoid(uf @ p["w_rec_gate"].astype(jnp.float32), exp_fn)
+    i = vexp_sigmoid(uf @ p["w_input_gate"].astype(jnp.float32), exp_fn)
+    log_a_base = -jnp.logaddexp(0.0, -p["lam"])
+    log_a = RG_LRU_C * r * log_a_base
+    a = exp_fn(log_a)
+    bterm = jnp.sqrt(jnp.maximum(1.0 - exp_fn(2 * log_a), 0.0)) * (i * uf)
+    h = a * state["h"] + bterm
+    gate = gelu(hin[:, 0] @ p["wy"])
+    out = ((h.astype(x.dtype) * gate) @ p["w_out"])[:, None, :]
+    x = x + out
+    h2 = norm_apply(x, p["ln_mlp"], cfg.norm, cfg.norm_eps)
+    x = x + mlp_apply(h2, p["mlp"], cfg.act, cfg.exp_impl)
+    return x, {"h": h, "conv": new_conv}
+
+
+# ----------------------------------------------------- attention sub-block
+
+def attn_layer_init(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    return {"ln": norm_init(cfg.d_model, cfg.norm),
+            "attn": attn_init(ks[0], cfg, dtype),
+            "ln_mlp": norm_init(cfg.d_model, cfg.norm),
+            "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act,
+                            cfg.use_bias, dtype)}
+
+
+def attn_layer_apply(x, p, cfg, pos):
+    h = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
+    a, kv = attn_apply(h, p["attn"], cfg, pos, window=cfg.sliding_window)
+    x = x + a
+    h2 = norm_apply(x, p["ln_mlp"], cfg.norm, cfg.norm_eps)
+    x = x + mlp_apply(h2, p["mlp"], cfg.act, cfg.exp_impl)
+    return x, kv
+
+
+def attn_layer_decode(x, p, cfg, ck, cv, pos, wpos):
+    h = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
+    from .transformer import _qkv
+    from repro.core.attention import decode_attention
+    b = x.shape[0]
+    q, k, v = _qkv(h, p["attn"], cfg, jnp.full((b, 1), pos, jnp.int32))
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        ck, k.astype(ck.dtype), wpos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cv, v.astype(cv.dtype), wpos, axis=1)
+    w = cfg.sliding_window
+    valid = jnp.minimum(pos + 1, w)
+    o = decode_attention(q, ck, cv, cache_len=valid, exp_impl=cfg.exp_impl,
+                         mm_dtype=cfg.attn_mm_dtype)
+    x = x + o.reshape(b, 1, -1) @ p["attn"]["wo"]
+    h2 = norm_apply(x, p["ln_mlp"], cfg.norm, cfg.norm_eps)
+    x = x + mlp_apply(h2, p["mlp"], cfg.act, cfg.exp_impl)
+    return x, ck, cv
+
+
+# ---------------------------------------------------------------- full model
+
+def _period_counts(cfg):
+    period = cfg.attn_period
+    n_per = cfg.n_layers // period            # scanned periods
+    tail = cfg.n_layers % period              # trailing recurrent layers
+    return period, n_per, tail
+
+
+def init_params(cfg, key):
+    period, n_per, tail = _period_counts(cfg)
+    n_rec_per = period - 1
+    ks = jax.random.split(key, n_per + tail + 3)
+    periods = []
+    for i in range(n_per):
+        sub = jax.random.split(ks[i], period)
+        periods.append({
+            "recs": jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[rec_layer_init(sub[j], cfg) for j in range(n_rec_per)]),
+            "attn": attn_layer_init(sub[-1], cfg),
+        })
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *periods)
+    p = {"periods": stacked,
+         "ln_f": norm_init(cfg.d_model, cfg.norm),
+         "embed": embed_init(ks[-1], cfg.vocab_padded, cfg.d_model),
+         "unembed": dense_init(ks[-2], cfg.d_model, cfg.vocab_padded)}
+    if tail:
+        p["tail"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[rec_layer_init(ks[n_per + j], cfg) for j in range(tail)])
+    return p
+
+
+def _cast(layer_p, dt):
+    return jax.tree.map(lambda a: a.astype(dt)
+                        if a.dtype == jnp.float32 and a.ndim > 1 else a,
+                        layer_p)
+
+
+def forward(params, cfg, tokens):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    b, s = tokens.shape
+    pos = jnp.arange(s)[None, :].astype(jnp.int32)
+    period, n_per, tail = _period_counts(cfg)
+
+    def body(x, period_p):
+        period_p = _cast(period_p, dt)
+
+        def rec_body(x, rec_p):
+            y, _ = rec_layer_apply(x, rec_p, cfg)
+            return y, None
+
+        x, _ = jax.lax.scan(rec_body, x, period_p["recs"],
+                            unroll=cfg.unroll_scans)
+        x, _ = attn_layer_apply(x, period_p["attn"], cfg, pos)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    n_per = cfg.n_layers // cfg.attn_period
+    x, _ = jax.lax.scan(body, x, params["periods"],
+                        unroll=n_per if cfg.unroll_scans else 1)
+    if tail:
+        def tail_body(x, rec_p):
+            y, _ = rec_layer_apply(x, rec_p, cfg)
+            return y, None
+        x, _ = jax.lax.scan(tail_body, x, _cast(params["tail"], dt),
+                            unroll=cfg.unroll_scans)
+    return norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+
+
+def loss_fn(params, cfg, batch):
+    x = forward(params, cfg, batch["tokens"])
+    return cross_entropy(x, params["unembed"], batch["labels"],
+                         chunk=cfg.loss_chunk, exp_impl=cfg.exp_impl,
+                         mask=batch.get("mask"), unroll=cfg.unroll_scans)
+
+
+def init_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
+    period, n_per, tail = _period_counts(cfg)
+    w = cfg.lru_width or cfg.d_model
+    win = min(seq_len, cfg.sliding_window or seq_len)
+    cache = {"periods": {
+        "rec_h": jnp.zeros((n_per, period - 1, batch, w), jnp.float32),
+        "rec_conv": jnp.zeros((n_per, period - 1, batch,
+                               cfg.conv_width - 1, w), jnp.float32),
+        "k": jnp.zeros((n_per, batch, win, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((n_per, batch, win, cfg.n_kv_heads, cfg.hd), dtype),
+    }}
+    if tail:
+        cache["tail"] = {
+            "h": jnp.zeros((tail, batch, w), jnp.float32),
+            "conv": jnp.zeros((tail, batch, cfg.conv_width - 1, w),
+                              jnp.float32)}
+    return cache
+
+
+def prefill(params, cfg, tokens):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    b, s = tokens.shape
+    pos = jnp.arange(s)[None, :].astype(jnp.int32)
+    period, n_per, tail = _period_counts(cfg)
+    win = min(s, cfg.sliding_window or s)
+
+    def body(x, period_p):
+        period_p = _cast(period_p, dt)
+
+        def rec_body(x, rec_p):
+            y, (h, conv) = rec_layer_apply(x, rec_p, cfg)
+            return y, (h, conv.astype(jnp.float32))
+
+        x, (hs, convs) = jax.lax.scan(rec_body, x, period_p["recs"],
+                                      unroll=cfg.unroll_scans)
+        x, (k, v) = attn_layer_apply(x, period_p["attn"], cfg, pos)
+        k, v = k[:, -win:], v[:, -win:]
+        if cfg.sliding_window and s > cfg.sliding_window:
+            # ring-buffer layout: slot = absolute position % window
+            k = jnp.roll(k, s % cfg.sliding_window, axis=1)
+            v = jnp.roll(v, s % cfg.sliding_window, axis=1)
+        return x, {"rec_h": hs, "rec_conv": convs,
+                   "k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    n_per = cfg.n_layers // cfg.attn_period
+    x, pcache = jax.lax.scan(body, x, params["periods"],
+                             unroll=n_per if cfg.unroll_scans else 1)
+    cache = {"periods": pcache}
+    if tail:
+        def tail_body(x, rec_p):
+            y, (h, conv) = rec_layer_apply(x, rec_p, cfg)
+            return y, {"h": h, "conv": conv.astype(jnp.float32)}
+        x, tcache = jax.lax.scan(tail_body, x, _cast(params["tail"], dt),
+                                 unroll=cfg.unroll_scans)
+        cache["tail"] = tcache
+    x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:].astype(ldt),
+                        params["unembed"].astype(ldt),
+                        preferred_element_type=jnp.float32)
+    return mask_padded_logits(logits, cfg.vocab), cache
+
+
+def decode_step(params, cfg, token, cache, pos):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], token, axis=0).astype(dt)
+    period, n_per, tail = _period_counts(cfg)
+    w = cfg.sliding_window
+    wpos = pos % w if w else pos
+
+    def body(x, inp):
+        period_p, pc = inp
+        period_p = _cast(period_p, dt)
+
+        def rec_body(x, rec_inp):
+            rec_p, h, conv = rec_inp
+            y, new = rec_layer_decode(x, rec_p, cfg, {"h": h, "conv": conv})
+            return y, (new["h"], new["conv"].astype(jnp.float32))
+
+        x, (hs, convs) = jax.lax.scan(
+            rec_body, x, (period_p["recs"], pc["rec_h"], pc["rec_conv"]),
+            unroll=cfg.unroll_scans)
+        x, ck, cv = attn_layer_decode(x, period_p["attn"], cfg,
+                                      pc["k"], pc["v"], pos, wpos)
+        return x, {"rec_h": hs, "rec_conv": convs, "k": ck, "v": cv}
+
+    n_per = cfg.n_layers // cfg.attn_period
+    x, pcache = jax.lax.scan(body, x, (params["periods"], cache["periods"]),
+                             unroll=n_per if cfg.unroll_scans else 1)
+    new_cache = {"periods": pcache}
+    if tail:
+        def tail_body(x, inp):
+            rec_p, h, conv = inp
+            y, new = rec_layer_decode(x, rec_p, cfg,
+                                      {"h": h, "conv": conv})
+            return y, {"h": new["h"], "conv": new["conv"].astype(jnp.float32)}
+        x, tcache = jax.lax.scan(
+            tail_body, x, (_cast(params["tail"], dt), cache["tail"]["h"],
+                           cache["tail"]["conv"]), unroll=cfg.unroll_scans)
+        new_cache["tail"] = tcache
+    x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(ldt),
+                        params["unembed"].astype(ldt),
+                        preferred_element_type=jnp.float32)
+    return mask_padded_logits(logits, cfg.vocab), new_cache

@@ -1,0 +1,212 @@
+"""Shared neural-net building blocks (pure-pytree params, no flax).
+
+All blocks take/return plain dicts of jnp arrays so they stack cleanly along
+a leading layer axis for ``jax.lax.scan`` over layers (key for compile time
+at 40-64 layers) and shard transparently under pjit.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vexp import get_exp_fn
+
+
+# ---------------------------------------------------------------- init utils
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+
+def rmsnorm(x, w, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_apply(x, p, kind, eps):
+    if kind == "layernorm":
+        return layernorm(x, p["w"], p.get("b"), eps)
+    return rmsnorm(x, p["w"], eps)
+
+
+def norm_init(d, kind):
+    p = {"w": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["b"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------- rope
+
+def rope_freqs(hd_rot: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd_rot, 2, jnp.float32) / hd_rot))
+
+
+def apply_rope(x, pos, theta=10000.0, rope_pct=1.0):
+    """x: (B, S, H, D); pos: (B, S) or (S,) absolute positions."""
+    d = x.shape[-1]
+    d_rot = int(d * rope_pct) // 2 * 2
+    if d_rot == 0:
+        return x
+    freqs = rope_freqs(d_rot, theta)                      # (d_rot/2,)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    ang = pos[..., None].astype(jnp.float32) * freqs      # (B, S, d_rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+# ------------------------------------------------------------- activations
+
+def vexp_sigmoid(x, exp_fn):
+    """sigmoid(x) = 1 / (1 + exp(-x)) with the vexp exponential."""
+    xf = x.astype(jnp.float32)
+    e = exp_fn(-jnp.abs(xf))
+    s = jnp.where(xf >= 0, 1.0 / (1.0 + e), e / (1.0 + e))
+    return s.astype(x.dtype)
+
+
+def vexp_softplus(x, exp_fn):
+    """softplus(x) = log1p(exp(x)), stable, exp via vexp."""
+    xf = x.astype(jnp.float32)
+    return (jnp.maximum(xf, 0.0)
+            + jnp.log1p(exp_fn(-jnp.abs(xf)))).astype(x.dtype)
+
+
+def vexp_silu(x, exp_fn):
+    return x * vexp_sigmoid(x, exp_fn)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ----------------------------------------------------------------------- mlp
+
+def mlp_init(key, d, f, act, use_bias=False, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        p = {"wg": dense_init(ks[0], d, f, dtype),
+             "wu": dense_init(ks[1], d, f, dtype),
+             "wd": dense_init(ks[2], f, d, dtype)}
+    else:
+        p = {"wu": dense_init(ks[0], d, f, dtype),
+             "wd": dense_init(ks[1], f, d, dtype)}
+    if use_bias:
+        p["bu"] = jnp.zeros((f,), dtype)
+        p["bd"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp_apply(x, p, act, exp_impl="vexp"):
+    exp_fn = get_exp_fn(exp_impl)
+    if act == "swiglu":
+        g = vexp_silu(x @ p["wg"], exp_fn)
+        u = x @ p["wu"]
+        h = g * u
+    else:
+        h = x @ p["wu"]
+        if "bu" in p:
+            h = h + p["bu"].astype(h.dtype)
+        h = gelu(h)
+    y = h @ p["wd"]
+    if "bd" in p:
+        y = y + p["bd"].astype(y.dtype)
+    return y
+
+
+def mask_padded_logits(logits, vocab: int):
+    """Mask the padded tail of the vocab dim (serving boundary): embedding
+    tables are padded to a shard-friendly multiple of 256; padded logits
+    must not win an argmax."""
+    if logits.shape[-1] == vocab:
+        return logits
+    keep = jnp.arange(logits.shape[-1]) < vocab
+    return jnp.where(keep, logits, -1e30)
+
+
+# --------------------------------------------------------- chunked CE loss
+
+def cross_entropy(x_final, w_unembed, labels, *, chunk=512, exp_impl="vexp",
+                  logit_softcap=0.0, mask=None, unroll=False):
+    """Chunked cross-entropy over the sequence axis.
+
+    Avoids materializing the full (B, S, V) logits: scans seq chunks, each
+    chunk computes logits, a vexp-based logsumexp, and the label logit via a
+    gathered embedding row (cheap vs. one-hot). Returns mean nats/token.
+
+    x_final: (B, S, D); w_unembed: (D, V) (possibly vocab-sharded);
+    labels: (B, S) int32; mask: optional (B, S) bool of valid tokens.
+    """
+    exp_fn = get_exp_fn(exp_impl)
+    b, s, d = x_final.shape
+    chunk = min(chunk, s)
+    nchunk = -(-s // chunk)
+    pad = nchunk * chunk - s
+    if pad:
+        x_final = jnp.pad(x_final, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask if mask is not None
+                       else jnp.ones((b, s), bool), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((b, s), bool)
+
+    xc = x_final.reshape(b, nchunk, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nchunk, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, nchunk, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        x, lab, m = inp
+        logits = (x.astype(jnp.float32)
+                  @ w_unembed.astype(jnp.float32))          # (B, C, V)
+        if logit_softcap:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        mx = jax.lax.stop_gradient(jnp.max(logits, -1, keepdims=True))
+        lse = jnp.log(jnp.sum(exp_fn(logits - mx), -1)) + mx[..., 0]
+        # label logit via row gather from the unembedding (D,V) -> (B,C,D)
+        wrow = jnp.take(w_unembed.astype(jnp.float32).T, lab, axis=0)
+        corr = jnp.sum(x.astype(jnp.float32) * wrow, -1)
+        if logit_softcap:
+            corr = logit_softcap * jnp.tanh(corr / logit_softcap)
+        nll = (lse - corr) * m
+        return (tot + nll.sum(), cnt + m.sum()), None
+
+    # Remat the chunk body: without this, scan's backward saves every
+    # chunk's (B, C, V) f32 logits — ~250 GB/device for a 256k vocab at
+    # train_4k (found by the dry-run's memory analysis). Recomputing the
+    # chunk logits in the backward costs ~+33% of CE FLOPs (~5% of step).
+    body = jax.checkpoint(body, prevent_cse=False)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)), (xc, lc, mc),
+        unroll=unroll)
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,293 @@
+"""Mamba-2 (SSD, state-space duality) — attention-free family.
+
+Arch-applicability note (per DESIGN.md §4): there is no attention softmax
+here, so the paper's *softmax kernel* does not apply; however the SSD scan is
+exponential-heavy — per-step decays ``a_t = exp(Δt·A)``, ``softplus(Δt)``
+and the SiLU gates — and all of those route through the same VEXP primitive.
+
+Chunked SSD (chunk = cfg.ssm_chunk):
+  * decays kept in log domain (log a = Δt·A ≤ 0 — vexp's best-accuracy range),
+  * intra-chunk: masked quadratic "attention" score (C_i·B_j)·exp(L_i−L_j)·Δt_j,
+  * inter-chunk: (B, nh, hd, ds) state carried by a lax.scan over chunks.
+
+Decode is a single state update: h ← a·h + Δt·(B ⊗ x); y = C·h + D·x.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vexp import get_exp_fn
+from .layers import (dense_init, norm_init, norm_apply, embed_init,
+                     vexp_softplus, vexp_silu, cross_entropy,
+                     mask_padded_logits)
+
+
+def ssm_dims(cfg):
+    di = cfg.d_inner
+    nh = cfg.ssm_nheads
+    ds = cfg.ssm_state
+    ng = cfg.ssm_ngroups
+    conv_dim = di + 2 * ng * ds
+    return di, nh, ds, ng, conv_dim
+
+
+def ssm_layer_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di, nh, ds, ng, conv_dim = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": norm_init(d, cfg.norm),
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * ng * ds + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    di, nh, ds, ng, _ = ssm_dims(cfg)
+    z, x, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + ng * ds, 2 * di + 2 * ng * ds], axis=-1)
+    return z, x, Bc, Cc, dt
+
+
+def _causal_conv(u, w, b, state=None):
+    """Depthwise causal conv along seq. u: (B, S, C); w: (W, C).
+    state: optional (B, W-1, C) left context (decode). Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    y = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(width)) + b
+    return y, full[:, -(width - 1):]
+
+
+def ssm_layer_apply(x, p, cfg, return_state=False):
+    """Full-sequence SSD. x: (B, S, D) -> (B, S, D) [, final state]."""
+    exp_fn = get_exp_fn(cfg.exp_impl)
+    b, s, d = x.shape
+    di, nh, ds, ng, conv_dim = ssm_dims(cfg)
+    hd = cfg.ssm_headdim
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, "seq must divide ssm_chunk"
+    nc = s // q
+
+    h = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
+    z, xin, Bc, Cc, dt = _split_proj(h @ p["in_proj"], cfg)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    conv_out = vexp_silu(conv_out, exp_fn)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + ng * ds], axis=-1)
+
+    dt = vexp_softplus(dt.astype(jnp.float32) + p["dt_bias"], exp_fn)  # (B,S,nh)
+    A = -exp_fn(p["A_log"])                                            # (nh,)
+    la = dt * A                                                        # log a_t <= 0
+
+    xh = xin.astype(jnp.float32).reshape(b, s, nh, hd)
+    Bh = Bc.astype(jnp.float32).reshape(b, s, ng, ds)
+    Ch = Cc.astype(jnp.float32).reshape(b, s, ng, ds)
+    gph = nh // ng                                  # heads per group
+    # chunked views: (B, nc, Q, ...)
+    xc = xh.reshape(b, nc, q, nh, hd)
+    Bb = Bh.reshape(b, nc, q, ng, ds)
+    Cb = Ch.reshape(b, nc, q, ng, ds)
+    lac = la.reshape(b, nc, q, nh)
+    dtc = dt.reshape(b, nc, q, nh)
+
+    L = jnp.cumsum(lac, axis=2)                     # within-chunk cumulative
+    Ltot = L[:, :, -1]                              # (B, nc, nh)
+
+    # ---- intra-chunk (masked quadratic) ----
+    # scores[i,j] = (C_i . B_j) * exp(L_i - L_j) * dt_j   for j <= i
+    # Grouped formulation: heads are viewed as (ng, gph) so the shared
+    # B/C projections are never materialized per head (§Perf iteration B1
+    # — the repeat-based version wrote (B,nc,Q,nh,ds) copies to HBM).
+    mdt = jnp.bfloat16 if cfg.attn_mm_dtype == "bf16" else jnp.float32
+    cb = jnp.einsum("bnigd,bnjgd->bngij", Cb.astype(mdt), Bb.astype(mdt),
+                    preferred_element_type=jnp.float32)  # (B,nc,ng,Q,Q)
+    Li = L.transpose(0, 1, 3, 2)                    # (B,nc,nh,Q)
+    diff = Li[..., :, None] - Li[..., None, :]      # (B,nc,nh,Q,Q)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask, exp_fn(jnp.minimum(diff, 0.0)), 0.0)
+    dtj = dtc.transpose(0, 1, 3, 2)                 # (B,nc,nh,Q)
+    wh = (decay * dtj[..., None, :]).reshape(
+        b, nc, ng, gph, q, q)                       # head-decay (grouped)
+    xg = xc.reshape(b, nc, q, ng, gph, hd)
+    # B3: the big O(S*Q) streams (scores, decays, x) move in mm dtype;
+    # accumulation stays f32 via preferred_element_type.
+    y_intra = jnp.einsum("bngij,bngpij,bnjgpd->bnigpd",
+                         cb.astype(mdt), wh.astype(mdt), xg.astype(mdt),
+                         preferred_element_type=jnp.float32)
+    y_intra = y_intra.reshape(b, nc, q, nh, hd)
+
+    # ---- chunk states ----
+    # state_c = sum_j exp(Ltot - L_j) * dt_j * B_j (x) x_j  -> (B,nc,nh,hd,ds)
+    sdecay = exp_fn(Ltot[:, :, None, :] - L) * dtc  # (B,nc,Q,nh)
+    sg = sdecay.reshape(b, nc, q, ng, gph)
+    states = jnp.einsum("bnjgp,bnjgpd,bnjgs->bngpds",
+                        sg.astype(mdt), xg.astype(mdt), Bb.astype(mdt),
+                        preferred_element_type=jnp.float32)
+    states = states.reshape(b, nc, nh, hd, ds)
+
+    # ---- inter-chunk recurrence over nc ----
+    def scan_body(hprev, inp):
+        st, ltot = inp                              # (B,nh,hd,ds), (B,nh)
+        hnew = hprev * exp_fn(ltot)[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    h_final, hprevs = jax.lax.scan(
+        scan_body, h0,
+        (states.transpose(1, 0, 2, 3, 4), Ltot.transpose(1, 0, 2)),
+        unroll=cfg.unroll_scans)
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)        # (B,nc,nh,hd,ds)
+
+    # y_inter_i = C_i . (exp(L_i) * H_prev)   (grouped: no C repeat)
+    edec = jnp.transpose(exp_fn(Li), (0, 1, 3, 2))  # (B,nc,Q,nh)
+    eg = edec.reshape(b, nc, q, ng, gph)
+    hg = hprevs.reshape(b, nc, ng, gph, hd, ds)
+    y_inter = jnp.einsum("bnigs,bnigp,bngpds->bnigpd",
+                         Cb.astype(mdt), eg.astype(mdt), hg.astype(mdt),
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter.reshape(b, nc, q, nh, hd)
+
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * vexp_silu(z, exp_fn)
+    out = x + y @ p["out_proj"]
+    if return_state:
+        return out, {"h": h_final, "conv": conv_state.astype(jnp.float32)}
+    return out
+
+
+def ssm_layer_decode(x, p, cfg, state):
+    """Single-token decode. state: {"h": (B,nh,hd,ds), "conv": (B,W-1,C)}."""
+    exp_fn = get_exp_fn(cfg.exp_impl)
+    b = x.shape[0]
+    di, nh, ds, ng, conv_dim = ssm_dims(cfg)
+    hd = cfg.ssm_headdim
+    gph = nh // ng
+
+    hin = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
+    z, xin, Bc, Cc, dt = _split_proj(hin @ p["in_proj"], cfg)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)      # (B,1,C)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      state["conv"])
+    conv_out = vexp_silu(conv_out, exp_fn)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + ng * ds], axis=-1)
+
+    dt = vexp_softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"], exp_fn)
+    a = exp_fn(dt * (-exp_fn(p["A_log"])))                 # (B,nh)
+    xh = xin[:, 0].astype(jnp.float32).reshape(b, nh, hd)
+    Bh = jnp.repeat(Bc[:, 0].astype(jnp.float32).reshape(b, ng, ds),
+                    gph, axis=1)                           # (B,nh,ds)
+    Ch = jnp.repeat(Cc[:, 0].astype(jnp.float32).reshape(b, ng, ds),
+                    gph, axis=1)
+
+    hnew = (state["h"] * a[..., None, None]
+            + (dt[..., None] * xh)[..., None] * Bh[:, :, None, :])
+    y = jnp.einsum("bhds,bhs->bhd", hnew, Ch) + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = y * vexp_silu(z, exp_fn)
+    return x + y @ p["out_proj"], {"h": hnew, "conv": new_conv}
+
+
+# ------------------------------------------------------------- full model
+
+def init_params(cfg, key):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = [ssm_layer_init(ks[i], cfg) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {"layers": stacked,
+            "ln_f": norm_init(cfg.d_model, cfg.norm),
+            "embed": embed_init(ks[-1], cfg.vocab_padded, cfg.d_model),
+            "unembed": dense_init(ks[-2], cfg.d_model, cfg.vocab_padded)}
+
+
+def forward(params, cfg, tokens):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+    def body(x, layer_p):
+        layer_p = jax.tree.map(
+            lambda a: a.astype(dt)
+            if a.dtype == jnp.float32 and a.ndim > 1 else a, layer_p)
+        return ssm_layer_apply(x, layer_p, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"],
+                        unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    return norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+
+
+def loss_fn(params, cfg, batch):
+    x = forward(params, cfg, batch["tokens"])
+    return cross_entropy(x, params["unembed"], batch["labels"],
+                         chunk=cfg.loss_chunk, exp_impl=cfg.exp_impl,
+                         mask=batch.get("mask"), unroll=cfg.unroll_scans)
+
+
+def init_state(cfg, batch):
+    di, nh, ds, ng, conv_dim = ssm_dims(cfg)
+    shape_h = (cfg.n_layers, batch, nh, cfg.ssm_headdim, ds)
+    shape_c = (cfg.n_layers, batch, cfg.conv_width - 1, conv_dim)
+    return {"h": jnp.zeros(shape_h, jnp.float32),
+            "conv": jnp.zeros(shape_c, jnp.float32)}
+
+
+def prefill(params, cfg, tokens):
+    """Returns (last_logits, state): one full-sequence SSD pass per layer,
+    collecting each layer's final (h, conv) state for subsequent decode."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+    def body(x, layer_p):
+        layer_p = jax.tree.map(
+            lambda a: a.astype(dt)
+            if a.dtype == jnp.float32 and a.ndim > 1 else a, layer_p)
+        y, state = ssm_layer_apply(x, layer_p, cfg, return_state=True)
+        return y, state
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, state = jax.lax.scan(body, x, params["layers"],
+                            unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:].astype(ldt),
+                        params["unembed"].astype(ldt),
+                        preferred_element_type=jnp.float32)
+    return mask_padded_logits(logits, cfg.vocab), state
+
+
+def decode_step(params, cfg, token, state, pos):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], token, axis=0).astype(dt)
+
+    def body(x, inp):
+        layer_p, h, conv = inp
+        layer_p = jax.tree.map(
+            lambda a: a.astype(dt)
+            if a.dtype == jnp.float32 and a.ndim > 1 else a, layer_p)
+        y, new = ssm_layer_decode(x, layer_p, cfg, {"h": h, "conv": conv})
+        return y, new
+
+    x, new_state = jax.lax.scan(
+        body, x, (params["layers"], state["h"], state["conv"]),
+        unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(ldt),
+                        params["unembed"].astype(ldt),
+                        preferred_element_type=jnp.float32)
+    return mask_padded_logits(logits, cfg.vocab), new_state

@@ -1,0 +1,366 @@
+"""Decoder / encoder transformer covering the dense, moe, vlm and audio
+families (command-r, danube3, phi3, stablelm, grok-1, dbrx, internvl2,
+hubert) with GQA, RoPE, SwiGLU, sliding windows, parallel blocks, MoE FFNs,
+modality-stub inputs, KV caches — all softmax/exp paths through VEXP.
+
+Layers are stacked along a leading axis and executed with jax.lax.scan
+(compile-time and HLO-size critical at 40-64 layers); each layer body is
+optionally rematerialized.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import attention, decode_attention
+from .layers import (dense_init, embed_init, norm_init, norm_apply,
+                     apply_rope, mlp_init, mlp_apply, cross_entropy,
+                     mask_padded_logits)
+from .moe import moe_init, moe_apply
+
+
+def _cdtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ------------------------------------------------------------------ attention
+
+def attn_init(key, cfg, dtype=jnp.float32):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, h * hd, dtype),
+         "wk": dense_init(ks[1], d, hkv * hd, dtype),
+         "wv": dense_init(ks[2], d, hkv * hd, dtype),
+         "wo": dense_init(ks[3], h * hd, d, dtype)}
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def _qkv(x, p, cfg, pos):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.rope_pct > 0:
+        q = apply_rope(q, pos, cfg.rope_theta, cfg.rope_pct)
+        k = apply_rope(k, pos, cfg.rope_theta, cfg.rope_pct)
+    return q, k, v
+
+
+def attn_apply(x, p, cfg, pos, *, window=None, causal=None):
+    """Full-sequence attention (train / prefill). Returns y, (k, v)."""
+    causal = cfg.causal if causal is None else causal
+    q, k, v = _qkv(x, p, cfg, pos)
+    o = attention(q, k, v, causal=causal, window=window,
+                  exp_impl=cfg.exp_impl, impl=cfg.attention_impl,
+                  unroll=cfg.unroll_scans, block_k=cfg.attn_block_k,
+                  mm_dtype=cfg.attn_mm_dtype)
+    return o.reshape(x.shape[0], x.shape[1], -1) @ p["wo"], (k, v)
+
+
+def attn_decode(x, p, cfg, cache_k, cache_v, pos, *, window=None):
+    """Single-token decode. cache_[kv]: (B, Smax, Hkv, hd) for "bshd"
+    layout, (B, Hkv, Smax, hd) for "bhsd"; pos: scalar int (current
+    position). Returns y, (new_k_cache, new_v_cache)."""
+    b = x.shape[0]
+    lay = cfg.kv_cache_layout
+    q, k, v = _qkv(x, p, cfg, jnp.full((b, 1), pos, jnp.int32))
+    if lay == "bhsd":
+        k = k.transpose(0, 2, 1, 3)          # (B, Hkv, 1, hd) — tiny
+        v = v.transpose(0, 2, 1, 3)
+        axis = 2
+    else:
+        axis = 1
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                             pos, axis=axis)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                             pos, axis=axis)
+    o = decode_attention(q, ck, cv, cache_len=pos + 1, window=window,
+                         exp_impl=cfg.exp_impl, mm_dtype=cfg.attn_mm_dtype,
+                         layout=lay)
+    return o.reshape(b, 1, -1) @ p["wo"], (ck, cv)
+
+
+# --------------------------------------------------------------------- block
+
+def block_init(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {"ln_attn": norm_init(cfg.d_model, cfg.norm),
+         "attn": attn_init(ks[0], cfg, dtype)}
+    if not cfg.parallel_block:
+        p["ln_mlp"] = norm_init(cfg.d_model, cfg.norm)
+    if cfg.n_experts:
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act,
+                            cfg.use_bias, dtype)
+    return p
+
+
+def block_apply(x, p, cfg, pos):
+    """Returns (y, kv, aux)."""
+    aux = {}
+    h = norm_apply(x, p["ln_attn"], cfg.norm, cfg.norm_eps)
+    a, kv = attn_apply(h, p["attn"], cfg, pos, window=cfg.sliding_window)
+    if cfg.parallel_block:
+        # command-r: attention and FFN read the same normed input.
+        if cfg.n_experts:
+            m, aux = moe_apply(h, p["moe"], cfg)
+        else:
+            m = mlp_apply(h, p["mlp"], cfg.act, cfg.exp_impl)
+        return x + a + m, kv, aux
+    x = x + a
+    h = norm_apply(x, p["ln_mlp"], cfg.norm, cfg.norm_eps)
+    if cfg.n_experts:
+        m, aux = moe_apply(h, p["moe"], cfg)
+    else:
+        m = mlp_apply(h, p["mlp"], cfg.act, cfg.exp_impl)
+    return x + m, kv, aux
+
+
+def block_decode(x, p, cfg, cache_k, cache_v, pos):
+    h = norm_apply(x, p["ln_attn"], cfg.norm, cfg.norm_eps)
+    a, kv = attn_decode(h, p["attn"], cfg, cache_k, cache_v, pos,
+                        window=cfg.sliding_window)
+    if cfg.parallel_block:
+        if cfg.n_experts:
+            m, _ = moe_apply(h, p["moe"], cfg)
+        else:
+            m = mlp_apply(h, p["mlp"], cfg.act, cfg.exp_impl)
+        return x + a + m, kv
+    x = x + a
+    h = norm_apply(x, p["ln_mlp"], cfg.norm, cfg.norm_eps)
+    if cfg.n_experts:
+        m, _ = moe_apply(h, p["moe"], cfg)
+    else:
+        m = mlp_apply(h, p["mlp"], cfg.act, cfg.exp_impl)
+    return x + m, kv
+
+
+# ---------------------------------------------------------------- full model
+
+def init_params(cfg, key):
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    layers = [block_init(ks[i], cfg) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    p = {"layers": stacked,
+         "ln_f": norm_init(cfg.d_model, cfg.norm)}
+    if cfg.family == "audio":
+        # HuBERT's conv feature extractor and conv-relative positional
+        # embedding are stubbed (precomputed frames + sinusoidal positions,
+        # length-agnostic for the 32k-frame prefill shape).
+        p["in_proj"] = dense_init(ks[-1], cfg.frame_input_dim, cfg.d_model)
+        p["unembed"] = dense_init(ks[-3], cfg.d_model, cfg.vocab_padded)
+        return p
+    p["embed"] = embed_init(ks[-1], cfg.vocab_padded, cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[-2], cfg.d_model, cfg.vocab_padded)
+    if cfg.family == "vlm":
+        p["vis_proj"] = dense_init(ks[-3], cfg.vision_embed_dim, cfg.d_model)
+    return p
+
+
+def unembed_matrix(params, cfg):
+    return (params["embed"].T if cfg.tie_embeddings
+            else params["unembed"])
+
+
+def embed_inputs(params, cfg, tokens, extra=None):
+    """tokens (B, S_txt) int32; extra: vlm vision embeds (B, Nv, Dv) or
+    audio frames (B, S, F). Returns (B, S, D) in compute dtype."""
+    dt = _cdtype(cfg)
+    if cfg.family == "audio":
+        x = extra.astype(dt) @ params["in_proj"].astype(dt)
+        s, d = x.shape[1], x.shape[2]
+        pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+        inv = 1.0 / (10000.0 ** (jnp.arange(0, d, 2, jnp.float32) / d))
+        pe = jnp.concatenate([jnp.sin(pos * inv), jnp.cos(pos * inv)], -1)
+        return x + pe.astype(dt)[None]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if cfg.family == "vlm" and extra is not None:
+        vis = extra.astype(dt) @ params["vis_proj"].astype(dt)
+        x = jnp.concatenate([vis, x], axis=1)
+    return x
+
+
+def forward(params, cfg, tokens, extra=None, pos=None):
+    """Full-sequence forward to final hidden states (B, S, D) + aux."""
+    x = embed_inputs(params, cfg, tokens, extra)
+    b, s, _ = x.shape
+    if pos is None:
+        pos = jnp.arange(s)[None, :].astype(jnp.int32)
+    dt = _cdtype(cfg)
+
+    def body(carry, layer_p):
+        x, aux_acc = carry
+        layer_p = jax.tree.map(lambda a: a.astype(dt)
+                               if a.dtype == jnp.float32 and a.ndim > 1
+                               else a, layer_p)
+        y, _, aux = block_apply(x, layer_p, cfg, pos)
+        if aux:
+            aux_acc = {k: aux_acc.get(k, 0.0) + v for k, v in aux.items()}
+        return (y, aux_acc), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    aux0 = ({"moe_aux": jnp.float32(0), "moe_z": jnp.float32(0)}
+            if cfg.n_experts else {})
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), params["layers"],
+                               unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    return x, aux
+
+
+def loss_fn(params, cfg, batch):
+    """Training loss. batch: {"tokens", "labels", optional "extra"}."""
+    x, aux = forward(params, cfg, batch["tokens"], batch.get("extra"))
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if cfg.family == "vlm" and batch.get("extra") is not None:
+        x = x[:, batch["extra"].shape[1]:]       # loss on text positions only
+    w = unembed_matrix(params, cfg)
+    loss = cross_entropy(x, w, labels, chunk=cfg.loss_chunk,
+                         exp_impl=cfg.exp_impl,
+                         logit_softcap=cfg.logit_softcap, mask=mask,
+                         unroll=cfg.unroll_scans)
+    for v in (aux or {}).values():
+        loss = loss + v / cfg.n_layers
+    return loss
+
+
+def init_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
+    """Stacked KV cache: (L, B, S, Hkv, hd) ("bshd") or (L, B, Hkv, S, hd)
+    ("bhsd") ×2. Windowed archs allocate only the window (ring-buffer
+    semantics handled by position clamping)."""
+    s = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    if cfg.kv_cache_layout == "bhsd":
+        shape = (cfg.n_layers, batch, cfg.n_kv_heads, s, cfg.hd)
+    else:
+        shape = (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(params, cfg, tokens, extra=None):
+    """Forward over the prompt; returns (last_logits, cache)."""
+    x = embed_inputs(params, cfg, tokens, extra)
+    b, s, _ = x.shape
+    pos = jnp.arange(s)[None, :].astype(jnp.int32)
+    dt = _cdtype(cfg)
+
+    def body(x, layer_p):
+        layer_p = jax.tree.map(lambda a: a.astype(dt)
+                               if a.dtype == jnp.float32 and a.ndim > 1
+                               else a, layer_p)
+        y, kv, _ = block_apply(x, layer_p, cfg, pos)
+        k, v = kv
+        if cfg.sliding_window and s > cfg.sliding_window:
+            w = cfg.sliding_window
+            # ring-buffer layout: absolute position p lives at slot p % w,
+            # matching decode_step's write cursor.
+            k = jnp.roll(k[:, -w:], s % w, axis=1)
+            v = jnp.roll(v[:, -w:], s % w, axis=1)
+        if cfg.kv_cache_layout == "bhsd":
+            k, v = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+        return y, {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, cache = jax.lax.scan(body, x, params["layers"],
+                            unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:].astype(ldt),
+                        unembed_matrix(params, cfg).astype(ldt),
+                        preferred_element_type=jnp.float32)
+    return mask_padded_logits(logits, cfg.vocab), cache
+
+
+def decode_step(params, cfg, token, cache, pos):
+    """One decode step. token: (B, 1) int32; pos: scalar int32 (position of
+    this token); cache: stacked KV. Returns (logits, new_cache)."""
+    x = embed_inputs(params, cfg, token)
+    dt = _cdtype(cfg)
+    # Windowed caches are sized `window`; write position wraps.
+    wpos = (pos % cfg.sliding_window) if cfg.sliding_window else pos
+
+    def body(x, inp):
+        layer_p, ck, cv = inp
+        layer_p = jax.tree.map(lambda a: a.astype(dt)
+                               if a.dtype == jnp.float32 and a.ndim > 1
+                               else a, layer_p)
+        if cfg.sliding_window:
+            # ring buffer: write at wpos; effective length = min(pos+1, W).
+            k, v, q = _qkv_single(x, layer_p, cfg, pos)
+            ax = 2 if cfg.kv_cache_layout == "bhsd" else 1
+            if cfg.kv_cache_layout == "bhsd":
+                k, v = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k, wpos, axis=ax)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v, wpos, axis=ax)
+            h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
+            y, _ = _decode_windowed(h, layer_p, cfg, ck, cv, pos, wpos)
+            x = _finish_block(x, h, y, layer_p, cfg)
+            return x, {"k": ck, "v": cv}
+        h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
+        a, (ck, cv) = attn_decode(h, layer_p["attn"], cfg, ck, cv, pos)
+        x = _finish_block(x, h, a, layer_p, cfg)
+        return x, {"k": ck, "v": cv}
+
+    x, cache = jax.lax.scan(body, x, (params["layers"],
+                                      cache["k"], cache["v"]),
+                            unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(ldt),
+                        unembed_matrix(params, cfg).astype(ldt),
+                        preferred_element_type=jnp.float32)
+    return mask_padded_logits(logits, cfg.vocab), cache
+
+
+def _qkv_single(x, layer_p, cfg, pos):
+    h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
+    b = x.shape[0]
+    q, k, v = _qkv(h, layer_p["attn"], cfg, jnp.full((b, 1), pos, jnp.int32))
+    return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16), q
+
+
+def _decode_windowed(h, layer_p, cfg, ck, cv, pos, wpos):
+    """Windowed ring-buffer decode: all cache slots valid once pos >= W."""
+    b = h.shape[0]
+    q, _, _ = _qkv(h, layer_p["attn"], cfg, jnp.full((b, 1), pos, jnp.int32))
+    w = cfg.sliding_window
+    valid = jnp.minimum(pos + 1, w)
+    o = decode_attention(q, ck, cv, cache_len=valid, exp_impl=cfg.exp_impl,
+                         mm_dtype=cfg.attn_mm_dtype,
+                         layout=cfg.kv_cache_layout)
+    return o.reshape(b, 1, -1) @ layer_p["attn"]["wo"], None
+
+
+def _finish_block(x, h, a, layer_p, cfg):
+    if cfg.parallel_block:
+        if cfg.n_experts:
+            m, _ = moe_apply(h, layer_p["moe"], cfg)
+        else:
+            m = mlp_apply(h, layer_p["mlp"], cfg.act, cfg.exp_impl)
+        return x + a + m
+    x = x + a
+    h2 = norm_apply(x, layer_p["ln_mlp"], cfg.norm, cfg.norm_eps)
+    if cfg.n_experts:
+        m, _ = moe_apply(h2, layer_p["moe"], cfg)
+    else:
+        m = mlp_apply(h2, layer_p["mlp"], cfg.act, cfg.exp_impl)
+    return x + m

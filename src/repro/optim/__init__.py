@@ -1,0 +1,1 @@
+from .adamw import OptConfig, init, update, schedule, global_norm

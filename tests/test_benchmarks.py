@@ -1,0 +1,60 @@
+"""Benchmark-layer tests: the Snitch cost model must reproduce the paper's
+headline numbers; accuracy benchmarks must hit the paper's envelopes."""
+
+import sys
+import os
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import snitch_model as sm
+from benchmarks import exp_accuracy
+
+
+class TestSnitchModel:
+    def test_softmax_speedup_paper(self):
+        """Paper: 162.7x (Fig. 6a). Model: 360 / 2.125 cycles."""
+        assert 140 <= sm.softmax_speedup() <= 190
+
+    def test_softmax_energy_paper(self):
+        """Paper: 74.3x (Fig. 6c)."""
+        assert 55 <= sm.softmax_energy_reduction() <= 90
+
+    def test_exp_energy_table3(self):
+        assert sm.E_EXP_BASE / sm.E_EXP_HW > 500   # "two orders of magnitude"
+
+    def test_fa2_speedup_paper(self):
+        """Paper: up to 8.2x (Fig. 6d)."""
+        assert 6 <= sm.fa2_speedup() <= 13
+
+    def test_fa2_softmax_share(self):
+        """Paper Fig. 6e: softmax dominates baseline, ~6% optimized."""
+        base = sm.fa2_softmax_share(sm.AttnShape(2048), "baseline")
+        opt = sm.fa2_softmax_share(sm.AttnShape(2048), "sw_exp_hw_optim")
+        assert base > 0.5
+        assert opt < 0.12
+
+    def test_e2e_ordering_paper_fig8(self):
+        """Fig. 8 ordering: GPT-2 > GPT-3 > ViT-B > ViT-H speedups."""
+        sp = {n: sm.e2e_speedup(n) for n in sm.E2E_MODELS}
+        assert sp["gpt2-small"] > sp["gpt3-xl"] > sp["vit-base"] \
+            > sp["vit-huge"]
+        assert sp["gpt2-small"] > 3.0          # paper: 5.8x
+        assert sp["vit-huge"] > 1.05           # paper: 1.4x
+
+    def test_e2e_energy_positive_gains(self):
+        for n in sm.E2E_MODELS:
+            assert sm.e2e_energy_ratio(n) > 1.0
+
+
+class TestAccuracyBench:
+    def test_exp_accuracy_paper_envelope(self):
+        errs = exp_accuracy.exp_relative_error(n=50_000)
+        for impl, e in errs.items():
+            assert e["mean_rel"] < 0.0030, impl     # paper: 0.14%
+            assert e["max_rel"] < 0.010, impl       # paper: 0.78%
+
+    def test_softmax_mse_paper_order(self):
+        for impl, mse in exp_accuracy.softmax_mse().items():
+            assert mse < 5e-9, impl                 # paper: 1.62e-9

@@ -1,0 +1,37 @@
+"""Allclose tests for the fused flash-decode Pallas kernel."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_ref)
+
+
+@pytest.mark.parametrize("b,h,hkv,d,smax,clen", [
+    (2, 8, 8, 64, 512, 300),      # MHA
+    (1, 8, 2, 64, 1024, 1024),    # GQA 4:1, full cache
+    (2, 4, 1, 80, 640, 17),       # MQA, unaligned head dim, short ctx
+    (1, 16, 4, 128, 512, 511),
+])
+def test_allclose_vs_ref(b, h, hkv, d, smax, clen):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, hkv, smax, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, hkv, smax, d), jnp.float32)
+    out = decode_attention(q, kc, vc, clen, block_s=128, interpret=True)
+    ref = decode_attention_ref(q, kc, vc, clen)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_bf16_cache():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 1, 4, 64), jnp.float32)
+    kc = jax.random.normal(ks[1], (1, 2, 256, 64)).astype(jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (1, 2, 256, 64)).astype(jnp.bfloat16)
+    out = decode_attention(q, kc, vc, 200, block_s=128, interpret=True)
+    ref = decode_attention_ref(q, kc.astype(jnp.float32),
+                               vc.astype(jnp.float32), 200)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-2)

@@ -1,0 +1,114 @@
+"""Per-kernel allclose tests vs. the pure-jnp oracles (interpret=True).
+
+Sweeps shapes and dtypes per the deliverable requirements. All Pallas
+kernels target TPU; on this CPU container they execute through the Pallas
+interpreter, which runs the same kernel body.
+"""
+
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vexp import vexp as vexp_op, vexp_ref
+from repro.kernels.softmax import softmax as softmax_op, softmax_ref
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_ref)
+
+
+class TestVexpKernel:
+    @pytest.mark.parametrize("shape", [(8,), (130,), (256, 128), (3, 5, 67),
+                                       (1024, 512)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_allclose_vs_ref(self, shape, dtype):
+        x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 5).astype(dtype)
+        out = vexp_op(x, interpret=True)
+        ref = vexp_ref(x)
+        assert out.dtype == dtype and out.shape == shape
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            rtol=1e-6, atol=0)
+
+    def test_extremes(self):
+        x = jnp.asarray([-1e4, -100.0, 0.0, 100.0], jnp.float32)
+        out = np.asarray(vexp_op(x, interpret=True))
+        assert out[0] == 0.0 and out[1] == 0.0
+        assert out[2] == 1.0 and out[3] == np.inf
+
+
+class TestSoftmaxKernel:
+    @pytest.mark.parametrize("shape,axis", [
+        ((32, 128), -1), ((8, 300), -1), ((4, 16, 384), -1),
+        ((16, 64), 0), ((2, 8, 128, 100), -1),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_allclose_vs_ref(self, shape, axis, dtype):
+        x = (jax.random.normal(jax.random.PRNGKey(1), shape) * 4).astype(dtype)
+        out = softmax_op(x, axis=axis, interpret=True)
+        ref = softmax_ref(x.astype(jnp.float32), axis=axis).astype(dtype)
+        assert out.shape == shape and out.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=2e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+    def test_rows_sum_to_one(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (16, 200)) * 8
+        out = np.asarray(softmax_op(x, interpret=True))
+        np.testing.assert_allclose(out.sum(-1), 1.0, atol=1e-3)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("b,sq,sk,h,hkv,d", [
+        (1, 128, 128, 2, 2, 64),      # MHA, aligned
+        (2, 128, 256, 4, 2, 64),      # GQA 2:1, cross lengths
+        (1, 200, 200, 4, 1, 80),      # MQA, unaligned seq + head dim
+        (1, 256, 256, 8, 2, 128),     # GQA 4:1
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_allclose_vs_ref(self, b, sq, sk, h, hkv, d, causal):
+        if sq != sk and causal:
+            pytest.skip("causal with sq != sk is exercised via q_offset paths")
+        keys = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(keys[0], (b, sq, h, d), jnp.float32)
+        k = jax.random.normal(keys[1], (b, sk, hkv, d), jnp.float32)
+        v = jax.random.normal(keys[2], (b, sk, hkv, d), jnp.float32)
+        out = flash_attention(q, k, v, causal, None, None, 64, 64, True)
+        ref = flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-3, rtol=2e-3)
+
+    def test_bf16(self):
+        keys = jax.random.split(jax.random.PRNGKey(4), 3)
+        q = jax.random.normal(keys[0], (1, 128, 4, 64), jnp.bfloat16)
+        k = jax.random.normal(keys[1], (1, 128, 2, 64), jnp.bfloat16)
+        v = jax.random.normal(keys[2], (1, 128, 2, 64), jnp.bfloat16)
+        out = flash_attention(q, k, v, True, None, None, 64, 64, True)
+        ref = flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), atol=3e-2)
+
+    def test_sliding_window(self):
+        keys = jax.random.split(jax.random.PRNGKey(5), 3)
+        q = jax.random.normal(keys[0], (1, 256, 2, 64), jnp.float32)
+        k = jax.random.normal(keys[1], (1, 256, 2, 64), jnp.float32)
+        v = jax.random.normal(keys[2], (1, 256, 2, 64), jnp.float32)
+        out = flash_attention(q, k, v, True, 64, None, 64, 64, True)
+        ref = flash_attention_ref(q, k, v, causal=True, window=64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-3, rtol=2e-3)
+
+    def test_grad_finite(self):
+        keys = jax.random.split(jax.random.PRNGKey(6), 3)
+        q = jax.random.normal(keys[0], (1, 128, 2, 64), jnp.float32)
+        k = jax.random.normal(keys[1], (1, 128, 2, 64), jnp.float32)
+        v = jax.random.normal(keys[2], (1, 128, 2, 64), jnp.float32)
+
+        def loss(q, k, v):
+            return flash_attention(q, k, v, True, None, None, 64, 64,
+                                   True).sum()
+
+        gq, gk, gv = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+        for g in (gq, gk, gv):
+            assert np.isfinite(np.asarray(g)).all()

@@ -1,0 +1,68 @@
+"""System-level property tests (hypothesis): invariants that must hold for
+any shape/seed — checkpoint roundtrips, kernel/ref agreement, optimizer
+step sanity, online-softmax algebra at scale."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.vexp import vexp as vexp_op, vexp_ref
+from repro.kernels.softmax import softmax as softmax_op, softmax_ref
+from repro import ckpt as ckpt_lib
+from repro import optim
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 4),
+       st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_vexp_kernel_any_shape(n, rank_extra, dtype):
+    shape = (n,) + (2,) * (rank_extra - 1)
+    x = (jax.random.normal(jax.random.PRNGKey(n), shape) * 6).astype(dtype)
+    out = vexp_op(x, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(vexp_ref(x), np.float32),
+                               rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 40), st.integers(2, 400))
+def test_softmax_kernel_any_rows(rows, cols):
+    x = jax.random.normal(jax.random.PRNGKey(rows * 1000 + cols),
+                          (rows, cols)) * 5
+    out = softmax_op(x, interpret=True)
+    ref = softmax_ref(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out).sum(-1), 1.0, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_checkpoint_roundtrip_any_tree(seed):
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.standard_normal((3, 5)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.standard_normal(7), jnp.bfloat16),
+                  "d": jnp.int32(rng.integers(0, 100))},
+            "e": [jnp.ones((2, 2))]}
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        ckpt_lib.save(tree, d, 1)
+        flat, _ = ckpt_lib.restore(d)
+        back = ckpt_lib.unflatten_like(flat, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(1e-5, 1e-1), st.integers(1, 50))
+def test_optimizer_step_bounded(lr, steps):
+    """AdamW updates are bounded by ~lr per step (trust-region property)."""
+    cfg = optim.OptConfig(lr=lr, warmup_steps=0, total_steps=max(steps, 2),
+                          weight_decay=0.0)
+    params = {"w": jnp.zeros((4,))}
+    state = optim.init(params, cfg)
+    g = {"w": jnp.ones((4,)) * 100.0}
+    for _ in range(steps):
+        params, state, _ = optim.update(g, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) <= 1.1 * lr * steps

@@ -1,0 +1,161 @@
+"""Tests for vexp softmax, online-stats algebra, and attention paths."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+import repro.core.softmax as S
+import repro.core.attention as A
+from repro.core.vexp import get_exp_fn
+
+
+class TestSoftmax:
+    def test_close_to_exact(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 128)) * 4
+        a = S.softmax(x, exp_impl="vexp")
+        b = jax.nn.softmax(x, axis=-1)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-3, rtol=0)
+
+    def test_sums_to_one(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (32, 257)) * 10
+        s = S.softmax(x).sum(-1)
+        np.testing.assert_allclose(np.asarray(s), 1.0, atol=1e-3)
+
+    def test_masked(self):
+        x = jnp.zeros((2, 8))
+        mask = jnp.arange(8)[None, :] < 4
+        s = S.softmax(x, where=mask)
+        np.testing.assert_allclose(np.asarray(s[:, :4]), 0.25, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(s[:, 4:]), 0.0)
+
+    def test_log_softmax(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (16, 64)) * 3
+        a = S.log_softmax(x, exp_impl="exact")
+        b = jax.nn.log_softmax(x, axis=-1)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(2, 64), st.floats(0.1, 20.0))
+    def test_property_invariances(self, n, scale):
+        """softmax(x + c) == softmax(x); outputs in [0,1]; argmax preserved."""
+        key = jax.random.PRNGKey(n)
+        x = jax.random.normal(key, (n,)) * scale
+        s1 = np.asarray(S.softmax(x))
+        s2 = np.asarray(S.softmax(x + 123.0))
+        np.testing.assert_allclose(s1, s2, atol=2e-3)
+        assert (s1 >= 0).all() and (s1 <= 1.0 + 1e-6).all()
+        assert int(np.argmax(s1)) == int(np.argmax(np.asarray(x)))
+
+
+class TestOnlineStats:
+    def test_blockwise_equals_full(self):
+        """Processing a row in blocks via stats_update == full softmax
+        denominator (the paper's partial softmax equivalence)."""
+        exp_fn = get_exp_fn("exact")
+        x = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (4, 96))) * 5
+        stats = S.stats_init((4,))
+        for i in range(0, 96, 32):
+            stats, _, _ = S.stats_update(stats, jnp.asarray(x[:, i:i + 32]),
+                                         exp_fn=exp_fn)
+        m_ref = x.max(-1)
+        l_ref = np.exp(x - m_ref[:, None]).sum(-1)
+        np.testing.assert_allclose(np.asarray(stats.m), m_ref, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(stats.l), l_ref, rtol=1e-5)
+
+    def test_merge_associative_commutative(self):
+        exp_fn = get_exp_fn("exact")
+        xs = [np.asarray(jax.random.normal(jax.random.PRNGKey(i), (3, 16))) * 4
+              for i in range(3)]
+        parts = []
+        for x in xs:
+            st0, _, _ = S.stats_update(S.stats_init((3,)), jnp.asarray(x),
+                                       exp_fn=exp_fn)
+            parts.append(st0)
+        ab, _, _ = S.stats_merge(parts[0], parts[1], exp_fn=exp_fn)
+        abc1, _, _ = S.stats_merge(ab, parts[2], exp_fn=exp_fn)
+        bc, _, _ = S.stats_merge(parts[1], parts[2], exp_fn=exp_fn)
+        abc2, _, _ = S.stats_merge(parts[0], bc, exp_fn=exp_fn)
+        np.testing.assert_allclose(np.asarray(abc1.l), np.asarray(abc2.l),
+                                   rtol=1e-6)
+        ba, _, _ = S.stats_merge(parts[1], parts[0], exp_fn=exp_fn)
+        np.testing.assert_allclose(np.asarray(ab.l), np.asarray(ba.l),
+                                   rtol=1e-6)
+
+
+def _rand_qkv(key, b, sq, sk, h, hkv, d, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, sq, h, d), dtype)
+    k = jax.random.normal(k2, (b, sk, hkv, d), dtype)
+    v = jax.random.normal(k3, (b, sk, hkv, d), dtype)
+    return q, k, v
+
+
+class TestAttention:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("hkv", [8, 2, 1])
+    def test_flash_matches_xla(self, causal, hkv):
+        q, k, v = _rand_qkv(jax.random.PRNGKey(0), 2, 64, 64, 8, hkv, 16)
+        a = A.attention_xla(q, k, v, causal=causal, exp_impl="exact")
+        b = A.attention_flash(q, k, v, causal=causal, exp_impl="exact",
+                              block_k=16)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_vexp_close_to_exact(self):
+        q, k, v = _rand_qkv(jax.random.PRNGKey(1), 2, 32, 32, 4, 4, 32)
+        a = A.attention_flash(q, k, v, exp_impl="exact")
+        b = A.attention_flash(q, k, v, exp_impl="vexp")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3)
+
+    def test_sliding_window(self):
+        q, k, v = _rand_qkv(jax.random.PRNGKey(2), 1, 48, 48, 4, 4, 16)
+        a = A.attention_xla(q, k, v, causal=True, window=8, exp_impl="exact")
+        b = A.attention_flash(q, k, v, causal=True, window=8,
+                              exp_impl="exact", block_k=16)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_q_offset_prefill_chunk(self):
+        """Chunked prefill with q_offset == full forward on the same rows."""
+        q, k, v = _rand_qkv(jax.random.PRNGKey(3), 1, 32, 32, 4, 2, 16)
+        full = A.attention_xla(q, k, v, causal=True, exp_impl="exact")
+        tail = A.attention_xla(q[:, 16:], k, v, causal=True, q_offset=16,
+                               exp_impl="exact")
+        np.testing.assert_allclose(np.asarray(full[:, 16:]),
+                                   np.asarray(tail), atol=1e-4, rtol=1e-4)
+
+    def test_decode_matches_full(self):
+        """decode_attention on a cache == last row of full causal attn."""
+        b, s, h, hkv, d = 2, 24, 8, 4, 16
+        q, k, v = _rand_qkv(jax.random.PRNGKey(4), b, s, s, h, hkv, d)
+        full = A.attention_xla(q, k, v, causal=True, exp_impl="exact")
+        # cache larger than the valid length
+        smax = 32
+        kc = jnp.pad(k, ((0, 0), (0, smax - s), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, smax - s), (0, 0), (0, 0)))
+        dec = A.decode_attention(q[:, -1:], kc, vc, cache_len=s,
+                                 exp_impl="exact")
+        np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(dec),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_decode_windowed(self):
+        b, s, h, hkv, d = 1, 40, 4, 1, 16
+        q, k, v = _rand_qkv(jax.random.PRNGKey(5), b, s, s, h, hkv, d)
+        full = A.attention_xla(q, k, v, causal=True, window=8,
+                               exp_impl="exact")
+        dec = A.decode_attention(q[:, -1:], k, v, cache_len=s, window=8,
+                                 exp_impl="exact")
+        np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(dec),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_grad_flows(self):
+        q, k, v = _rand_qkv(jax.random.PRNGKey(6), 1, 16, 16, 2, 2, 8)
+
+        def loss(q):
+            return A.attention_flash(q, k, v, exp_impl="vexp").sum()
+
+        g = jax.grad(loss)(q)
+        assert np.isfinite(np.asarray(g)).all()
