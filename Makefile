@@ -1,0 +1,19 @@
+# Repo-level tooling. CI runs `make ci` (CPU: Pallas kernels execute in
+# interpret mode automatically).
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: ci test bench sweep
+
+ci:
+	$(PY) -m pytest -x -q
+
+test:
+	$(PY) -m pytest -q
+
+bench:
+	$(PY) -m benchmarks.run --skip-roofline
+
+sweep:
+	$(PY) -m benchmarks.policy_sweep

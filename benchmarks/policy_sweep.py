@@ -1,0 +1,104 @@
+"""Policy sweep: exact vs vexp vs vexp_hw across kernel backends.
+
+The apples-to-apples comparison the ExecPolicy layer unlocks: the same
+fused-softmax and flash-attention workloads, executed under each exp
+backend and kernel backend, with per-policy latency and accuracy vs. the
+exact baseline. Results are printed as benchmark rows and also persisted
+to ``BENCH_policy.json`` so the perf trajectory accumulates across PRs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import ExecPolicy
+from repro.kernels.dispatch import dispatch
+
+# Modest CPU-interpreter-friendly shapes; TPU runs simply go faster.
+SOFTMAX_SHAPE = (256, 512)
+FA_SHAPE = dict(b=1, s=128, h=4, hkv=2, d=64)
+
+OUT_PATH = os.environ.get("BENCH_POLICY_PATH", "BENCH_policy.json")
+
+
+def _time(fn, n_warmup=2, n_timed=5) -> float:
+    for _ in range(n_warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(n_timed):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_sweep() -> dict:
+    x = jax.random.normal(jax.random.PRNGKey(0), SOFTMAX_SHAPE) * 4
+    f = FA_SHAPE
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (f["b"], f["s"], f["h"], f["d"]))
+    k = jax.random.normal(ks[1], (f["b"], f["s"], f["hkv"], f["d"]))
+    v = jax.random.normal(ks[2], (f["b"], f["s"], f["hkv"], f["d"]))
+
+    sm_exact = jax.nn.softmax(x, -1)
+    fa_exact = None
+    records = []
+    for exp in ("exact", "vexp", "vexp_hw"):
+        for kb in ("pallas", "reference", "xla"):
+            pol = ExecPolicy(exp_backend=exp, kernel_backend=kb,
+                             block_q=64, block_k=64)
+            sm_fn = dispatch("softmax", pol)
+            fa_fn = dispatch("flash_attention", pol)
+            sm_out = sm_fn(x, policy=pol)
+            fa_out = fa_fn(q, k, v, causal=True, policy=pol)
+            if fa_exact is None and exp == "exact":
+                fa_exact = fa_out
+            records.append({
+                "exp_backend": exp,
+                "kernel_backend": kb,
+                "softmax_us": _time(lambda: sm_fn(x, policy=pol)) * 1e6,
+                "flash_attention_us":
+                    _time(lambda: fa_fn(q, k, v, causal=True,
+                                        policy=pol)) * 1e6,
+                "softmax_max_abs_err":
+                    float(jnp.max(jnp.abs(sm_out - sm_exact))),
+                "flash_attention_max_abs_err":
+                    float(jnp.max(jnp.abs(fa_out - fa_exact)))
+                    if fa_exact is not None else float("nan"),
+            })
+    dev = jax.devices()[0]
+    return {
+        "device": f"{dev.platform}:{getattr(dev, 'device_kind', '')}",
+        "backend": jax.default_backend(),
+        "softmax_shape": list(SOFTMAX_SHAPE),
+        "flash_attention_shape": FA_SHAPE,
+        "unix_time": time.time(),
+        "records": records,
+    }
+
+
+def report():
+    """Benchmark rows + BENCH_policy.json side effect."""
+    payload = run_sweep()
+    with open(OUT_PATH, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    rows = []
+    for r in payload["records"]:
+        name = f"{r['exp_backend']}__{r['kernel_backend']}"
+        rows.append((f"softmax/{name}", r["softmax_us"],
+                     f"max_abs_err={r['softmax_max_abs_err']:.2e}"))
+        rows.append((f"flash_attention/{name}", r["flash_attention_us"],
+                     f"max_abs_err={r['flash_attention_max_abs_err']:.2e}"))
+    rows.append(("json", 0.0, f"written to {OUT_PATH}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in report():
+        print(f"policy_sweep/{name},{val:.6g},{note}")

@@ -28,7 +28,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (snitch_model, exp_accuracy, model_accuracy,
-                   softmax_speed, flashattention, e2e_models)
+                   softmax_speed, flashattention, e2e_models,
+                   policy_sweep)
 
     sections = {
         "snitch_model": snitch_model.report,       # Fig.6 + Table III
@@ -37,6 +38,7 @@ def main() -> None:
         "softmax_speed": softmax_speed.report,     # Fig.6a-c
         "flashattention": flashattention.report,   # Fig.6d-f
         "e2e_models": e2e_models.report,           # Fig.1 + Fig.8
+        "policy_sweep": policy_sweep.report,       # ExecPolicy backends
     }
     print("name,us_per_call,derived")
     failures = 0

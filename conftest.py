@@ -1,0 +1,19 @@
+"""Repo-level pytest config.
+
+Ensures `src/` is importable without an editable install and falls back to
+the bundled hypothesis shim (tests/_compat) when the real library is absent
+— this container has no network and nothing may be pip-installed.
+"""
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(_ROOT, "tests", "_compat"))

@@ -71,9 +71,15 @@ class ModelConfig:
     n_vision_tokens: int = 0        # vlm: precomputed patch embeddings
     vision_embed_dim: int = 0
     frame_input_dim: int = 0        # audio: precomputed frame features
-    # numerics / execution
+    # numerics / execution — resolved into a runtime.ExecPolicy (see
+    # exec_policy()); env vars REPRO_* and per-call overrides take
+    # precedence over these fields.
     exp_impl: str = "vexp"          # the paper's knob: vexp | exact | vexp_hw
     attention_impl: str = "flash"   # flash | xla | pallas
+    kernel_backend: str = ""        # pallas | reference | xla; "" -> derive
+                                    # from attention_impl
+    attn_block_q: int = 0           # Pallas FA query tile; 0 -> policy default
+    autotune_blocks: bool = False   # time candidate block sizes per shape
     # perf knobs (EXPERIMENTS.md §Perf): matmul input dtype for attention
     # score/PV and decode cache reads ("bf16" = MXU-native inputs with f32
     # accumulation; "f32" = conservative upcast-everything baseline), and
@@ -155,6 +161,34 @@ class ModelConfig:
         """Active params that participate in matmuls (excludes the
         embedding lookup table — gathers contribute no FLOPs)."""
         return self.n_params_active() - self.vocab * self.d_model
+
+    def exec_policy(self, **overrides) -> "ExecPolicy":
+        """The effective execution policy for this config.
+
+        Precedence: ``overrides`` > ``REPRO_*`` env vars > config fields
+        (exp_impl / attention_impl / kernel_backend / attn_block_*) >
+        library defaults. The result is hashable and is what the kernels'
+        ops wrappers take as their static jit argument.
+        """
+        from repro.runtime.policy import resolve_policy
+        return resolve_policy(self, **overrides)
+
+    def with_policy(self, policy) -> "ModelConfig":
+        """Project an ExecPolicy back onto the config's execution fields.
+
+        Model families that read ``cfg.exp_impl`` / ``cfg.attention_impl``
+        directly (ssm, hybrid, moe) follow the policy through this
+        projection — the api layer applies it at entry, so every family
+        honors one policy object without per-function threading.
+        """
+        from repro.runtime.policy import KERNEL_BACKEND_TO_ATTN_IMPL
+        impl = KERNEL_BACKEND_TO_ATTN_IMPL[policy.kernel_backend]
+        return replace(self, exp_impl=policy.exp_backend,
+                       attention_impl=impl,
+                       kernel_backend=policy.kernel_backend,
+                       attn_block_k=policy.block_k,
+                       attn_block_q=policy.block_q,
+                       autotune_blocks=policy.autotune)
 
     def optimized(self) -> "ModelConfig":
         """The beyond-paper perf configuration (EXPERIMENTS.md §Perf):

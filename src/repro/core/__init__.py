@@ -6,7 +6,8 @@ or the aliases ``vexp_softmax`` / ``vexp_attention`` below.
 """
 
 from . import vexp, softmax, attention
-from .vexp import (vexp_f32, vexp_bf16, vexp_bf16_fixedpoint, exact_exp,
+from .vexp import (vexp_f32, vexp_bf16, vexp_bf16_fixedpoint, vexp_hw,
+                   exact_exp,
                    get_exp_fn, EXP_FNS, ALPHA, BETA, GAMMA1, GAMMA2)
 from .softmax import (log_softmax, SoftmaxStats, stats_init,
                       stats_update, stats_merge)

@@ -150,9 +150,28 @@ def attention_flash(q, k, v, *, causal=True, window=None, exp_impl="vexp",
     return out.astype(q.dtype)
 
 
+# ExecPolicy kernel backends -> legacy impl names (single source of truth).
+from repro.runtime.policy import KERNEL_BACKEND_TO_ATTN_IMPL as _BACKEND_TO_IMPL  # noqa: E402,E501
+
+
 def attention(q, k, v, *, causal=True, window=None, exp_impl="vexp",
               q_offset=0, sm_scale=None, impl="flash", block_k=512,
-              unroll=False, mm_dtype="f32"):
+              unroll=False, mm_dtype="f32", policy=None):
+    """Full-sequence attention with selectable implementation.
+
+    A ``runtime.ExecPolicy`` (if given) decides impl, exp backend and block
+    sizes in one object; the explicit keyword arguments remain for direct
+    use and for q_offset paths the Pallas kernel does not cover.
+    """
+    if policy is not None:
+        impl = _BACKEND_TO_IMPL[policy.kernel_backend]
+        exp_impl = policy.exp_backend
+        block_k = policy.block_k
+    # The Pallas kernel has no q_offset support (its masks index from
+    # position 0); a nonzero/traced offset must take the reference flash
+    # path or the causal mask would be silently wrong.
+    if impl == "pallas" and not (isinstance(q_offset, int) and q_offset == 0):
+        impl = "flash"
     if impl == "xla":
         return attention_xla(q, k, v, causal=causal, window=window,
                              exp_impl=exp_impl, q_offset=q_offset,
@@ -164,6 +183,10 @@ def attention(q, k, v, *, causal=True, window=None, exp_impl="vexp",
                                unroll=unroll, mm_dtype=mm_dtype)
     if impl == "pallas":
         from repro.kernels.flash_attention import ops as fa_ops
+        if policy is not None:
+            return fa_ops.flash_attention_policy(
+                q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+                policy=policy)
         return fa_ops.flash_attention(q, k, v, causal=causal, window=window,
                                       sm_scale=sm_scale)
     raise ValueError(f"unknown attention impl {impl!r}")
@@ -171,7 +194,7 @@ def attention(q, k, v, *, causal=True, window=None, exp_impl="vexp",
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
                      exp_impl="vexp", sm_scale=None, mm_dtype="f32",
-                     layout="bshd"):
+                     layout="bshd", policy=None):
     """Single-token decode attention over a (possibly sequence-sharded) cache.
 
     q: (B, 1, H, D); caches: (B, S_max, Hkv, D); cache_len: scalar or (B,)
@@ -180,7 +203,20 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
     Written as pure max/sum reductions over the cache sequence axis so that a
     cache sharded along S lowers to partial (m, l, acc) per shard + a cheap
     all-reduce merge — the paper's partial-softmax algebra as SPMD collective.
+
+    A policy with ``kernel_backend="pallas"`` routes head-major ("bhsd")
+    unbatched-length caches to the fused flash-decode kernel; any other
+    configuration runs this reference reduction with the policy's exp.
     """
+    if policy is not None:
+        exp_impl = policy.exp_backend
+        cl = jnp.asarray(cache_len)
+        if (policy.kernel_backend == "pallas" and layout == "bhsd"
+                and cl.ndim == 0 and window is None):
+            from repro.kernels.decode_attention import ops as dec_ops
+            return dec_ops.decode_attention_policy(
+                q, k_cache, v_cache, cache_len, sm_scale=sm_scale,
+                layout=layout, policy=policy)
     exp_fn = _resolve(exp_impl)
     b, _, h, d = q.shape
     if layout == "bhsd":

@@ -27,12 +27,21 @@ from .vexp import get_exp_fn
 
 
 def softmax(x: jax.Array, axis: int = -1, *, exp_impl: str | Callable = "vexp",
-            where=None) -> jax.Array:
+            where=None, policy=None) -> jax.Array:
     """Numerically-stable softmax with a pluggable exp backend.
 
     exp_impl: "vexp" (paper's approximation), "exact" (transcendental),
     "vexp_hw" (bit-exact hardware model), or a callable.
+
+    An ``ExecPolicy`` overrides exp_impl and, for ``kernel_backend=
+    "pallas"`` (unmasked case), routes to the fused Pallas row-softmax via
+    kernels.dispatch — one switch flips the whole execution.
     """
+    if policy is not None:
+        if policy.kernel_backend == "pallas" and where is None:
+            from repro.kernels.dispatch import dispatch
+            return dispatch("softmax", policy)(x, axis=axis, policy=policy)
+        exp_impl = policy.exp_backend
     exp_fn = exp_impl if callable(exp_impl) else get_exp_fn(exp_impl)
     if where is not None:
         x = jnp.where(where, x, -jnp.inf)

@@ -186,6 +186,19 @@ def vexp_bf16_fixedpoint(x: jax.Array) -> jax.Array:
         out_bits.astype(jnp.uint16), jnp.bfloat16)
 
 
+def vexp_hw(x: jax.Array) -> jax.Array:
+    """Dtype-safe entry to the bit-exact hardware model.
+
+    ``vexp_bf16_fixedpoint`` asserts BF16 input (it models the BF16-only
+    silicon datapath). Softmax/attention call the registry on f32 arrays, so
+    this wrapper routes any float dtype through BF16 — exactly what feeding
+    the hardware would do — and returns the caller's dtype.
+    """
+    if x.dtype == jnp.bfloat16:
+        return vexp_bf16_fixedpoint(x)
+    return vexp_bf16_fixedpoint(x.astype(jnp.bfloat16)).astype(x.dtype)
+
+
 def exact_exp(x: jax.Array) -> jax.Array:
     """The baseline transcendental exp (XLA's polynomial), for comparison."""
     return jnp.exp(x)
@@ -195,7 +208,7 @@ def exact_exp(x: jax.Array) -> jax.Array:
 EXP_FNS = {
     "exact": exact_exp,
     "vexp": vexp_f32,
-    "vexp_hw": vexp_bf16_fixedpoint,
+    "vexp_hw": vexp_hw,
 }
 
 

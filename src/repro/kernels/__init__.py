@@ -1,3 +1,17 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's compute hot spots, plus the
+policy-driven dispatch layer.
+
+Packages: ``vexp`` (elementwise exponential), ``softmax`` (fused row
+softmax), ``flash_attention`` (FlashAttention-2 forward), and
+``decode_attention`` (flash-decode over a KV cache). Each provides
+``kernel.py`` (the Pallas body — exp backend arrives as a static
+``exp_impl`` argument, never a hardcoded import), ``ops.py`` (shape
+handling + ``ExecPolicy`` static argument) and ``ref.py`` (pure-jnp
+oracle).
+
+``dispatch.py`` maps (op, policy.kernel_backend) onto an implementation
+and owns the shape-bucketed block-size autotune cache. Import via::
+
+    from repro.kernels.dispatch import dispatch
+    out = dispatch("softmax", policy)(x, policy=policy)
+"""

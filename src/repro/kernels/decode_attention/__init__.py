@@ -1,2 +1,2 @@
-from .ops import decode_attention
+from .ops import decode_attention, decode_attention_policy
 from .ref import decode_attention_ref

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.vexp import vexp_f32
+from repro.core.vexp import get_exp_fn
 
 NEG_INF = -1e30
 DEFAULT_BLOCK_S = 512
@@ -26,7 +26,7 @@ DEFAULT_BLOCK_S = 512
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
                    m_ref, l_ref, acc_ref, *, block_s: int, ns: int,
-                   sm_scale: float):
+                   sm_scale: float, exp_impl: str):
     si = pl.program_id(2)
 
     @pl.when(si == 0)
@@ -37,6 +37,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 
     cache_len = len_ref[0]
     start = si * block_s
+    exp_fn = get_exp_fn(exp_impl)
 
     @pl.when(start < cache_len)
     def _compute():
@@ -50,8 +51,8 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         s = jnp.where(kpos < cache_len, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        alpha = vexp_f32(m_prev - m_new)
-        p = vexp_f32(s - m_new)
+        alpha = exp_fn(m_prev - m_new)
+        p = exp_fn(s - m_new)
         p = jnp.where(kpos < cache_len, p, 0.0)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
@@ -66,11 +67,12 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("sm_scale", "block_s",
-                                             "interpret"))
+                                             "interpret", "exp_impl"))
 def decode_attention_bhsd(q, k_cache, v_cache, cache_len, *,
                           sm_scale: float,
                           block_s: int = DEFAULT_BLOCK_S,
-                          interpret: bool = False):
+                          interpret: bool = False,
+                          exp_impl: str = "vexp"):
     """q: (B, Hkv, G, d); caches: (B, Hkv, S, d); cache_len: (1,) int32.
     Returns (B, Hkv, G, d). S divisible by block_s; d lane-padded by ops."""
     b, hkv, g, d = q.shape
@@ -78,7 +80,7 @@ def decode_attention_bhsd(q, k_cache, v_cache, cache_len, *,
     bs = min(block_s, smax)
     ns = smax // bs
     kernel = functools.partial(_decode_kernel, block_s=bs, ns=ns,
-                               sm_scale=sm_scale)
+                               sm_scale=sm_scale, exp_impl=exp_impl)
     from jax.experimental.pallas import tpu as pltpu
     return pl.pallas_call(
         kernel,

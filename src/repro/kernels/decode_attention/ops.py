@@ -1,22 +1,37 @@
-"""jit'd public wrapper: (B, 1, H, d) queries over a (B, Hkv, S, d) cache."""
+"""jit'd public wrapper: (B, 1, H, d) queries over a (B, Hkv, S, d) cache.
+
+Policy-aware: ``decode_attention`` takes an ``ExecPolicy`` static argument
+selecting exp backend, KV block size and interpret mode;
+``decode_attention_policy`` is the kernels.dispatch entry and applies
+block-size autotuning when requested.
+"""
 
 from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.policy import ExecPolicy
 from .kernel import decode_attention_bhsd
 
 
 @functools.partial(jax.jit, static_argnames=("sm_scale", "block_s",
-                                             "interpret"))
+                                             "interpret", "policy"))
 def decode_attention(q, k_cache, v_cache, cache_len, *, sm_scale=None,
-                     block_s=512, interpret=None):
+                     block_s=512, interpret=None,
+                     policy: Optional[ExecPolicy] = None):
     """Fused flash-decode. q: (B, 1, H, d); caches: (B, Hkv, S, d) (bhsd);
     cache_len: scalar int32 of valid positions. Returns (B, 1, H, d)."""
+    exp_impl = "vexp"
+    if policy is not None:
+        exp_impl = policy.exp_backend
+        block_s = policy.block_s
+        if interpret is None:
+            interpret = policy.interpret_resolved()
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     b, _, h, d = q.shape
@@ -38,5 +53,28 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, sm_scale=None,
     vp = pad(v_cache, s_pad, d_pad)
     clen = jnp.asarray(cache_len, jnp.int32).reshape(1)
     out = decode_attention_bhsd(qp, kp, vp, clen, sm_scale=scale,
-                                block_s=block_s, interpret=interpret)
+                                block_s=block_s, interpret=interpret,
+                                exp_impl=exp_impl)
     return out[..., :d].reshape(b, 1, h, d)
+
+
+def decode_attention_policy(q, k_cache, v_cache, cache_len, *, window=None,
+                            sm_scale=None, layout="bhsd",
+                            policy: ExecPolicy):
+    """kernels.dispatch entry. The Pallas kernel requires the head-major
+    ("bhsd") cache and no sliding window; other configurations fall back to
+    the reference decode with the policy's exp backend."""
+    if layout != "bhsd" or window is not None:
+        from repro.core.attention import decode_attention as core_decode
+        return core_decode(q, k_cache, v_cache, cache_len, window=window,
+                           sm_scale=sm_scale, exp_impl=policy.exp_backend,
+                           layout=layout)
+    if policy.autotune:
+        from repro.kernels.dispatch import autotune_policy
+        policy = autotune_policy(
+            "decode_attention", policy,
+            lambda p: decode_attention(q, k_cache, v_cache, cache_len,
+                                       sm_scale=sm_scale, policy=p),
+            q, k_cache)
+    return decode_attention(q, k_cache, v_cache, cache_len,
+                            sm_scale=sm_scale, policy=policy)

@@ -1,0 +1,227 @@
+"""Kernel dispatch table + shape-bucketed block-size autotuner.
+
+One entry point — ``dispatch(op, policy)`` — maps every numeric op in the
+stack onto the implementation the ``ExecPolicy`` selects:
+
+    op                 pallas                      reference            xla
+    ----------------   -------------------------  ------------------   ----
+    vexp               kernels.vexp (tiled)        core vexp (untiled)  same
+    softmax            kernels.softmax (fused)     core softmax         core
+    flash_attention    kernels.flash_attention     core attention_flash core attention_xla
+    decode_attention   kernels.decode_attention    core decode (bhsd)   core decode
+
+All returned callables accept ``policy=`` and thread the policy's exp
+backend / block sizes / interpret flag down to the kernel bodies, so a
+single policy switch flips numerics end to end.
+
+Autotuning: ``autotune_policy(op, policy, *shapes)`` times a small set of
+candidate block sizes on first sight of a (device, op, shape-bucket) key and
+memoizes the winner, so repeated shapes never re-time. Shape buckets round
+dims up to powers of two — production serving sees few buckets even under
+ragged batching.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+
+from repro.runtime.policy import ExecPolicy
+
+# ------------------------------------------------------------------ registry
+
+# (op, backend) -> "module:function". Lazy import paths keep this module
+# free of circular imports (ops modules import dispatch for autotuning).
+_TABLE: Dict[Tuple[str, str], str] = {}
+
+OPS = ("vexp", "softmax", "flash_attention", "decode_attention")
+
+
+def register(op: str, backend: str, target: str) -> None:
+    _TABLE[(op, backend)] = target
+
+
+def _load(target: str) -> Callable:
+    mod_name, fn_name = target.split(":")
+    mod = __import__(mod_name, fromlist=[fn_name])
+    return getattr(mod, fn_name)
+
+
+register("vexp", "pallas", "repro.kernels.vexp.ops:vexp")
+register("vexp", "reference", "repro.kernels.dispatch:_vexp_fallback")
+register("vexp", "xla", "repro.kernels.dispatch:_vexp_fallback")
+
+register("softmax", "pallas", "repro.kernels.softmax.ops:softmax")
+register("softmax", "reference", "repro.kernels.dispatch:_softmax_fallback")
+register("softmax", "xla", "repro.kernels.dispatch:_softmax_fallback")
+
+register("flash_attention", "pallas",
+         "repro.kernels.flash_attention.ops:flash_attention_policy")
+register("flash_attention", "reference",
+         "repro.kernels.dispatch:_attention_reference")
+register("flash_attention", "xla", "repro.kernels.dispatch:_attention_xla")
+
+register("decode_attention", "pallas",
+         "repro.kernels.decode_attention.ops:decode_attention_policy")
+register("decode_attention", "reference",
+         "repro.kernels.dispatch:_decode_fallback")
+register("decode_attention", "xla", "repro.kernels.dispatch:_decode_fallback")
+
+
+def dispatch(op: str, policy: ExecPolicy) -> Callable:
+    """The callable implementing ``op`` under ``policy``.
+
+    The returned function takes the op's arrays/kwargs plus ``policy=``;
+    callers pass the same policy through (it is a static jit argument in
+    the Pallas wrappers, so each policy compiles once and caches).
+    """
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}; one of {OPS}")
+    try:
+        target = _TABLE[(op, policy.kernel_backend)]
+    except KeyError:
+        raise ValueError(
+            f"no implementation registered for op={op!r} "
+            f"backend={policy.kernel_backend!r}")
+    return _load(target)
+
+
+# ------------------------------------------ non-pallas backend adapters
+
+def _vexp_fallback(x, *, policy: ExecPolicy):
+    """reference/xla vexp: the untiled core datapath (XLA fuses it)."""
+    return policy.exp_fn()(x)
+
+
+def _softmax_fallback(x, axis=-1, *, policy: ExecPolicy):
+    from repro.core.softmax import softmax as core_softmax
+    return core_softmax(x, axis=axis, exp_impl=policy.exp_backend)
+
+
+def _attention_reference(q, k, v, *, causal=True, window=None, sm_scale=None,
+                         policy: ExecPolicy):
+    from repro.core.attention import attention_flash
+    return attention_flash(q, k, v, causal=causal, window=window,
+                           sm_scale=sm_scale, exp_impl=policy.exp_backend,
+                           block_k=policy.block_k)
+
+
+def _attention_xla(q, k, v, *, causal=True, window=None, sm_scale=None,
+                   policy: ExecPolicy):
+    from repro.core.attention import attention_xla
+    return attention_xla(q, k, v, causal=causal, window=window,
+                         sm_scale=sm_scale, exp_impl=policy.exp_backend)
+
+
+def _decode_fallback(q, k_cache, v_cache, cache_len, *, window=None,
+                     sm_scale=None, layout="bshd", policy: ExecPolicy):
+    from repro.core.attention import decode_attention
+    return decode_attention(q, k_cache, v_cache, cache_len, window=window,
+                            sm_scale=sm_scale, exp_impl=policy.exp_backend,
+                            layout=layout)
+
+
+# ----------------------------------------------------------------- autotune
+
+# Candidate block sizes per op. Each candidate is a dict of policy-field
+# overrides; the tuner clamps to the workload in the ops wrappers (kernels
+# min() blocks against actual dims).
+CANDIDATES = {
+    "softmax": [{"block_rows": r} for r in (32, 64, 128, 256)],
+    "vexp": [{"block_rows": r} for r in (128, 256, 512)],
+    "flash_attention": [{"block_q": q, "block_k": k}
+                        for q, k in ((64, 64), (128, 128),
+                                     (128, 256), (256, 128))],
+    "decode_attention": [{"block_s": s} for s in (256, 512, 1024)],
+}
+
+# (device_kind, op, shape_bucket, policy_sans_blocks) -> winning overrides
+_AUTOTUNE_CACHE: Dict[tuple, dict] = {}
+_STATS = {"hits": 0, "misses": 0}
+
+
+def autotune_cache_stats() -> dict:
+    return dict(_STATS)
+
+
+def autotune_cache_clear() -> None:
+    _AUTOTUNE_CACHE.clear()
+    _STATS["hits"] = 0
+    _STATS["misses"] = 0
+
+
+def _bucket_dim(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def shape_bucket(*arrays) -> tuple:
+    """Pow2-rounded shape+dtype key; ragged shapes share few buckets."""
+    return tuple((tuple(_bucket_dim(d) for d in a.shape), str(a.dtype))
+                 for a in arrays)
+
+
+def _device_kind() -> str:
+    dev = jax.devices()[0]
+    return f"{dev.platform}:{getattr(dev, 'device_kind', '')}"
+
+
+def _time_call(fn, n_warmup=1, n_timed=3) -> float:
+    for _ in range(n_warmup):
+        jax.block_until_ready(fn())
+    best = math.inf
+    for _ in range(n_timed):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_policy(op: str, policy: ExecPolicy, run: Callable[[ExecPolicy], object],
+                    *arrays) -> ExecPolicy:
+    """Return ``policy`` with block sizes tuned for these array shapes.
+
+    ``run(candidate_policy)`` must execute the op end to end (the ops
+    wrappers pass a closure over their own jitted kernel). First call per
+    (device, op, shape bucket) times every candidate; later calls are pure
+    cache hits — no re-timing on a repeated shape.
+
+    Timing is only meaningful eagerly: under an outer jit trace the arrays
+    are tracers and wall-clock would measure tracing, not the kernel. In
+    that case return the cached winner if one exists for this bucket
+    (tuned eagerly earlier, e.g. by a warmup call) and otherwise fall back
+    to the policy's static block sizes without polluting the cache.
+    """
+    base = policy.replace(autotune=False)
+    if any(isinstance(a, jax.core.Tracer) for a in arrays):
+        key = (_device_kind(), op, shape_bucket(*arrays),
+               (base.exp_backend, base.kernel_backend, base.accum_dtype,
+                base.interpret))
+        cached = _AUTOTUNE_CACHE.get(key)
+        if cached is not None:
+            _STATS["hits"] += 1
+            return base.replace(**cached)
+        return base
+    # Block sizes are what's being tuned, so key on everything else.
+    key = (_device_kind(), op, shape_bucket(*arrays),
+           (base.exp_backend, base.kernel_backend, base.accum_dtype,
+            base.interpret))
+    cached = _AUTOTUNE_CACHE.get(key)
+    if cached is not None:
+        _STATS["hits"] += 1
+        return base.replace(**cached)
+    _STATS["misses"] += 1
+    best_overrides, best_t = {}, math.inf
+    for overrides in CANDIDATES.get(op, [{}]):
+        cand = base.replace(**overrides)
+        try:
+            t = _time_call(lambda: run(cand))
+        except Exception:
+            continue        # candidate invalid for this shape; skip
+        if t < best_t:
+            best_t, best_overrides = t, overrides
+    _AUTOTUNE_CACHE[key] = best_overrides
+    return base.replace(**best_overrides)

@@ -1,2 +1,2 @@
-from .ops import flash_attention
+from .ops import flash_attention, flash_attention_policy
 from .ref import flash_attention_ref, attention_exact_ref

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.vexp import vexp_f32
+from repro.core.vexp import get_exp_fn
 
 NEG_INF = -1e30
 DEFAULT_BLOCK_Q = 128
@@ -33,7 +33,7 @@ DEFAULT_BLOCK_K = 128
 
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                sm_scale: float, causal: bool, window, block_q: int,
-               block_k: int, nk: int, sk_valid: int):
+               block_k: int, nk: int, sk_valid: int, exp_impl: str):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -54,6 +54,8 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     if window is not None:
         live &= k_start + block_k - 1 > q_start - window
 
+    exp_fn = get_exp_fn(exp_impl)
+
     @pl.when(live)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # (bq, d)
@@ -72,8 +74,8 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         m_prev = m_ref[...]
         m_blk = jnp.max(s, axis=-1, keepdims=True)          # partial MAX
         m_new = jnp.maximum(m_prev, m_blk)
-        alpha = vexp_f32(m_prev - m_new)                    # rescale
-        p = vexp_f32(s - m_new)                             # partial EXP
+        alpha = exp_fn(m_prev - m_new)                      # rescale
+        p = exp_fn(s - m_new)                               # partial EXP
         p = jnp.where(keep, p, 0.0)
         l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
@@ -92,12 +94,13 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 @functools.partial(
     jax.jit,
     static_argnames=("sm_scale", "causal", "window", "block_q", "block_k",
-                     "sk_valid", "interpret"))
+                     "sk_valid", "interpret", "exp_impl"))
 def flash_attention_bhsd(q, k, v, *, sm_scale: float, causal: bool,
                          window, sk_valid: int,
                          block_q: int = DEFAULT_BLOCK_Q,
                          block_k: int = DEFAULT_BLOCK_K,
-                         interpret: bool = False):
+                         interpret: bool = False,
+                         exp_impl: str = "vexp"):
     """q (B,H,Sq,D); k,v (B,Hkv,Sk,D); dims divisible by blocks/lane tiles.
 
     sk_valid: number of valid KV positions (Sk may be padded above it).
@@ -111,7 +114,7 @@ def flash_attention_bhsd(q, k, v, *, sm_scale: float, causal: bool,
 
     kernel = functools.partial(
         _fa_kernel, sm_scale=sm_scale, causal=causal, window=window,
-        block_q=bq, block_k=bk, nk=nk, sk_valid=sk_valid)
+        block_q=bq, block_k=bk, nk=nk, sk_valid=sk_valid, exp_impl=exp_impl)
 
     return pl.pallas_call(
         kernel,

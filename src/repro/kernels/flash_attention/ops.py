@@ -4,16 +4,23 @@ Handles (B, S, H, D) layout, GQA, head-dim / sequence padding to lane
 alignment, and provides a custom VJP whose backward pass is the pure-jnp
 flash reference (recompute; forward speed is what the paper optimizes —
 its evaluation is inference).
+
+Policy-aware: ``flash_attention`` accepts an ``ExecPolicy`` as its last
+non-differentiable argument (hashable -> static, so jit caches per policy);
+``flash_attention_policy`` is the kernels.dispatch entry point and applies
+block-size autotuning when the policy requests it.
 """
 
 from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.policy import ExecPolicy
 from .kernel import flash_attention_bhsd
 from .ref import flash_attention_ref
 
@@ -29,17 +36,25 @@ def _pad_to(x, axis, mult):
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
 def flash_attention(q, k, v, causal=True, window=None, sm_scale=None,
-                    block_q=128, block_k=128, interpret=None):
-    """FlashAttention-2 with VEXP partial softmax. q (B,Sq,H,D), k/v
-    (B,Sk,Hkv,D). Returns (B,Sq,H,D)."""
+                    block_q=128, block_k=128, interpret=None,
+                    policy: Optional[ExecPolicy] = None):
+    """FlashAttention-2 with pluggable partial-softmax exp. q (B,Sq,H,D),
+    k/v (B,Sk,Hkv,D). Returns (B,Sq,H,D). A policy overrides block sizes,
+    interpret mode and the exp backend."""
     return _fa_fwd_impl(q, k, v, causal, window, sm_scale, block_q, block_k,
-                        interpret)
+                        interpret, policy)
 
 
 def _fa_fwd_impl(q, k, v, causal, window, sm_scale, block_q, block_k,
-                 interpret):
+                 interpret, policy):
+    exp_impl = "vexp"
+    if policy is not None:
+        exp_impl = policy.exp_backend
+        block_q, block_k = policy.block_q, policy.block_k
+        if interpret is None:
+            interpret = policy.interpret_resolved()
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     b, sq, h, d = q.shape
@@ -51,26 +66,44 @@ def _fa_fwd_impl(q, k, v, causal, window, sm_scale, block_q, block_k,
     vt = _pad_to(_pad_to(v.transpose(0, 2, 1, 3), 3, 128), 2, block_k)
     out = flash_attention_bhsd(
         qt, kt, vt, sm_scale=scale, causal=causal, window=window,
-        sk_valid=sk, block_q=block_q, block_k=block_k, interpret=interpret)
+        sk_valid=sk, block_q=block_q, block_k=block_k, interpret=interpret,
+        exp_impl=exp_impl)
     return out[:, :, :sq, :d].transpose(0, 2, 1, 3)
 
 
-def _fa_fwd(q, k, v, causal, window, sm_scale, block_q, block_k, interpret):
+def _fa_fwd(q, k, v, causal, window, sm_scale, block_q, block_k, interpret,
+            policy):
     out = _fa_fwd_impl(q, k, v, causal, window, sm_scale, block_q, block_k,
-                       interpret)
+                       interpret, policy)
     return out, (q, k, v)
 
 
-def _fa_bwd(causal, window, sm_scale, block_q, block_k, interpret,
+def _fa_bwd(causal, window, sm_scale, block_q, block_k, interpret, policy,
             res, g):
     q, k, v = res
+    exp_impl = policy.exp_backend if policy is not None else "vexp"
     # Recompute-based backward through the pure-jnp flash reference
     # (identical math, so gradients are consistent with the kernel fwd).
     _, vjp = jax.vjp(
         lambda q, k, v: flash_attention_ref(
-            q, k, v, causal=causal, window=window, sm_scale=sm_scale),
+            q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+            exp_impl=exp_impl),
         q, k, v)
     return vjp(g)
 
 
 flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention_policy(q, k, v, *, causal=True, window=None,
+                           sm_scale=None, policy: ExecPolicy):
+    """kernels.dispatch entry: policy-driven blocks + optional autotune."""
+    if policy.autotune:
+        from repro.kernels.dispatch import autotune_policy
+        policy = autotune_policy(
+            "flash_attention", policy,
+            lambda p: _fa_fwd_impl(q, k, v, causal, window, sm_scale,
+                                   p.block_q, p.block_k, None, p),
+            q, k, v)
+    return flash_attention(q, k, v, causal, window, sm_scale,
+                           policy.block_q, policy.block_k, None, policy)

@@ -3,10 +3,12 @@
 from repro.core.attention import attention_flash, attention_xla
 
 
-def flash_attention_ref(q, k, v, *, causal=True, window=None, sm_scale=None):
-    """Oracle with identical math (vexp partial softmax), (B,S,H,D) layout."""
+def flash_attention_ref(q, k, v, *, causal=True, window=None, sm_scale=None,
+                        exp_impl="vexp"):
+    """Oracle with identical math (partial softmax with the selected exp
+    backend), (B,S,H,D) layout."""
     return attention_flash(q, k, v, causal=causal, window=window,
-                           sm_scale=sm_scale, exp_impl="vexp")
+                           sm_scale=sm_scale, exp_impl=exp_impl)
 
 
 def attention_exact_ref(q, k, v, *, causal=True, window=None, sm_scale=None):

@@ -22,22 +22,25 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.vexp import vexp_f32
+from repro.core.vexp import get_exp_fn
 
 NEG_INF = -1e30
 
 
-def _softmax_kernel(x_ref, o_ref):
+def _softmax_kernel(x_ref, o_ref, *, exp_impl: str):
+    exp_fn = get_exp_fn(exp_impl)
     x = x_ref[...].astype(jnp.float32)
     m = jnp.max(x, axis=-1, keepdims=True)                   # MAX
-    e = vexp_f32(x - m)                                      # EXP (+ sum)
+    e = exp_fn(x - m)                                        # EXP (+ sum)
     s = jnp.sum(e, axis=-1, keepdims=True)
     o_ref[...] = (e * (1.0 / s)).astype(o_ref.dtype)         # NORM
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret",
+                                             "exp_impl"))
 def softmax_rows(x: jax.Array, *, block_rows: int = 64,
-                 interpret: bool = False) -> jax.Array:
+                 interpret: bool = False,
+                 exp_impl: str = "vexp") -> jax.Array:
     """Softmax along the last axis of a 2D array.
 
     The row length must be lane-aligned (padding handled by ops.py with
@@ -47,7 +50,7 @@ def softmax_rows(x: jax.Array, *, block_rows: int = 64,
     bm = min(block_rows, m)
     grid = (m // bm,)
     return pl.pallas_call(
-        _softmax_kernel,
+        functools.partial(_softmax_kernel, exp_impl=exp_impl),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         grid=grid,
         in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],

@@ -1,26 +1,26 @@
-"""jit'd public wrapper for the fused softmax kernel (arbitrary shapes)."""
+"""jit'd public wrapper for the fused softmax kernel (arbitrary shapes).
+
+Policy-aware: an ``ExecPolicy`` supplies the exp backend, row-block size and
+interpret mode as one static jit argument; with ``policy.autotune`` the row
+block is picked by timing candidates once per (device, shape bucket).
+"""
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.policy import ExecPolicy
 from .kernel import softmax_rows, NEG_INF
 
 
-@functools.partial(jax.jit, static_argnames=("axis", "interpret"))
-def softmax(x: jax.Array, axis: int = -1, *,
-            interpret: bool | None = None) -> jax.Array:
-    """Fused VEXP softmax along ``axis`` for any-rank inputs.
-
-    Moves ``axis`` last, flattens leading dims, pads the reduction dim to a
-    lane multiple with NEG_INF (whose vexp is exactly 0, so padding does not
-    perturb the denominator), runs the kernel, and restores layout.
-    """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+@functools.partial(jax.jit, static_argnames=("axis", "interpret", "policy"))
+def _softmax_impl(x, axis, interpret, policy):
+    exp_impl = policy.exp_backend if policy is not None else "vexp"
+    block_rows = policy.block_rows if policy is not None else 64
     axis = axis % x.ndim
     perm = None
     if axis != x.ndim - 1:
@@ -37,12 +37,33 @@ def softmax(x: jax.Array, axis: int = -1, *,
     if n_pad != n:
         x2 = jnp.pad(x2, ((0, 0), (0, n_pad - n)),
                      constant_values=jnp.asarray(NEG_INF, x.dtype))
-    block_rows = max(1, min(64, rows))
+    block_rows = max(1, min(block_rows, rows))
     rows_pad = -(-rows // block_rows) * block_rows
     if rows_pad != rows:
         x2 = jnp.pad(x2, ((0, rows_pad - rows), (0, 0)))
-    out = softmax_rows(x2, block_rows=block_rows, interpret=interpret)
+    out = softmax_rows(x2, block_rows=block_rows, interpret=interpret,
+                       exp_impl=exp_impl)
     out = out[:rows, :n].reshape(shape)
     if perm is not None:
         out = jnp.transpose(out, perm)
     return out
+
+
+def softmax(x: jax.Array, axis: int = -1, *,
+            interpret: bool | None = None,
+            policy: Optional[ExecPolicy] = None) -> jax.Array:
+    """Fused softmax along ``axis`` for any-rank inputs.
+
+    Moves ``axis`` last, flattens leading dims, pads the reduction dim to a
+    lane multiple with NEG_INF (whose exp is exactly 0, so padding does not
+    perturb the denominator), runs the kernel, and restores layout.
+    """
+    if interpret is None:
+        interpret = (policy.interpret_resolved() if policy is not None
+                     else jax.default_backend() == "cpu")
+    if policy is not None and policy.autotune:
+        from repro.kernels.dispatch import autotune_policy
+        policy = autotune_policy(
+            "softmax", policy,
+            lambda p: _softmax_impl(x, axis, interpret, p), x)
+    return _softmax_impl(x, axis, interpret, policy)

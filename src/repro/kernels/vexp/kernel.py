@@ -16,27 +16,29 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.vexp import vexp_f32
+from repro.core.vexp import get_exp_fn
 
 # Block shape: sublane×lane aligned; 512 rows × 512 lanes = 1 MiB f32,
 # comfortably inside the ~16 MiB/core VMEM with double buffering.
 DEFAULT_BLOCK = (256, 512)
 
 
-def _vexp_kernel(x_ref, o_ref):
-    o_ref[...] = vexp_f32(x_ref[...]).astype(o_ref.dtype)
+def _vexp_kernel(x_ref, o_ref, *, exp_impl: str):
+    exp_fn = get_exp_fn(exp_impl)
+    o_ref[...] = exp_fn(x_ref[...]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "interpret",
+                                             "exp_impl"))
 def vexp_2d(x: jax.Array, *, block=DEFAULT_BLOCK,
-            interpret: bool = False) -> jax.Array:
-    """vexp over a 2D array; shape must be divisible by ``block``
-    (ops.py handles padding/reshaping for arbitrary shapes)."""
+            interpret: bool = False, exp_impl: str = "vexp") -> jax.Array:
+    """exp over a 2D array via the selected backend; shape must be divisible
+    by ``block`` (ops.py handles padding/reshaping for arbitrary shapes)."""
     m, n = x.shape
     bm, bn = min(block[0], m), min(block[1], n)
     grid = (m // bm, n // bn)
     return pl.pallas_call(
-        _vexp_kernel,
+        functools.partial(_vexp_kernel, exp_impl=exp_impl),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         grid=grid,
         in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],

@@ -1,12 +1,19 @@
-"""jit'd public wrapper for the vexp Pallas kernel: arbitrary shapes/dtypes."""
+"""jit'd public wrapper for the vexp Pallas kernel: arbitrary shapes/dtypes.
+
+Policy-aware: pass an ``ExecPolicy`` to select the exp backend, block rows
+and interpret mode in one object (a static jit argument, so each policy
+compiles and caches separately). The legacy ``interpret=`` form still works.
+"""
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.policy import ExecPolicy
 from .kernel import vexp_2d, DEFAULT_BLOCK
 
 
@@ -14,27 +21,42 @@ def _is_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def vexp(x: jax.Array, *, interpret: bool | None = None) -> jax.Array:
-    """VEXP exponential via the Pallas kernel, any shape, float dtypes.
-
-    Pads/reshapes to a lane-aligned 2D layout, runs the tiled kernel, and
-    restores the original shape. ``interpret=None`` auto-selects interpreter
-    mode on CPU hosts (this container) and compiled mode on TPU.
-    """
+@functools.partial(jax.jit, static_argnames=("interpret", "policy"))
+def _vexp_impl(x: jax.Array, interpret, policy) -> jax.Array:
+    exp_impl = policy.exp_backend if policy is not None else "vexp"
+    block_rows = (policy.block_rows if policy is not None
+                  else DEFAULT_BLOCK[0])
     if interpret is None:
-        interpret = _is_cpu()
+        interpret = (policy.interpret_resolved() if policy is not None
+                     else _is_cpu())
     orig_shape = x.shape
     flat = x.reshape(-1)
     n = flat.shape[0]
     # Choose a 2D factorization with a 512-wide lane dim.
     lanes = 512 if n >= 512 else 128
     rows = -(-n // lanes)
-    bm = min(DEFAULT_BLOCK[0], rows)
+    bm = min(block_rows, rows)
     rows_pad = -(-rows // bm) * bm
     padded = jnp.pad(flat, (0, rows_pad * lanes - n),
                      constant_values=jnp.asarray(0, x.dtype))
     out = vexp_2d(padded.reshape(rows_pad, lanes),
                   block=(bm, min(DEFAULT_BLOCK[1], lanes)),
-                  interpret=interpret)
+                  interpret=interpret, exp_impl=exp_impl)
     return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+def vexp(x: jax.Array, *, interpret: bool | None = None,
+         policy: Optional[ExecPolicy] = None) -> jax.Array:
+    """Exponential via the Pallas kernel, any shape, float dtypes.
+
+    Pads/reshapes to a lane-aligned 2D layout, runs the tiled kernel, and
+    restores the original shape. ``interpret=None`` auto-selects interpreter
+    mode on CPU hosts (this container) and compiled mode on TPU. A policy
+    supplies exp backend, row block and interpret mode; ``policy.autotune``
+    picks the row block by timing candidates once per shape bucket.
+    """
+    if policy is not None and policy.autotune:
+        from repro.kernels.dispatch import autotune_policy
+        policy = autotune_policy(
+            "vexp", policy, lambda p: _vexp_impl(x, interpret, p), x)
+    return _vexp_impl(x, interpret, policy)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.models import api
 from repro.distributed import sharding as shd
+from repro.runtime import ExecPolicy, resolve_policy
 from .mesh import make_host_mesh
 
 
@@ -31,14 +32,26 @@ class Request:
 
 
 class Server:
-    def __init__(self, cfg, params, *, max_batch=4, max_seq=512, mesh=None):
+    """Serving engine bound to one ExecPolicy.
+
+    The policy (exp backend, kernel backend, block sizes) is resolved once
+    at construction — config fields, then REPRO_* env vars, then the
+    ``policy=`` override — and closed over by the prefill/decode jit
+    programs, so a policy switch is a new Server, never a silent retrace.
+    """
+
+    def __init__(self, cfg, params, *, max_batch=4, max_seq=512, mesh=None,
+                 policy: ExecPolicy | None = None):
         self.cfg, self.params = cfg, params
         self.max_batch, self.max_seq = max_batch, max_seq
         self.mesh = mesh or make_host_mesh()
+        self.policy = policy if policy is not None else resolve_policy(cfg)
+        pol = self.policy
         self._prefill = jax.jit(
-            lambda p, b: api.prefill(p, cfg, b))
+            lambda p, b: api.prefill(p, cfg, b, policy=pol))
         self._decode = jax.jit(
-            lambda p, t, c, pos: api.decode_step(p, cfg, t, c, pos))
+            lambda p, t, c, pos: api.decode_step(p, cfg, t, c, pos,
+                                                 policy=pol))
 
     def run(self, requests: list[Request]) -> list[Request]:
         """Greedy decode, batch-padded. Requests must share prompt length
@@ -98,12 +111,24 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--exp-backend", default=None,
+                    choices=["exact", "vexp", "vexp_hw"],
+                    help="exponential backend (default: config/env)")
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=["pallas", "reference", "xla"],
+                    help="kernel backend (default: config/env)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="autotune kernel block sizes per shape bucket")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    policy = resolve_policy(cfg, exp_backend=args.exp_backend,
+                            kernel_backend=args.kernel_backend,
+                            autotune=args.autotune or None)
+    print(f"[serve] policy: {policy.describe()}")
     params = api.init_params(cfg, jax.random.PRNGKey(0))
-    server = Server(cfg, params)
+    server = Server(cfg, params, policy=policy)
     rng = np.random.default_rng(0)
     reqs = [Request(i, rng.integers(0, cfg.vocab, (args.prompt_len,),
                                     dtype=np.int32), args.max_new)

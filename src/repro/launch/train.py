@@ -28,15 +28,20 @@ from repro.ft import PreemptionGuard, StragglerDetector
 from .mesh import make_host_mesh
 
 
-def make_train_step(cfg, opt_cfg, accum_steps: int = 1):
+def make_train_step(cfg, opt_cfg, accum_steps: int = 1, policy=None):
     """Production train step. accum_steps > 1 enables gradient
     accumulation (microbatching): the global batch is processed in
     `accum_steps` sequential microbatches, dividing peak activation
     memory by the same factor — required to fit large archs' train_4k
-    (see EXPERIMENTS.md §Dry-run) — at unchanged math (mean of grads)."""
+    (see EXPERIMENTS.md §Dry-run) — at unchanged math (mean of grads).
+
+    ``policy`` (runtime.ExecPolicy) selects the exp/kernel backends for
+    the whole step; None keeps the config's legacy execution fields
+    (callers that want env-var resolution pass resolve_policy(cfg), as
+    the CLI main() does)."""
     def grad_fn(params, batch):
         return jax.value_and_grad(
-            lambda p: api.loss_fn(p, cfg, batch))(params)
+            lambda p: api.loss_fn(p, cfg, batch, policy=policy))(params)
 
     def train_step(params, opt_state, batch):
         if accum_steps == 1:
@@ -62,14 +67,15 @@ def make_train_step(cfg, opt_cfg, accum_steps: int = 1):
     return train_step
 
 
-def shard_train_step(cfg, opt_cfg, mesh, *, fsdp=False, donate=True):
+def shard_train_step(cfg, opt_cfg, mesh, *, fsdp=False, donate=True,
+                     policy=None):
     """jit the train step with explicit in/out shardings for `mesh`."""
     pspecs = shd.param_specs(cfg, mesh, fsdp=fsdp)
     ospecs = shd.opt_specs(cfg, mesh, pspecs)
     bspecs = shd.batch_specs(cfg, mesh, "train")
     stat_specs = {"grad_norm": P(), "lr": P(), "clip_scale": P(),
                   "loss": P()}
-    fn = make_train_step(cfg, opt_cfg)
+    fn = make_train_step(cfg, opt_cfg, policy=policy)
     return jax.jit(
         fn,
         in_shardings=(shd.named(mesh, pspecs), shd.named(mesh, ospecs),
@@ -81,12 +87,13 @@ def shard_train_step(cfg, opt_cfg, mesh, *, fsdp=False, donate=True):
 
 def train(cfg, *, steps=100, batch=8, seq=256, ckpt_dir=None,
           ckpt_every=50, opt_cfg=None, mesh=None, fsdp=False,
-          data="structured", log_every=10, guard=None, log=print):
+          data="structured", log_every=10, guard=None, log=print,
+          policy=None):
     """Run (or resume) a training job. Returns (params, history)."""
     opt_cfg = opt_cfg or optim.OptConfig(total_steps=steps)
     mesh = mesh or make_host_mesh()
     step_fn, pspecs, ospecs, bspecs = shard_train_step(
-        cfg, opt_cfg, mesh, fsdp=fsdp)
+        cfg, opt_cfg, mesh, fsdp=fsdp, policy=policy)
 
     if data == "structured":
         pipe = StructuredLM(cfg.vocab, batch, seq, seed=17)
@@ -166,15 +173,25 @@ def main():
     ap.add_argument("--fsdp", action="store_true")
     ap.add_argument("--data", default="structured",
                     choices=["structured", "uniform"])
+    ap.add_argument("--exp-backend", default=None,
+                    choices=["exact", "vexp", "vexp_hw"],
+                    help="exponential backend (default: config/env)")
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=["pallas", "reference", "xla"],
+                    help="kernel backend (default: config/env)")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    from repro.runtime import resolve_policy
+    policy = resolve_policy(cfg, exp_backend=args.exp_backend,
+                            kernel_backend=args.kernel_backend)
+    print(f"[train] policy: {policy.describe()}")
     opt_cfg = optim.OptConfig(lr=args.lr, total_steps=args.steps,
                               warmup_steps=max(1, args.steps // 20))
     train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
           ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-          opt_cfg=opt_cfg, fsdp=args.fsdp, data=args.data)
+          opt_cfg=opt_cfg, fsdp=args.fsdp, data=args.data, policy=policy)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,15 @@
 """Family-dispatching model API: init / loss / prefill / decode / specs.
 
 This is the single entry point the trainer, server, dry-run and tests use.
+
+Every compute entry accepts an optional ``policy`` (runtime.ExecPolicy).
+Two mechanisms make one policy govern every family:
+
+  * the transformer stack threads ``policy`` explicitly down to the
+    attention/softmax kernels (kernel routing + static jit caching), and
+  * ``cfg.with_policy(policy)`` projects the policy onto the config's
+    execution fields, so families that read ``cfg.exp_impl`` directly
+    (ssm, hybrid, moe router) follow the same switch.
 """
 
 from __future__ import annotations
@@ -19,37 +28,52 @@ def _mod(cfg):
     return transformer       # dense | moe | vlm | audio
 
 
+def _apply_policy(cfg, policy):
+    """Project a policy onto cfg (no-op when policy is None)."""
+    return cfg if policy is None else cfg.with_policy(policy)
+
+
 def init_params(cfg, key):
     return _mod(cfg).init_params(cfg, key)
 
 
-def loss_fn(params, cfg, batch):
-    return _mod(cfg).loss_fn(params, cfg, batch)
+def loss_fn(params, cfg, batch, *, policy=None):
+    cfg = _apply_policy(cfg, policy)
+    if cfg.family in ("ssm", "hybrid"):
+        return _mod(cfg).loss_fn(params, cfg, batch)
+    return transformer.loss_fn(params, cfg, batch, policy=policy)
 
 
-def forward(params, cfg, batch):
+def forward(params, cfg, batch, *, policy=None):
+    cfg = _apply_policy(cfg, policy)
     m = _mod(cfg)
     if cfg.family in ("vlm", "audio"):
         out = m.forward(params, cfg, batch.get("tokens"),
-                        batch.get("extra"))
-    else:
+                        batch.get("extra"), policy=policy)
+    elif cfg.family in ("ssm", "hybrid"):
         out = m.forward(params, cfg, batch["tokens"])
+    else:
+        out = m.forward(params, cfg, batch["tokens"], policy=policy)
     return out[0] if isinstance(out, tuple) else out
 
 
-def prefill(params, cfg, batch):
+def prefill(params, cfg, batch, *, policy=None):
+    cfg = _apply_policy(cfg, policy)
     m = _mod(cfg)
     if cfg.family == "audio":
         # encoder-only: "prefill" is a full encode; no cache/decode exists.
         from .layers import mask_padded_logits
-        x, _ = transformer.forward(params, cfg, None, batch["extra"])
+        x, _ = transformer.forward(params, cfg, None, batch["extra"],
+                                   policy=policy)
         logits = (x.astype(jnp.float32)
                   @ params["unembed"].astype(jnp.float32))
         return mask_padded_logits(logits, cfg.vocab), None
     if cfg.family == "vlm":
         return transformer.prefill(params, cfg, batch["tokens"],
-                                   batch.get("extra"))
-    return m.prefill(params, cfg, batch["tokens"])
+                                   batch.get("extra"), policy=policy)
+    if cfg.family in ("ssm", "hybrid"):
+        return m.prefill(params, cfg, batch["tokens"])
+    return transformer.prefill(params, cfg, batch["tokens"], policy=policy)
 
 
 def init_cache(cfg, batch_size, seq_len):
@@ -62,11 +86,15 @@ def init_cache(cfg, batch_size, seq_len):
     return transformer.init_cache(cfg, batch_size, seq_len)
 
 
-def decode_step(params, cfg, token, cache, pos):
+def decode_step(params, cfg, token, cache, pos, *, policy=None):
+    cfg = _apply_policy(cfg, policy)
     m = _mod(cfg)
     if cfg.family == "audio":
         raise ValueError("encoder-only arch has no decode step")
-    return m.decode_step(params, cfg, token, cache, pos)
+    if cfg.family in ("ssm", "hybrid"):
+        return m.decode_step(params, cfg, token, cache, pos)
+    return transformer.decode_step(params, cfg, token, cache, pos,
+                                   policy=policy)
 
 
 # ----------------------------------------------------------- input specs

@@ -127,8 +127,9 @@ def mlp_init(key, d, f, act, use_bias=False, dtype=jnp.float32):
     return p
 
 
-def mlp_apply(x, p, act, exp_impl="vexp"):
-    exp_fn = get_exp_fn(exp_impl)
+def mlp_apply(x, p, act, exp_impl="vexp", *, policy=None):
+    exp_fn = get_exp_fn(policy.exp_backend if policy is not None
+                        else exp_impl)
     if act == "swiglu":
         g = vexp_silu(x @ p["wg"], exp_fn)
         u = x @ p["wu"]
@@ -157,7 +158,7 @@ def mask_padded_logits(logits, vocab: int):
 # --------------------------------------------------------- chunked CE loss
 
 def cross_entropy(x_final, w_unembed, labels, *, chunk=512, exp_impl="vexp",
-                  logit_softcap=0.0, mask=None, unroll=False):
+                  logit_softcap=0.0, mask=None, unroll=False, policy=None):
     """Chunked cross-entropy over the sequence axis.
 
     Avoids materializing the full (B, S, V) logits: scans seq chunks, each
@@ -167,7 +168,8 @@ def cross_entropy(x_final, w_unembed, labels, *, chunk=512, exp_impl="vexp",
     x_final: (B, S, D); w_unembed: (D, V) (possibly vocab-sharded);
     labels: (B, S) int32; mask: optional (B, S) bool of valid tokens.
     """
-    exp_fn = get_exp_fn(exp_impl)
+    exp_fn = get_exp_fn(policy.exp_backend if policy is not None
+                        else exp_impl)
     b, s, d = x_final.shape
     chunk = min(chunk, s)
     nchunk = -(-s // chunk)

@@ -62,18 +62,23 @@ def _qkv(x, p, cfg, pos):
     return q, k, v
 
 
-def attn_apply(x, p, cfg, pos, *, window=None, causal=None):
-    """Full-sequence attention (train / prefill). Returns y, (k, v)."""
+def attn_apply(x, p, cfg, pos, *, window=None, causal=None, policy=None):
+    """Full-sequence attention (train / prefill). Returns y, (k, v).
+
+    ``policy`` (an ExecPolicy) selects exp backend + kernel backend +
+    blocks; when None the cfg's legacy fields apply unchanged.
+    """
     causal = cfg.causal if causal is None else causal
     q, k, v = _qkv(x, p, cfg, pos)
     o = attention(q, k, v, causal=causal, window=window,
                   exp_impl=cfg.exp_impl, impl=cfg.attention_impl,
                   unroll=cfg.unroll_scans, block_k=cfg.attn_block_k,
-                  mm_dtype=cfg.attn_mm_dtype)
+                  mm_dtype=cfg.attn_mm_dtype, policy=policy)
     return o.reshape(x.shape[0], x.shape[1], -1) @ p["wo"], (k, v)
 
 
-def attn_decode(x, p, cfg, cache_k, cache_v, pos, *, window=None):
+def attn_decode(x, p, cfg, cache_k, cache_v, pos, *, window=None,
+                policy=None):
     """Single-token decode. cache_[kv]: (B, Smax, Hkv, hd) for "bshd"
     layout, (B, Hkv, Smax, hd) for "bhsd"; pos: scalar int (current
     position). Returns y, (new_k_cache, new_v_cache)."""
@@ -92,7 +97,7 @@ def attn_decode(x, p, cfg, cache_k, cache_v, pos, *, window=None):
                                              pos, axis=axis)
     o = decode_attention(q, ck, cv, cache_len=pos + 1, window=window,
                          exp_impl=cfg.exp_impl, mm_dtype=cfg.attn_mm_dtype,
-                         layout=lay)
+                         layout=lay, policy=policy)
     return o.reshape(b, 1, -1) @ p["wo"], (ck, cv)
 
 
@@ -112,43 +117,44 @@ def block_init(key, cfg, dtype=jnp.float32):
     return p
 
 
-def block_apply(x, p, cfg, pos):
+def block_apply(x, p, cfg, pos, *, policy=None):
     """Returns (y, kv, aux)."""
     aux = {}
     h = norm_apply(x, p["ln_attn"], cfg.norm, cfg.norm_eps)
-    a, kv = attn_apply(h, p["attn"], cfg, pos, window=cfg.sliding_window)
+    a, kv = attn_apply(h, p["attn"], cfg, pos, window=cfg.sliding_window,
+                       policy=policy)
     if cfg.parallel_block:
         # command-r: attention and FFN read the same normed input.
         if cfg.n_experts:
             m, aux = moe_apply(h, p["moe"], cfg)
         else:
-            m = mlp_apply(h, p["mlp"], cfg.act, cfg.exp_impl)
+            m = mlp_apply(h, p["mlp"], cfg.act, cfg.exp_impl, policy=policy)
         return x + a + m, kv, aux
     x = x + a
     h = norm_apply(x, p["ln_mlp"], cfg.norm, cfg.norm_eps)
     if cfg.n_experts:
         m, aux = moe_apply(h, p["moe"], cfg)
     else:
-        m = mlp_apply(h, p["mlp"], cfg.act, cfg.exp_impl)
+        m = mlp_apply(h, p["mlp"], cfg.act, cfg.exp_impl, policy=policy)
     return x + m, kv, aux
 
 
-def block_decode(x, p, cfg, cache_k, cache_v, pos):
+def block_decode(x, p, cfg, cache_k, cache_v, pos, *, policy=None):
     h = norm_apply(x, p["ln_attn"], cfg.norm, cfg.norm_eps)
     a, kv = attn_decode(h, p["attn"], cfg, cache_k, cache_v, pos,
-                        window=cfg.sliding_window)
+                        window=cfg.sliding_window, policy=policy)
     if cfg.parallel_block:
         if cfg.n_experts:
             m, _ = moe_apply(h, p["moe"], cfg)
         else:
-            m = mlp_apply(h, p["mlp"], cfg.act, cfg.exp_impl)
+            m = mlp_apply(h, p["mlp"], cfg.act, cfg.exp_impl, policy=policy)
         return x + a + m, kv
     x = x + a
     h = norm_apply(x, p["ln_mlp"], cfg.norm, cfg.norm_eps)
     if cfg.n_experts:
         m, _ = moe_apply(h, p["moe"], cfg)
     else:
-        m = mlp_apply(h, p["mlp"], cfg.act, cfg.exp_impl)
+        m = mlp_apply(h, p["mlp"], cfg.act, cfg.exp_impl, policy=policy)
     return x + m, kv
 
 
@@ -198,7 +204,7 @@ def embed_inputs(params, cfg, tokens, extra=None):
     return x
 
 
-def forward(params, cfg, tokens, extra=None, pos=None):
+def forward(params, cfg, tokens, extra=None, pos=None, *, policy=None):
     """Full-sequence forward to final hidden states (B, S, D) + aux."""
     x = embed_inputs(params, cfg, tokens, extra)
     b, s, _ = x.shape
@@ -211,7 +217,7 @@ def forward(params, cfg, tokens, extra=None, pos=None):
         layer_p = jax.tree.map(lambda a: a.astype(dt)
                                if a.dtype == jnp.float32 and a.ndim > 1
                                else a, layer_p)
-        y, _, aux = block_apply(x, layer_p, cfg, pos)
+        y, _, aux = block_apply(x, layer_p, cfg, pos, policy=policy)
         if aux:
             aux_acc = {k: aux_acc.get(k, 0.0) + v for k, v in aux.items()}
         return (y, aux_acc), None
@@ -226,9 +232,10 @@ def forward(params, cfg, tokens, extra=None, pos=None):
     return x, aux
 
 
-def loss_fn(params, cfg, batch):
+def loss_fn(params, cfg, batch, *, policy=None):
     """Training loss. batch: {"tokens", "labels", optional "extra"}."""
-    x, aux = forward(params, cfg, batch["tokens"], batch.get("extra"))
+    x, aux = forward(params, cfg, batch["tokens"], batch.get("extra"),
+                     policy=policy)
     labels = batch["labels"]
     mask = batch.get("mask")
     if cfg.family == "vlm" and batch.get("extra") is not None:
@@ -237,7 +244,7 @@ def loss_fn(params, cfg, batch):
     loss = cross_entropy(x, w, labels, chunk=cfg.loss_chunk,
                          exp_impl=cfg.exp_impl,
                          logit_softcap=cfg.logit_softcap, mask=mask,
-                         unroll=cfg.unroll_scans)
+                         unroll=cfg.unroll_scans, policy=policy)
     for v in (aux or {}).values():
         loss = loss + v / cfg.n_layers
     return loss
@@ -255,7 +262,7 @@ def init_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def prefill(params, cfg, tokens, extra=None):
+def prefill(params, cfg, tokens, extra=None, *, policy=None):
     """Forward over the prompt; returns (last_logits, cache)."""
     x = embed_inputs(params, cfg, tokens, extra)
     b, s, _ = x.shape
@@ -266,7 +273,7 @@ def prefill(params, cfg, tokens, extra=None):
         layer_p = jax.tree.map(lambda a: a.astype(dt)
                                if a.dtype == jnp.float32 and a.ndim > 1
                                else a, layer_p)
-        y, kv, _ = block_apply(x, layer_p, cfg, pos)
+        y, kv, _ = block_apply(x, layer_p, cfg, pos, policy=policy)
         k, v = kv
         if cfg.sliding_window and s > cfg.sliding_window:
             w = cfg.sliding_window
@@ -290,7 +297,7 @@ def prefill(params, cfg, tokens, extra=None):
     return mask_padded_logits(logits, cfg.vocab), cache
 
 
-def decode_step(params, cfg, token, cache, pos):
+def decode_step(params, cfg, token, cache, pos, *, policy=None):
     """One decode step. token: (B, 1) int32; pos: scalar int32 (position of
     this token); cache: stacked KV. Returns (logits, new_cache)."""
     x = embed_inputs(params, cfg, token)
@@ -312,12 +319,14 @@ def decode_step(params, cfg, token, cache, pos):
             ck = jax.lax.dynamic_update_slice_in_dim(ck, k, wpos, axis=ax)
             cv = jax.lax.dynamic_update_slice_in_dim(cv, v, wpos, axis=ax)
             h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
-            y, _ = _decode_windowed(h, layer_p, cfg, ck, cv, pos, wpos)
-            x = _finish_block(x, h, y, layer_p, cfg)
+            y, _ = _decode_windowed(h, layer_p, cfg, ck, cv, pos, wpos,
+                                    policy=policy)
+            x = _finish_block(x, h, y, layer_p, cfg, policy=policy)
             return x, {"k": ck, "v": cv}
         h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
-        a, (ck, cv) = attn_decode(h, layer_p["attn"], cfg, ck, cv, pos)
-        x = _finish_block(x, h, a, layer_p, cfg)
+        a, (ck, cv) = attn_decode(h, layer_p["attn"], cfg, ck, cv, pos,
+                                  policy=policy)
+        x = _finish_block(x, h, a, layer_p, cfg, policy=policy)
         return x, {"k": ck, "v": cv}
 
     x, cache = jax.lax.scan(body, x, (params["layers"],
@@ -338,7 +347,7 @@ def _qkv_single(x, layer_p, cfg, pos):
     return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16), q
 
 
-def _decode_windowed(h, layer_p, cfg, ck, cv, pos, wpos):
+def _decode_windowed(h, layer_p, cfg, ck, cv, pos, wpos, *, policy=None):
     """Windowed ring-buffer decode: all cache slots valid once pos >= W."""
     b = h.shape[0]
     q, _, _ = _qkv(h, layer_p["attn"], cfg, jnp.full((b, 1), pos, jnp.int32))
@@ -346,21 +355,23 @@ def _decode_windowed(h, layer_p, cfg, ck, cv, pos, wpos):
     valid = jnp.minimum(pos + 1, w)
     o = decode_attention(q, ck, cv, cache_len=valid, exp_impl=cfg.exp_impl,
                          mm_dtype=cfg.attn_mm_dtype,
-                         layout=cfg.kv_cache_layout)
+                         layout=cfg.kv_cache_layout, policy=policy)
     return o.reshape(b, 1, -1) @ layer_p["attn"]["wo"], None
 
 
-def _finish_block(x, h, a, layer_p, cfg):
+def _finish_block(x, h, a, layer_p, cfg, *, policy=None):
     if cfg.parallel_block:
         if cfg.n_experts:
             m, _ = moe_apply(h, layer_p["moe"], cfg)
         else:
-            m = mlp_apply(h, layer_p["mlp"], cfg.act, cfg.exp_impl)
+            m = mlp_apply(h, layer_p["mlp"], cfg.act, cfg.exp_impl,
+                          policy=policy)
         return x + a + m
     x = x + a
     h2 = norm_apply(x, layer_p["ln_mlp"], cfg.norm, cfg.norm_eps)
     if cfg.n_experts:
         m, _ = moe_apply(h2, layer_p["moe"], cfg)
     else:
-        m = mlp_apply(h2, layer_p["mlp"], cfg.act, cfg.exp_impl)
+        m = mlp_apply(h2, layer_p["mlp"], cfg.act, cfg.exp_impl,
+                      policy=policy)
     return x + m

@@ -1,0 +1,208 @@
+"""ExecPolicy: one hashable object deciding numerics + kernels end to end.
+
+The paper's premise is swappable exponentiation (§III: exact transcendental
+vs. Schraudolph-based VEXP vs. the bit-exact RTL model) with kernel-level
+integration (§IV-C/D). This module makes that a first-class runtime policy
+instead of ad-hoc ``exp_impl`` strings and hardcoded kernel imports:
+
+  resolution precedence (highest wins)
+    1. per-call overrides        resolve_policy(cfg, exp_backend="exact")
+    2. environment variables     REPRO_EXP_BACKEND=vexp_hw ...
+    3. model-config fields       cfg.exp_impl / cfg.attention_impl / blocks
+    4. library defaults          ExecPolicy()
+
+``ExecPolicy`` is a frozen dataclass — hashable, so the kernels' ``ops.py``
+wrappers take it as a *static* jit argument and XLA caches one executable
+per policy (flipping a backend never silently retraces an old cache entry).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from dataclasses import dataclass, replace
+from typing import Callable, Mapping, Optional
+
+EXP_BACKENDS = ("exact", "vexp", "vexp_hw")
+KERNEL_BACKENDS = ("pallas", "reference", "xla")
+ACCUM_DTYPES = ("float32", "bfloat16")
+
+# Canonical correspondence between policy kernel backends and the legacy
+# ``attention_impl`` names (the pure-jnp flash scan is the reference
+# implementation). core.attention and configs.base import these — keep a
+# single source of truth so a new backend only needs adding here.
+KERNEL_BACKEND_TO_ATTN_IMPL = {"pallas": "pallas", "reference": "flash",
+                               "xla": "xla"}
+ATTN_IMPL_TO_KERNEL_BACKEND = {v: k for k, v in
+                               KERNEL_BACKEND_TO_ATTN_IMPL.items()}
+
+ENV_PREFIX = "REPRO_"
+
+# env var -> policy field (suffix appended to ENV_PREFIX)
+_ENV_FIELDS = {
+    "EXP_BACKEND": "exp_backend",
+    "KERNEL_BACKEND": "kernel_backend",
+    "BLOCK_Q": "block_q",
+    "BLOCK_K": "block_k",
+    "BLOCK_ROWS": "block_rows",
+    "BLOCK_S": "block_s",
+    "INTERPRET": "interpret",
+    "ACCUM_DTYPE": "accum_dtype",
+    "AUTOTUNE": "autotune",
+}
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+
+@dataclass(frozen=True)
+class ExecPolicy:
+    """How to execute the softmax/attention stack.
+
+    exp_backend     "exact" | "vexp" | "vexp_hw"   (core.vexp.EXP_FNS)
+    kernel_backend  "pallas"    — the Pallas TPU kernels (interpreted on CPU)
+                    "reference" — pure-jnp blockwise implementations
+                    "xla"       — XLA-fused materialized paths
+    block_q/k       FlashAttention tile sizes (Pallas); block_k also feeds
+                    the reference flash scan's KV block.
+    block_rows      fused-softmax row-block size.
+    block_s         decode-attention KV block size.
+    interpret       Pallas interpreter flag; None = auto (CPU -> True).
+    accum_dtype     accumulation dtype for online statistics ("float32"
+                    is the paper-faithful setting).
+    autotune        pick block sizes by timing candidates per device+shape
+                    bucket (memoized in kernels.dispatch).
+    """
+
+    exp_backend: str = "vexp"
+    kernel_backend: str = "pallas"
+    block_q: int = 128
+    block_k: int = 128
+    block_rows: int = 64
+    block_s: int = 512
+    interpret: Optional[bool] = None
+    accum_dtype: str = "float32"
+    autotune: bool = False
+
+    def __post_init__(self):
+        if self.exp_backend not in EXP_BACKENDS:
+            raise ValueError(
+                f"exp_backend {self.exp_backend!r} not in {EXP_BACKENDS}")
+        if self.kernel_backend not in KERNEL_BACKENDS:
+            raise ValueError(
+                f"kernel_backend {self.kernel_backend!r} "
+                f"not in {KERNEL_BACKENDS}")
+        if self.accum_dtype not in ACCUM_DTYPES:
+            raise ValueError(
+                f"accum_dtype {self.accum_dtype!r} not in {ACCUM_DTYPES}")
+        for f in ("block_q", "block_k", "block_rows", "block_s"):
+            v = getattr(self, f)
+            if not (isinstance(v, int) and v > 0):
+                raise ValueError(f"{f} must be a positive int, got {v!r}")
+
+    # ------------------------------------------------------------ accessors
+
+    def exp_fn(self) -> Callable:
+        """The exp callable for this policy (dtype-safe for all backends)."""
+        from repro.core.vexp import get_exp_fn
+        return get_exp_fn(self.exp_backend)
+
+    def interpret_resolved(self) -> bool:
+        """Concrete interpret flag (auto-selects on CPU hosts)."""
+        if self.interpret is not None:
+            return self.interpret
+        import jax
+        return jax.default_backend() == "cpu"
+
+    def replace(self, **kw) -> "ExecPolicy":
+        return replace(self, **kw)
+
+    def describe(self) -> str:
+        return (f"exp={self.exp_backend} kernel={self.kernel_backend} "
+                f"blocks=(q{self.block_q},k{self.block_k},"
+                f"r{self.block_rows},s{self.block_s}) "
+                f"accum={self.accum_dtype} autotune={self.autotune}")
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# --------------------------------------------------------------- resolution
+
+def _parse(field: str, raw: str):
+    if field in ("block_q", "block_k", "block_rows", "block_s"):
+        try:
+            return int(raw)
+        except ValueError:
+            raise ValueError(f"env override for {field} must be an int, "
+                             f"got {raw!r}")
+    if field in ("interpret", "autotune"):
+        low = raw.strip().lower()
+        if low in _TRUTHY:
+            return True
+        if low in _FALSY:
+            return False
+        raise ValueError(f"env override for {field} must be boolean-ish, "
+                         f"got {raw!r}")
+    return raw.strip()
+
+
+def policy_from_env(env: Optional[Mapping[str, str]] = None) -> dict:
+    """Policy field overrides present in the environment (validated)."""
+    env = os.environ if env is None else env
+    out = {}
+    for suffix, field in _ENV_FIELDS.items():
+        raw = env.get(ENV_PREFIX + suffix)
+        if raw is not None and raw != "":
+            out[field] = _parse(field, raw)
+    return out
+
+
+def _config_fields(cfg) -> dict:
+    """Policy fields derivable from a ModelConfig (duck-typed: any object
+    with the numeric-execution attributes works, so this module never
+    imports repro.configs)."""
+    out = {}
+    exp = getattr(cfg, "exp_impl", None)
+    if exp:
+        out["exp_backend"] = exp
+    kb = getattr(cfg, "kernel_backend", "") or ""
+    if kb:
+        out["kernel_backend"] = kb
+    else:
+        attn = getattr(cfg, "attention_impl", None)
+        if attn:
+            out["kernel_backend"] = ATTN_IMPL_TO_KERNEL_BACKEND.get(attn,
+                                                                    attn)
+    bk = getattr(cfg, "attn_block_k", 0)
+    if bk:
+        out["block_k"] = bk
+    bq = getattr(cfg, "attn_block_q", 0)
+    if bq:
+        out["block_q"] = bq
+    if getattr(cfg, "autotune_blocks", False):
+        out["autotune"] = True
+    return out
+
+
+def resolve_policy(cfg=None, *, env: Optional[Mapping[str, str]] = None,
+                   base: Optional[ExecPolicy] = None,
+                   **overrides) -> ExecPolicy:
+    """Resolve the effective ExecPolicy.
+
+    Precedence: explicit ``overrides`` > environment variables
+    (``REPRO_EXP_BACKEND`` etc.; pass ``env={}`` to ignore the process
+    environment) > ``cfg`` fields > ``base`` (library defaults).
+    Values are validated; unknown override names raise.
+    """
+    fields = {f.name for f in dataclasses.fields(ExecPolicy)}
+    bad = set(overrides) - fields
+    if bad:
+        raise ValueError(f"unknown policy override(s) {sorted(bad)}; "
+                         f"valid: {sorted(fields)}")
+    merged = dataclasses.asdict(base) if base is not None else {}
+    if cfg is not None:
+        merged.update(_config_fields(cfg))
+    merged.update(policy_from_env(env))
+    merged.update({k: v for k, v in overrides.items() if v is not None})
+    return ExecPolicy(**merged)

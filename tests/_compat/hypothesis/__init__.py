@@ -1,0 +1,141 @@
+"""Minimal stand-in for the `hypothesis` API surface these tests use.
+
+The container does not ship hypothesis and nothing may be pip-installed, so
+`conftest.py` puts this package on sys.path only when the real library is
+missing. It implements deterministic example generation (seeded per test)
+for the small strategy subset the suite uses: integers, floats,
+sampled_from, booleans, lists, tuples, just. Shrinking, assume(), and the
+database are intentionally absent — failures report the drawn example in
+the assertion context instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random as _random
+import zlib
+
+__version__ = "0.0-repro-shim"
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw_fn, desc=""):
+        self._draw = draw_fn
+        self._desc = desc
+
+    def example_for(self, rng: _random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"strategy({self._desc})"
+
+
+class strategies:
+    """Namespace mirroring `hypothesis.strategies` (imported as `st`)."""
+
+    @staticmethod
+    def integers(min_value=-(2 ** 31), max_value=2 ** 31 - 1):
+        return _Strategy(lambda r: r.randint(min_value, max_value),
+                         f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def floats(min_value=-1e9, max_value=1e9, width=64,
+               allow_nan=False, allow_infinity=False):
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(r):
+            # Bias toward the endpoints: boundary values are where the
+            # numeric kernels actually break.
+            roll = r.random()
+            if roll < 0.05:
+                return lo
+            if roll < 0.10:
+                return hi
+            return r.uniform(lo, hi)
+
+        return _Strategy(draw, f"floats({lo}, {hi})")
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements),
+                         f"sampled_from(<{len(elements)}>)")
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5, "booleans()")
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda r: value, f"just({value!r})")
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(r):
+            n = r.randint(min_size, max_size)
+            return [elements.example_for(r) for _ in range(n)]
+
+        return _Strategy(draw, "lists(...)")
+
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(lambda r: tuple(s.example_for(r) for s in strats),
+                         "tuples(...)")
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings is conventionally applied *above* @given, so it
+            # stamps the attribute on this wrapper; check both.
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            # Deterministic per-test seed so failures reproduce.
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = _random.Random(seed)
+            for i in range(n):
+                drawn = tuple(s.example_for(rng) for s in strats)
+                drawn_kw = {k: s.example_for(rng)
+                            for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *drawn, **drawn_kw, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed on example {i}: "
+                        f"args={drawn} kwargs={drawn_kw}") from e
+
+        # pytest introspects signatures for fixtures; the wrapper consumes
+        # the strategy parameters, so expose only the remainder (e.g. self).
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        n_consumed = len(strats)
+        kept = []
+        for p in params:
+            if p.name == "self":
+                kept.append(p)
+            elif n_consumed > 0:
+                n_consumed -= 1
+            elif p.name not in kw_strats:
+                kept.append(p)
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+
+    return deco
+
+
+def assume(condition):
+    if not condition:
+        raise AssertionError("assumption failed (shim treats as failure)")

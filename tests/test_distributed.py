@@ -77,8 +77,9 @@ from repro.distributed import sharding as shd
 from repro import optim
 
 def mesh2x4():
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    kw = ({{"axis_types": (jax.sharding.AxisType.Auto,) * 2}}
+          if hasattr(jax.sharding, "AxisType") else {{}})
+    return jax.make_mesh((2, 4), ("data", "model"), **kw)
 """
 
 

@@ -216,22 +216,26 @@ class TestTrainLoop:
     def test_loss_decreases_and_resumes(self, tmp_path):
         from repro.launch.train import train
         cfg = get_config("gpt2-small").reduced()
-        opt_cfg = optim.OptConfig(lr=1e-3, warmup_steps=2, total_steps=30)
+        opt_cfg = optim.OptConfig(lr=1e-3, warmup_steps=2, total_steps=150)
         logs = []
-        params, hist = train(cfg, steps=30, batch=4, seq=32,
-                             ckpt_dir=str(tmp_path), ckpt_every=10,
+        params, hist = train(cfg, steps=150, batch=4, seq=32,
+                             ckpt_dir=str(tmp_path), ckpt_every=50,
                              opt_cfg=opt_cfg, log_every=5,
                              guard=PreemptionGuard(signals=()),
                              log=logs.append)
-        first, last = hist[0][1], hist[-1][1]
-        assert last < first, f"loss did not decrease: {first} -> {last}"
-        # resume from checkpoint: starts at step 30 == no-op, returns
-        params2, hist2 = train(cfg, steps=30, batch=4, seq=32,
-                               ckpt_dir=str(tmp_path), ckpt_every=10,
+        # Per-step batches are noisy (the induction task's per-batch loss
+        # varies more than 30 steps of progress), so compare early/late
+        # window means rather than two single samples.
+        early = sum(l for _, l in hist[:4]) / 4
+        late = sum(l for _, l in hist[-4:]) / 4
+        assert late < early, f"loss did not decrease: {early} -> {late}"
+        # resume from checkpoint: starts at step 150 == no-op, returns
+        params2, hist2 = train(cfg, steps=150, batch=4, seq=32,
+                               ckpt_dir=str(tmp_path), ckpt_every=50,
                                opt_cfg=opt_cfg,
                                guard=PreemptionGuard(signals=()),
                                log=logs.append)
-        assert any("resumed from step 30" in l for l in logs)
+        assert any("resumed from step 150" in l for l in logs)
 
     def test_preemption_drain(self, tmp_path):
         from repro.launch.train import train
