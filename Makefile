@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: ci test bench sweep
+.PHONY: ci test bench sweep serve-smoke
 
 ci:
 	$(PY) -m pytest -x -q
@@ -17,3 +17,11 @@ bench:
 
 sweep:
 	$(PY) -m benchmarks.policy_sweep
+
+# Tiny mixed-length, mixed-policy workload through the slot-level
+# continuous-batching engine (reduced gpt2; CPU interpret mode).
+serve-smoke:
+	$(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 6 --prompt-len 24 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 \
+	    --policy-groups "eval=exact,bulk=vexp"

@@ -29,7 +29,7 @@ def main() -> None:
 
     from . import (snitch_model, exp_accuracy, model_accuracy,
                    softmax_speed, flashattention, e2e_models,
-                   policy_sweep)
+                   policy_sweep, serving)
 
     sections = {
         "snitch_model": snitch_model.report,       # Fig.6 + Table III
@@ -39,6 +39,7 @@ def main() -> None:
         "flashattention": flashattention.report,   # Fig.6d-f
         "e2e_models": e2e_models.report,           # Fig.1 + Fig.8
         "policy_sweep": policy_sweep.report,       # ExecPolicy backends
+        "serving": serving.report,                 # continuous batching
     }
     print("name,us_per_call,derived")
     failures = 0

@@ -1,4 +1,5 @@
-"""Batched serving example: prefill + greedy decode through the VEXP stack.
+"""Continuous-batching serving example: mixed-length prompts through the
+slot-level scheduler (prefill + greedy decode through the VEXP stack).
 
   PYTHONPATH=src python examples/serve_batched.py [--arch gpt2-small]
 """
@@ -24,13 +25,17 @@ def main():
 
     cfg = get_config(args.arch).reduced()
     print(f"[serve] arch={args.arch} (reduced config), "
-          f"{args.requests} requests, prompt {args.prompt_len}, "
+          f"{args.requests} requests, prompts up to {args.prompt_len}, "
           f"+{args.max_new} tokens, exp_impl={cfg.exp_impl}")
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     server = Server(cfg, params, max_batch=4, max_seq=128)
 
     rng = np.random.default_rng(0)
-    reqs = [Request(i, rng.integers(0, cfg.vocab, (args.prompt_len,),
+    # ragged prompt lengths: the slot scheduler right-pads each admission
+    # batch and tracks per-slot cache positions, so unequal lengths decode
+    # exactly as if each request were served alone.
+    lens = rng.integers(4, args.prompt_len + 1, args.requests)
+    reqs = [Request(i, rng.integers(0, cfg.vocab, (int(lens[i]),),
                                     dtype=np.int32), args.max_new)
             for i in range(args.requests)]
     t0 = time.perf_counter()
@@ -40,8 +45,8 @@ def main():
     print(f"[serve] {ntok} tokens in {dt:.2f}s ({ntok / dt:.1f} tok/s, "
           f"incl. compile)")
     for r in done:
-        print(f"  req {r.rid}: prompt[:5]={r.prompt[:5].tolist()} "
-              f"-> out={r.out}")
+        print(f"  req {r.rid}: len={len(r.prompt)} "
+              f"prompt[:5]={r.prompt[:5].tolist()} -> out={r.out}")
 
 
 if __name__ == "__main__":

@@ -62,20 +62,30 @@ def _mask(sq: int, sk: int, *, causal: bool, window: Optional[int],
 
 
 def attention_xla(q, k, v, *, causal=True, window=None, exp_impl="vexp",
-                  q_offset=0, sm_scale=None):
-    """Reference attention: materializes the score matrix."""
+                  q_offset=0, sm_scale=None, kv_valid=None):
+    """Reference attention: materializes the score matrix.
+
+    ``kv_valid`` is an optional (B, Sk) boolean mask of real (non-padding)
+    key positions — padded prompt rows in a ragged serving batch must
+    neither be attended nor contribute to the softmax normalizer.
+    """
     exp_fn = _resolve(exp_impl)
     d = q.shape[-1]
     scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
     s = _gqa_scores(q.astype(jnp.float32), k.astype(jnp.float32), scale)
     msk = _mask(q.shape[1], k.shape[1], causal=causal, window=window,
                 q_offset=q_offset)
+    if kv_valid is not None:
+        kvm = kv_valid[:, None, :]                 # (B, 1, Sk)
+        msk = kvm if msk is None else msk[None] & kvm
+    if msk is not None and msk.ndim == 2:
+        msk = msk[None]                            # -> (1|B, Sq, Sk)
     if msk is not None:
-        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        s = jnp.where(msk[:, None, None], s, NEG_INF)
     m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
     p = exp_fn(s - m)
     if msk is not None:
-        p = jnp.where(msk[None, None, None], p, 0.0)
+        p = jnp.where(msk[:, None, None], p, 0.0)
     l = jnp.sum(p, axis=-1, keepdims=True)
     p = p * (1.0 / jnp.maximum(l, 1e-30))          # NORM: reciprocal-multiply
     o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
@@ -85,7 +95,7 @@ def attention_xla(q, k, v, *, causal=True, window=None, exp_impl="vexp",
 
 def attention_flash(q, k, v, *, causal=True, window=None, exp_impl="vexp",
                     q_offset=0, sm_scale=None, block_k=512, unroll=False,
-                    mm_dtype="f32"):
+                    mm_dtype="f32", kv_valid=None):
     """FlashAttention-2-structured attention (pure JAX scan over KV blocks).
 
     Maintains per-row running (m, l, acc); each block applies the paper's
@@ -95,6 +105,10 @@ def attention_flash(q, k, v, *, causal=True, window=None, exp_impl="vexp",
     mm_dtype="bf16" feeds the score/PV matmuls MXU-native bf16 inputs with
     f32 accumulation (preferred_element_type) — (m, l, acc) statistics stay
     f32, so only matmul *inputs* lose precision (§Perf iteration A1).
+
+    ``kv_valid``: optional (B, Sk) boolean mask of real key positions —
+    padding rows of a ragged prompt batch are masked out of every block's
+    score/normalizer update.
     """
     exp_fn = _resolve(exp_impl)
     b, sq, h, d = q.shape
@@ -112,6 +126,13 @@ def attention_flash(q, k, v, *, causal=True, window=None, exp_impl="vexp",
         kp, vp = k, v
     kb = kp.reshape(b, nblk, block_k, hkv, d).transpose(1, 0, 2, 3, 4)
     vb = vp.reshape(b, nblk, block_k, hkv, d).transpose(1, 0, 2, 3, 4)
+    if kv_valid is not None:
+        kvp = jnp.pad(kv_valid, ((0, 0), (0, pad))) if pad else kv_valid
+        kvb = kvp.reshape(b, nblk, block_k).transpose(1, 0, 2)
+    else:
+        # all-true single-row mask: broadcasts over batch, keeps one scan
+        # body for both the masked and unmasked cases.
+        kvb = jnp.ones((nblk, 1, block_k), bool)
     qg = (q.astype(jnp.float32) * scale).astype(mdt) \
         .reshape(b, sq, hkv, g, d)
 
@@ -119,7 +140,7 @@ def attention_flash(q, k, v, *, causal=True, window=None, exp_impl="vexp",
 
     def body(carry, blk):
         m, l, acc = carry
-        kblk, vblk, iblk = blk
+        kblk, vblk, iblk, kvblk = blk
         s = jnp.einsum("bskgd,btkd->bkgst", qg, kblk.astype(mdt),
                        preferred_element_type=jnp.float32)
         kpos = iblk * block_k + jnp.arange(block_k)
@@ -128,12 +149,13 @@ def attention_flash(q, k, v, *, causal=True, window=None, exp_impl="vexp",
             keep &= kpos[None, :] <= qpos[:, None]
         if window is not None:
             keep &= kpos[None, :] > qpos[:, None] - window
-        s = jnp.where(keep[None, None, None], s, NEG_INF)
+        keep = keep[None] & kvblk[:, None, :]        # (B|1, Sq, bk)
+        s = jnp.where(keep[:, None, None], s, NEG_INF)
         m_blk = jnp.max(s, axis=-1)
         m_new = jnp.maximum(m, m_blk)
         alpha = exp_fn(m - m_new)
         p = exp_fn(s - m_new[..., None])
-        p = jnp.where(keep[None, None, None], p, 0.0)
+        p = jnp.where(keep[:, None, None], p, 0.0)
         l_new = l * alpha + jnp.sum(p, axis=-1)
         acc_new = acc * alpha[..., None] + jnp.einsum(
             "bkgst,btkd->bkgsd", p.astype(mdt), vblk.astype(mdt),
@@ -144,7 +166,7 @@ def attention_flash(q, k, v, *, causal=True, window=None, exp_impl="vexp",
     l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
     a0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(
-        body, (m0, l0, a0), (kb, vb, jnp.arange(nblk)), unroll=unroll)
+        body, (m0, l0, a0), (kb, vb, jnp.arange(nblk), kvb), unroll=unroll)
     out = acc * (1.0 / jnp.maximum(l, 1e-30))[..., None]
     out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
     return out.astype(q.dtype)
@@ -156,31 +178,37 @@ from repro.runtime.policy import KERNEL_BACKEND_TO_ATTN_IMPL as _BACKEND_TO_IMPL
 
 def attention(q, k, v, *, causal=True, window=None, exp_impl="vexp",
               q_offset=0, sm_scale=None, impl="flash", block_k=512,
-              unroll=False, mm_dtype="f32", policy=None):
+              unroll=False, mm_dtype="f32", kv_valid=None, policy=None):
     """Full-sequence attention with selectable implementation.
 
     A ``runtime.ExecPolicy`` (if given) decides impl, exp backend and block
     sizes in one object; the explicit keyword arguments remain for direct
     use and for q_offset paths the Pallas kernel does not cover.
+
+    ``kv_valid``: optional (B, Sk) boolean key-validity mask for ragged
+    (padded) prompt batches — masked key positions are excluded from both
+    attention weights and the softmax normalizer.
     """
     if policy is not None:
         impl = _BACKEND_TO_IMPL[policy.kernel_backend]
         exp_impl = policy.exp_backend
         block_k = policy.block_k
-    # The Pallas kernel has no q_offset support (its masks index from
-    # position 0); a nonzero/traced offset must take the reference flash
-    # path or the causal mask would be silently wrong.
-    if impl == "pallas" and not (isinstance(q_offset, int) and q_offset == 0):
+    # The Pallas kernel has no q_offset or per-row key-mask support (its
+    # masks index from position 0); those paths take the reference flash
+    # scan or the masking would be silently wrong.
+    if impl == "pallas" and (kv_valid is not None or
+                             not (isinstance(q_offset, int) and q_offset == 0)):
         impl = "flash"
     if impl == "xla":
         return attention_xla(q, k, v, causal=causal, window=window,
                              exp_impl=exp_impl, q_offset=q_offset,
-                             sm_scale=sm_scale)
+                             sm_scale=sm_scale, kv_valid=kv_valid)
     if impl == "flash":
         return attention_flash(q, k, v, causal=causal, window=window,
                                exp_impl=exp_impl, q_offset=q_offset,
                                sm_scale=sm_scale, block_k=block_k,
-                               unroll=unroll, mm_dtype=mm_dtype)
+                               unroll=unroll, mm_dtype=mm_dtype,
+                               kv_valid=kv_valid)
     if impl == "pallas":
         from repro.kernels.flash_attention import ops as fa_ops
         if policy is not None:
@@ -205,14 +233,15 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
     all-reduce merge — the paper's partial-softmax algebra as SPMD collective.
 
     A policy with ``kernel_backend="pallas"`` routes head-major ("bhsd")
-    unbatched-length caches to the fused flash-decode kernel; any other
-    configuration runs this reference reduction with the policy's exp.
+    caches — scalar or per-slot (B,) ``cache_len`` — to the fused
+    flash-decode kernel; any other configuration runs this reference
+    reduction with the policy's exp.
     """
     if policy is not None:
         exp_impl = policy.exp_backend
         cl = jnp.asarray(cache_len)
         if (policy.kernel_backend == "pallas" and layout == "bhsd"
-                and cl.ndim == 0 and window is None):
+                and cl.ndim <= 1 and window is None):
             from repro.kernels.decode_attention import ops as dec_ops
             return dec_ops.decode_attention_policy(
                 q, k_cache, v_cache, cache_len, sm_scale=sm_scale,

@@ -8,6 +8,11 @@ cache layout: (B, Hkv, S, hd), the §Perf C3 layout.
 
 Grid = (B, Hkv, nS) with the KV sweep innermost; each program handles one
 KV head's query group (GQA: G = H // Hkv query rows).
+
+``cache_len`` is a per-batch-row (B,) vector in SMEM: each grid row masks
+its KV sweep against its own length, so a continuous-batching server can
+decode slots whose requests are at different positions in one program
+(ragged slot lengths never touch each other's cache rows).
 """
 
 from __future__ import annotations
@@ -27,6 +32,7 @@ DEFAULT_BLOCK_S = 512
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
                    m_ref, l_ref, acc_ref, *, block_s: int, ns: int,
                    sm_scale: float, exp_impl: str):
+    bi = pl.program_id(0)
     si = pl.program_id(2)
 
     @pl.when(si == 0)
@@ -35,7 +41,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    cache_len = len_ref[0]
+    cache_len = len_ref[bi]
     start = si * block_s
     exp_fn = get_exp_fn(exp_impl)
 
@@ -73,7 +79,8 @@ def decode_attention_bhsd(q, k_cache, v_cache, cache_len, *,
                           block_s: int = DEFAULT_BLOCK_S,
                           interpret: bool = False,
                           exp_impl: str = "vexp"):
-    """q: (B, Hkv, G, d); caches: (B, Hkv, S, d); cache_len: (1,) int32.
+    """q: (B, Hkv, G, d); caches: (B, Hkv, S, d); cache_len: (B,) int32
+    per-row valid lengths (broadcast a scalar before calling).
     Returns (B, Hkv, G, d). S divisible by block_s; d lane-padded by ops."""
     b, hkv, g, d = q.shape
     smax = k_cache.shape[2]

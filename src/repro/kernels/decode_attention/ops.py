@@ -25,7 +25,8 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, sm_scale=None,
                      block_s=512, interpret=None,
                      policy: Optional[ExecPolicy] = None):
     """Fused flash-decode. q: (B, 1, H, d); caches: (B, Hkv, S, d) (bhsd);
-    cache_len: scalar int32 of valid positions. Returns (B, 1, H, d)."""
+    cache_len: scalar int32 or per-row (B,) int32 of valid positions (the
+    serving engine's per-slot lengths). Returns (B, 1, H, d)."""
     exp_impl = "vexp"
     if policy is not None:
         exp_impl = policy.exp_backend
@@ -51,7 +52,8 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, sm_scale=None,
     qp = jnp.pad(qg, [(0, 0), (0, 0), (0, 0), (0, d_pad - d)])
     kp = pad(k_cache, s_pad, d_pad)
     vp = pad(v_cache, s_pad, d_pad)
-    clen = jnp.asarray(cache_len, jnp.int32).reshape(1)
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
+                            (b,))
     out = decode_attention_bhsd(qp, kp, vp, clen, sm_scale=scale,
                                 block_s=block_s, interpret=interpret,
                                 exp_impl=exp_impl)

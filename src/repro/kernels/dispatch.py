@@ -12,7 +12,10 @@ stack onto the implementation the ``ExecPolicy`` selects:
 
 All returned callables accept ``policy=`` and thread the policy's exp
 backend / block sizes / interpret flag down to the kernel bodies, so a
-single policy switch flips numerics end to end.
+single policy switch flips numerics end to end. ``decode_attention``
+implementations (all three backends) accept a scalar *or* per-slot
+``(B,)`` ``cache_len`` — the serving engine's continuous-batching
+contract — and mask each batch row against its own length.
 
 Autotuning: ``autotune_policy(op, policy, *shapes)`` times a small set of
 candidate block sizes on first sight of a (device, op, shape-bucket) key and

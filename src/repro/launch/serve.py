@@ -1,16 +1,38 @@
-"""Batched serving driver: prefill + decode with the VEXP attention stack.
+"""Slot-level continuous-batching serving engine on the VEXP stack.
 
-Continuous-batching-lite: a request queue is packed into fixed-shape decode
-batches (padded slots), prefill and decode are separate jit programs (the
-production split — prefill is compute-bound, decode is memory-bound), and
-the KV cache sharding follows distributed.sharding.cache_specs.
+The engine replaces the old fixed-shape chunk loop (which left-padded
+prompts with token 0, attended the padding during prefill, and passed one
+scalar ``cache_len`` to decode — silently corrupting every request shorter
+than the longest in its batch). The structural fix is per-slot state:
+
+* a fixed pool of ``max_batch`` KV-cache slots per policy group, allocated
+  once at ``max_seq`` (or the sliding window) positions;
+* ragged admission — queued requests are right-padded to a pow2 length
+  bucket, prefilled as one batch with per-request ``prompt_len`` (padding
+  masked out of attention, pad K/V rows zeroed), and their real cache rows
+  are written into freed slots;
+* per-slot decode — one fixed-shape ``(max_batch, 1)`` decode program per
+  policy group with a per-slot ``(B,)`` position vector, so each slot
+  advances at its own length (the kernels mask each row against its own
+  ``cache_len``);
+* continuous batching — a slot is freed the step its request finishes
+  (``max_new`` reached or the linear cache exhausted) and the next queued
+  request is admitted mid-decode, instead of burning steps on dead slots.
+
+Per-request execution policies: requests carry a ``group`` name and each
+group owns one ExecPolicy, one cache pool and exactly one decode
+executable (PR 1's one-executable-per-policy contract), so eval traffic
+can run ``exact`` numerics while bulk traffic runs ``vexp`` without
+contaminating each other's batches or caches.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from collections import deque
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
 import jax
@@ -18,8 +40,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import api
-from repro.distributed import sharding as shd
-from repro.runtime import ExecPolicy, resolve_policy
+from repro.models.transformer import cache_seq_axis
+from repro.runtime import ExecPolicy, resolve_policy, parse_policy_groups
 from .mesh import make_host_mesh
 
 
@@ -28,80 +50,296 @@ class Request:
     rid: int
     prompt: np.ndarray                  # (S,) int32
     max_new: int = 16
+    group: str = "default"              # policy group (Server.policy_groups)
     out: list = field(default_factory=list)
+    finish_reason: Optional[str] = None  # "max_new" | "length_cap"
+    # wall-clock latency markers (filled by the engine)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+def _len_bucket(n: int, cap: int) -> int:
+    """Pow2-rounded prefill length (>=8) so ragged admission shares a small
+    set of prefill executables; capped at the cache's sequence capacity."""
+    b = 8
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+# (repr(cfg), policy) -> (prefill_fn, prefill_plain_fn, decode_fn).
+# jax.jit caches per function object, so the jitted closures must outlive
+# any one Server — otherwise every server restart recompiles the programs.
+# Greedy serving never reads logits on the host, so all programs return
+# argmaxed (B, 1) token ids — one fused executable per step, no eager
+# argmax dispatches.
+_PROGRAM_CACHE: dict = {}
+
+
+def _programs(cfg, policy):
+    key = (repr(cfg), policy)
+    if key not in _PROGRAM_CACHE:
+        pol = policy
+
+        def prefill_fn(p, toks, plens):
+            logits, cache = api.prefill(
+                p, cfg, {"tokens": toks, "prompt_len": plens}, policy=pol)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        def prefill_plain_fn(p, toks):
+            # every row full-length: no padding mask to apply (the common
+            # uniform-traffic admission; skips the ragged machinery)
+            logits, cache = api.prefill(p, cfg, {"tokens": toks},
+                                        policy=pol)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        def decode_fn(p, t, c, pos):
+            logits, cache = api.decode_step(p, cfg, t, c, pos, policy=pol)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        _PROGRAM_CACHE[key] = (jax.jit(prefill_fn),
+                               jax.jit(prefill_plain_fn),
+                               jax.jit(decode_fn))
+    return _PROGRAM_CACHE[key]
+
+
+class _Group:
+    """One policy group: ExecPolicy + cache-slot pool + jit programs.
+
+    Greedy scheduling decisions depend only on token *counts* (max_new,
+    cache capacity), never on token values — so emitted tokens stay on
+    device as (B, 1) argmax arrays (computed inside the jitted programs)
+    and each request's token ids are materialized once, when it finishes.
+    The decode loop therefore never blocks on a device->host sync and
+    JAX's async dispatch pipelines the steps exactly like the fixed-shape
+    driver it replaced.
+    """
+
+    def __init__(self, cfg, params, policy, max_batch, cache_s):
+        self.cfg, self.params, self.policy = cfg, params, policy
+        self.max_batch, self.cache_s = max_batch, cache_s
+        self.queue: deque = deque()
+        self.reqs: list = [None] * max_batch
+        self.lens = np.zeros(max_batch, np.int64)   # valid cache positions
+        self.ntok = np.zeros(max_batch, np.int64)   # tokens emitted per slot
+        self.last = jnp.zeros((max_batch, 1), jnp.int32)  # device tokens
+        self.cache = None                           # allocated on first admit
+        self.decode_steps = 0
+        self.decode_s: list = []    # per-step *dispatch* wall time (async:
+                                    # compute overlaps; see req_lat for real
+                                    # latency, measured at the finish sync)
+        self.req_lat: list = []     # per-request submit->done wall latency
+        self._toks: dict = {}                       # slot -> [(B,1) arrays]
+        (self._prefill, self._prefill_plain,
+         self._decode) = _programs(cfg, policy)
+
+    # ------------------------------------------------------------ admission
+
+    def admit(self, admit_log=None):
+        """Fill freed slots from the queue with one ragged batched prefill."""
+        free = [j for j in range(self.max_batch) if self.reqs[j] is None]
+        take = []
+        while free and self.queue:
+            take.append((free.pop(0), self.queue.popleft()))
+        if not take:
+            return
+        slots = np.array([j for j, _ in take])
+        sp = _len_bucket(max(len(r.prompt) for _, r in take), self.cache_s)
+        # prefill always runs at the full pool width so admitting 1 or
+        # max_batch requests hits the same executable per length bucket;
+        # rows without an admitted request are dummies (length-1, ignored).
+        toks = np.zeros((self.max_batch, sp), np.int32)
+        plens = np.ones(self.max_batch, np.int32)
+        for j, r in take:
+            toks[j, :len(r.prompt)] = r.prompt
+            plens[j] = len(r.prompt)
+        full = len(take) == self.max_batch
+        if (full and all(len(r.prompt) == sp for _, r in take)
+                and self.policy.kernel_backend != "pallas"):
+            # uniform exact-bucket wave: no padding exists, skip the mask.
+            # (Not under a pallas policy: the ragged path demotes pallas
+            # flash-attention to the reference scan, so the fast path
+            # would prefill through a different implementation than solo
+            # serving and could flip a near-tie greedy argmax.)
+            first, pref = self._prefill_plain(self.params, jnp.asarray(toks))
+        else:
+            first, pref = self._prefill(self.params, jnp.asarray(toks),
+                                        jnp.asarray(plens))
+        # write admitted rows into the persistent slot pool; the sequence
+        # axis is resolved from the cache layout — "bshd" stacked caches
+        # are (L, B, S, Hkv, hd), "bhsd" are (L, B, Hkv, S, hd).
+        ax = cache_seq_axis(self.cfg.kv_cache_layout)
+        if full:
+            # whole pool admitted at once: the pool cache is just the
+            # prefill cache padded out to capacity (no scatter, no zeros)
+            pad = [(0, 0)] * pref["k"].ndim
+            pad[ax] = (0, self.cache_s - sp)
+            self.cache = {n: jnp.pad(pref[n], pad) for n in ("k", "v")}
+            self.last = first
+        else:
+            if self.cache is None:
+                self.cache = api.init_cache(self.cfg, self.max_batch,
+                                            self.cache_s)
+            idx = [slice(None)] * self.cache["k"].ndim
+            idx[1] = slots
+            idx[ax] = slice(0, sp)
+            idx = tuple(idx)
+            row = (slice(None), slots)
+            for name in ("k", "v"):
+                self.cache[name] = \
+                    self.cache[name].at[idx].set(pref[name][row])
+            self.last = self.last.at[slots].set(first[slots])
+        now = time.perf_counter()
+        for j, r in take:
+            self.reqs[j] = r
+            self.lens[j] = len(r.prompt)
+            self.ntok[j] = 1
+            self._toks[j] = [first]
+            r.t_first = now
+            if admit_log is not None:
+                admit_log.append(r.rid)
+            if self.ntok[j] >= r.max_new:
+                self._finish(j, "max_new")
+
+    # --------------------------------------------------------------- decode
+
+    def decode_once(self):
+        """One batched decode step over the live slots (no-op when idle)."""
+        if self.cfg.sliding_window is None:
+            # a linear cache is exhausted when the next write would fall
+            # past the last slot — stop the request instead of letting a
+            # clamped write silently overwrite the final cache row.
+            for j in range(self.max_batch):
+                if self.reqs[j] is not None and self.lens[j] >= self.cache_s:
+                    self._finish(j, "length_cap")
+        live = [j for j in range(self.max_batch) if self.reqs[j] is not None]
+        if not live:
+            return
+        # dead slots decode their stale token at position 0: harmless (the
+        # slot has no request, and admission prefill overwrites row 0
+        # before the slot is read again).
+        pos = np.zeros(self.max_batch, np.int32)
+        pos[live] = self.lens[live]
+        t0 = time.perf_counter()
+        nxt, self.cache = self._decode(self.params, self.last,
+                                       self.cache, jnp.asarray(pos))
+        self.last = nxt
+        self.decode_s.append(time.perf_counter() - t0)
+        self.decode_steps += 1
+        for j in live:
+            self.lens[j] += 1
+            self.ntok[j] += 1
+            self._toks[j].append(nxt)
+            if self.ntok[j] >= self.reqs[j].max_new:
+                self._finish(j, "max_new")
+
+    def _finish(self, j, reason):
+        r = self.reqs[j]
+        # one device->host sync per finished request: gather its column
+        # from the logged per-step argmax vectors.
+        toks = np.asarray(jnp.stack(self._toks.pop(j)))[:, j, 0]
+        r.out.extend(int(t) for t in toks)
+        r.finish_reason = reason
+        r.t_done = time.perf_counter()   # after the sync: true completion
+        self.req_lat.append(r.t_done - r.t_submit)
+        self.reqs[j] = None          # slot freed; next admit() reuses it
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.reqs)
 
 
 class Server:
-    """Serving engine bound to one ExecPolicy.
+    """Slot-level continuous-batching server.
 
-    The policy (exp backend, kernel backend, block sizes) is resolved once
-    at construction — config fields, then REPRO_* env vars, then the
-    ``policy=`` override — and closed over by the prefill/decode jit
-    programs, so a policy switch is a new Server, never a silent retrace.
+    One ExecPolicy per *group* (default: a single group from the usual
+    resolution chain), each with its own ``max_batch``-slot cache pool and
+    exactly one decode executable. ``run(requests)`` drives admission and
+    decode until every request is finished.
+
+    Transformer-family configs only (dense / moe / vlm): ssm and hybrid
+    recurrences have no per-slot cache positions yet — serve those one
+    batch at a time through ``models.api`` directly.
     """
 
     def __init__(self, cfg, params, *, max_batch=4, max_seq=512, mesh=None,
-                 policy: ExecPolicy | None = None):
+                 policy: ExecPolicy | None = None,
+                 policy_groups: Optional[dict] = None):
+        if cfg.family in ("ssm", "hybrid", "audio"):
+            raise NotImplementedError(
+                f"the slot engine serves transformer-family configs; "
+                f"{cfg.family!r} has no per-slot cache positions")
         self.cfg, self.params = cfg, params
         self.max_batch, self.max_seq = max_batch, max_seq
         self.mesh = mesh or make_host_mesh()
         self.policy = policy if policy is not None else resolve_policy(cfg)
-        pol = self.policy
-        self._prefill = jax.jit(
-            lambda p, b: api.prefill(p, cfg, b, policy=pol))
-        self._decode = jax.jit(
-            lambda p, t, c, pos: api.decode_step(p, cfg, t, c, pos,
-                                                 policy=pol))
+        self.cache_s = min(max_seq, cfg.sliding_window or max_seq)
+        groups = dict(policy_groups) if policy_groups else {}
+        if "default" not in groups:
+            groups["default"] = self.policy
+        self.policy_groups = groups
+        self._groups = {name: _Group(cfg, params, pol, max_batch,
+                                     self.cache_s)
+                        for name, pol in groups.items()}
+        self.admit_log: list = []    # rids in admission order (tests/debug)
+
+    # ------------------------------------------------------------ scheduling
+
+    def submit(self, r: Request) -> None:
+        if r.group not in self._groups:
+            raise ValueError(f"unknown policy group {r.group!r}; "
+                             f"have {sorted(self._groups)}")
+        plen = len(r.prompt)
+        if plen < 1:
+            raise ValueError(f"request {r.rid}: empty prompt")
+        if plen > self.cache_s:
+            raise ValueError(
+                f"request {r.rid}: prompt of {plen} tokens exceeds the "
+                f"cache capacity ({self.cache_s})")
+        if r.max_new < 1:
+            raise ValueError(f"request {r.rid}: max_new must be >= 1")
+        r.t_submit = time.perf_counter()
+        self._groups[r.group].queue.append(r)
+
+    def step(self) -> bool:
+        """One scheduler tick: admit into freed slots, then one decode step
+        per busy group. Returns True while any work remains."""
+        for g in self._groups.values():
+            g.admit(self.admit_log)
+        for g in self._groups.values():
+            g.decode_once()
+        return any(g.busy for g in self._groups.values())
+
+    def drain(self) -> None:
+        with self.mesh:
+            while self.step():
+                pass
 
     def run(self, requests: list[Request]) -> list[Request]:
-        """Greedy decode, batch-padded. Requests must share prompt length
-        (the packer pads); returns requests with .out filled."""
-        done = []
-        with self.mesh:
-            for i in range(0, len(requests), self.max_batch):
-                chunk = requests[i:i + self.max_batch]
-                done.extend(self._run_batch(chunk))
-        return done
+        """Serve to completion; returns the requests with .out filled."""
+        for r in requests:
+            self.submit(r)
+        self.drain()
+        return requests
 
-    def _run_batch(self, chunk):
-        b = len(chunk)
-        plen = max(len(r.prompt) for r in chunk)
-        toks = np.zeros((b, plen), np.int32)
-        for j, r in enumerate(chunk):
-            toks[j, plen - len(r.prompt):] = r.prompt     # left-pad
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
-        if cache is None:                                  # ssm prefill
-            cache = api.init_cache(self.cfg, b, self.max_seq)
-        cache = self._grow_cache(cache, b, plen)
-        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-        max_new = max(r.max_new for r in chunk)
-        for step in range(max_new):
-            for j, r in enumerate(chunk):
-                if step < r.max_new:
-                    r.out.append(int(tok[j, 0]))
-            logits, cache = self._decode(self.params, tok, cache,
-                                         jnp.int32(plen + step))
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        return chunk
+    # ------------------------------------------------------------ telemetry
 
-    def _grow_cache(self, cache, b, plen):
-        """Pad prefill KV caches out to max_seq slots."""
-        cfg = self.cfg
-        if cfg.family == "ssm":
-            return cache
-        target = min(self.max_seq,
-                     cfg.sliding_window or self.max_seq)
-
-        flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
-        out = []
-        for path, x in flat:
-            name = str(getattr(path[-1], "key", ""))
-            if name in ("k", "v") and x.shape[-3] < target:
-                pad = [(0, 0)] * x.ndim
-                pad[-3] = (0, target - x.shape[-3])
-                x = jnp.pad(x, pad)
-            out.append(x)
-        return jax.tree_util.tree_unflatten(treedef, out)
+    def stats(self) -> dict:
+        """Per-group decode-step count and request-latency tail (submit ->
+        tokens materialized; measured at a real device sync, unlike the
+        async per-step dispatch times)."""
+        out = {}
+        for name, g in self._groups.items():
+            lat = sorted(g.req_lat)
+            out[name] = {
+                "decode_steps": g.decode_steps,
+                "p50_req_s": lat[len(lat) // 2] if lat else 0.0,
+                "p95_req_s": lat[min(int(len(lat) * 0.95),
+                                     len(lat) - 1)] if lat else 0.0,
+                "policy": g.policy.describe(),
+            }
+        return out
 
 
 def main():
@@ -110,13 +348,22 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--mixed-lengths", action="store_true",
+                    help="draw prompt lengths in [4, --prompt-len] instead "
+                         "of a uniform length (exercises ragged admission)")
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=512)
     ap.add_argument("--exp-backend", default=None,
                     choices=["exact", "vexp", "vexp_hw"],
                     help="exponential backend (default: config/env)")
     ap.add_argument("--kernel-backend", default=None,
                     choices=["pallas", "reference", "xla"],
                     help="kernel backend (default: config/env)")
+    ap.add_argument("--policy-groups", default=None,
+                    help='per-request policy groups, e.g. '
+                         '"eval=exact,bulk=vexp" (requests are assigned '
+                         'round-robin); omit for a single default group')
     ap.add_argument("--autotune", action="store_true",
                     help="autotune kernel block sizes per shape bucket")
     args = ap.parse_args()
@@ -126,21 +373,39 @@ def main():
     policy = resolve_policy(cfg, exp_backend=args.exp_backend,
                             kernel_backend=args.kernel_backend,
                             autotune=args.autotune or None)
+    groups = None
+    if args.policy_groups:
+        groups = parse_policy_groups(args.policy_groups, cfg, base=policy)
     print(f"[serve] policy: {policy.describe()}")
+    if groups:
+        for name, pol in groups.items():
+            print(f"[serve]   group {name}: {pol.describe()}")
     params = api.init_params(cfg, jax.random.PRNGKey(0))
-    server = Server(cfg, params, policy=policy)
+    server = Server(cfg, params, max_batch=args.max_batch,
+                    max_seq=args.max_seq, policy=policy,
+                    policy_groups=groups)
     rng = np.random.default_rng(0)
-    reqs = [Request(i, rng.integers(0, cfg.vocab, (args.prompt_len,),
-                                    dtype=np.int32), args.max_new)
-            for i in range(args.requests)]
+    names = sorted(groups) if groups else ["default"]
+    reqs = []
+    for i in range(args.requests):
+        plen = (int(rng.integers(4, args.prompt_len + 1))
+                if args.mixed_lengths else args.prompt_len)
+        reqs.append(Request(i, rng.integers(0, cfg.vocab, (plen,),
+                                            dtype=np.int32),
+                            args.max_new, group=names[i % len(names)]))
     t0 = time.perf_counter()
     out = server.run(reqs)
     dt = time.perf_counter() - t0
     ntok = sum(len(r.out) for r in out)
     print(f"served {len(out)} requests, {ntok} tokens in {dt:.2f}s "
           f"({ntok / dt:.1f} tok/s)")
+    for name, s in server.stats().items():
+        print(f"  group {name}: {s['decode_steps']} decode steps, "
+              f"request latency p50 {s['p50_req_s'] * 1e3:.1f}ms "
+              f"p95 {s['p95_req_s'] * 1e3:.1f}ms")
     for r in out[:3]:
-        print(f"  req {r.rid}: {r.out[:8]}...")
+        print(f"  req {r.rid} [{r.group}] len={len(r.prompt)}: "
+              f"{r.out[:8]}... ({r.finish_reason})")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from . import transformer, ssm, hybrid
+from .transformer import cache_seq_axis  # noqa: F401  (re-export: serving)
 
 
 def _mod(cfg):
@@ -58,8 +59,20 @@ def forward(params, cfg, batch, *, policy=None):
 
 
 def prefill(params, cfg, batch, *, policy=None):
+    """Prompt forward -> (last_logits, cache).
+
+    ``batch["prompt_len"]`` (optional, (B,) int32) marks ragged
+    right-padded prompts: attention masks the padding, pad K/V rows are
+    zeroed, and logits are taken at each row's last real token
+    (transformer families only).
+    """
     cfg = _apply_policy(cfg, policy)
     m = _mod(cfg)
+    prompt_len = batch.get("prompt_len")
+    if prompt_len is not None and (cfg.family in ("ssm", "hybrid", "audio")):
+        raise NotImplementedError(
+            f"per-request prompt_len is not supported for the "
+            f"{cfg.family!r} family")
     if cfg.family == "audio":
         # encoder-only: "prefill" is a full encode; no cache/decode exists.
         from .layers import mask_padded_logits
@@ -70,10 +83,12 @@ def prefill(params, cfg, batch, *, policy=None):
         return mask_padded_logits(logits, cfg.vocab), None
     if cfg.family == "vlm":
         return transformer.prefill(params, cfg, batch["tokens"],
-                                   batch.get("extra"), policy=policy)
+                                   batch.get("extra"),
+                                   prompt_len=prompt_len, policy=policy)
     if cfg.family in ("ssm", "hybrid"):
         return m.prefill(params, cfg, batch["tokens"])
-    return transformer.prefill(params, cfg, batch["tokens"], policy=policy)
+    return transformer.prefill(params, cfg, batch["tokens"],
+                               prompt_len=prompt_len, policy=policy)
 
 
 def init_cache(cfg, batch_size, seq_len):
@@ -87,11 +102,18 @@ def init_cache(cfg, batch_size, seq_len):
 
 
 def decode_step(params, cfg, token, cache, pos, *, policy=None):
+    """One decode step. ``pos`` may be a scalar (whole batch at one
+    position) or a per-slot (B,) vector (continuous batching; transformer
+    families only)."""
     cfg = _apply_policy(cfg, policy)
     m = _mod(cfg)
     if cfg.family == "audio":
         raise ValueError("encoder-only arch has no decode step")
     if cfg.family in ("ssm", "hybrid"):
+        if getattr(pos, "ndim", 0):
+            raise NotImplementedError(
+                f"per-slot decode positions are not supported for the "
+                f"{cfg.family!r} family")
         return m.decode_step(params, cfg, token, cache, pos)
     return transformer.decode_step(params, cfg, token, cache, pos,
                                    policy=policy)

@@ -62,39 +62,81 @@ def _qkv(x, p, cfg, pos):
     return q, k, v
 
 
-def attn_apply(x, p, cfg, pos, *, window=None, causal=None, policy=None):
+def attn_apply(x, p, cfg, pos, *, window=None, causal=None, kv_valid=None,
+               policy=None):
     """Full-sequence attention (train / prefill). Returns y, (k, v).
 
     ``policy`` (an ExecPolicy) selects exp backend + kernel backend +
     blocks; when None the cfg's legacy fields apply unchanged.
+    ``kv_valid`` (B, S) masks padded prompt positions out of the keys.
     """
     causal = cfg.causal if causal is None else causal
     q, k, v = _qkv(x, p, cfg, pos)
     o = attention(q, k, v, causal=causal, window=window,
                   exp_impl=cfg.exp_impl, impl=cfg.attention_impl,
                   unroll=cfg.unroll_scans, block_k=cfg.attn_block_k,
-                  mm_dtype=cfg.attn_mm_dtype, policy=policy)
+                  mm_dtype=cfg.attn_mm_dtype, kv_valid=kv_valid,
+                  policy=policy)
     return o.reshape(x.shape[0], x.shape[1], -1) @ p["wo"], (k, v)
+
+
+def cache_seq_axis(layout: str, stacked: bool = True) -> int:
+    """Index of the sequence axis in a KV cache of the given layout.
+
+    Stacked caches are (L, B, S, Hkv, hd) for "bshd" and (L, B, Hkv, S, hd)
+    for "bhsd"; per-layer caches drop the leading L. Resolving the axis
+    here (instead of hardcoding -3, which is only correct for "bshd")
+    keeps every cache pad/insert site layout-correct.
+    """
+    if layout not in ("bshd", "bhsd"):
+        raise ValueError(f"unknown kv cache layout {layout!r}")
+    base = 1 if layout == "bshd" else 2
+    return base + (1 if stacked else 0)
+
+
+def _rope_pos(b, pos):
+    """(B, 1) rope positions from a scalar or per-row (B,) position."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        return pos[:, None]
+    return jnp.full((b, 1), pos, jnp.int32)
+
+
+def _write_token_kv(cache, kv, pos, layout):
+    """Write one token's K (or V) into the cache at ``pos``.
+
+    kv: (B, 1, Hkv, hd) for "bshd" / (B, Hkv, 1, hd) for "bhsd".
+    ``pos`` scalar writes one slice (dynamic_update_slice); a per-slot
+    (B,) vector scatters each row at its own position, so ragged slots in
+    a continuous batch never touch each other's cache rows.
+    """
+    kv = kv.astype(cache.dtype)
+    if jnp.ndim(pos) == 0:
+        ax = 2 if layout == "bhsd" else 1
+        return jax.lax.dynamic_update_slice_in_dim(cache, kv, pos, axis=ax)
+    b = cache.shape[0]
+    if layout == "bhsd":
+        hkv = cache.shape[1]
+        return cache.at[jnp.arange(b)[:, None],
+                        jnp.arange(hkv)[None, :],
+                        pos[:, None]].set(kv[:, :, 0])
+    return cache.at[jnp.arange(b), pos].set(kv[:, 0])
 
 
 def attn_decode(x, p, cfg, cache_k, cache_v, pos, *, window=None,
                 policy=None):
     """Single-token decode. cache_[kv]: (B, Smax, Hkv, hd) for "bshd"
-    layout, (B, Hkv, Smax, hd) for "bhsd"; pos: scalar int (current
-    position). Returns y, (new_k_cache, new_v_cache)."""
+    layout, (B, Hkv, Smax, hd) for "bhsd"; pos: scalar int or per-slot
+    (B,) vector of current positions. Returns y, (new_k_cache,
+    new_v_cache)."""
     b = x.shape[0]
     lay = cfg.kv_cache_layout
-    q, k, v = _qkv(x, p, cfg, jnp.full((b, 1), pos, jnp.int32))
+    q, k, v = _qkv(x, p, cfg, _rope_pos(b, pos))
     if lay == "bhsd":
         k = k.transpose(0, 2, 1, 3)          # (B, Hkv, 1, hd) — tiny
         v = v.transpose(0, 2, 1, 3)
-        axis = 2
-    else:
-        axis = 1
-    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
-                                             pos, axis=axis)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
-                                             pos, axis=axis)
+    ck = _write_token_kv(cache_k, k, pos, lay)
+    cv = _write_token_kv(cache_v, v, pos, lay)
     o = decode_attention(q, ck, cv, cache_len=pos + 1, window=window,
                          exp_impl=cfg.exp_impl, mm_dtype=cfg.attn_mm_dtype,
                          layout=lay, policy=policy)
@@ -117,12 +159,12 @@ def block_init(key, cfg, dtype=jnp.float32):
     return p
 
 
-def block_apply(x, p, cfg, pos, *, policy=None):
+def block_apply(x, p, cfg, pos, *, kv_valid=None, policy=None):
     """Returns (y, kv, aux)."""
     aux = {}
     h = norm_apply(x, p["ln_attn"], cfg.norm, cfg.norm_eps)
     a, kv = attn_apply(h, p["attn"], cfg, pos, window=cfg.sliding_window,
-                       policy=policy)
+                       kv_valid=kv_valid, policy=policy)
     if cfg.parallel_block:
         # command-r: attention and FFN read the same normed input.
         if cfg.n_experts:
@@ -262,19 +304,46 @@ def init_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def prefill(params, cfg, tokens, extra=None, *, policy=None):
-    """Forward over the prompt; returns (last_logits, cache)."""
+def prefill(params, cfg, tokens, extra=None, *, prompt_len=None, policy=None):
+    """Forward over the prompt; returns (last_logits, cache).
+
+    ``prompt_len`` (B,) enables ragged right-padded batches: tokens beyond
+    each row's length are padding — they are masked out of attention (no
+    real token attends a pad, no pad pollutes the softmax normalizer),
+    their K/V cache rows are zeroed, and the returned logits are each
+    row's *last real* position (not the padded tail). Without it, every
+    row is assumed full-length (the previous behaviour, unchanged).
+    """
+    if prompt_len is not None and extra is not None:
+        raise ValueError("prompt_len is only supported for token-only "
+                         "prefill (no vlm/audio extra inputs)")
     x = embed_inputs(params, cfg, tokens, extra)
     b, s, _ = x.shape
+    if (prompt_len is not None and cfg.sliding_window
+            and s > cfg.sliding_window):
+        raise ValueError(
+            f"ragged prefill of {s} tokens exceeds the sliding window "
+            f"({cfg.sliding_window}): the ring-buffer roll is batch-"
+            f"uniform; prefill ragged windowed batches at <= window")
     pos = jnp.arange(s)[None, :].astype(jnp.int32)
+    kv_valid = None
+    if prompt_len is not None:
+        plen = jnp.asarray(prompt_len, jnp.int32).reshape(-1)
+        kv_valid = jnp.arange(s)[None, :] < plen[:, None]        # (B, S)
     dt = _cdtype(cfg)
 
     def body(x, layer_p):
         layer_p = jax.tree.map(lambda a: a.astype(dt)
                                if a.dtype == jnp.float32 and a.ndim > 1
                                else a, layer_p)
-        y, kv, _ = block_apply(x, layer_p, cfg, pos, policy=policy)
+        y, kv, _ = block_apply(x, layer_p, cfg, pos, kv_valid=kv_valid,
+                               policy=policy)
         k, v = kv
+        if kv_valid is not None:
+            # pad rows must not reach the decode cache: decode masks by
+            # cache_len, but zeroing keeps freed/reused slots hygienic.
+            k = jnp.where(kv_valid[:, :, None, None], k, 0)
+            v = jnp.where(kv_valid[:, :, None, None], v, 0)
         if cfg.sliding_window and s > cfg.sliding_window:
             w = cfg.sliding_window
             # ring-buffer layout: absolute position p lives at slot p % w,
@@ -290,16 +359,24 @@ def prefill(params, cfg, tokens, extra=None, *, policy=None):
     x, cache = jax.lax.scan(body, x, params["layers"],
                             unroll=cfg.n_layers if cfg.unroll_scans else 1)
     x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    if prompt_len is None:
+        xl = x[:, -1:]
+    else:
+        idx = jnp.clip(plen - 1, 0, s - 1)[:, None, None]
+        xl = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
     ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
-    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:].astype(ldt),
+    logits = jnp.einsum("bsd,dv->bsv", xl.astype(ldt),
                         unembed_matrix(params, cfg).astype(ldt),
                         preferred_element_type=jnp.float32)
     return mask_padded_logits(logits, cfg.vocab), cache
 
 
 def decode_step(params, cfg, token, cache, pos, *, policy=None):
-    """One decode step. token: (B, 1) int32; pos: scalar int32 (position of
-    this token); cache: stacked KV. Returns (logits, new_cache)."""
+    """One decode step. token: (B, 1) int32; pos: scalar int32 or per-slot
+    (B,) int32 (position of each row's token — the serving engine's slots
+    advance independently); cache: stacked KV. Returns (logits,
+    new_cache)."""
     x = embed_inputs(params, cfg, token)
     dt = _cdtype(cfg)
     # Windowed caches are sized `window`; write position wraps.
@@ -313,11 +390,10 @@ def decode_step(params, cfg, token, cache, pos, *, policy=None):
         if cfg.sliding_window:
             # ring buffer: write at wpos; effective length = min(pos+1, W).
             k, v, q = _qkv_single(x, layer_p, cfg, pos)
-            ax = 2 if cfg.kv_cache_layout == "bhsd" else 1
             if cfg.kv_cache_layout == "bhsd":
                 k, v = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
-            ck = jax.lax.dynamic_update_slice_in_dim(ck, k, wpos, axis=ax)
-            cv = jax.lax.dynamic_update_slice_in_dim(cv, v, wpos, axis=ax)
+            ck = _write_token_kv(ck, k, wpos, cfg.kv_cache_layout)
+            cv = _write_token_kv(cv, v, wpos, cfg.kv_cache_layout)
             h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
             y, _ = _decode_windowed(h, layer_p, cfg, ck, cv, pos, wpos,
                                     policy=policy)
@@ -343,14 +419,14 @@ def decode_step(params, cfg, token, cache, pos, *, policy=None):
 def _qkv_single(x, layer_p, cfg, pos):
     h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
     b = x.shape[0]
-    q, k, v = _qkv(h, layer_p["attn"], cfg, jnp.full((b, 1), pos, jnp.int32))
+    q, k, v = _qkv(h, layer_p["attn"], cfg, _rope_pos(b, pos))
     return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16), q
 
 
 def _decode_windowed(h, layer_p, cfg, ck, cv, pos, wpos, *, policy=None):
     """Windowed ring-buffer decode: all cache slots valid once pos >= W."""
     b = h.shape[0]
-    q, _, _ = _qkv(h, layer_p["attn"], cfg, jnp.full((b, 1), pos, jnp.int32))
+    q, _, _ = _qkv(h, layer_p["attn"], cfg, _rope_pos(b, pos))
     w = cfg.sliding_window
     valid = jnp.minimum(pos + 1, w)
     o = decode_attention(q, ck, cv, cache_len=valid, exp_impl=cfg.exp_impl,

@@ -10,7 +10,9 @@ kernels, models, serving and training.
 """
 
 from .policy import (ExecPolicy, resolve_policy, policy_from_env,
+                     parse_policy_groups,
                      EXP_BACKENDS, KERNEL_BACKENDS, ENV_PREFIX)
 
 __all__ = ["ExecPolicy", "resolve_policy", "policy_from_env",
+           "parse_policy_groups",
            "EXP_BACKENDS", "KERNEL_BACKENDS", "ENV_PREFIX"]

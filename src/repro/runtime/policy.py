@@ -206,3 +206,50 @@ def resolve_policy(cfg=None, *, env: Optional[Mapping[str, str]] = None,
     merged.update(policy_from_env(env))
     merged.update({k: v for k, v in overrides.items() if v is not None})
     return ExecPolicy(**merged)
+
+
+def parse_policy_groups(spec: str, cfg=None, *,
+                        base: Optional[ExecPolicy] = None,
+                        env: Optional[Mapping[str, str]] = None,
+                        ) -> dict:
+    """Parse a serving ``--policy-groups`` spec into named ExecPolicies.
+
+    Format: ``name=exp_backend[/kernel_backend]`` entries joined by commas,
+    e.g. ``"eval=exact,bulk=vexp"`` or ``"eval=exact/xla,bulk=vexp_hw"``.
+    Each group resolves through the normal precedence chain (the named
+    backends act as per-call overrides on top of env/config/base), so one
+    server can batch eval traffic under exact numerics next to bulk
+    traffic under the paper's VEXP approximation.
+
+    When ``base`` is given it is an *already-resolved* policy (config,
+    env and CLI overrides applied); ``cfg`` is then ignored and the
+    process environment is not re-read (unless an ``env`` mapping is
+    passed explicitly), so neither can shadow explicit overrides baked
+    into the base (e.g. a CLI ``--kernel-backend`` beating
+    ``cfg.attention_impl`` or a stale ``REPRO_EXP_BACKEND``).
+    """
+    if base is not None:
+        cfg = None
+        if env is None:
+            env = {}
+    groups = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, sep, val = part.partition("=")
+        name, val = name.strip(), val.strip()
+        if not sep or not name or not val:
+            raise ValueError(
+                f"bad policy-group entry {part!r}; expected "
+                f"name=exp_backend[/kernel_backend]")
+        if name in groups:
+            raise ValueError(f"duplicate policy group {name!r}")
+        exp, _, kb = val.partition("/")
+        overrides = {"exp_backend": exp.strip()}
+        if kb.strip():
+            overrides["kernel_backend"] = kb.strip()
+        groups[name] = resolve_policy(cfg, base=base, env=env, **overrides)
+    if not groups:
+        raise ValueError(f"empty policy-groups spec {spec!r}")
+    return groups

@@ -26,6 +26,21 @@ def test_allclose_vs_ref(b, h, hkv, d, smax, clen):
                                atol=2e-3, rtol=2e-3)
 
 
+def test_per_slot_cache_len_vector():
+    """(B,) cache_len: each batch row is masked against its own length
+    (the serving engine's ragged continuous-batching contract)."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    b, h, hkv, d, smax = 4, 8, 4, 64, 768
+    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, hkv, smax, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, hkv, smax, d), jnp.float32)
+    clen = jnp.array([1, 255, 500, 768], jnp.int32)
+    out = decode_attention(q, kc, vc, clen, block_s=256, interpret=True)
+    ref = decode_attention_ref(q, kc, vc, clen)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)
+
+
 def test_bf16_cache():
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
     q = jax.random.normal(ks[0], (1, 1, 4, 64), jnp.float32)

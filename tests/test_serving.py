@@ -1,0 +1,282 @@
+"""Slot-level continuous-batching serving engine tests.
+
+The headline regression: a batch mixing prompt lengths must produce
+exactly the greedy tokens each request gets when served alone — the old
+driver left-padded with token 0, attended the padding during prefill and
+decoded every slot at the longest request's position, so any unequal-length
+batch silently produced wrong tokens.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import api
+from repro.launch.serve import Server, Request, _len_bucket
+from repro.models.transformer import cache_seq_axis
+from repro.runtime import resolve_policy, parse_policy_groups
+
+EXP_BACKENDS = ("exact", "vexp", "vexp_hw")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("gpt2-small").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, (n,), dtype=np.int32) for n in lens]
+
+
+def _serve(cfg, params, prompts, idxs, *, max_new=6, max_batch=4,
+           max_seq=64, policy=None, policy_groups=None, groups_of=None):
+    srv = Server(cfg, params, max_batch=max_batch, max_seq=max_seq,
+                 policy=policy, policy_groups=policy_groups)
+    reqs = [Request(i, prompts[i].copy(), max_new,
+                    group=(groups_of or {}).get(i, "default"))
+            for i in idxs]
+    srv.run(reqs)
+    return {r.rid: r.out for r in reqs}, srv
+
+
+# ------------------------------------------------------- headline regression
+
+class TestMixedLengthOracle:
+    @pytest.mark.parametrize("exp", EXP_BACKENDS)
+    def test_unequal_batch_matches_solo(self, cfg, params, exp):
+        """2-request unequal-length batch == each request served alone,
+        token for token, under every exp backend."""
+        pol = resolve_policy(cfg, env={}, exp_backend=exp)
+        prompts = _prompts(cfg, (5, 11))
+        together, _ = _serve(cfg, params, prompts, [0, 1], policy=pol)
+        solo0, _ = _serve(cfg, params, prompts, [0], policy=pol)
+        solo1, _ = _serve(cfg, params, prompts, [1], policy=pol)
+        assert together[0] == solo0[0]
+        assert together[1] == solo1[1]
+
+    def test_uniform_full_pool_fast_path_matches_solo(self, cfg, params):
+        """A full-width exact-bucket wave takes the plain-prefill + padded
+        cache fast path; its tokens must equal solo serving (which runs
+        the masked ragged path)."""
+        prompts = _prompts(cfg, (8, 8, 8, 8))   # bucket(8) == 8, pool of 4
+        together, srv = _serve(cfg, params, prompts, [0, 1, 2, 3],
+                               max_batch=4)
+        assert srv.admit_log == [0, 1, 2, 3]
+        for i in range(4):
+            solo, _ = _serve(cfg, params, prompts, [i])
+            assert together[i] == solo[i], i
+
+    def test_uniform_full_pool_pallas_matches_solo(self, cfg, params):
+        """Under a pallas policy a full exact-bucket wave must not take
+        the unmasked fast path (which would prefill through the real
+        Pallas kernel while solo serving runs the demoted reference scan
+        — a different fp accumulation order that can flip a near-tie
+        argmax)."""
+        pol = resolve_policy(cfg, env={}, kernel_backend="pallas")
+        prompts = _prompts(cfg, (8, 8, 8, 8))
+        together, _ = _serve(cfg, params, prompts, [0, 1, 2, 3],
+                             max_batch=4, policy=pol)
+        for i in range(4):
+            solo, _ = _serve(cfg, params, prompts, [i], policy=pol)
+            assert together[i] == solo[i], i
+
+    def test_bhsd_pallas_per_slot_kernel(self, cfg, params):
+        """The head-major cache + per-slot (B,) cache_len Pallas decode
+        route must also match solo serving (exercises the slot-pool insert
+        along the bhsd sequence axis and the vectorized-length kernel)."""
+        ocfg = cfg.optimized()
+        assert ocfg.kv_cache_layout == "bhsd"
+        oparams = api.init_params(ocfg, jax.random.PRNGKey(0))
+        pol = resolve_policy(ocfg, env={}, kernel_backend="pallas")
+        prompts = _prompts(ocfg, (5, 11))
+        together, _ = _serve(ocfg, oparams, prompts, [0, 1],
+                             max_new=5, policy=pol)
+        solo0, _ = _serve(ocfg, oparams, prompts, [0], max_new=5, policy=pol)
+        solo1, _ = _serve(ocfg, oparams, prompts, [1], max_new=5, policy=pol)
+        assert together[0] == solo0[0]
+        assert together[1] == solo1[1]
+
+
+# --------------------------------------------------------- ragged prefill api
+
+class TestRaggedPrefill:
+    def test_prompt_len_masks_padding(self, cfg, params):
+        """api.prefill with prompt_len: per-row last-real logits equal the
+        solo prefill logits and pad K/V cache rows are zeroed."""
+        prompts = _prompts(cfg, (5, 11))
+        toks = np.zeros((2, 16), np.int32)
+        toks[0, :5], toks[1, :11] = prompts[0], prompts[1]
+        lb, cb = api.prefill(params, cfg, {"tokens": jnp.asarray(toks),
+                                           "prompt_len": jnp.array([5, 11])})
+        for i, p in enumerate(prompts):
+            ls, _ = api.prefill(params, cfg, {"tokens": jnp.asarray(p[None])})
+            np.testing.assert_array_equal(np.asarray(lb[i, 0]),
+                                          np.asarray(ls[0, 0]))
+        k = np.asarray(cb["k"], np.float32)
+        assert (k[:, 0, 5:] == 0).all() and (k[:, 1, 11:] == 0).all()
+
+    def test_prompt_len_rejected_for_recurrent_families(self):
+        mcfg = get_config("mamba2-1.3b").reduced()
+        mparams = api.init_params(mcfg, jax.random.PRNGKey(0))
+        with pytest.raises(NotImplementedError):
+            api.prefill(mparams, mcfg,
+                        {"tokens": jnp.zeros((1, 8), jnp.int32),
+                         "prompt_len": jnp.array([4])})
+
+
+# --------------------------------------------------- scheduler / slot algebra
+
+class TestScheduler:
+    def test_admission_order_and_slot_reuse(self, cfg, params):
+        """5 requests through 2 slots: FIFO admission, every request
+        completes with exactly max_new tokens."""
+        lens = (5, 9, 7, 6, 8)
+        news = (2, 5, 3, 4, 1)
+        prompts = _prompts(cfg, lens)
+        srv = Server(cfg, params, max_batch=2, max_seq=64)
+        reqs = [Request(i, prompts[i].copy(), news[i]) for i in range(5)]
+        srv.run(reqs)
+        assert srv.admit_log == [0, 1, 2, 3, 4]
+        for r in reqs:
+            assert len(r.out) == r.max_new, r.rid
+            assert r.finish_reason == "max_new"
+            assert r.t_done >= r.t_first >= r.t_submit > 0
+
+    def test_finished_slots_freed_not_burned(self, cfg, params):
+        """A slot whose request finishes is freed for the queue instead of
+        decoding dead tokens until the batch-wide max: serving (1, 8, 1)
+        max_new through 2 slots needs ~7 decode steps, not 8 * 3."""
+        prompts = _prompts(cfg, (5, 7, 6))
+        srv = Server(cfg, params, max_batch=2, max_seq=64)
+        reqs = [Request(0, prompts[0].copy(), 1),
+                Request(1, prompts[1].copy(), 8),
+                Request(2, prompts[2].copy(), 1)]
+        srv.run(reqs)
+        assert [len(r.out) for r in reqs] == [1, 8, 1]
+        # req 0 finishes at admission (token from prefill); req 2 rides in
+        # the freed slot while req 1 keeps decoding.
+        assert srv.stats()["default"]["decode_steps"] <= 8
+
+    def test_decode_past_capacity_stops_slot(self, cfg, params):
+        """A request that would decode past max_seq is stopped with
+        finish_reason="length_cap" instead of silently overwriting the
+        last cache row (the old dynamic_update_slice clamp)."""
+        prompts = _prompts(cfg, (11,))
+        srv = Server(cfg, params, max_batch=2, max_seq=16)
+        r = Request(0, prompts[0].copy(), 50)
+        srv.run([r])
+        # 1 prefill token + (16 - 11) decode writes at positions 11..15
+        assert len(r.out) == 6
+        assert r.finish_reason == "length_cap"
+
+    def test_submit_validation(self, cfg, params):
+        srv = Server(cfg, params, max_batch=2, max_seq=16)
+        with pytest.raises(ValueError):   # prompt longer than the cache
+            srv.submit(Request(0, np.zeros(17, np.int32), 4))
+        with pytest.raises(ValueError):   # unknown group
+            srv.submit(Request(1, np.zeros(4, np.int32), 4, group="nope"))
+        with pytest.raises(NotImplementedError):
+            Server(get_config("mamba2-1.3b").reduced(), params)
+
+    def test_len_bucket(self):
+        assert [_len_bucket(n, 512) for n in (1, 8, 9, 100)] == \
+            [8, 8, 16, 128]
+        assert _len_bucket(400, 96) == 96   # capped at cache capacity
+
+
+# ----------------------------------------------------------- policy groups
+
+class TestPolicyGroups:
+    def test_exact_slots_isolated_from_vexp(self, cfg, params):
+        """In a mixed-policy server, the exact group's tokens equal a
+        pure-exact server's tokens (a vexp slot never contaminates an
+        exact slot's numerics), and vice versa."""
+        prompts = _prompts(cfg, (5, 11, 7))
+        groups = {"eval": resolve_policy(cfg, env={}, exp_backend="exact"),
+                  "bulk": resolve_policy(cfg, env={}, exp_backend="vexp")}
+        mixed, _ = _serve(cfg, params, prompts, [0, 1, 2],
+                          policy_groups=groups,
+                          groups_of={0: "eval", 1: "bulk", 2: "eval"})
+        pure_exact, _ = _serve(cfg, params, prompts, [0, 2],
+                               policy=groups["eval"])
+        pure_vexp, _ = _serve(cfg, params, prompts, [1],
+                              policy=groups["bulk"])
+        assert mixed[0] == pure_exact[0]
+        assert mixed[2] == pure_exact[2]
+        assert mixed[1] == pure_vexp[1]
+
+    def test_parse_policy_groups(self, cfg):
+        g = parse_policy_groups("eval=exact,bulk=vexp_hw/xla", cfg, env={})
+        assert g["eval"].exp_backend == "exact"
+        assert g["bulk"].exp_backend == "vexp_hw"
+        assert g["bulk"].kernel_backend == "xla"
+        for bad in ("", "noequals", "x=,", "a=exact,a=vexp"):
+            with pytest.raises(ValueError):
+                parse_policy_groups(bad, cfg, env={})
+
+    def test_parse_policy_groups_base_beats_cfg_and_env(self, cfg):
+        """A resolved base policy already encodes config/env/CLI
+        precedence; neither cfg fields nor stale env vars may shadow it
+        (e.g. a CLI --kernel-backend xla must survive into every group)."""
+        base = resolve_policy(cfg, env={}, kernel_backend="xla")
+        g = parse_policy_groups("eval=exact", cfg, base=base)
+        assert g["eval"].kernel_backend == "xla"
+        assert g["eval"].exp_backend == "exact"
+        g2 = parse_policy_groups("eval=exact", cfg, base=base,
+                                 env={"REPRO_KERNEL_BACKEND": "reference"})
+        assert g2["eval"].kernel_backend == "reference"  # explicit env wins
+
+
+# ------------------------------------------------- per-slot decode kernel
+
+class TestPerSlotDecodeKernel:
+    def test_vector_cache_len_vs_reference(self):
+        """The Pallas flash-decode kernel with a (B,) cache_len vector
+        must match the reference reduction row for row."""
+        from repro.kernels.decode_attention import (decode_attention,
+                                                    decode_attention_ref)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        b, h, hkv, d, smax = 3, 8, 2, 64, 512
+        q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+        kc = jax.random.normal(ks[1], (b, hkv, smax, d), jnp.float32)
+        vc = jax.random.normal(ks[2], (b, hkv, smax, d), jnp.float32)
+        clen = jnp.array([300, 17, 512], jnp.int32)
+        out = decode_attention(q, kc, vc, clen, block_s=128, interpret=True)
+        ref = decode_attention_ref(q, kc, vc, clen)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-3, rtol=2e-3)
+        # each row must equal the same row decoded alone at its own length
+        for i, cl in enumerate((300, 17, 512)):
+            solo = decode_attention(q[i:i + 1], kc[i:i + 1], vc[i:i + 1],
+                                    cl, block_s=128, interpret=True)
+            np.testing.assert_allclose(np.asarray(out[i:i + 1]),
+                                       np.asarray(solo), atol=2e-3,
+                                       rtol=2e-3)
+
+
+# ------------------------------------------------------- cache layout axis
+
+def test_cache_seq_axis():
+    """"bshd" stacked caches are (L, B, S, Hkv, hd) -> axis 2; "bhsd" are
+    (L, B, Hkv, S, hd) -> axis 3 (the old _grow_cache hardcoded -3, which
+    padded Hkv on head-major caches)."""
+    assert cache_seq_axis("bshd") == 2
+    assert cache_seq_axis("bhsd") == 3
+    assert cache_seq_axis("bshd", stacked=False) == 1
+    assert cache_seq_axis("bhsd", stacked=False) == 2
+    with pytest.raises(ValueError):
+        cache_seq_axis("sbhd")
+    import dataclasses
+    cfg = get_config("gpt2-small").reduced()
+    for lay in ("bshd", "bhsd"):
+        c = api.init_cache(dataclasses.replace(cfg, kv_cache_layout=lay),
+                           2, 32)
+        assert c["k"].shape[cache_seq_axis(lay)] == 32
