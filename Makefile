@@ -4,13 +4,21 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: ci test bench sweep serve-smoke
+.PHONY: ci test bench sweep serve-smoke spmd-test
 
 ci:
 	$(PY) -m pytest -x -q
 
 test:
 	$(PY) -m pytest -q
+
+# SPMD decode tests on 8 fake host devices: the sequence-parallel
+# (shard_map partial-softmax merge) decode paths and the multi-pod
+# sharding rules, exercised with real collectives.
+spmd-test:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	    $(PY) -m pytest -q tests/test_sharded_decode.py \
+	    tests/test_distributed.py
 
 bench:
 	$(PY) -m benchmarks.run --skip-roofline

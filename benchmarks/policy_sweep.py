@@ -49,29 +49,36 @@ def run_sweep() -> dict:
     sm_exact = jax.nn.softmax(x, -1)
     fa_exact = None
     records = []
-    for exp in ("exact", "vexp", "vexp_hw"):
-        for kb in ("pallas", "reference", "xla"):
-            pol = ExecPolicy(exp_backend=exp, kernel_backend=kb,
-                             block_q=64, block_k=64)
-            sm_fn = dispatch("softmax", pol)
-            fa_fn = dispatch("flash_attention", pol)
-            sm_out = sm_fn(x, policy=pol)
-            fa_out = fa_fn(q, k, v, causal=True, policy=pol)
-            if fa_exact is None and exp == "exact":
-                fa_exact = fa_out
-            records.append({
-                "exp_backend": exp,
-                "kernel_backend": kb,
-                "softmax_us": _time(lambda: sm_fn(x, policy=pol)) * 1e6,
-                "flash_attention_us":
-                    _time(lambda: fa_fn(q, k, v, causal=True,
-                                        policy=pol)) * 1e6,
-                "softmax_max_abs_err":
-                    float(jnp.max(jnp.abs(sm_out - sm_exact))),
-                "flash_attention_max_abs_err":
-                    float(jnp.max(jnp.abs(fa_out - fa_exact)))
-                    if fa_exact is not None else float("nan"),
-            })
+    # accum_dtype only exists on the pallas backend (rejected elsewhere):
+    # the extra pallas/bfloat16 rows quantify the accuracy/latency delta of
+    # carrying (m, l, acc) scratch in bf16 instead of f32.
+    combos = [(exp, kb, "float32") for exp in ("exact", "vexp", "vexp_hw")
+              for kb in ("pallas", "reference", "xla")]
+    combos += [(exp, "pallas", "bfloat16")
+               for exp in ("exact", "vexp", "vexp_hw")]
+    for exp, kb, accum in combos:
+        pol = ExecPolicy(exp_backend=exp, kernel_backend=kb,
+                         block_q=64, block_k=64, accum_dtype=accum)
+        sm_fn = dispatch("softmax", pol)
+        fa_fn = dispatch("flash_attention", pol)
+        sm_out = sm_fn(x, policy=pol)
+        fa_out = fa_fn(q, k, v, causal=True, policy=pol)
+        if fa_exact is None and exp == "exact":
+            fa_exact = fa_out
+        records.append({
+            "exp_backend": exp,
+            "kernel_backend": kb,
+            "accum_dtype": accum,
+            "softmax_us": _time(lambda: sm_fn(x, policy=pol)) * 1e6,
+            "flash_attention_us":
+                _time(lambda: fa_fn(q, k, v, causal=True,
+                                    policy=pol)) * 1e6,
+            "softmax_max_abs_err":
+                float(jnp.max(jnp.abs(sm_out - sm_exact))),
+            "flash_attention_max_abs_err":
+                float(jnp.max(jnp.abs(fa_out - fa_exact)))
+                if fa_exact is not None else float("nan"),
+        })
     dev = jax.devices()[0]
     return {
         "device": f"{dev.platform}:{getattr(dev, 'device_kind', '')}",
@@ -91,6 +98,8 @@ def report():
     rows = []
     for r in payload["records"]:
         name = f"{r['exp_backend']}__{r['kernel_backend']}"
+        if r.get("accum_dtype", "float32") != "float32":
+            name += f"__{r['accum_dtype']}"
         rows.append((f"softmax/{name}", r["softmax_us"],
                      f"max_abs_err={r['softmax_max_abs_err']:.2e}"))
         rows.append((f"flash_attention/{name}", r["flash_attention_us"],

@@ -20,6 +20,29 @@ def _emit(section, rows):
         print(f"{section}/{name},{val:.6g},{str(note).replace(',', ';')}")
 
 
+def _sharded_decode_report():
+    """The sequence-parallel decode sweep needs a multi-device host
+    platform, which requires XLA_FLAGS set *before* jax initializes — run
+    it in a subprocess and relay its rows."""
+    import os
+    import subprocess
+
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sharded_decode"],
+        capture_output=True, text=True, timeout=3600, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded_decode failed:\n{out.stderr[-2000:]}")
+    rows = []
+    for line in out.stdout.strip().splitlines():
+        if not line.startswith("sharded_decode/"):
+            continue
+        name, val, note = line.split(",", 2)
+        rows.append((name.split("/", 1)[1], float(val), note))
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default=None)
@@ -40,6 +63,7 @@ def main() -> None:
         "e2e_models": e2e_models.report,           # Fig.1 + Fig.8
         "policy_sweep": policy_sweep.report,       # ExecPolicy backends
         "serving": serving.report,                 # continuous batching
+        "sharded_decode": _sharded_decode_report,  # seq-parallel decode
     }
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,169 @@
+"""Sequence-parallel flash-decode benchmark -> BENCH_sharded_decode.json.
+
+Measures the tentpole of ISSUE 3 on the serving engine's own decode shape:
+a ragged continuous-batching slot pool (one long-context slot at S, seven
+at S/8 — per-row (B,) cache lengths) over a bf16 "bshd" cache (the
+serving default the old code silently kicked to the reference reduction),
+swept over cache length × KV shard count on a host-platform mesh (8 fake
+devices; XLA_FLAGS must land before jax initializes, so run standalone or
+via benchmarks.run's subprocess section):
+
+  reference        what ``decode_attention_policy`` executed before this
+                   PR: the silent fallback to the single-device O(S)
+                   materialized reference reduction (the serving engine
+                   never sharded, so SPMD configs ran exactly this)
+  fused_shardedN   the new path — shard_map partial-(m, l, acc) Pallas
+                   sweep + psum stats merge over N KV shards
+  reference_gspmdN the reference reduction over the same sharded cache,
+                   lowered by GSPMD (per-shard partials + all-reduce)
+  fused_single     the unsharded fused kernel (baseline)
+
+On this CPU container the Pallas kernels execute in *interpret* mode,
+which pays a per-block copy the compiled TPU kernel does not — the fused
+rows carry that handicap and still beat the reference fallback at
+S >= 4k; on TPU the gap widens (one HBM pass, MXU dots, no materialized
+scores).
+
+  PYTHONPATH=src python -m benchmarks.sharded_decode
+"""
+
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":                       # before any jax import
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+import functools
+import json
+import time
+
+import numpy as np
+
+OUT_PATH = os.environ.get("BENCH_SHARDED_DECODE_PATH",
+                          "BENCH_sharded_decode.json")
+
+# Serving slot-pool shape: 8 ragged slots, Falcon/PaLM-style MQA (wide
+# query group over one KV head), bf16 bshd cache.
+SHAPE = dict(b=8, h=64, hkv=1, d=128)
+CACHE_LENS = (1024, 4096, 8192, 16384)
+SHARDS = (4, 8)
+
+
+def _time_interleaved(fns: dict, n_warmup=1, n_timed=7) -> dict:
+    """Time several arms in interleaved rounds (min per arm): background
+    load on the shared-CPU host platform then penalizes every arm alike
+    instead of whichever ran last (the serving benchmark's protocol)."""
+    import jax
+    for fn in fns.values():
+        for _ in range(n_warmup):
+            jax.block_until_ready(fn())
+    best = {k: float("inf") for k in fns}
+    for _ in range(n_timed):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best[k] = min(best[k], time.perf_counter() - t0)
+    return best
+
+
+def run_sweep() -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.kernels.decode_attention import (decode_attention,
+                                                decode_attention_sharded)
+    from repro.kernels.dispatch import dispatch
+    from repro.runtime import ExecPolicy
+
+    pol_ref = ExecPolicy(kernel_backend="reference")
+    b, h, hkv, d = (SHAPE[k] for k in ("b", "h", "hkv", "d"))
+    ndev = len(jax.devices())
+    ref_fn = jax.jit(lambda q, k, v, c: dispatch(
+        "decode_attention", pol_ref)(q, k, v, c, layout="bshd",
+                                     policy=pol_ref))
+    gspmd_fn = jax.jit(lambda q, k, v, c: dispatch(
+        "decode_attention_sharded", pol_ref)(q, k, v, c, layout="bshd",
+                                             policy=pol_ref))
+    records = []
+    for smax in CACHE_LENS:
+        ks = jax.random.split(jax.random.PRNGKey(smax), 3)
+        q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+        kc = jax.random.normal(ks[1], (b, smax, hkv, d), jnp.bfloat16)
+        vc = jax.random.normal(ks[2], (b, smax, hkv, d), jnp.bfloat16)
+        # ragged slot pool: one long-context request, the rest short
+        lens = np.full(b, max(1, smax // 8))
+        lens[0] = smax
+        clen = jnp.asarray(lens, jnp.int32)
+
+        rec = {"cache_len": smax, "layout": "bshd",
+               "slot_lens": lens.tolist()}
+        pol1 = ExecPolicy(kernel_backend="pallas",
+                          block_s=max(512, smax // 8))
+        arms = {
+            "reference_us": lambda: ref_fn(q, kc, vc, clen),
+            "fused_single_us": lambda: decode_attention(
+                q, kc, vc, clen, layout="bshd", policy=pol1),
+        }
+        sharded_ctx = []
+        for nsh in SHARDS:
+            if nsh > ndev or smax % nsh:
+                continue
+            pol = ExecPolicy(kernel_backend="pallas", block_s=smax // nsh)
+            # (1, nsh): a data axis > 1 would *replicate* the decode on
+            # the host platform's time-shared fake devices and double the
+            # measured CPU work for nothing.
+            mesh = jax.make_mesh((1, nsh), ("data", "model"))
+            spec = NamedSharding(mesh, P(None, "model", None, None))
+            kcs, vcs = jax.device_put(kc, spec), jax.device_put(vc, spec)
+            sharded_ctx.append(mesh)       # keep meshes alive over timing
+            arms[f"fused_sharded{nsh}_us"] = functools.partial(
+                lambda kcs, vcs, pol, mesh: decode_attention_sharded(
+                    q, kcs, vcs, clen, mesh=mesh, layout="bshd",
+                    policy=pol), kcs, vcs, pol, mesh)
+            arms[f"reference_gspmd{nsh}_us"] = functools.partial(
+                lambda kcs, vcs: gspmd_fn(q, kcs, vcs, clen), kcs, vcs)
+        for name, secs in _time_interleaved(arms).items():
+            rec[name] = secs * 1e6
+        records.append(rec)
+    dev = jax.devices()[0]
+    return {
+        "device": f"{dev.platform}:{getattr(dev, 'device_kind', '')}",
+        "backend": jax.default_backend(),
+        "n_devices": ndev,
+        "shape": SHAPE,
+        "unix_time": time.time(),
+        "records": records,
+    }
+
+
+def report():
+    """Benchmark rows + BENCH_sharded_decode.json side effect."""
+    payload = run_sweep()
+    with open(OUT_PATH, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    rows = []
+    for r in payload["records"]:
+        s = r["cache_len"]
+        rows.append((f"S{s}/reference", r["reference_us"],
+                     "old fallback: single-device O(S) reduction"))
+        rows.append((f"S{s}/fused_single", r["fused_single_us"],
+                     "fused kernel; 1 device"))
+        for nsh in SHARDS:
+            fk = f"fused_sharded{nsh}_us"
+            if fk not in r:
+                continue
+            speed = r["reference_us"] / r[fk]
+            rows.append((f"S{s}/fused_sharded{nsh}", r[fk],
+                         f"{speed:.2f}x vs reference fallback"))
+            rows.append((f"S{s}/reference_gspmd{nsh}",
+                         r[f"reference_gspmd{nsh}_us"],
+                         "GSPMD-sharded reference reduction"))
+    rows.append(("json", 0.0, f"written to {OUT_PATH}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in report():
+        print(f"sharded_decode/{name},{val:.6g},{note}")

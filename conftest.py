@@ -8,6 +8,10 @@ the bundled hypothesis shim (tests/_compat) when the real library is absent
 import os
 import sys
 
+# Hermetic autotune: unit tests must not read/write the user-level on-disk
+# block-size cache (persistence tests opt back in with explicit tmp paths).
+os.environ.setdefault("REPRO_AUTOTUNE_CACHE", "off")
+
 _ROOT = os.path.dirname(os.path.abspath(__file__))
 _SRC = os.path.join(_ROOT, "src")
 if _SRC not in sys.path:

@@ -232,20 +232,20 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
     cache sharded along S lowers to partial (m, l, acc) per shard + a cheap
     all-reduce merge — the paper's partial-softmax algebra as SPMD collective.
 
-    A policy with ``kernel_backend="pallas"`` routes head-major ("bhsd")
-    caches — scalar or per-slot (B,) ``cache_len`` — to the fused
-    flash-decode kernel; any other configuration runs this reference
-    reduction with the policy's exp.
+    A policy with ``kernel_backend="pallas"`` routes *every* configuration
+    — both cache layouts, sliding windows, scalar or per-slot (B,)
+    ``cache_len`` — to the fused flash-decode kernel (the layout is
+    resolved in the kernel's index maps, windows in its sweep bounds);
+    only the other backends run this reference reduction.
     """
     if policy is not None:
         exp_impl = policy.exp_backend
         cl = jnp.asarray(cache_len)
-        if (policy.kernel_backend == "pallas" and layout == "bhsd"
-                and cl.ndim <= 1 and window is None):
+        if policy.kernel_backend == "pallas" and cl.ndim <= 1:
             from repro.kernels.decode_attention import ops as dec_ops
             return dec_ops.decode_attention_policy(
-                q, k_cache, v_cache, cache_len, sm_scale=sm_scale,
-                layout=layout, policy=policy)
+                q, k_cache, v_cache, cache_len, window=window,
+                sm_scale=sm_scale, layout=layout, policy=policy)
     exp_fn = _resolve(exp_impl)
     b, _, h, d = q.shape
     if layout == "bhsd":

@@ -51,8 +51,11 @@ def softmax(x: jax.Array, axis: int = -1, *, exp_impl: str | Callable = "vexp",
     if where is not None:
         e = jnp.where(where, e, 0.0)
     s = jnp.sum(e, axis=axis, keepdims=True)
-    # NORM: reciprocal once, multiply everywhere.
-    return e * (1.0 / s)
+    # NORM: reciprocal once, multiply everywhere. Guarded like the kernels'
+    # finalize: a fully-masked row (all where=False — e.g. a padded serving
+    # slot) has s == 0, and an unguarded divide would emit inf * 0 = NaN;
+    # with the guard its e is all-zero, so the row comes out zeros.
+    return e * (1.0 / jnp.maximum(s, 1e-30))
 
 
 def log_softmax(x: jax.Array, axis: int = -1, *,
@@ -113,3 +116,34 @@ def stats_merge(a: SoftmaxStats, b: SoftmaxStats, *,
 
     aa, ab = _alpha(a.m), _alpha(b.m)
     return SoftmaxStats(m=m, l=a.l * aa + b.l * ab), aa, ab
+
+
+# Finite "empty" sentinel used by the Pallas kernels instead of -inf (keeps
+# the vexp bit-twiddle NaN-free). Anything at or below half of it is treated
+# as "this shard saw no valid key".
+KERNEL_NEG_INF = -1e30
+
+
+def stats_merge_collective(stats: SoftmaxStats, acc: jax.Array,
+                           axis_name: str, *,
+                           exp_fn: Callable) -> tuple[SoftmaxStats, jax.Array]:
+    """``stats_merge`` as an SPMD collective over a ``shard_map`` mesh axis.
+
+    Each shard holds partial (m, l) statistics plus an un-normalized
+    accumulator ``acc`` (trailing dims broadcast against l's). Because the
+    merge rule is associative and commutative, folding it over all shards
+    is exactly one ``pmax`` (global m) followed by one ``psum`` of the
+    alpha-rescaled (l, acc) — the all-reduce form of the paper's partial
+    softmax tile merge, applied to sequence-parallel flash decode.
+
+    Shards whose slice contained no valid key carry the identity element
+    (m <= KERNEL_NEG_INF, l = 0, acc = 0) or (m = -inf); both are guarded
+    so they contribute exactly nothing (never NaN via -inf - -inf).
+    """
+    m_g = jax.lax.pmax(stats.m, axis_name)
+    empty = (stats.m <= 0.5 * KERNEL_NEG_INF) | ~jnp.isfinite(stats.m)
+    safe_g = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
+    alpha = jnp.where(empty, 0.0, exp_fn(stats.m - safe_g))
+    l_g = jax.lax.psum(stats.l * alpha, axis_name)
+    acc_g = jax.lax.psum(acc * alpha, axis_name)
+    return SoftmaxStats(m=m_g, l=l_g), acc_g

@@ -24,6 +24,12 @@ Rules (TP = tensor parallel over "model"):
 Decode caches: KV sequence dim over model ("sequence-parallel flash
 decode", powered by the paper's partial-softmax merge) when the batch is
 too small to fill the data axes — selected per cell by ``cache_specs``.
+``decode_kv_axis`` reports which mesh axis (if any) that left the cache's
+S dim sharded over; callers hand it to ``decode_attention_sharded``
+(kernels.dispatch), which sweeps each shard in partial-(m, l, acc) mode
+and merges with the psum form of ``core.softmax.stats_merge`` — the fused
+Pallas path now covers SPMD decode instead of falling back to the O(S)
+reference reduction.
 """
 
 from __future__ import annotations
@@ -95,13 +101,20 @@ def param_specs(cfg, mesh: Mesh, *, fsdp: bool = False):
             return P(*lead(1), "model")
         return P(*((None,) * nd))       # norms, biases, scalars
 
+    # ZeRO-3 shards over *all* data-parallel axes: on the multi-pod mesh
+    # ("pod", "data", "model") the parameter dim splits over pod×data, so
+    # per-device parameter memory matches what dp_axes implies (hardcoding
+    # "data" left the pod axis replicated — 2× the memory it should be).
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+
     def fsdp_augment(spec: P, leaf) -> P:
         if not fsdp or leaf.ndim < 2:
             return spec
         s = list(spec) + [None] * (leaf.ndim - len(spec))
         for i, (ax, dim) in enumerate(zip(s, leaf.shape)):
-            if ax is None and dim % mesh.shape["data"] == 0 and dim >= 1024:
-                s[i] = "data"
+            if ax is None and dim % dp_size == 0 and dim >= 1024:
+                s[i] = dp[0] if len(dp) == 1 else dp
                 break
         return P(*s)
 
@@ -168,6 +181,31 @@ def cache_specs(cfg, mesh, batch: int, *, kv_mode: str = "auto"):
                 "v": P(None, bspec, None, seq, None)}
     return {"k": P(None, bspec, seq, None, None),
             "v": P(None, bspec, seq, None, None)}
+
+
+def decode_kv_axis(cfg, mesh, batch: int, *, kv_mode: str = "auto"):
+    """The mesh axis the decode cache's *sequence* dim is sharded over
+    under ``cache_specs`` (None when the cache is not sequence-sharded).
+
+    This is the glue between the cache placement chosen here and the
+    sequence-parallel decode entry (``kernels.dispatch``'s
+    ``decode_attention_sharded``): when it returns an axis name, decode
+    should run the per-shard partial-(m, l, acc) kernel and merge through
+    the psum form of ``core.softmax.stats_merge`` on that axis; when it
+    returns None the unsharded fused kernel applies as-is.
+    """
+    if cfg.family in ("ssm",):
+        return None
+    specs = cache_specs(cfg, mesh, batch, kv_mode=kv_mode)
+    if cfg.family == "hybrid":
+        spec = specs["periods"]["k"]
+    else:
+        spec = specs["k"]
+    from repro.models.transformer import cache_seq_axis
+    layout = getattr(cfg, "kv_cache_layout", "bshd")
+    s_ax = cache_seq_axis(layout, stacked=True)
+    entry = spec[s_ax] if s_ax < len(spec) else None
+    return entry
 
 
 def batch_specs(cfg, mesh, kind: str):

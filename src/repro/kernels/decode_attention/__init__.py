@@ -1,2 +1,3 @@
-from .ops import decode_attention, decode_attention_policy
+from .ops import (decode_attention, decode_attention_partial,
+                  decode_attention_sharded, decode_attention_policy)
 from .ref import decode_attention_ref

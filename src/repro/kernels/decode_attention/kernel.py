@@ -3,16 +3,40 @@
 Substantiates EXPERIMENTS.md §Perf iteration C4: one decode step reads the
 KV cache exactly once from HBM — the (m, l, acc) online-softmax statistics
 live in VMEM scratch across the KV-block sweep, and the cache is consumed
-in its storage dtype (bf16) with f32 accumulation. Head-major ("bhsd")
-cache layout: (B, Hkv, S, hd), the §Perf C3 layout.
+in its storage dtype (bf16) with f32 accumulation (``accum_dtype="bfloat16"``
+drops the scratch statistics to bf16 for the memory/accuracy trade the
+ExecPolicy exposes).
 
-Grid = (B, Hkv, nS) with the KV sweep innermost; each program handles one
-KV head's query group (GQA: G = H // Hkv query rows).
+Two cache layouts share one kernel body: head-major "bhsd" (B, Hkv, S, hd)
+— the §Perf C3 layout — and sequence-major "bshd" (B, S, Hkv, hd); the
+BlockSpec index maps place the KV-sweep axis wherever the layout stores it,
+so neither layout pays a materialized transpose.
 
-``cache_len`` is a per-batch-row (B,) vector in SMEM: each grid row masks
-its KV sweep against its own length, so a continuous-batching server can
-decode slots whose requests are at different positions in one program
-(ragged slot lengths never touch each other's cache rows).
+Grid = (nB, Hkv, nS) with the KV sweep innermost; each program handles one
+KV head's query group (GQA: G = H // Hkv query rows) for a *block* of
+``block_b`` batch rows — decode dots are tiny (G × block_s), so batching
+rows into the block amortizes grid/DMA bookkeeping across the slot pool
+instead of paying it per row. ``block_b`` is clamped so the K/V blocks
+stay a few MB of VMEM.
+
+``cache_len`` is a per-batch-row (B,) vector in SMEM: each row of a block
+masks the KV sweep against its own length, so a continuous-batching server
+can decode slots whose requests are at different positions in one program
+(ragged slot lengths never touch each other's cache rows), and whole KV
+blocks past every row's length are skipped.
+
+Sequence parallelism (the paper's §IV-C partial-softmax algebra as an SPMD
+primitive): in *partial* mode the kernel emits the raw per-shard
+(m, l, acc) statistics instead of the normalized output, and masks its KV
+sweep in **global** coordinates via ``seq_offset`` (an SMEM scalar: the
+absolute position of this shard's first cache row). Shards are then merged
+with ``core.softmax.stats_merge_collective`` under ``shard_map`` — see
+``ops.decode_attention_sharded``.
+
+Sliding windows mask ``cache_len - window <= kpos < cache_len`` (exactly
+``window`` tokens including the current one); KV blocks entirely outside
+the window are skipped, so a windowed decode over a long linear cache does
+O(window) work like the ring-buffer path.
 """
 
 from __future__ import annotations
@@ -24,14 +48,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.vexp import get_exp_fn
+# The finite "empty" sentinel must be the SAME value stats_merge_collective
+# classifies empty shards against — single-sourced in core.softmax.
+from repro.core.softmax import KERNEL_NEG_INF as NEG_INF
 
-NEG_INF = -1e30
 DEFAULT_BLOCK_S = 512
+DEFAULT_BLOCK_B = 8
+
+_ACCUM_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, block_s: int, ns: int,
-                   sm_scale: float, exp_impl: str):
+def _decode_kernel(len_ref, off_ref, q_ref, k_ref, v_ref, *refs,
+                   block_b: int, block_s: int, ns: int, s_valid: int,
+                   sm_scale: float, exp_impl: str, window, layout: str,
+                   partial: bool):
+    if partial:
+        om_ref, ol_ref, oacc_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        (o_ref, m_ref, l_ref, acc_ref) = refs
     bi = pl.program_id(0)
     si = pl.program_id(2)
 
@@ -41,70 +75,195 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    cache_len = len_ref[bi]
-    start = si * block_s
+    # (block_b,) per-row lengths of this row block (scalar SMEM reads).
+    lens = jnp.stack([len_ref[bi * block_b + i] for i in range(block_b)])
+    seq_off = off_ref[0]
+    start = si * block_s                 # shard-local block start
+    g_start = start + seq_off            # absolute cache position
     exp_fn = get_exp_fn(exp_impl)
 
-    @pl.when(start < cache_len)
+    # Block-level liveness: any (row, key) pair inside [len - window, len)?
+    row_live = g_start < lens
+    if window is not None:
+        # first in-window position; blocks fully below it are skipped, so
+        # the sweep effectively starts at max(0, cache_len - window)'s block.
+        row_live &= (g_start + block_s) > (lens - window)
+    live = jnp.any(row_live)
+
+    @pl.when(live)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32) * sm_scale     # (G, d)
-        k = k_ref[0, 0]                                    # (bs, d) bf16/f32
-        v = v_ref[0, 0]
+        q = q_ref[:, 0].astype(jnp.float32) * sm_scale     # (bb, G, d)
+        if layout == "bhsd":
+            k = k_ref[:, 0]                                # (bb, bs, d)
+            v = v_ref[:, 0]
+        else:                                              # "bshd"
+            k = k_ref[:, :, 0, :]
+            v = v_ref[:, :, 0, :]
         s = jax.lax.dot_general(
-            q.astype(k.dtype), k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)            # (G, bs)
-        kpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(kpos < cache_len, s, NEG_INF)
-        m_prev = m_ref[...]
+            q.astype(k.dtype), k, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)            # (bb, G, bs)
+        lpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        kpos = lpos + seq_off
+        lcol = lens[:, None, None]
+        keep = kpos < lcol
+        # shard-local padding rows (lpos >= s_valid) may sit at absolute
+        # positions that *are* valid on later shards — mask them explicitly.
+        keep &= lpos < s_valid
+        if window is not None:
+            keep &= kpos >= lcol - window
+        s = jnp.where(keep, s, NEG_INF)
+        m_prev = m_ref[...].astype(jnp.float32)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         alpha = exp_fn(m_prev - m_new)
         p = exp_fn(s - m_new)
-        p = jnp.where(kpos < cache_len, p, 0.0)
-        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
+        p = jnp.where(keep, p, 0.0)
+        l_ref[...] = (l_ref[...].astype(jnp.float32) * alpha
+                      + jnp.sum(p, -1, keepdims=True)).astype(l_ref.dtype)
+        acc_ref[...] = (acc_ref[...].astype(jnp.float32) * alpha
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v,
+                            (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+                        ).astype(acc_ref.dtype)
+        m_ref[...] = m_new.astype(m_ref.dtype)
 
     @pl.when(si == ns - 1)
     def _finalize():
-        inv = 1.0 / jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] * inv).astype(o_ref.dtype)
+        if partial:
+            # raw shard statistics: rows this shard never touched stay at
+            # (m=NEG_INF, l=0, acc=0) — the merge's identity element.
+            om_ref[:, 0] = m_ref[...].astype(om_ref.dtype)
+            ol_ref[:, 0] = l_ref[...].astype(ol_ref.dtype)
+            oacc_ref[:, 0] = acc_ref[...].astype(oacc_ref.dtype)
+        else:
+            inv = 1.0 / jnp.maximum(l_ref[...].astype(jnp.float32), 1e-30)
+            o_ref[:, 0] = (acc_ref[...].astype(jnp.float32)
+                           * inv).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("sm_scale", "block_s",
-                                             "interpret", "exp_impl"))
-def decode_attention_bhsd(q, k_cache, v_cache, cache_len, *,
-                          sm_scale: float,
-                          block_s: int = DEFAULT_BLOCK_S,
-                          interpret: bool = False,
-                          exp_impl: str = "vexp"):
-    """q: (B, Hkv, G, d); caches: (B, Hkv, S, d); cache_len: (B,) int32
-    per-row valid lengths (broadcast a scalar before calling).
-    Returns (B, Hkv, G, d). S divisible by block_s; d lane-padded by ops."""
+def resolve_block_b(b: int, block_s: int, d: int) -> int:
+    """Rows per grid cell: amortize grid overhead, cap K/V block VMEM at a
+    few MB (block_b * block_s * d * 2 arrays)."""
+    bb = min(b, DEFAULT_BLOCK_B)
+    while bb > 1 and bb * block_s * d * 4 * 2 > 8 * 1024 * 1024:
+        bb //= 2
+    while b % bb:            # b is padded to a block multiple by ops
+        bb //= 2
+    return max(bb, 1)
+
+
+def _specs(layout: str, block_b: int, g: int, bs: int, d: int):
+    """(smem, q, k/v) BlockSpecs for the given layout; grid (nB, Hkv, nS)."""
+    from jax.experimental.pallas import tpu as pltpu
+    q_spec = pl.BlockSpec((block_b, 1, g, d),
+                          lambda bb, hh, si: (bb, hh, 0, 0))
+    if layout == "bhsd":
+        kv_spec = pl.BlockSpec((block_b, 1, bs, d),
+                               lambda bb, hh, si: (bb, hh, si, 0))
+    else:                                  # "bshd": (B, S, Hkv, d)
+        kv_spec = pl.BlockSpec((block_b, bs, 1, d),
+                               lambda bb, hh, si: (bb, si, hh, 0))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    return smem, q_spec, kv_spec
+
+
+def _scratch(block_b: int, g: int, d: int, accum_dtype: str):
+    from jax.experimental.pallas import tpu as pltpu
+    adt = _ACCUM_DTYPES[accum_dtype]
+    return [pltpu.VMEM((block_b, g, 1), adt),
+            pltpu.VMEM((block_b, g, 1), adt),
+            pltpu.VMEM((block_b, g, d), adt)]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "sm_scale", "block_s", "s_valid", "interpret", "exp_impl", "window",
+    "layout", "accum_dtype"))
+def decode_attention_kernel(q, k_cache, v_cache, cache_len, seq_offset, *,
+                            sm_scale: float, s_valid: int,
+                            block_s: int = DEFAULT_BLOCK_S,
+                            interpret: bool = False,
+                            exp_impl: str = "vexp",
+                            window=None, layout: str = "bhsd",
+                            accum_dtype: str = "float32"):
+    """q: (B, Hkv, G, d); caches: (B, Hkv, S, d) ("bhsd") or (B, S, Hkv, d)
+    ("bshd"); cache_len: (B,) int32 per-row valid lengths (broadcast a
+    scalar before calling); seq_offset: (1,) int32 absolute position of
+    this cache slice's first row (zero when unsharded); s_valid: unpadded
+    cache length (padded rows above it are never attended).
+    Returns (B, Hkv, G, d). S divisible by block_s, B by the row block;
+    d lane-padded — all handled by ops."""
     b, hkv, g, d = q.shape
-    smax = k_cache.shape[2]
+    smax = k_cache.shape[2] if layout == "bhsd" else k_cache.shape[1]
     bs = min(block_s, smax)
     ns = smax // bs
-    kernel = functools.partial(_decode_kernel, block_s=bs, ns=ns,
-                               sm_scale=sm_scale, exp_impl=exp_impl)
-    from jax.experimental.pallas import tpu as pltpu
+    bb = resolve_block_b(b, bs, d)
+    kernel = functools.partial(
+        _decode_kernel, block_b=bb, block_s=bs, ns=ns, s_valid=s_valid,
+        sm_scale=sm_scale, exp_impl=exp_impl, window=window, layout=layout,
+        partial=False)
+    smem, q_spec, kv_spec = _specs(layout, bb, g, bs, d)
     return pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
-        grid=(b, hkv, ns),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, g, d), lambda bb, hh, si: (bb, hh, 0, 0)),
-            pl.BlockSpec((1, 1, bs, d), lambda bb, hh, si: (bb, hh, si, 0)),
-            pl.BlockSpec((1, 1, bs, d), lambda bb, hh, si: (bb, hh, si, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g, d),
-                               lambda bb, hh, si: (bb, hh, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, d), jnp.float32),
-        ],
+        grid=(b // bb, hkv, ns),
+        in_specs=[smem, smem, q_spec, kv_spec, kv_spec],
+        out_specs=pl.BlockSpec((bb, 1, g, d),
+                               lambda bb_, hh, si: (bb_, hh, 0, 0)),
+        scratch_shapes=_scratch(bb, g, d, accum_dtype),
         interpret=interpret,
-    )(cache_len, q, k_cache, v_cache)
+    )(cache_len, seq_offset, q, k_cache, v_cache)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "sm_scale", "block_s", "s_valid", "interpret", "exp_impl", "window",
+    "layout", "accum_dtype"))
+def decode_attention_kernel_partial(q, k_cache, v_cache, cache_len,
+                                    seq_offset, *, sm_scale: float,
+                                    s_valid: int,
+                                    block_s: int = DEFAULT_BLOCK_S,
+                                    interpret: bool = False,
+                                    exp_impl: str = "vexp",
+                                    window=None, layout: str = "bhsd",
+                                    accum_dtype: str = "float32"):
+    """Partial-statistics mode: same sweep, but emits the shard's raw
+    (m, l, acc) — shapes (B, Hkv, G, 1) ×2 and (B, Hkv, G, d), all f32 —
+    with masking done in *global* positions (``seq_offset`` + local index
+    against the global ``cache_len``). A shard whose slice lies entirely
+    outside [cache_len - window, cache_len) returns the merge identity
+    (NEG_INF, 0, 0)."""
+    b, hkv, g, d = q.shape
+    smax = k_cache.shape[2] if layout == "bhsd" else k_cache.shape[1]
+    bs = min(block_s, smax)
+    ns = smax // bs
+    bb = resolve_block_b(b, bs, d)
+    kernel = functools.partial(
+        _decode_kernel, block_b=bb, block_s=bs, ns=ns, s_valid=s_valid,
+        sm_scale=sm_scale, exp_impl=exp_impl, window=window, layout=layout,
+        partial=True)
+    smem, q_spec, kv_spec = _specs(layout, bb, g, bs, d)
+    stat = pl.BlockSpec((bb, 1, g, 1), lambda bb_, hh, si: (bb_, hh, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+        ],
+        grid=(b // bb, hkv, ns),
+        in_specs=[smem, smem, q_spec, kv_spec, kv_spec],
+        out_specs=[stat, stat,
+                   pl.BlockSpec((bb, 1, g, d),
+                                lambda bb_, hh, si: (bb_, hh, 0, 0))],
+        scratch_shapes=_scratch(bb, g, d, accum_dtype),
+        interpret=interpret,
+    )(cache_len, seq_offset, q, k_cache, v_cache)
+
+
+def decode_attention_bhsd(q, k_cache, v_cache, cache_len, *, sm_scale: float,
+                          block_s: int = DEFAULT_BLOCK_S,
+                          interpret: bool = False, exp_impl: str = "vexp"):
+    """Back-compat alias for the head-major unsharded kernel."""
+    return decode_attention_kernel(
+        q, k_cache, v_cache, cache_len, jnp.zeros((1,), jnp.int32),
+        sm_scale=sm_scale, s_valid=k_cache.shape[2], block_s=block_s,
+        interpret=interpret, exp_impl=exp_impl)

@@ -1,9 +1,20 @@
-"""jit'd public wrapper: (B, 1, H, d) queries over a (B, Hkv, S, d) cache.
+"""jit'd public wrappers: (B, 1, H, d) queries over a KV cache.
 
 Policy-aware: ``decode_attention`` takes an ``ExecPolicy`` static argument
-selecting exp backend, KV block size and interpret mode;
-``decode_attention_policy`` is the kernels.dispatch entry and applies
-block-size autotuning when requested.
+selecting exp backend, KV block size, accumulation dtype and interpret
+mode; ``decode_attention_policy`` is the kernels.dispatch entry and applies
+block-size autotuning when requested. Both cover every configuration the
+serving engine produces — head-major ("bhsd") *and* sequence-major
+("bshd") caches, scalar or per-slot (B,) ``cache_len``, and sliding
+windows — with no reference fallback.
+
+``decode_attention_sharded`` is the sequence-parallel entry: a KV cache
+sharded along its sequence axis over a mesh axis is swept shard-locally in
+partial-statistics mode (each shard masks against its own slice of the
+*global* ``cache_len`` via ``seq_offset``), and the per-shard (m, l, acc)
+are merged with ``core.softmax.stats_merge_collective`` (pmax + psum)
+under ``shard_map`` — the paper's §IV-C partial-softmax algebra as an SPMD
+collective.
 """
 
 from __future__ import annotations
@@ -16,67 +27,180 @@ import jax
 import jax.numpy as jnp
 
 from repro.runtime.policy import ExecPolicy
-from .kernel import decode_attention_bhsd
+from .kernel import (decode_attention_kernel, decode_attention_kernel_partial,
+                     decode_attention_bhsd)
+
+__all__ = ["decode_attention", "decode_attention_partial",
+           "decode_attention_sharded", "decode_attention_policy",
+           "decode_attention_bhsd"]
 
 
-@functools.partial(jax.jit, static_argnames=("sm_scale", "block_s",
-                                             "interpret", "policy"))
-def decode_attention(q, k_cache, v_cache, cache_len, *, sm_scale=None,
-                     block_s=512, interpret=None,
-                     policy: Optional[ExecPolicy] = None):
-    """Fused flash-decode. q: (B, 1, H, d); caches: (B, Hkv, S, d) (bhsd);
-    cache_len: scalar int32 or per-row (B,) int32 of valid positions (the
-    serving engine's per-slot lengths). Returns (B, 1, H, d)."""
-    exp_impl = "vexp"
-    if policy is not None:
-        exp_impl = policy.exp_backend
-        block_s = policy.block_s
-        if interpret is None:
-            interpret = policy.interpret_resolved()
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+def _seq_axis(layout: str) -> int:
+    return 2 if layout == "bhsd" else 1
+
+
+def _prepare(q, k_cache, v_cache, cache_len, block_s, layout):
+    """Group queries, lane-pad d, block-pad S, broadcast cache_len."""
     b, _, h, d = q.shape
-    hkv, smax = k_cache.shape[1], k_cache.shape[2]
+    hkv = k_cache.shape[1] if layout == "bhsd" else k_cache.shape[2]
+    s_ax = _seq_axis(layout)
+    smax = k_cache.shape[s_ax]
     g = h // hkv
-    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
     qg = q.reshape(b, hkv, g, d)
     d_pad = -(-d // 128) * 128
     s_pad = -(-smax // min(block_s, smax)) * min(block_s, smax)
 
-    def pad(x, s_axis_target, d_axis_target):
+    def pad(x):
         pads = [(0, 0)] * 4
-        pads[2] = (0, s_axis_target - x.shape[2])
-        pads[3] = (0, d_axis_target - x.shape[3])
+        pads[s_ax] = (0, s_pad - x.shape[s_ax])
+        pads[3] = (0, d_pad - x.shape[3])
         return jnp.pad(x, pads)
 
     qp = jnp.pad(qg, [(0, 0), (0, 0), (0, 0), (0, d_pad - d)])
-    kp = pad(k_cache, s_pad, d_pad)
-    vp = pad(v_cache, s_pad, d_pad)
     clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
                             (b,))
-    out = decode_attention_bhsd(qp, kp, vp, clen, sm_scale=scale,
-                                block_s=block_s, interpret=interpret,
-                                exp_impl=exp_impl)
+    return qp, pad(k_cache), pad(v_cache), clen, smax
+
+
+def _policy_kernel_args(policy: Optional[ExecPolicy], block_s, interpret):
+    exp_impl, accum = "vexp", "float32"
+    if policy is not None:
+        exp_impl = policy.exp_backend
+        block_s = policy.block_s
+        accum = policy.accum_dtype
+        if interpret is None:
+            interpret = policy.interpret_resolved()
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return exp_impl, accum, block_s, interpret
+
+
+@functools.partial(jax.jit, static_argnames=("window", "sm_scale", "layout",
+                                             "block_s", "interpret",
+                                             "policy"))
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                     sm_scale=None, layout="bhsd", block_s=512,
+                     interpret=None, policy: Optional[ExecPolicy] = None):
+    """Fused flash-decode. q: (B, 1, H, d); caches: (B, Hkv, S, d) ("bhsd")
+    or (B, S, Hkv, d) ("bshd"); cache_len: scalar int32 or per-row (B,)
+    int32 of valid positions (the serving engine's per-slot lengths);
+    ``window``: static sliding window (attend exactly the last ``window``
+    positions of each row's valid range). Returns (B, 1, H, d)."""
+    exp_impl, accum, block_s, interpret = _policy_kernel_args(
+        policy, block_s, interpret)
+    b, _, h, d = q.shape
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    qp, kp, vp, clen, smax = _prepare(q, k_cache, v_cache, cache_len,
+                                      block_s, layout)
+    out = decode_attention_kernel(
+        qp, kp, vp, clen, jnp.zeros((1,), jnp.int32), sm_scale=scale,
+        s_valid=smax, block_s=block_s, interpret=interpret,
+        exp_impl=exp_impl, window=window, layout=layout, accum_dtype=accum)
     return out[..., :d].reshape(b, 1, h, d)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "sm_scale", "layout",
+                                             "block_s", "interpret",
+                                             "policy"))
+def decode_attention_partial(q, k_cache, v_cache, cache_len, seq_offset, *,
+                             window=None, sm_scale=None, layout="bhsd",
+                             block_s=512, interpret=None,
+                             policy: Optional[ExecPolicy] = None):
+    """Per-shard partial statistics for sequence-parallel decode.
+
+    ``seq_offset`` (traced scalar int32) is the absolute cache position of
+    this K/V slice's first row; ``cache_len`` stays *global*. Returns
+    (m, l, acc): (B, Hkv, G, 1) ×2 and (B, Hkv, G, d), all f32 — merge
+    with ``core.softmax.stats_merge_collective`` and normalize by
+    ``acc / max(l, tiny)``.
+    """
+    exp_impl, accum, block_s, interpret = _policy_kernel_args(
+        policy, block_s, interpret)
+    d = q.shape[-1]
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    qp, kp, vp, clen, smax = _prepare(q, k_cache, v_cache, cache_len,
+                                      block_s, layout)
+    off = jnp.asarray(seq_offset, jnp.int32).reshape(1)
+    m, l, acc = decode_attention_kernel_partial(
+        qp, kp, vp, clen, off, sm_scale=scale, s_valid=smax,
+        block_s=block_s, interpret=interpret, exp_impl=exp_impl,
+        window=window, layout=layout, accum_dtype=accum)
+    return m, l, acc[..., :d]
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_program(mesh, seq_axis, window, sm_scale, layout: str,
+                     policy: ExecPolicy):
+    """One jitted shard_map program per (mesh, axis, window, scale, layout,
+    policy) — eager shard_map would retrace the whole merge every call."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.compression import shard_map
+    from repro.core.softmax import SoftmaxStats, stats_merge_collective
+
+    s_ax = _seq_axis(layout)
+    kv_spec = [None] * 4
+    kv_spec[s_ax] = seq_axis
+    kv_spec = P(*kv_spec)
+    exp_fn = policy.exp_fn()
+
+    def _local(q, k, v, cl):
+        b, _, h, d = q.shape
+        local_s = k.shape[s_ax]
+        off = jax.lax.axis_index(seq_axis) * local_s
+        m, l, acc = decode_attention_partial(
+            q, k, v, cl, off, window=window, sm_scale=sm_scale,
+            layout=layout, policy=policy)
+        stats, acc = stats_merge_collective(
+            SoftmaxStats(m=m, l=l), acc, seq_axis, exp_fn=exp_fn)
+        out = acc * (1.0 / jnp.maximum(stats.l, 1e-30))
+        return out.reshape(b, 1, h, d).astype(q.dtype)
+
+    return jax.jit(shard_map(
+        _local, mesh=mesh,
+        in_specs=(P(), kv_spec, kv_spec, P()),
+        out_specs=P()))
+
+
+def decode_attention_sharded(q, k_cache, v_cache, cache_len, *, mesh,
+                             seq_axis="model", window=None, sm_scale=None,
+                             layout="bshd", policy: ExecPolicy):
+    """Sequence-parallel flash decode over a KV cache sharded along S.
+
+    The default layout is "bshd" — matching the dispatch table's
+    reference/xla entries and ``cache_specs``, whose sequence sharding
+    targets "bshd" caches (head-major caches shard heads when they divide
+    the axis).
+
+    q and ``cache_len`` are replicated; ``k_cache``/``v_cache`` are (or
+    will be) sharded along their sequence axis over ``mesh``'s
+    ``seq_axis``. Each shard runs the Pallas sweep in partial mode with
+    ``seq_offset = axis_index * local_S`` and the shards merge through one
+    pmax + two psums (``stats_merge_collective``). Token-identical to the
+    unsharded ``decode_attention`` (the merge algebra is exact — only fp
+    summation order differs).
+    """
+    b = q.shape[0]
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
+                            (b,))
+    fn = _sharded_program(mesh, seq_axis, window, sm_scale, layout, policy)
+    return fn(q, k_cache, v_cache, clen)
 
 
 def decode_attention_policy(q, k_cache, v_cache, cache_len, *, window=None,
                             sm_scale=None, layout="bhsd",
                             policy: ExecPolicy):
-    """kernels.dispatch entry. The Pallas kernel requires the head-major
-    ("bhsd") cache and no sliding window; other configurations fall back to
-    the reference decode with the policy's exp backend."""
-    if layout != "bhsd" or window is not None:
-        from repro.core.attention import decode_attention as core_decode
-        return core_decode(q, k_cache, v_cache, cache_len, window=window,
-                           sm_scale=sm_scale, exp_impl=policy.exp_backend,
-                           layout=layout)
+    """kernels.dispatch entry: policy-driven blocks + optional autotune.
+
+    Covers every serving configuration — both cache layouts, sliding
+    windows, scalar or per-slot cache lengths — through the fused kernel;
+    there is no reference fallback."""
     if policy.autotune:
         from repro.kernels.dispatch import autotune_policy
         policy = autotune_policy(
             "decode_attention", policy,
             lambda p: decode_attention(q, k_cache, v_cache, cache_len,
-                                       sm_scale=sm_scale, policy=p),
+                                       window=window, sm_scale=sm_scale,
+                                       layout=layout, policy=p),
             q, k_cache)
-    return decode_attention(q, k_cache, v_cache, cache_len,
-                            sm_scale=sm_scale, policy=policy)
+    return decode_attention(q, k_cache, v_cache, cache_len, window=window,
+                            sm_scale=sm_scale, layout=layout, policy=policy)

@@ -3,8 +3,10 @@
 from repro.core.attention import decode_attention
 
 
-def decode_attention_ref(q, k_cache, v_cache, cache_len, *, sm_scale=None):
-    """Oracle with identical math: (B,1,H,d) q over a bhsd cache."""
-    return decode_attention(q, k_cache, v_cache, cache_len,
-                            exp_impl="vexp", sm_scale=sm_scale,
-                            mm_dtype="f32", layout="bhsd")
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *, window=None,
+                         sm_scale=None, layout="bhsd", exp_impl="vexp"):
+    """Oracle with identical math: (B,1,H,d) q over a KV cache in either
+    layout, optionally windowed — the O(S) reference reduction."""
+    return decode_attention(q, k_cache, v_cache, cache_len, window=window,
+                            exp_impl=exp_impl, sm_scale=sm_scale,
+                            mm_dtype="f32", layout=layout)

@@ -3,12 +3,13 @@
 One entry point — ``dispatch(op, policy)`` — maps every numeric op in the
 stack onto the implementation the ``ExecPolicy`` selects:
 
-    op                 pallas                      reference            xla
-    ----------------   -------------------------  ------------------   ----
-    vexp               kernels.vexp (tiled)        core vexp (untiled)  same
-    softmax            kernels.softmax (fused)     core softmax         core
-    flash_attention    kernels.flash_attention     core attention_flash core attention_xla
-    decode_attention   kernels.decode_attention    core decode (bhsd)   core decode
+    op                        pallas                      reference            xla
+    -----------------------   -------------------------  ------------------   ----
+    vexp                      kernels.vexp (tiled)        core vexp (untiled)  same
+    softmax                   kernels.softmax (fused)     core softmax         core
+    flash_attention           kernels.flash_attention     core attention_flash core attention_xla
+    decode_attention          kernels.decode_attention    core decode          core decode
+    decode_attention_sharded  shard_map partial + psum    core decode (GSPMD)  core decode (GSPMD)
 
 All returned callables accept ``policy=`` and thread the policy's exp
 backend / block sizes / interpret flag down to the kernel bodies, so a
@@ -21,15 +22,22 @@ Autotuning: ``autotune_policy(op, policy, *shapes)`` times a small set of
 candidate block sizes on first sight of a (device, op, shape-bucket) key and
 memoizes the winner, so repeated shapes never re-time. Shape buckets round
 dims up to powers of two — production serving sees few buckets even under
-ragged batching.
+ragged batching. Winners additionally persist to disk (JSON at
+``$REPRO_AUTOTUNE_CACHE``, default ``~/.cache/repro/autotune.json``;
+``off`` disables) keyed by (device_kind, op, shape_bucket, policy), loaded
+lazily on the first lookup — a serving restart on the same device kind
+skips re-timing entirely.
 """
 
 from __future__ import annotations
 
 import functools
+import json
 import math
+import os
+import tempfile
 import time
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 
@@ -41,7 +49,8 @@ from repro.runtime.policy import ExecPolicy
 # free of circular imports (ops modules import dispatch for autotuning).
 _TABLE: Dict[Tuple[str, str], str] = {}
 
-OPS = ("vexp", "softmax", "flash_attention", "decode_attention")
+OPS = ("vexp", "softmax", "flash_attention", "decode_attention",
+       "decode_attention_sharded")
 
 
 def register(op: str, backend: str, target: str) -> None:
@@ -73,6 +82,17 @@ register("decode_attention", "pallas",
 register("decode_attention", "reference",
          "repro.kernels.dispatch:_decode_fallback")
 register("decode_attention", "xla", "repro.kernels.dispatch:_decode_fallback")
+
+# Sequence-parallel decode over a KV cache sharded along S: the pallas
+# backend runs the partial-stats kernel per shard + the psum stats merge
+# under shard_map; the other backends express the same reduction in jnp
+# and let GSPMD lower the sharded max/sum to the partial-softmax merge.
+register("decode_attention_sharded", "pallas",
+         "repro.kernels.decode_attention.ops:decode_attention_sharded")
+register("decode_attention_sharded", "reference",
+         "repro.kernels.dispatch:_decode_sharded_fallback")
+register("decode_attention_sharded", "xla",
+         "repro.kernels.dispatch:_decode_sharded_fallback")
 
 
 def dispatch(op: str, policy: ExecPolicy) -> Callable:
@@ -128,6 +148,19 @@ def _decode_fallback(q, k_cache, v_cache, cache_len, *, window=None,
                             layout=layout)
 
 
+def _decode_sharded_fallback(q, k_cache, v_cache, cache_len, *, mesh=None,
+                             seq_axis="model", window=None, sm_scale=None,
+                             layout="bshd", policy: ExecPolicy):
+    """reference/xla sharded decode: the core reduction is written as pure
+    max/sum over the cache's S axis, so jit + GSPMD lowers a seq-sharded
+    cache to per-shard partials + all-reduce without explicit collectives
+    (mesh/seq_axis are accepted for signature parity and unused)."""
+    from repro.core.attention import decode_attention
+    return decode_attention(q, k_cache, v_cache, cache_len, window=window,
+                            sm_scale=sm_scale, exp_impl=policy.exp_backend,
+                            layout=layout)
+
+
 # ----------------------------------------------------------------- autotune
 
 # Candidate block sizes per op. Each candidate is a dict of policy-field
@@ -142,19 +175,83 @@ CANDIDATES = {
     "decode_attention": [{"block_s": s} for s in (256, 512, 1024)],
 }
 
-# (device_kind, op, shape_bucket, policy_sans_blocks) -> winning overrides
-_AUTOTUNE_CACHE: Dict[tuple, dict] = {}
-_STATS = {"hits": 0, "misses": 0}
+# repr((device_kind, op, shape_bucket, policy_sans_blocks)) -> winning
+# overrides. String keys so the cache round-trips through JSON unchanged:
+# the in-process winners are persisted to disk and re-loaded on the next
+# process start, so serving restarts skip re-timing entirely.
+_AUTOTUNE_CACHE: Dict[str, dict] = {}
+_STATS = {"hits": 0, "misses": 0, "disk_loaded": 0}
+_DISK_STATE = {"loaded": False}
+
+# Path resolution: $REPRO_AUTOTUNE_CACHE (a file path; "off"/"0" disables
+# persistence) -> ~/.cache/repro/autotune.json.
+_DISK_ENV = "REPRO_AUTOTUNE_CACHE"
+_CACHE_VERSION = 1
+
+
+def autotune_cache_path() -> Optional[str]:
+    raw = os.environ.get(_DISK_ENV, "").strip()
+    if raw.lower() in ("0", "off", "none", "disabled"):
+        return None
+    if raw:
+        return raw
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def load_autotune_cache(path: Optional[str] = None) -> int:
+    """Merge the on-disk autotune cache into the in-process one (in-process
+    entries win). Returns the number of entries loaded; missing/corrupt
+    files load nothing. Called lazily on the first autotune lookup."""
+    _DISK_STATE["loaded"] = True
+    path = path if path is not None else autotune_cache_path()
+    if not path:
+        return 0
+    try:
+        with open(path) as fh:
+            payload = json.load(fh)
+        entries = payload.get("entries", {})
+    except (OSError, ValueError):
+        return 0
+    n = 0
+    for key, overrides in entries.items():
+        if isinstance(key, str) and isinstance(overrides, dict) \
+                and key not in _AUTOTUNE_CACHE:
+            _AUTOTUNE_CACHE[key] = overrides
+            n += 1
+    _STATS["disk_loaded"] += n
+    return n
+
+
+def save_autotune_cache(path: Optional[str] = None) -> Optional[str]:
+    """Atomically persist the in-process cache; best-effort (a read-only
+    filesystem must never break serving). Returns the path written."""
+    path = path if path is not None else autotune_cache_path()
+    if not path or not _AUTOTUNE_CACHE:
+        return None
+    try:
+        cache_dir = os.path.dirname(path) or "."
+        os.makedirs(cache_dir, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=cache_dir, prefix=".autotune-")
+        with os.fdopen(fd, "w") as fh:
+            json.dump({"version": _CACHE_VERSION,
+                       "entries": _AUTOTUNE_CACHE}, fh, indent=1)
+        os.replace(tmp, path)
+        return path
+    except OSError:
+        return None
 
 
 def autotune_cache_stats() -> dict:
-    return dict(_STATS)
+    return dict(_STATS, entries=len(_AUTOTUNE_CACHE))
 
 
 def autotune_cache_clear() -> None:
     _AUTOTUNE_CACHE.clear()
     _STATS["hits"] = 0
     _STATS["misses"] = 0
+    _STATS["disk_loaded"] = 0
+    _DISK_STATE["loaded"] = False
 
 
 def _bucket_dim(n: int) -> int:
@@ -199,23 +296,18 @@ def autotune_policy(op: str, policy: ExecPolicy, run: Callable[[ExecPolicy], obj
     to the policy's static block sizes without polluting the cache.
     """
     base = policy.replace(autotune=False)
-    if any(isinstance(a, jax.core.Tracer) for a in arrays):
-        key = (_device_kind(), op, shape_bucket(*arrays),
-               (base.exp_backend, base.kernel_backend, base.accum_dtype,
-                base.interpret))
-        cached = _AUTOTUNE_CACHE.get(key)
-        if cached is not None:
-            _STATS["hits"] += 1
-            return base.replace(**cached)
-        return base
+    if not _DISK_STATE["loaded"]:
+        load_autotune_cache()
     # Block sizes are what's being tuned, so key on everything else.
-    key = (_device_kind(), op, shape_bucket(*arrays),
-           (base.exp_backend, base.kernel_backend, base.accum_dtype,
-            base.interpret))
+    key = repr((_device_kind(), op, shape_bucket(*arrays),
+                (base.exp_backend, base.kernel_backend, base.accum_dtype,
+                 base.interpret)))
     cached = _AUTOTUNE_CACHE.get(key)
     if cached is not None:
         _STATS["hits"] += 1
         return base.replace(**cached)
+    if any(isinstance(a, jax.core.Tracer) for a in arrays):
+        return base
     _STATS["misses"] += 1
     best_overrides, best_t = {}, math.inf
     for overrides in CANDIDATES.get(op, [{}]):
@@ -227,4 +319,5 @@ def autotune_policy(op: str, policy: ExecPolicy, run: Callable[[ExecPolicy], obj
         if t < best_t:
             best_t, best_overrides = t, overrides
     _AUTOTUNE_CACHE[key] = best_overrides
+    save_autotune_cache()
     return base.replace(**best_overrides)

@@ -34,6 +34,8 @@ DEFAULT_BLOCK_K = 128
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                sm_scale: float, causal: bool, window, block_q: int,
                block_k: int, nk: int, sk_valid: int, exp_impl: str):
+    # (m, l, acc) live in scratch in the policy's accum dtype (see
+    # flash_attention_bhsd); math happens in f32, stores round back down.
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -71,39 +73,47 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             keep &= kpos > qpos - window
         s = jnp.where(keep, s, NEG_INF)
 
-        m_prev = m_ref[...]
+        m_prev = m_ref[...].astype(jnp.float32)
         m_blk = jnp.max(s, axis=-1, keepdims=True)          # partial MAX
         m_new = jnp.maximum(m_prev, m_blk)
         alpha = exp_fn(m_prev - m_new)                      # rescale
         p = exp_fn(s - m_new)                               # partial EXP
         p = jnp.where(keep, p, 0.0)
-        l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())))
-        m_ref[...] = m_new
-        l_ref[...] = l_new
+        l_new = (l_ref[...].astype(jnp.float32) * alpha
+                 + jnp.sum(p, axis=-1, keepdims=True))
+        acc_ref[...] = (acc_ref[...].astype(jnp.float32) * alpha
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())))
+                        ).astype(acc_ref.dtype)
+        m_ref[...] = m_new.astype(m_ref.dtype)
+        l_ref[...] = l_new.astype(l_ref.dtype)
 
     @pl.when(ki == nk - 1)
     def _finalize():
         # partial NORM: one reciprocal per row, multiply through.
-        l = l_ref[...]
+        l = l_ref[...].astype(jnp.float32)
         inv = 1.0 / jnp.maximum(l, 1e-30)
-        o_ref[0, 0] = (acc_ref[...] * inv).astype(o_ref.dtype)
+        o_ref[0, 0] = (acc_ref[...].astype(jnp.float32)
+                       * inv).astype(o_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("sm_scale", "causal", "window", "block_q", "block_k",
-                     "sk_valid", "interpret", "exp_impl"))
+                     "sk_valid", "interpret", "exp_impl", "accum_dtype"))
 def flash_attention_bhsd(q, k, v, *, sm_scale: float, causal: bool,
                          window, sk_valid: int,
                          block_q: int = DEFAULT_BLOCK_Q,
                          block_k: int = DEFAULT_BLOCK_K,
                          interpret: bool = False,
-                         exp_impl: str = "vexp"):
+                         exp_impl: str = "vexp",
+                         accum_dtype: str = "float32"):
     """q (B,H,Sq,D); k,v (B,Hkv,Sk,D); dims divisible by blocks/lane tiles.
 
     sk_valid: number of valid KV positions (Sk may be padded above it).
+    accum_dtype: dtype of the (m, l, acc) VMEM scratch — "float32" is the
+    paper-faithful setting; "bfloat16" halves scratch bytes at an accuracy
+    cost the policy sweep quantifies.
     """
     b, h, sq, d = q.shape
     hkv, sk = k.shape[1], k.shape[2]
@@ -130,15 +140,16 @@ def flash_attention_bhsd(q, k, v, *, sm_scale: float, causal: bool,
         out_specs=pl.BlockSpec((1, 1, bq, d),
                                lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
         scratch_shapes=[
-            pltpu_scratch((bq, 1)),
-            pltpu_scratch((bq, 1)),
-            pltpu_scratch((bq, d)),
+            pltpu_scratch((bq, 1), accum_dtype),
+            pltpu_scratch((bq, 1), accum_dtype),
+            pltpu_scratch((bq, d), accum_dtype),
         ],
         interpret=interpret,
     )(q, k, v)
 
 
-def pltpu_scratch(shape):
-    """VMEM f32 scratch (indirection keeps the TPU import optional on CPU)."""
+def pltpu_scratch(shape, accum_dtype: str = "float32"):
+    """VMEM scratch (indirection keeps the TPU import optional on CPU)."""
     from jax.experimental.pallas import tpu as pltpu
-    return pltpu.VMEM(shape, jnp.float32)
+    dt = jnp.bfloat16 if accum_dtype == "bfloat16" else jnp.float32
+    return pltpu.VMEM(shape, dt)

@@ -49,10 +49,11 @@ def flash_attention(q, k, v, causal=True, window=None, sm_scale=None,
 
 def _fa_fwd_impl(q, k, v, causal, window, sm_scale, block_q, block_k,
                  interpret, policy):
-    exp_impl = "vexp"
+    exp_impl, accum = "vexp", "float32"
     if policy is not None:
         exp_impl = policy.exp_backend
         block_q, block_k = policy.block_q, policy.block_k
+        accum = policy.accum_dtype
         if interpret is None:
             interpret = policy.interpret_resolved()
     if interpret is None:
@@ -67,7 +68,7 @@ def _fa_fwd_impl(q, k, v, causal, window, sm_scale, block_q, block_k,
     out = flash_attention_bhsd(
         qt, kt, vt, sm_scale=scale, causal=causal, window=window,
         sk_valid=sk, block_q=block_q, block_k=block_k, interpret=interpret,
-        exp_impl=exp_impl)
+        exp_impl=exp_impl, accum_dtype=accum)
     return out[:, :, :sq, :d].transpose(0, 2, 1, 3)
 
 

@@ -6,7 +6,9 @@ scalar ``cache_len`` to decode — silently corrupting every request shorter
 than the longest in its batch). The structural fix is per-slot state:
 
 * a fixed pool of ``max_batch`` KV-cache slots per policy group, allocated
-  once at ``max_seq`` (or the sliding window) positions;
+  once at ``max_seq`` (or the sliding window — windowed archs serve
+  through the same fused flash-decode kernel as linear ones now that it
+  understands windows and both cache layouts; no reference fallback);
 * ragged admission — queued requests are right-padded to a pow2 length
   bucket, prefilled as one batch with per-request ``prompt_len`` (padding
   masked out of attention, pad K/V rows zeroed), and their real cache rows
@@ -104,6 +106,28 @@ def _programs(cfg, policy):
     return _PROGRAM_CACHE[key]
 
 
+def _autotune_warmup(cfg, policy, max_batch, cache_s):
+    """Eagerly tune the decode-attention block size for this group's decode
+    shape. Timing is meaningless inside the jitted decode program (tracers,
+    not device work), so the tuner only ever *reads* its cache there — this
+    one eager call at the real (max_batch, cache_s) shape times the
+    candidates, memoizes the winner for the jit path to pick up, and
+    persists it to disk so the next server start skips even this."""
+    if not policy.autotune or policy.kernel_backend != "pallas":
+        return
+    from repro.kernels.dispatch import dispatch
+    lay = cfg.kv_cache_layout
+    kv_shape = ((max_batch, cfg.n_kv_heads, cache_s, cfg.hd)
+                if lay == "bhsd" else
+                (max_batch, cache_s, cfg.n_kv_heads, cfg.hd))
+    q = jnp.zeros((max_batch, 1, cfg.n_heads, cfg.hd),
+                  jnp.dtype(cfg.compute_dtype))
+    kv = jnp.zeros(kv_shape, jnp.bfloat16)      # init_cache's dtype
+    clen = jnp.full((max_batch,), cache_s, jnp.int32)
+    dispatch("decode_attention", policy)(q, kv, kv, clen, layout=lay,
+                                         policy=policy)
+
+
 class _Group:
     """One policy group: ExecPolicy + cache-slot pool + jit programs.
 
@@ -131,6 +155,7 @@ class _Group:
                                     # latency, measured at the finish sync)
         self.req_lat: list = []     # per-request submit->done wall latency
         self._toks: dict = {}                       # slot -> [(B,1) arrays]
+        _autotune_warmup(cfg, policy, max_batch, cache_s)
         (self._prefill, self._prefill_plain,
          self._decode) = _programs(cfg, policy)
 
@@ -274,6 +299,16 @@ class Server:
         self.max_batch, self.max_seq = max_batch, max_seq
         self.mesh = mesh or make_host_mesh()
         self.policy = policy if policy is not None else resolve_policy(cfg)
+        if self.policy.autotune or (policy_groups and any(
+                p.autotune for p in policy_groups.values())):
+            # warm the block-size tuner from the on-disk cache: a restart
+            # on the same device kind reuses every previously-timed winner
+            # instead of re-timing candidates on the first wave.
+            from repro.kernels import dispatch as _dispatch
+            n = _dispatch.load_autotune_cache()
+            if n:
+                print(f"[serve] autotune: {n} block-size winners loaded "
+                      f"from {_dispatch.autotune_cache_path()}")
         self.cache_s = min(max_seq, cfg.sliding_window or max_seq)
         groups = dict(policy_groups) if policy_groups else {}
         if "default" not in groups:

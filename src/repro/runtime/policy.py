@@ -68,8 +68,11 @@ class ExecPolicy:
     block_rows      fused-softmax row-block size.
     block_s         decode-attention KV block size.
     interpret       Pallas interpreter flag; None = auto (CPU -> True).
-    accum_dtype     accumulation dtype for online statistics ("float32"
-                    is the paper-faithful setting).
+    accum_dtype     accumulation dtype of the Pallas kernels' (m, l, acc)
+                    scratch statistics ("float32" is the paper-faithful
+                    setting; "bfloat16" trades accuracy for scratch bytes
+                    and is rejected on non-pallas backends, which always
+                    accumulate in f32).
     autotune        pick block sizes by timing candidates per device+shape
                     bucket (memoized in kernels.dispatch).
     """
@@ -95,6 +98,17 @@ class ExecPolicy:
         if self.accum_dtype not in ACCUM_DTYPES:
             raise ValueError(
                 f"accum_dtype {self.accum_dtype!r} not in {ACCUM_DTYPES}")
+        if self.accum_dtype == "bfloat16" and self.kernel_backend != "pallas":
+            # Only the Pallas kernels carry (m, l, acc) in policy-selected
+            # scratch dtypes; the reference/xla paths accumulate in f32
+            # unconditionally. Accepting the field there would hash two
+            # numerically-identical programs under different jit keys and
+            # silently ignore the requested numerics.
+            raise ValueError(
+                f"accum_dtype='bfloat16' is only honored by the pallas "
+                f"kernel backend (got kernel_backend="
+                f"{self.kernel_backend!r}); the reference/xla paths "
+                f"always accumulate in float32")
         for f in ("block_q", "block_k", "block_rows", "block_s"):
             v = getattr(self, f)
             if not (isinstance(v, int) and v > 0):

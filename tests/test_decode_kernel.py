@@ -1,4 +1,6 @@
-"""Allclose tests for the fused flash-decode Pallas kernel."""
+"""Allclose tests for the fused flash-decode Pallas kernel: plain sweep,
+both cache layouts, sliding windows, partial-statistics mode (+ the
+stats_merge algebra), and policy-selected accumulation dtypes."""
 
 import numpy as np
 import pytest
@@ -6,7 +8,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_partial,
                                             decode_attention_ref)
+from repro.runtime import ExecPolicy
 
 
 @pytest.mark.parametrize("b,h,hkv,d,smax,clen", [
@@ -50,3 +54,101 @@ def test_bf16_cache():
     ref = decode_attention_ref(q, kc.astype(jnp.float32),
                                vc.astype(jnp.float32), 200)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-2)
+
+
+def _rand_cache(seed, b, h, hkv, d, smax, layout="bhsd"):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+    shape = (b, hkv, smax, d) if layout == "bhsd" else (b, smax, hkv, d)
+    kc = jax.random.normal(ks[1], shape, jnp.float32)
+    vc = jax.random.normal(ks[2], shape, jnp.float32)
+    return q, kc, vc
+
+
+def test_bshd_layout():
+    """The sequence-major cache feeds the kernel through layout-aware
+    index maps — no transpose, same numbers as head-major."""
+    q, kc, vc = _rand_cache(3, 2, 8, 4, 64, 512)
+    clen = jnp.array([77, 512], jnp.int32)
+    ref = decode_attention(q, kc, vc, clen, block_s=128, interpret=True)
+    out = decode_attention(q, kc.transpose(0, 2, 1, 3),
+                           vc.transpose(0, 2, 1, 3), clen, layout="bshd",
+                           block_s=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("window,clen", [
+    (1, 300), (64, 300), (127, 512), (128, 512), (512, 512), (700, 300),
+])
+def test_windowed_vs_ref(window, clen):
+    """Sliding-window sweep == windowed reference reduction, including
+    window == 1, block-straddling windows and window > cache_len."""
+    q, kc, vc = _rand_cache(4, 2, 8, 4, 64, 512)
+    cl = jnp.array([clen, max(1, clen - 37)], jnp.int32)
+    out = decode_attention(q, kc, vc, cl, window=window, block_s=128,
+                           interpret=True)
+    ref = decode_attention_ref(q, kc, vc, cl, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_partial_stats_merge_matches_full():
+    """Manually split the cache into 4 slices, run each in
+    partial-statistics mode with its seq_offset, fold with stats_merge
+    (the pairwise rule) — the result must equal the one-shot kernel."""
+    from repro.core.softmax import SoftmaxStats, stats_merge
+    from repro.core.vexp import get_exp_fn
+    b, h, hkv, d, smax = 2, 8, 4, 64, 512
+    q, kc, vc = _rand_cache(5, b, h, hkv, d, smax)
+    clen = jnp.array([1, 389], jnp.int32)
+    full = decode_attention(q, kc, vc, clen, block_s=64, interpret=True)
+    exp_fn = get_exp_fn("vexp")
+    nsh, loc = 4, smax // 4
+    stats, acc = None, None
+    # fold in a deliberately shuffled order: the merge is commutative
+    for i in (2, 0, 3, 1):
+        m, l, a = decode_attention_partial(
+            q, kc[:, :, i * loc:(i + 1) * loc],
+            vc[:, :, i * loc:(i + 1) * loc], clen, i * loc,
+            block_s=64, interpret=True)
+        if stats is None:
+            stats, acc = SoftmaxStats(m=m, l=l), a
+        else:
+            merged, aa, ab = stats_merge(stats, SoftmaxStats(m=m, l=l),
+                                         exp_fn=exp_fn)
+            acc = acc * aa + a * ab
+            stats = merged
+    out = (acc * (1.0 / jnp.maximum(stats.l, 1e-30))).reshape(b, 1, h, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_partial_empty_shard_is_merge_identity():
+    """A slice entirely past cache_len returns (NEG_INF, 0, 0)."""
+    q, kc, vc = _rand_cache(6, 1, 4, 2, 64, 256)
+    m, l, acc = decode_attention_partial(
+        q, kc, vc, jnp.array([100], jnp.int32), 512, block_s=128,
+        interpret=True)
+    assert float(jnp.max(m)) <= -1e29
+    assert float(jnp.abs(l).max()) == 0.0
+    assert float(jnp.abs(acc).max()) == 0.0
+
+
+def test_accum_dtype_bf16_close_but_distinct():
+    """accum_dtype="bfloat16" must actually change the compiled program
+    (satellite: it used to be hashed into the jit key and ignored) while
+    staying within bf16 round-off of the f32 accumulation."""
+    q, kc, vc = _rand_cache(7, 2, 8, 4, 64, 512)
+    clen = jnp.array([300, 512], jnp.int32)
+    f32 = decode_attention(
+        q, kc, vc, clen,
+        policy=ExecPolicy(kernel_backend="pallas", block_s=128))
+    bf16 = decode_attention(
+        q, kc, vc, clen,
+        policy=ExecPolicy(kernel_backend="pallas", block_s=128,
+                          accum_dtype="bfloat16"))
+    assert not np.array_equal(np.asarray(f32), np.asarray(bf16)), \
+        "bfloat16 accumulation compiled an identical program to float32"
+    np.testing.assert_allclose(np.asarray(bf16), np.asarray(f32),
+                               atol=5e-2, rtol=5e-2)

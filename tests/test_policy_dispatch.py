@@ -224,6 +224,87 @@ class TestAutotune:
             np.asarray(sm(x, policy=base)), atol=1e-6)
 
 
+class TestAutotunePersistence:
+    """The block-size cache persists to disk keyed by (device_kind, op,
+    shape_bucket, policy): a fresh process (simulated by clearing the
+    in-memory cache) must reuse the winners without re-timing."""
+
+    def test_save_load_roundtrip_skips_retiming(self, tmp_path, monkeypatch):
+        path = str(tmp_path / "autotune.json")
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+        kd.autotune_cache_clear()
+        x = jax.random.normal(jax.random.PRNGKey(21), (64, 256))
+        pol = ExecPolicy(kernel_backend="pallas", autotune=True)
+        sm = kd.dispatch("softmax", pol)
+        sm(x, policy=pol)
+        assert kd.autotune_cache_stats()["misses"] == 1
+        assert os.path.exists(path), "tuning winner was not persisted"
+        # "restart": drop all in-process state; the disk entry must turn
+        # the first lookup into a hit instead of a timing pass.
+        kd.autotune_cache_clear()
+        sm(x, policy=pol)
+        stats = kd.autotune_cache_stats()
+        assert stats["misses"] == 0, "disk-cached shape was re-timed"
+        assert stats["hits"] == 1
+        assert stats["disk_loaded"] >= 1
+
+    def test_disabled_by_env(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", "off")
+        kd.autotune_cache_clear()
+        assert kd.autotune_cache_path() is None
+        x = jax.random.normal(jax.random.PRNGKey(22), (64, 256))
+        pol = ExecPolicy(kernel_backend="pallas", autotune=True)
+        kd.dispatch("softmax", pol)(x, policy=pol)
+        kd.autotune_cache_clear()
+        kd.dispatch("softmax", pol)(x, policy=pol)
+        assert kd.autotune_cache_stats()["misses"] == 1, \
+            "persistence leaked through REPRO_AUTOTUNE_CACHE=off"
+
+    def test_corrupt_cache_file_ignored(self, tmp_path, monkeypatch):
+        path = str(tmp_path / "autotune.json")
+        with open(path, "w") as fh:
+            fh.write("{not json")
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+        kd.autotune_cache_clear()
+        assert kd.load_autotune_cache() == 0
+
+
+class TestAccumDtype:
+    """accum_dtype is honored by the Pallas kernels (scratch statistics)
+    and rejected wherever no kernel would honor it."""
+
+    def test_rejected_on_non_pallas_backends(self):
+        for kb in ("reference", "xla"):
+            with pytest.raises(ValueError, match="accum_dtype"):
+                ExecPolicy(kernel_backend=kb, accum_dtype="bfloat16")
+        with pytest.raises(ValueError, match="accum_dtype"):
+            resolve_policy(env={}, kernel_backend="xla",
+                           accum_dtype="bfloat16")
+
+    def test_unknown_value_rejected(self):
+        with pytest.raises(ValueError, match="accum_dtype"):
+            ExecPolicy(accum_dtype="float16")
+
+    def test_flash_attention_bf16_accum_distinct_but_close(self):
+        ks = jax.random.split(jax.random.PRNGKey(23), 3)
+        q = jax.random.normal(ks[0], (1, 64, 4, 32))
+        k = jax.random.normal(ks[1], (1, 64, 2, 32))
+        v = jax.random.normal(ks[2], (1, 64, 2, 32))
+        from repro.kernels.flash_attention.ops import flash_attention_policy
+        f32 = flash_attention_policy(
+            q, k, v, causal=True,
+            policy=ExecPolicy(kernel_backend="pallas", block_q=32,
+                              block_k=32))
+        bf16 = flash_attention_policy(
+            q, k, v, causal=True,
+            policy=ExecPolicy(kernel_backend="pallas", block_q=32,
+                              block_k=32, accum_dtype="bfloat16"))
+        assert not np.array_equal(np.asarray(f32), np.asarray(bf16)), \
+            "accum_dtype=bfloat16 compiled an identical program"
+        np.testing.assert_allclose(np.asarray(bf16), np.asarray(f32),
+                                   atol=5e-2, rtol=5e-2)
+
+
 class TestEndToEnd:
     def test_model_forward_policy_flip(self):
         """One ExecPolicy switch flips the exp backend through the whole

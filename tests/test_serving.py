@@ -104,6 +104,27 @@ class TestMixedLengthOracle:
         assert together[0] == solo0[0]
         assert together[1] == solo1[1]
 
+    def test_windowed_arch_pallas_ring_buffer(self):
+        """Ring-buffer windowed serving under a pallas policy: the fused
+        kernel now covers windowed decode (no reference fallback), and a
+        mixed-length windowed batch must still match solo serving token
+        for token — including past the window roll-over."""
+        wcfg = get_config("h2o-danube3-4b").reduced()
+        assert wcfg.sliding_window
+        wparams = api.init_params(wcfg, jax.random.PRNGKey(0))
+        pol = resolve_policy(wcfg, env={}, kernel_backend="pallas")
+        prompts = _prompts(wcfg, (5, 11))
+        # max_new past the window (16) forces the ring-buffer wrap
+        together, _ = _serve(wcfg, wparams, prompts, [0, 1],
+                             max_new=10, max_seq=wcfg.sliding_window * 3,
+                             policy=pol)
+        solo0, _ = _serve(wcfg, wparams, prompts, [0], max_new=10,
+                          max_seq=wcfg.sliding_window * 3, policy=pol)
+        solo1, _ = _serve(wcfg, wparams, prompts, [1], max_new=10,
+                          max_seq=wcfg.sliding_window * 3, policy=pol)
+        assert together[0] == solo0[0]
+        assert together[1] == solo1[1]
+
 
 # --------------------------------------------------------- ragged prefill api
 

@@ -31,6 +31,22 @@ class TestSoftmax:
         np.testing.assert_allclose(np.asarray(s[:, :4]), 0.25, atol=1e-3)
         np.testing.assert_allclose(np.asarray(s[:, 4:]), 0.0)
 
+    @pytest.mark.parametrize("exp_impl", ["exact", "vexp", "vexp_hw"])
+    def test_fully_masked_row_is_zeros_not_nan(self, exp_impl):
+        """Regression: a row with where=False everywhere (a padded serving
+        slot) used to divide by s=0 and emit NaN; it must return zeros
+        while real rows are untouched."""
+        x = jax.random.normal(jax.random.PRNGKey(3), (4, 16)) * 5
+        mask = jnp.ones((4, 16), bool).at[1].set(False).at[3].set(False)
+        s = S.softmax(x, where=mask, exp_impl=exp_impl)
+        s = np.asarray(s.astype(jnp.float32))
+        assert np.isfinite(s).all(), "fully-masked row produced NaN/inf"
+        np.testing.assert_allclose(s[1], 0.0)
+        np.testing.assert_allclose(s[3], 0.0)
+        ref = np.asarray(S.softmax(x[::2], where=mask[::2],
+                                   exp_impl=exp_impl).astype(jnp.float32))
+        np.testing.assert_allclose(s[::2], ref, atol=1e-6)
+
     def test_log_softmax(self):
         x = jax.random.normal(jax.random.PRNGKey(2), (16, 64)) * 3
         a = S.log_softmax(x, exp_impl="exact")
@@ -159,3 +175,79 @@ class TestAttention:
 
         g = jax.grad(loss)(q)
         assert np.isfinite(np.asarray(g)).all()
+
+
+class TestWindowConsistency:
+    """Sliding-window off-by-one pinning: every implementation must attend
+    exactly ``window`` tokens *including the current position* — verified
+    against an oracle that slices those keys out explicitly, at the block
+    boundaries where an off-by-one would hide (window = 1, block_s - 1,
+    block_s, S)."""
+
+    BLOCK = 16
+    S = 32
+
+    @pytest.mark.parametrize("window", [1, BLOCK - 1, BLOCK, S])
+    def test_all_impls_keep_exactly_window_tokens(self, window):
+        from repro.kernels.flash_attention.ops import flash_attention
+        from repro.kernels.decode_attention import decode_attention as fused_decode
+        b, s, h, hkv, d = 2, self.S, 4, 2, 32
+        bs = self.BLOCK
+        q, k, v = _rand_qkv(jax.random.PRNGKey(11), b, s, s, h, hkv, d)
+
+        # Oracle at the last position: plain softmax over exactly the
+        # `window` keys [s - window, s) — one more or one fewer key moves
+        # the answer.
+        lo = s - window
+        g = h // hkv
+        qg = (q[:, -1].astype(jnp.float32)
+              .reshape(b, hkv, g, d)) / np.sqrt(d)
+        kw = k[:, lo:].astype(jnp.float32)
+        scores = jnp.einsum("bkgd,btkd->bkgt", qg, kw)
+        p = jax.nn.softmax(scores, -1)
+        oracle = jnp.einsum("bkgt,btkd->bkgd", p,
+                            v[:, lo:].astype(jnp.float32))
+        oracle = np.asarray(oracle.reshape(b, 1, h, d))
+
+        outs = {
+            "xla": A.attention_xla(q, k, v, causal=True, window=window,
+                                   exp_impl="exact")[:, -1:],
+            "flash": A.attention_flash(q, k, v, causal=True, window=window,
+                                       exp_impl="exact",
+                                       block_k=bs)[:, -1:],
+            "pallas_fa": flash_attention(q, k, v, True, window, None,
+                                         bs, bs, True)[:, -1:],
+            "decode": fused_decode(
+                q[:, -1:], k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                jnp.int32(s), window=window, block_s=bs, interpret=True),
+        }
+        for name, out in outs.items():
+            np.testing.assert_allclose(
+                np.asarray(out), oracle, atol=2e-3, rtol=2e-3,
+                err_msg=f"{name} window={window} disagrees with the "
+                        f"exact-{window}-token oracle")
+
+    def test_window_excludes_token_just_outside(self):
+        """Perturbing the newest *out-of-window* key must not change any
+        implementation's output (it would under an off-by-one that kept
+        window+1 tokens)."""
+        from repro.kernels.decode_attention import decode_attention as fused_decode
+        b, s, h, hkv, d, w = 1, 32, 4, 2, 32, 8
+        q, k, v = _rand_qkv(jax.random.PRNGKey(12), b, s, s, h, hkv, d)
+        k2 = k.at[:, s - w - 1].add(100.0)
+        v2 = v.at[:, s - w - 1].add(100.0)
+        for fn in (
+            lambda kk, vv: A.attention_xla(q, kk, vv, causal=True, window=w,
+                                           exp_impl="exact")[:, -1:],
+            lambda kk, vv: A.attention_flash(q, kk, vv, causal=True,
+                                             window=w, exp_impl="exact",
+                                             block_k=16)[:, -1:],
+            lambda kk, vv: fused_decode(
+                q[:, -1:], kk.transpose(0, 2, 1, 3),
+                vv.transpose(0, 2, 1, 3), jnp.int32(s), window=w,
+                block_s=16, interpret=True),
+        ):
+            np.testing.assert_allclose(np.asarray(fn(k, v)),
+                                       np.asarray(fn(k2, v2)),
+                                       atol=1e-5,
+                                       err_msg="out-of-window key leaked in")
