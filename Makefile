@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: ci test bench sweep serve-smoke spmd-test
+.PHONY: ci test bench sweep serve-smoke spmd-test spmd-serve-smoke
 
 ci:
 	$(PY) -m pytest -x -q
@@ -33,3 +33,12 @@ serve-smoke:
 	    --requests 6 --prompt-len 24 --mixed-lengths --max-new 8 \
 	    --max-batch 2 --max-seq 64 \
 	    --policy-groups "eval=exact,bulk=vexp"
+
+# The same slot engine end-to-end through the SPMD serve loop: KV cache
+# sequence-sharded over 8 fake host devices, decode through the fused
+# partial-statistics path with the packed single-collective merge.
+spmd-serve-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	    $(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 6 --prompt-len 24 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 --kv-mode seq

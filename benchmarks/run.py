@@ -20,27 +20,35 @@ def _emit(section, rows):
         print(f"{section}/{name},{val:.6g},{str(note).replace(',', ';')}")
 
 
-def _sharded_decode_report():
-    """The sequence-parallel decode sweep needs a multi-device host
-    platform, which requires XLA_FLAGS set *before* jax initializes — run
-    it in a subprocess and relay its rows."""
+def _subprocess_report(module: str):
+    """Benchmarks that need a multi-device host platform require XLA_FLAGS
+    set *before* jax initializes — run them in a subprocess and relay
+    their rows."""
     import os
     import subprocess
 
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8")
     out = subprocess.run(
-        [sys.executable, "-m", "benchmarks.sharded_decode"],
+        [sys.executable, "-m", f"benchmarks.{module}"],
         capture_output=True, text=True, timeout=3600, env=env)
     if out.returncode != 0:
-        raise RuntimeError(f"sharded_decode failed:\n{out.stderr[-2000:]}")
+        raise RuntimeError(f"{module} failed:\n{out.stderr[-2000:]}")
     rows = []
     for line in out.stdout.strip().splitlines():
-        if not line.startswith("sharded_decode/"):
+        if not line.startswith(f"{module}/"):
             continue
         name, val, note = line.split(",", 2)
         rows.append((name.split("/", 1)[1], float(val), note))
     return rows
+
+
+def _sharded_decode_report():
+    return _subprocess_report("sharded_decode")
+
+
+def _collective_merge_report():
+    return _subprocess_report("collective_merge")
 
 
 def main() -> None:
@@ -64,6 +72,7 @@ def main() -> None:
         "policy_sweep": policy_sweep.report,       # ExecPolicy backends
         "serving": serving.report,                 # continuous batching
         "sharded_decode": _sharded_decode_report,  # seq-parallel decode
+        "collective_merge": _collective_merge_report,  # packed vs split
     }
     print("name,us_per_call,derived")
     failures = 0

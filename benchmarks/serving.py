@@ -12,6 +12,16 @@ engine replaced):
   mixed_policy  half the requests under ``exact`` (eval traffic), half
                 under ``vexp`` (bulk) in one server.
 
+Phase-separated measurement: the blended per-workload tok/s above mixes
+prefill and decode, which hides decode regressions behind prefill wins —
+the ``steady_state`` section therefore times the two phases at explicit
+device syncs (admit -> sync, then N decode steps -> sync) and reports
+**steady-state decode tok/s** on its own. The ``sharded`` section runs
+the same phase measurement through the SPMD serve loop (KV cache
+sequence-sharded over 8 fake host devices, fused partial-statistics
+decode with the packed single-collective merge) in a subprocess —
+XLA_FLAGS must land before jax initializes.
+
 Rows carry tokens/s as the primary scalar; per-request p50/p95 completion
 latency (submit -> tokens materialized, measured at the finish-time
 device sync) rides in the note. Results persist to ``BENCH_serving.json``.
@@ -21,6 +31,8 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -35,6 +47,7 @@ MAX_BATCH = 4
 MAX_SEQ = 128
 UNIFORM_LEN = 32
 N_TIMED = 5          # median-of-N (container noise is large + asymmetric)
+STEADY_STEPS = 12    # decode steps per steady-state phase measurement
 
 
 def _requests(cfg, lens, groups=None):
@@ -86,6 +99,61 @@ def _run_engine(cfg, params, lens, **kw):
     once = _engine_runner(cfg, params, lens, **kw)
     return _median([once() for _ in range(N_TIMED)],
                    key=lambda r: r["tok_s"])
+
+
+def _steady_state(cfg, params, *, policy=None, mesh=None, kv_mode="auto",
+                  n_steps=STEADY_STEPS, n_timed=3):
+    """Phase-separated engine measurement: prefill wall (admit -> sync)
+    and steady-state decode tok/s (N full-pool decode steps between
+    syncs, no admissions or finishes inside the window)."""
+    from repro.launch.serve import Server, Request
+
+    def once():
+        srv = Server(cfg, params, max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                     mesh=mesh, policy=policy, kv_mode=kv_mode)
+        rng = np.random.default_rng(0)
+        for i in range(MAX_BATCH):
+            srv.submit(Request(i, rng.integers(
+                0, cfg.vocab, (UNIFORM_LEN,), dtype=np.int32),
+                max_new=n_steps + 8))       # no slot finishes mid-window
+        g = srv._groups["default"]
+        t0 = time.perf_counter()
+        g.admit()
+        jax.block_until_ready(g.last)
+        t1 = time.perf_counter()
+        for _ in range(n_steps):
+            g.decode_once()
+        jax.block_until_ready(g.last)
+        t2 = time.perf_counter()
+        return {"prefill_s": t1 - t0,
+                "decode_tok_s": MAX_BATCH * n_steps / (t2 - t1),
+                "prefill_tok_s": MAX_BATCH * UNIFORM_LEN / (t1 - t0),
+                "kv_axis": srv.kv_axis}
+
+    once()                                  # compile
+    return _median([once() for _ in range(n_timed)],
+                   key=lambda r: r["decode_tok_s"])
+
+
+def _sharded_arm():
+    """SPMD serve-loop phase measurement: runs in a subprocess with 8
+    forced host devices (see __main__), comparing the sequence-sharded
+    fused decode path against the single-device engine in-process."""
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import api
+    from repro.runtime import resolve_policy
+
+    cfg = get_config("gpt2-small").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    pol = resolve_policy(cfg, env={}, kernel_backend="pallas")
+    nsh = len(jax.devices())
+    sharded = _steady_state(cfg, params, policy=pol,
+                            mesh=make_host_mesh(1, nsh), kv_mode="seq")
+    single = _steady_state(cfg, params, policy=pol,
+                           mesh=make_host_mesh(1, 1))
+    return {"n_shards": nsh, "merge_strategy": pol.merge_strategy,
+            "sharded": sharded, "single_device": single}
 
 
 def _fixed_chunk_runner(cfg, params, lens, *, policy=None):
@@ -164,7 +232,23 @@ def run_bench() -> dict:
                 "bulk": resolve_policy(cfg, env={}, exp_backend="vexp"),
             }),
         "fixed_chunk_baseline": {"tok_s": fixed_tok_s},
+        "steady_state": _steady_state(cfg, params, policy=pol),
     }
+    # sharded serving needs a multi-device host platform: XLA_FLAGS must
+    # precede jax init, so the arm runs in a subprocess (best-effort — a
+    # failure is recorded, not fatal to the rest of the benchmark).
+    try:
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8")
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.serving", "--sharded-json"],
+            capture_output=True, text=True, timeout=3600, env=env)
+        if out.returncode != 0:
+            raise RuntimeError(out.stderr[-1500:])
+        results["sharded"] = json.loads(
+            out.stdout.strip().splitlines()[-1])
+    except Exception as e:                      # noqa: BLE001
+        results["sharded"] = {"error": str(e)[:2000]}
     dev = jax.devices()[0]
     return {
         "device": f"{dev.platform}:{getattr(dev, 'device_kind', '')}",
@@ -195,10 +279,30 @@ def report():
     rows.append(("uniform_vs_fixed_chunk",
                  res["uniform"]["tok_s"] / base,
                  "slot engine / old driver throughput (>= 1 expected)"))
+    ss = res["steady_state"]
+    rows.append(("steady_decode_tok_s", ss["decode_tok_s"],
+                 f"decode-only; prefill={ss['prefill_s'] * 1e3:.1f}ms "
+                 f"({ss['prefill_tok_s']:.1f} tok/s) measured separately"))
+    sh = res.get("sharded", {})
+    if "error" not in sh and sh:
+        rows.append(("sharded_decode_tok_s",
+                     sh["sharded"]["decode_tok_s"],
+                     f"{sh['n_shards']}-way seq-sharded SPMD serve loop "
+                     f"(merge={sh['merge_strategy']}); single-device "
+                     f"decode={sh['single_device']['decode_tok_s']:.1f} "
+                     f"tok/s in the same subprocess"))
+    else:
+        rows.append(("sharded_decode_tok_s", 0.0,
+                     f"unavailable: {sh.get('error', 'not run')[:120]}"))
     rows.append(("json", 0.0, f"written to {OUT_PATH}"))
     return rows
 
 
 if __name__ == "__main__":
+    if "--sharded-json" in sys.argv:
+        # subprocess mode (parent sets XLA_FLAGS before we ever import
+        # jax): print one JSON line with the sharded phase measurement.
+        print(json.dumps(_sharded_arm()))
+        sys.exit(0)
     for name, val, note in report():
         print(f"serving/{name},{val:.6g},{note}")

@@ -21,3 +21,9 @@ try:
     import hypothesis  # noqa: F401
 except ImportError:
     sys.path.insert(0, os.path.join(_ROOT, "tests", "_compat"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-device subprocess tests (deselect with "
+        "-m 'not slow' for a quick pass)")

@@ -139,6 +139,10 @@ def stats_merge_collective(stats: SoftmaxStats, acc: jax.Array,
     Shards whose slice contained no valid key carry the identity element
     (m <= KERNEL_NEG_INF, l = 0, acc = 0) or (m = -inf); both are guarded
     so they contribute exactly nothing (never NaN via -inf - -inf).
+
+    This is the *split* (three-collective: pmax + 2 psum) merge strategy;
+    ``stats_merge_collective_packed`` is the single-collective form over a
+    packed (acc | m | l) tile. Both compute the exact same algebra.
     """
     m_g = jax.lax.pmax(stats.m, axis_name)
     empty = (stats.m <= 0.5 * KERNEL_NEG_INF) | ~jnp.isfinite(stats.m)
@@ -146,4 +150,40 @@ def stats_merge_collective(stats: SoftmaxStats, acc: jax.Array,
     alpha = jnp.where(empty, 0.0, exp_fn(stats.m - safe_g))
     l_g = jax.lax.psum(stats.l * alpha, axis_name)
     acc_g = jax.lax.psum(acc * alpha, axis_name)
+    return SoftmaxStats(m=m_g, l=l_g), acc_g
+
+
+def stats_merge_collective_packed(packed: jax.Array, axis_name: str, *,
+                                  exp_fn: Callable
+                                  ) -> tuple[SoftmaxStats, jax.Array]:
+    """Single-collective partial-softmax merge over a packed stats tile.
+
+    ``packed`` is each shard's contiguous ``(..., d + 2)`` tile laid out
+    as ``[acc (d lanes) | m (1) | l (1)]`` — emitted directly by the
+    flash-decode kernel's packed mode, so there is no per-shard
+    concatenate before the collective. One ``all_gather`` over
+    ``axis_name`` moves every shard's tile in a single collective, and
+    the alpha-rescaled fold of ``stats_merge`` then runs shard-locally
+    over the gathered leading axis.
+
+    The global max is taken *before* any exponentiation, so ``m - m_g``
+    is always <= 0 and the merge cannot overflow no matter how far the
+    per-shard maxima are spread (the overflow-guard test pins this).
+    Empty shards (m <= KERNEL_NEG_INF / non-finite) contribute exactly
+    nothing, as in the split form.
+
+    Returns the same (SoftmaxStats, acc) pair as
+    ``stats_merge_collective``; callers normalize with
+    ``acc / max(l, tiny)``.
+    """
+    d = packed.shape[-1] - 2
+    tiles = jax.lax.all_gather(packed, axis_name)    # (n_shards, ..., d+2)
+    m_sh = tiles[..., d:d + 1]
+    l_sh = tiles[..., d + 1:d + 2]
+    m_g = jnp.max(m_sh, axis=0)
+    empty = (m_sh <= 0.5 * KERNEL_NEG_INF) | ~jnp.isfinite(m_sh)
+    safe_g = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
+    alpha = jnp.where(empty, 0.0, exp_fn(m_sh - safe_g))
+    l_g = jnp.sum(l_sh * alpha, axis=0)
+    acc_g = jnp.sum(tiles[..., :d] * alpha, axis=0)
     return SoftmaxStats(m=m_g, l=l_g), acc_g

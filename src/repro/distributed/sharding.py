@@ -208,6 +208,21 @@ def decode_kv_axis(cfg, mesh, batch: int, *, kv_mode: str = "auto"):
     return entry
 
 
+def serve_cache_sharding(cfg, mesh, seq_axis):
+    """NamedSharding pytree for the slot engine's *stacked* KV-cache pool
+    with the sequence dim sharded over ``seq_axis`` (every other dim
+    replicated — the engine's pool batch stays local). This is the
+    placement the engine's shard_map decode program keeps its carry in,
+    so the pool is sharded once at allocation and never resharded on the
+    hot path."""
+    from repro.models.transformer import cache_seq_axis
+    layout = getattr(cfg, "kv_cache_layout", "bshd")
+    spec = [None] * 5
+    spec[cache_seq_axis(layout, stacked=True)] = seq_axis
+    sh = NamedSharding(mesh, P(*spec))
+    return {"k": sh, "v": sh}
+
+
 def batch_specs(cfg, mesh, kind: str):
     """Input-batch PartitionSpecs per shape kind."""
     b = batch_spec(mesh)

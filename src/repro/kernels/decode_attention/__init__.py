@@ -1,3 +1,5 @@
 from .ops import (decode_attention, decode_attention_partial,
+                  decode_attention_partial_packed,
+                  decode_attention_partial_merged,
                   decode_attention_sharded, decode_attention_policy)
 from .ref import decode_attention_ref

@@ -29,9 +29,13 @@ Sequence parallelism (the paper's §IV-C partial-softmax algebra as an SPMD
 primitive): in *partial* mode the kernel emits the raw per-shard
 (m, l, acc) statistics instead of the normalized output, and masks its KV
 sweep in **global** coordinates via ``seq_offset`` (an SMEM scalar: the
-absolute position of this shard's first cache row). Shards are then merged
-with ``core.softmax.stats_merge_collective`` under ``shard_map`` — see
-``ops.decode_attention_sharded``.
+absolute position of this shard's first cache row). *Packed* partial mode
+goes one step further and lands the statistics in ONE contiguous
+(B, Hkv, G, d+2) tile laid out ``[acc | m | l]`` — the exact buffer the
+single-collective merge (``core.softmax.stats_merge_collective_packed``)
+all_gathers, so no stat array is ever concatenated outside the kernel.
+Shards are merged under ``shard_map`` per the policy's merge strategy —
+see ``ops.decode_attention_sharded``.
 
 Sliding windows mask ``cache_len - window <= kpos < cache_len`` (exactly
 ``window`` tokens including the current one); KV blocks entirely outside
@@ -61,8 +65,10 @@ _ACCUM_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
 def _decode_kernel(len_ref, off_ref, q_ref, k_ref, v_ref, *refs,
                    block_b: int, block_s: int, ns: int, s_valid: int,
                    sm_scale: float, exp_impl: str, window, layout: str,
-                   partial: bool):
-    if partial:
+                   partial: bool, packed: bool = False):
+    if packed:
+        op_ref, m_ref, l_ref, acc_ref = refs
+    elif partial:
         om_ref, ol_ref, oacc_ref, m_ref, l_ref, acc_ref = refs
     else:
         (o_ref, m_ref, l_ref, acc_ref) = refs
@@ -129,7 +135,16 @@ def _decode_kernel(len_ref, off_ref, q_ref, k_ref, v_ref, *refs,
 
     @pl.when(si == ns - 1)
     def _finalize():
-        if partial:
+        if packed:
+            # one contiguous (block_b, G, d+2) tile per shard laid out as
+            # [acc | m | l]: the collective merge gathers this buffer
+            # whole — no post-hoc concatenate of three stat arrays on the
+            # host side of the kernel.
+            op_ref[:, 0] = jnp.concatenate(
+                [acc_ref[...].astype(op_ref.dtype),
+                 m_ref[...].astype(op_ref.dtype),
+                 l_ref[...].astype(op_ref.dtype)], axis=-1)
+        elif partial:
             # raw shard statistics: rows this shard never touched stay at
             # (m=NEG_INF, l=0, acc=0) — the merge's identity element.
             om_ref[:, 0] = m_ref[...].astype(om_ref.dtype)
@@ -254,6 +269,46 @@ def decode_attention_kernel_partial(q, k_cache, v_cache, cache_len,
         out_specs=[stat, stat,
                    pl.BlockSpec((bb, 1, g, d),
                                 lambda bb_, hh, si: (bb_, hh, 0, 0))],
+        scratch_shapes=_scratch(bb, g, d, accum_dtype),
+        interpret=interpret,
+    )(cache_len, seq_offset, q, k_cache, v_cache)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "sm_scale", "block_s", "s_valid", "interpret", "exp_impl", "window",
+    "layout", "accum_dtype"))
+def decode_attention_kernel_packed(q, k_cache, v_cache, cache_len,
+                                   seq_offset, *, sm_scale: float,
+                                   s_valid: int,
+                                   block_s: int = DEFAULT_BLOCK_S,
+                                   interpret: bool = False,
+                                   exp_impl: str = "vexp",
+                                   window=None, layout: str = "bhsd",
+                                   accum_dtype: str = "float32"):
+    """Packed partial-statistics mode: the same sweep as
+    ``decode_attention_kernel_partial`` but the shard's raw statistics
+    land in ONE contiguous f32 tile of shape (B, Hkv, G, d + 2), laid out
+    ``[acc | m | l]`` along the last axis — the unit the single-collective
+    merge (``core.softmax.stats_merge_collective_packed``) all_gathers.
+    The two stat lanes ride beyond ``d``; the merge slices them off after
+    the fold, so the accumulator's lane padding stays untouched."""
+    b, hkv, g, d = q.shape
+    smax = k_cache.shape[2] if layout == "bhsd" else k_cache.shape[1]
+    bs = min(block_s, smax)
+    ns = smax // bs
+    bb = resolve_block_b(b, bs, d)
+    kernel = functools.partial(
+        _decode_kernel, block_b=bb, block_s=bs, ns=ns, s_valid=s_valid,
+        sm_scale=sm_scale, exp_impl=exp_impl, window=window, layout=layout,
+        partial=True, packed=True)
+    smem, q_spec, kv_spec = _specs(layout, bb, g, bs, d)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d + 2), jnp.float32),
+        grid=(b // bb, hkv, ns),
+        in_specs=[smem, smem, q_spec, kv_spec, kv_spec],
+        out_specs=pl.BlockSpec((bb, 1, g, d + 2),
+                               lambda bb_, hh, si: (bb_, hh, 0, 0)),
         scratch_shapes=_scratch(bb, g, d, accum_dtype),
         interpret=interpret,
     )(cache_len, seq_offset, q, k_cache, v_cache)

@@ -11,10 +11,13 @@ windows — with no reference fallback.
 ``decode_attention_sharded`` is the sequence-parallel entry: a KV cache
 sharded along its sequence axis over a mesh axis is swept shard-locally in
 partial-statistics mode (each shard masks against its own slice of the
-*global* ``cache_len`` via ``seq_offset``), and the per-shard (m, l, acc)
-are merged with ``core.softmax.stats_merge_collective`` (pmax + psum)
-under ``shard_map`` — the paper's §IV-C partial-softmax algebra as an SPMD
-collective.
+*global* ``cache_len`` via ``seq_offset``), and the per-shard statistics
+merge under ``shard_map`` per ``policy.merge_strategy`` — "packed" (one
+all_gather of a contiguous [acc | m | l] tile, a single collective) or
+"split" (pmax + two psums) — the paper's §IV-C partial-softmax algebra as
+an SPMD collective. ``decode_attention_partial_merged`` exposes the
+shard-local sweep + merge for callers that run their own ``shard_map``
+(the serving engine's sharded decode step).
 """
 
 from __future__ import annotations
@@ -28,9 +31,11 @@ import jax.numpy as jnp
 
 from repro.runtime.policy import ExecPolicy
 from .kernel import (decode_attention_kernel, decode_attention_kernel_partial,
-                     decode_attention_bhsd)
+                     decode_attention_kernel_packed, decode_attention_bhsd)
 
 __all__ = ["decode_attention", "decode_attention_partial",
+           "decode_attention_partial_packed",
+           "decode_attention_partial_merged",
            "decode_attention_sharded", "decode_attention_policy",
            "decode_attention_bhsd"]
 
@@ -128,6 +133,78 @@ def decode_attention_partial(q, k_cache, v_cache, cache_len, seq_offset, *,
     return m, l, acc[..., :d]
 
 
+@functools.partial(jax.jit, static_argnames=("window", "sm_scale", "layout",
+                                             "block_s", "interpret",
+                                             "policy"))
+def decode_attention_partial_packed(q, k_cache, v_cache, cache_len,
+                                    seq_offset, *, window=None, sm_scale=None,
+                                    layout="bhsd", block_s=512,
+                                    interpret=None,
+                                    policy: Optional[ExecPolicy] = None):
+    """Per-shard partial statistics as ONE contiguous packed tile.
+
+    Same sweep as ``decode_attention_partial`` but the kernel writes the
+    shard's raw statistics directly into a single f32 buffer of shape
+    (B, Hkv, G, d_pad + 2) laid out ``[acc | m | l]`` — the unit the
+    single-collective merge all_gathers whole. ``d_pad`` is the
+    lane-padded head dim; merge first, then slice the accumulator back to
+    the true ``d`` (the padded lanes are zeros and fold to zeros).
+    """
+    exp_impl, accum, block_s, interpret = _policy_kernel_args(
+        policy, block_s, interpret)
+    d = q.shape[-1]
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    qp, kp, vp, clen, smax = _prepare(q, k_cache, v_cache, cache_len,
+                                      block_s, layout)
+    off = jnp.asarray(seq_offset, jnp.int32).reshape(1)
+    return decode_attention_kernel_packed(
+        qp, kp, vp, clen, off, sm_scale=scale, s_valid=smax,
+        block_s=block_s, interpret=interpret, exp_impl=exp_impl,
+        window=window, layout=layout, accum_dtype=accum)
+
+
+def decode_attention_partial_merged(q, k_cache, v_cache, cache_len,
+                                    seq_offset, *, seq_axis, window=None,
+                                    sm_scale=None, layout="bhsd",
+                                    policy: ExecPolicy):
+    """Shard-local partial sweep + collective merge (call INSIDE shard_map).
+
+    ``k_cache``/``v_cache`` are the *local* sequence slice; ``seq_offset``
+    is the absolute position of its first row and ``cache_len`` stays
+    global. The merge strategy comes from ``policy.merge_strategy``:
+
+      "packed"  the kernel emits one contiguous [acc | m | l] tile and a
+                single ``all_gather`` over ``seq_axis`` moves it — one
+                collective per merge;
+      "split"   the PR-3 form: pmax (global m) + two psums of the
+                alpha-rescaled (l, acc) — three collectives.
+
+    Both fold the exact same associative algebra; only the collective
+    count (and fp summation order) differs. This is the one merge site
+    shared by ``decode_attention_sharded`` and the serving engine's
+    sharded ``decode_step``. Returns the normalized (B, 1, H, d) output.
+    """
+    from repro.core.softmax import (SoftmaxStats, stats_merge_collective,
+                                    stats_merge_collective_packed)
+    b, _, h, d = q.shape
+    exp_fn = policy.exp_fn()
+    if policy.merge_strategy == "packed":
+        packed = decode_attention_partial_packed(
+            q, k_cache, v_cache, cache_len, seq_offset, window=window,
+            sm_scale=sm_scale, layout=layout, policy=policy)
+        stats, acc = stats_merge_collective_packed(packed, seq_axis,
+                                                   exp_fn=exp_fn)
+        acc = acc[..., :d]
+    else:
+        m, l, acc = decode_attention_partial(
+            q, k_cache, v_cache, cache_len, seq_offset, window=window,
+            sm_scale=sm_scale, layout=layout, policy=policy)
+        stats, acc = stats_merge_collective(
+            SoftmaxStats(m=m, l=l), acc, seq_axis, exp_fn=exp_fn)
+    out = acc * (1.0 / jnp.maximum(stats.l, 1e-30))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
 @functools.lru_cache(maxsize=None)
 def _sharded_program(mesh, seq_axis, window, sm_scale, layout: str,
                      policy: ExecPolicy):
@@ -135,25 +212,18 @@ def _sharded_program(mesh, seq_axis, window, sm_scale, layout: str,
     policy) — eager shard_map would retrace the whole merge every call."""
     from jax.sharding import PartitionSpec as P
     from repro.distributed.compression import shard_map
-    from repro.core.softmax import SoftmaxStats, stats_merge_collective
 
     s_ax = _seq_axis(layout)
     kv_spec = [None] * 4
     kv_spec[s_ax] = seq_axis
     kv_spec = P(*kv_spec)
-    exp_fn = policy.exp_fn()
 
     def _local(q, k, v, cl):
-        b, _, h, d = q.shape
         local_s = k.shape[s_ax]
         off = jax.lax.axis_index(seq_axis) * local_s
-        m, l, acc = decode_attention_partial(
-            q, k, v, cl, off, window=window, sm_scale=sm_scale,
-            layout=layout, policy=policy)
-        stats, acc = stats_merge_collective(
-            SoftmaxStats(m=m, l=l), acc, seq_axis, exp_fn=exp_fn)
-        out = acc * (1.0 / jnp.maximum(stats.l, 1e-30))
-        return out.reshape(b, 1, h, d).astype(q.dtype)
+        return decode_attention_partial_merged(
+            q, k, v, cl, off, seq_axis=seq_axis, window=window,
+            sm_scale=sm_scale, layout=layout, policy=policy)
 
     return jax.jit(shard_map(
         _local, mesh=mesh,
@@ -174,14 +244,24 @@ def decode_attention_sharded(q, k_cache, v_cache, cache_len, *, mesh,
     q and ``cache_len`` are replicated; ``k_cache``/``v_cache`` are (or
     will be) sharded along their sequence axis over ``mesh``'s
     ``seq_axis``. Each shard runs the Pallas sweep in partial mode with
-    ``seq_offset = axis_index * local_S`` and the shards merge through one
-    pmax + two psums (``stats_merge_collective``). Token-identical to the
-    unsharded ``decode_attention`` (the merge algebra is exact — only fp
-    summation order differs).
+    ``seq_offset = axis_index * local_S`` and the shards merge per
+    ``policy.merge_strategy``: "packed" gathers one contiguous
+    [acc | m | l] tile in a single collective; "split" is the pmax + two
+    psum form. Token-identical to the unsharded ``decode_attention``
+    either way (the merge algebra is exact — only fp summation order
+    differs). With ``policy.autotune`` the strategy is picked by timing
+    both per (device_kind, shape_bucket) through the dispatch autotuner.
     """
     b = q.shape[0]
     clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
                             (b,))
+    if policy.autotune:
+        from repro.kernels.dispatch import autotune_policy
+        policy = autotune_policy(
+            "decode_attention_sharded", policy,
+            lambda p: _sharded_program(mesh, seq_axis, window, sm_scale,
+                                       layout, p)(q, k_cache, v_cache, clen),
+            q, k_cache)
     fn = _sharded_program(mesh, seq_axis, window, sm_scale, layout, policy)
     return fn(q, k_cache, v_cache, clen)
 

@@ -9,7 +9,8 @@ stack onto the implementation the ``ExecPolicy`` selects:
     softmax                   kernels.softmax (fused)     core softmax         core
     flash_attention           kernels.flash_attention     core attention_flash core attention_xla
     decode_attention          kernels.decode_attention    core decode          core decode
-    decode_attention_sharded  shard_map partial + psum    core decode (GSPMD)  core decode (GSPMD)
+    decode_attention_sharded  shard_map partial +         core decode (GSPMD)  core decode (GSPMD)
+                              packed/split stats merge
 
 All returned callables accept ``policy=`` and thread the policy's exp
 backend / block sizes / interpret flag down to the kernel bodies, so a
@@ -173,6 +174,11 @@ CANDIDATES = {
                         for q, k in ((64, 64), (128, 128),
                                      (128, 256), (256, 128))],
     "decode_attention": [{"block_s": s} for s in (256, 512, 1024)],
+    # Sequence-parallel decode tunes the *merge strategy*: one packed
+    # all_gather of the contiguous (acc | m | l) tile vs the pmax + 2×psum
+    # split form. Same algebra; the winner is interconnect-dependent.
+    "decode_attention_sharded": [{"merge_strategy": "packed"},
+                                 {"merge_strategy": "split"}],
 }
 
 # repr((device_kind, op, shape_bucket, policy_sans_blocks)) -> winning
@@ -225,18 +231,43 @@ def load_autotune_cache(path: Optional[str] = None) -> int:
 
 def save_autotune_cache(path: Optional[str] = None) -> Optional[str]:
     """Atomically persist the in-process cache; best-effort (a read-only
-    filesystem must never break serving). Returns the path written."""
+    filesystem must never break serving). Returns the path written.
+
+    Concurrent-serve safe: the write goes through a private tmpfile +
+    ``os.replace`` (readers never observe a torn file), and the entries a
+    *different* process persisted since we last read the file are merged
+    back in before writing (in-process winners take precedence on key
+    collisions — both processes timed the same bucket, either answer is
+    valid). Two engines racing the JSON therefore converge on the union
+    of their winners instead of the last writer clobbering the first.
+    """
     path = path if path is not None else autotune_cache_path()
     if not path or not _AUTOTUNE_CACHE:
         return None
     try:
         cache_dir = os.path.dirname(path) or "."
         os.makedirs(cache_dir, exist_ok=True)
+        merged: Dict[str, dict] = {}
+        try:
+            with open(path) as fh:
+                on_disk = json.load(fh).get("entries", {})
+            merged.update({k: v for k, v in on_disk.items()
+                           if isinstance(k, str) and isinstance(v, dict)})
+        except (OSError, ValueError, AttributeError):
+            pass                      # missing/corrupt file: start fresh
+        merged.update(_AUTOTUNE_CACHE)
         fd, tmp = tempfile.mkstemp(dir=cache_dir, prefix=".autotune-")
-        with os.fdopen(fd, "w") as fh:
-            json.dump({"version": _CACHE_VERSION,
-                       "entries": _AUTOTUNE_CACHE}, fh, indent=1)
-        os.replace(tmp, path)
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump({"version": _CACHE_VERSION, "entries": merged},
+                          fh, indent=1)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)        # never leave tmp droppings behind
+            except OSError:
+                pass
+            raise
         return path
     except OSError:
         return None

@@ -26,6 +26,22 @@ group owns one ExecPolicy, one cache pool and exactly one decode
 executable (PR 1's one-executable-per-policy contract), so eval traffic
 can run ``exact`` numerics while bulk traffic runs ``vexp`` without
 contaminating each other's batches or caches.
+
+The decode hot loop is collective- and copy-minimal:
+
+* **SPMD wiring** — when ``distributed.sharding.decode_kv_axis`` reports
+  a sequence-sharded decode cache on the serving mesh, each
+  pallas-backend group's decode step is ONE ``shard_map`` program built
+  at engine startup: per layer, the token's K/V land on the owning shard
+  (drop-mode scatter), every shard sweeps its slice in
+  partial-statistics mode, and the statistics fold through the policy's
+  ``merge_strategy`` — "packed" is a single all_gather of the contiguous
+  (acc | m | l) tile, i.e. exactly one collective per layer.
+* **Donated step** — the KV cache and the per-slot position vector are
+  donated through the decode program (buffers reused in place: no cache
+  re-allocation per step), positions advance device-side (`pos + live`),
+  and emitted tokens stay device-resident — a steady-state decode step
+  performs zero host syncs and zero host->device transfers.
 """
 
 from __future__ import annotations
@@ -70,17 +86,28 @@ def _len_bucket(n: int, cap: int) -> int:
     return min(b, cap)
 
 
-# (repr(cfg), policy) -> (prefill_fn, prefill_plain_fn, decode_fn).
-# jax.jit caches per function object, so the jitted closures must outlive
-# any one Server — otherwise every server restart recompiles the programs.
-# Greedy serving never reads logits on the host, so all programs return
-# argmaxed (B, 1) token ids — one fused executable per step, no eager
-# argmax dispatches.
+# (repr(cfg), policy, kv_axis[, mesh]) -> (prefill_fn, prefill_plain_fn,
+# decode_fn). jax.jit caches per function object, so the jitted closures
+# must outlive any one Server — otherwise every server restart recompiles
+# the programs. Greedy serving never reads logits on the host, so all
+# programs return argmaxed (B, 1) token ids — one fused executable per
+# step, no eager argmax dispatches.
+#
+# decode_fn(params, last, cache, pos, live) -> (next, cache, pos + live):
+# the KV cache and the per-slot position vector are DONATED (their input
+# buffers are reused for the outputs), so a decode step allocates no new
+# cache and the slot positions advance device-side — the hot loop performs
+# zero host->device transfers and zero host syncs.
 _PROGRAM_CACHE: dict = {}
 
 
-def _programs(cfg, policy):
-    key = (repr(cfg), policy)
+def _programs(cfg, policy, mesh=None, kv_axis=None, decode_policy=None):
+    # decode_policy: the (possibly merge-strategy-autotuned) policy the
+    # decode program is built against; prefill keeps the group policy so
+    # its in-jit autotune cache reads stay live.
+    dpol = policy if decode_policy is None else decode_policy
+    key = (repr(cfg), policy, dpol, kv_axis,
+           mesh if kv_axis is not None else None)
     if key not in _PROGRAM_CACHE:
         pol = policy
 
@@ -96,26 +123,69 @@ def _programs(cfg, policy):
                                         policy=pol)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
-        def decode_fn(p, t, c, pos):
-            logits, cache = api.decode_step(p, cfg, t, c, pos, policy=pol)
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+        if kv_axis is None:
+            def decode_fn(p, t, c, pos, live):
+                logits, cache = api.decode_step(p, cfg, t, c, pos,
+                                                policy=dpol)
+                return (jnp.argmax(logits, -1).astype(jnp.int32), cache,
+                        pos + live)
+
+            decode = jax.jit(decode_fn, donate_argnums=(2, 3))
+        else:
+            # Sequence-sharded decode: ONE shard_map program per policy
+            # group, built here at engine startup — the fused
+            # partial-statistics path instead of GSPMD lowering. The
+            # cache lives (and stays) sharded along its S axis; each
+            # layer's shard statistics fold through the policy's merge
+            # strategy ("packed": one collective per layer).
+            from jax.sharding import PartitionSpec as P
+            from repro.distributed.compression import shard_map
+            from repro.distributed.sharding import serve_cache_sharding
+            from repro.models.transformer import decode_step_sharded
+            # one source of truth for the pool placement: the program's
+            # in/out specs are the spec of the sharding the engine
+            # allocates the pool under.
+            cspec = {name: s.spec for name, s in
+                     serve_cache_sharding(cfg, mesh, kv_axis).items()}
+
+            def decode_local(p, t, c, pos, live):
+                logits, c = decode_step_sharded(p, cfg, t, c, pos,
+                                                policy=dpol,
+                                                seq_axis=kv_axis)
+                return (jnp.argmax(logits, -1).astype(jnp.int32), c,
+                        pos + live)
+
+            decode = jax.jit(
+                shard_map(decode_local, mesh=mesh,
+                          in_specs=(P(), P(), cspec, P(), P()),
+                          out_specs=(P(), cspec, P())),
+                donate_argnums=(2, 3))
 
         _PROGRAM_CACHE[key] = (jax.jit(prefill_fn),
                                jax.jit(prefill_plain_fn),
-                               jax.jit(decode_fn))
+                               decode)
     return _PROGRAM_CACHE[key]
 
 
-def _autotune_warmup(cfg, policy, max_batch, cache_s):
+def _autotune_warmup(cfg, policy, max_batch, cache_s, mesh=None,
+                     kv_axis=None):
     """Eagerly tune the decode-attention block size for this group's decode
     shape. Timing is meaningless inside the jitted decode program (tracers,
     not device work), so the tuner only ever *reads* its cache there — this
     one eager call at the real (max_batch, cache_s) shape times the
     candidates, memoizes the winner for the jit path to pick up, and
-    persists it to disk so the next server start skips even this."""
+    persists it to disk so the next server start skips even this.
+
+    On a sequence-sharded group it additionally times the two collective
+    merge strategies (packed single-collective vs pmax+2×psum) at the
+    group's exact decode shape and returns the policy with the winner
+    baked in (the shard_map decode program takes the policy statically,
+    so the engine must resolve it before building the program). Returns
+    the — possibly tuned — policy.
+    """
     if not policy.autotune or policy.kernel_backend != "pallas":
-        return
-    from repro.kernels.dispatch import dispatch
+        return policy
+    from repro.kernels.dispatch import dispatch, autotune_policy
     lay = cfg.kv_cache_layout
     kv_shape = ((max_batch, cfg.n_kv_heads, cache_s, cfg.hd)
                 if lay == "bhsd" else
@@ -126,6 +196,19 @@ def _autotune_warmup(cfg, policy, max_batch, cache_s):
     clen = jnp.full((max_batch,), cache_s, jnp.int32)
     dispatch("decode_attention", policy)(q, kv, kv, clen, layout=lay,
                                          policy=policy)
+    if kv_axis is None:
+        return policy
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.kernels.decode_attention.ops import _sharded_program
+    from repro.models.transformer import cache_seq_axis as _csa
+    spec = [None] * 4
+    spec[_csa(lay, stacked=False)] = kv_axis
+    kvs = jax.device_put(kv, NamedSharding(mesh, P(*spec)))
+    return autotune_policy(
+        "decode_attention_sharded", policy,
+        lambda p: _sharded_program(mesh, kv_axis, None, None, lay,
+                                   p)(q, kvs, kvs, clen),
+        q, kvs)
 
 
 class _Group:
@@ -140,14 +223,37 @@ class _Group:
     driver it replaced.
     """
 
-    def __init__(self, cfg, params, policy, max_batch, cache_s):
+    def __init__(self, cfg, params, policy, max_batch, cache_s, *,
+                 mesh=None, kv_axis=None):
         self.cfg, self.params, self.policy = cfg, params, policy
         self.max_batch, self.cache_s = max_batch, cache_s
+        self.mesh, self.kv_axis = mesh, kv_axis
         self.queue: deque = deque()
         self.reqs: list = [None] * max_batch
         self.lens = np.zeros(max_batch, np.int64)   # valid cache positions
         self.ntok = np.zeros(max_batch, np.int64)   # tokens emitted per slot
-        self.last = jnp.zeros((max_batch, 1), jnp.int32)  # device tokens
+        # Device-side slot state: last tokens, per-slot decode positions and
+        # a 0/1 liveness vector. The decode program advances pos by live
+        # in-place (donated), so the steady-state loop never ships a
+        # position vector host->device; lens/ntok above are host *mirrors*
+        # maintained from scheduling events alone (never read back).
+        self.last = jnp.zeros((max_batch, 1), jnp.int32)
+        self.pos_dev = jnp.zeros((max_batch,), jnp.int32)
+        self.live_dev = jnp.zeros((max_batch,), jnp.int32)
+        self._repl = None           # mesh-replicated sharding (SPMD groups)
+        self._cache_shard = None    # sharded cache placement (SPMD groups)
+        if kv_axis is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.distributed.sharding import serve_cache_sharding
+            self._repl = NamedSharding(mesh, P())
+            self._cache_shard = serve_cache_sharding(cfg, mesh, kv_axis)
+            # decode runs over the mesh; prefill stays on the default
+            # device (its outputs are re-placed at admission).
+            self.params_decode = jax.device_put(params, self._repl)
+            self.last, self.pos_dev, self.live_dev = jax.device_put(
+                (self.last, self.pos_dev, self.live_dev), self._repl)
+        else:
+            self.params_decode = params
         self.cache = None                           # allocated on first admit
         self.decode_steps = 0
         self.decode_s: list = []    # per-step *dispatch* wall time (async:
@@ -155,9 +261,11 @@ class _Group:
                                     # latency, measured at the finish sync)
         self.req_lat: list = []     # per-request submit->done wall latency
         self._toks: dict = {}                       # slot -> [(B,1) arrays]
-        _autotune_warmup(cfg, policy, max_batch, cache_s)
+        decode_policy = _autotune_warmup(cfg, policy, max_batch, cache_s,
+                                         mesh, kv_axis)
         (self._prefill, self._prefill_plain,
-         self._decode) = _programs(cfg, policy)
+         self._decode) = _programs(cfg, policy, mesh, kv_axis,
+                                   decode_policy)
 
     # ------------------------------------------------------------ admission
 
@@ -191,6 +299,11 @@ class _Group:
         else:
             first, pref = self._prefill(self.params, jnp.asarray(toks),
                                         jnp.asarray(plens))
+        if self._repl is not None:
+            # SPMD group: prefill ran on the default device; move its
+            # outputs onto the decode mesh (tokens replicated, cache rows
+            # merged into the mesh-sharded pool below).
+            first = jax.device_put(first, self._repl)
         # write admitted rows into the persistent slot pool; the sequence
         # axis is resolved from the cache layout — "bshd" stacked caches
         # are (L, B, S, Hkv, hd), "bhsd" are (L, B, Hkv, S, hd).
@@ -201,20 +314,32 @@ class _Group:
             pad = [(0, 0)] * pref["k"].ndim
             pad[ax] = (0, self.cache_s - sp)
             self.cache = {n: jnp.pad(pref[n], pad) for n in ("k", "v")}
+            if self._cache_shard is not None:
+                self.cache = jax.device_put(self.cache, self._cache_shard)
             self.last = first
         else:
             if self.cache is None:
                 self.cache = api.init_cache(self.cfg, self.max_batch,
                                             self.cache_s)
+                if self._cache_shard is not None:
+                    self.cache = jax.device_put(self.cache,
+                                                self._cache_shard)
             idx = [slice(None)] * self.cache["k"].ndim
             idx[1] = slots
             idx[ax] = slice(0, sp)
             idx = tuple(idx)
             row = (slice(None), slots)
             for name in ("k", "v"):
-                self.cache[name] = \
-                    self.cache[name].at[idx].set(pref[name][row])
+                rows = pref[name][row]
+                if self._repl is not None:
+                    rows = jax.device_put(rows, self._repl)
+                self.cache[name] = self.cache[name].at[idx].set(rows)
             self.last = self.last.at[slots].set(first[slots])
+        # one batched device-side slot-state update per admission wave
+        sl = jnp.asarray(slots)
+        self.pos_dev = self.pos_dev.at[sl].set(
+            jnp.asarray([len(r.prompt) for _, r in take], jnp.int32))
+        self.live_dev = self.live_dev.at[sl].set(1)
         now = time.perf_counter()
         for j, r in take:
             self.reqs[j] = r
@@ -243,12 +368,13 @@ class _Group:
             return
         # dead slots decode their stale token at position 0: harmless (the
         # slot has no request, and admission prefill overwrites row 0
-        # before the slot is read again).
-        pos = np.zeros(self.max_batch, np.int32)
-        pos[live] = self.lens[live]
+        # before the slot is read again). The position vector lives on
+        # device (live slots advance by +1 inside the donated program), so
+        # the hot loop ships nothing host->device and syncs on nothing.
         t0 = time.perf_counter()
-        nxt, self.cache = self._decode(self.params, self.last,
-                                       self.cache, jnp.asarray(pos))
+        nxt, self.cache, self.pos_dev = self._decode(
+            self.params_decode, self.last, self.cache, self.pos_dev,
+            self.live_dev)
         self.last = nxt
         self.decode_s.append(time.perf_counter() - t0)
         self.decode_steps += 1
@@ -269,6 +395,10 @@ class _Group:
         r.t_done = time.perf_counter()   # after the sync: true completion
         self.req_lat.append(r.t_done - r.t_submit)
         self.reqs[j] = None          # slot freed; next admit() reuses it
+        # park the slot device-side (live=0 excludes it from position
+        # advance; pos=0 matches the dead-slot write convention)
+        self.live_dev = self.live_dev.at[j].set(0)
+        self.pos_dev = self.pos_dev.at[j].set(0)
 
     @property
     def busy(self) -> bool:
@@ -290,7 +420,8 @@ class Server:
 
     def __init__(self, cfg, params, *, max_batch=4, max_seq=512, mesh=None,
                  policy: ExecPolicy | None = None,
-                 policy_groups: Optional[dict] = None):
+                 policy_groups: Optional[dict] = None,
+                 kv_mode: str = "auto"):
         if cfg.family in ("ssm", "hybrid", "audio"):
             raise NotImplementedError(
                 f"the slot engine serves transformer-family configs; "
@@ -310,13 +441,30 @@ class Server:
                 print(f"[serve] autotune: {n} block-size winners loaded "
                       f"from {_dispatch.autotune_cache_path()}")
         self.cache_s = min(max_seq, cfg.sliding_window or max_seq)
+        # Serve-loop SPMD wiring: when the cache placement rules report a
+        # sequence-sharded decode cache on this mesh, pallas-backend groups
+        # route their decode step through the fused sharded path (one
+        # shard_map program per group, built once here at startup) instead
+        # of GSPMD-lowering the unsharded program. Windowed archs keep the
+        # GSPMD path (the ring-buffer wrap write straddles shards).
+        self.kv_axis = None
+        if cfg.sliding_window is None:
+            from repro.distributed.sharding import decode_kv_axis
+            ax = decode_kv_axis(cfg, self.mesh, max_batch, kv_mode=kv_mode)
+            if (ax is not None and self.mesh.shape[ax] > 1
+                    and self.cache_s % self.mesh.shape[ax] == 0):
+                self.kv_axis = ax
         groups = dict(policy_groups) if policy_groups else {}
         if "default" not in groups:
             groups["default"] = self.policy
         self.policy_groups = groups
-        self._groups = {name: _Group(cfg, params, pol, max_batch,
-                                     self.cache_s)
-                        for name, pol in groups.items()}
+        self._groups = {
+            name: _Group(cfg, params, pol, max_batch, self.cache_s,
+                         mesh=self.mesh,
+                         kv_axis=(self.kv_axis
+                                  if pol.kernel_backend == "pallas"
+                                  else None))
+            for name, pol in groups.items()}
         self.admit_log: list = []    # rids in admission order (tests/debug)
 
     # ------------------------------------------------------------ scheduling
@@ -373,6 +521,7 @@ class Server:
                 "p95_req_s": lat[min(int(len(lat) * 0.95),
                                      len(lat) - 1)] if lat else 0.0,
                 "policy": g.policy.describe(),
+                "kv_axis": g.kv_axis,
             }
         return out
 
@@ -401,6 +550,15 @@ def main():
                          'round-robin); omit for a single default group')
     ap.add_argument("--autotune", action="store_true",
                     help="autotune kernel block sizes per shape bucket")
+    ap.add_argument("--kv-mode", default="auto",
+                    choices=["auto", "seq", "batch"],
+                    help='decode-cache placement: "seq" shards the KV '
+                         'sequence dim over the mesh\'s model axis '
+                         '(sequence-parallel fused decode); "auto" follows '
+                         'distributed.sharding.cache_specs')
+    ap.add_argument("--mesh-model", type=int, default=None,
+                    help="model-axis size of the serving mesh (default: "
+                         "all devices when --kv-mode seq, else 1)")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.reduced:
@@ -416,9 +574,14 @@ def main():
         for name, pol in groups.items():
             print(f"[serve]   group {name}: {pol.describe()}")
     params = api.init_params(cfg, jax.random.PRNGKey(0))
+    n_model = args.mesh_model or (len(jax.devices())
+                                  if args.kv_mode == "seq" else 1)
+    mesh = make_host_mesh(1, n_model)
     server = Server(cfg, params, max_batch=args.max_batch,
-                    max_seq=args.max_seq, policy=policy,
-                    policy_groups=groups)
+                    max_seq=args.max_seq, mesh=mesh, policy=policy,
+                    policy_groups=groups, kv_mode=args.kv_mode)
+    print(f"[serve] mesh {dict(server.mesh.shape)}; sharded decode axis: "
+          f"{server.kv_axis}")
     rng = np.random.default_rng(0)
     names = sorted(groups) if groups else ["default"]
     reqs = []

@@ -102,25 +102,40 @@ def _rope_pos(b, pos):
     return jnp.full((b, 1), pos, jnp.int32)
 
 
-def _write_token_kv(cache, kv, pos, layout):
+def _write_token_kv(cache, kv, pos, layout, *, oob_drop=False):
     """Write one token's K (or V) into the cache at ``pos``.
 
     kv: (B, 1, Hkv, hd) for "bshd" / (B, Hkv, 1, hd) for "bhsd".
     ``pos`` scalar writes one slice (dynamic_update_slice); a per-slot
     (B,) vector scatters each row at its own position, so ragged slots in
     a continuous batch never touch each other's cache rows.
+
+    ``oob_drop`` makes out-of-range rows drop instead of clamp — the
+    sequence-sharded decode path hands every shard the same write with
+    *local* positions, and only the shard whose slice contains the token
+    may land it (vector ``pos`` only). ``mode="drop"`` alone is not
+    enough: scatter indices in ``[-S, 0)`` would *wrap* numpy-style
+    before the drop logic sees them, so shards below the owner would
+    land spurious rows — remap every out-of-slice position to S (a
+    genuinely droppable index) first.
     """
     kv = kv.astype(cache.dtype)
     if jnp.ndim(pos) == 0:
+        assert not oob_drop, "oob_drop needs a per-row position vector"
         ax = 2 if layout == "bhsd" else 1
         return jax.lax.dynamic_update_slice_in_dim(cache, kv, pos, axis=ax)
+    kw = {}
+    if oob_drop:
+        s = cache.shape[2 if layout == "bhsd" else 1]
+        pos = jnp.where((pos >= 0) & (pos < s), pos, s)
+        kw = {"mode": "drop"}
     b = cache.shape[0]
     if layout == "bhsd":
         hkv = cache.shape[1]
         return cache.at[jnp.arange(b)[:, None],
                         jnp.arange(hkv)[None, :],
-                        pos[:, None]].set(kv[:, :, 0])
-    return cache.at[jnp.arange(b), pos].set(kv[:, 0])
+                        pos[:, None]].set(kv[:, :, 0], **kw)
+    return cache.at[jnp.arange(b), pos].set(kv[:, 0], **kw)
 
 
 def attn_decode(x, p, cfg, cache_k, cache_v, pos, *, window=None,
@@ -140,6 +155,37 @@ def attn_decode(x, p, cfg, cache_k, cache_v, pos, *, window=None,
     o = decode_attention(q, ck, cv, cache_len=pos + 1, window=window,
                          exp_impl=cfg.exp_impl, mm_dtype=cfg.attn_mm_dtype,
                          layout=lay, policy=policy)
+    return o.reshape(b, 1, -1) @ p["wo"], (ck, cv)
+
+
+def attn_decode_sharded(x, p, cfg, cache_k, cache_v, pos, *, seq_axis,
+                        policy):
+    """Single-token decode over a sequence-sharded KV cache (call INSIDE
+    ``shard_map``). ``cache_[kv]`` are each shard's *local* S-slice; every
+    shard computes the token's K/V (tiny, replicated work), lands it with
+    an out-of-bounds-dropping scatter at its local position — so exactly
+    the shard whose slice contains ``pos`` writes — and sweeps its slice
+    in partial-statistics mode; the shards fold through the policy's
+    merge strategy (one packed all_gather, or pmax + 2×psum). The only
+    collective of the whole step is that merge."""
+    b = x.shape[0]
+    lay = cfg.kv_cache_layout
+    q, k, v = _qkv(x, p, cfg, _rope_pos(b, pos))
+    if lay == "bhsd":
+        k = k.transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+    s_ax = cache_seq_axis(lay, stacked=False)
+    local_s = cache_k.shape[s_ax]
+    off = jax.lax.axis_index(seq_axis) * local_s
+    gpos = jnp.asarray(pos, jnp.int32)
+    lpos = jnp.broadcast_to(gpos.reshape(-1), (b,)) - off
+    ck = _write_token_kv(cache_k, k, lpos, lay, oob_drop=True)
+    cv = _write_token_kv(cache_v, v, lpos, lay, oob_drop=True)
+    from repro.kernels.decode_attention.ops import \
+        decode_attention_partial_merged
+    o = decode_attention_partial_merged(
+        q, ck, cv, gpos + 1, off, seq_axis=seq_axis, layout=lay,
+        policy=policy)
     return o.reshape(b, 1, -1) @ p["wo"], (ck, cv)
 
 
@@ -408,12 +454,54 @@ def decode_step(params, cfg, token, cache, pos, *, policy=None):
     x, cache = jax.lax.scan(body, x, (params["layers"],
                                       cache["k"], cache["v"]),
                             unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    return _final_logits(params, cfg, x), cache
+
+
+def _final_logits(params, cfg, x):
     x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
     ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
     logits = jnp.einsum("bsd,dv->bsv", x.astype(ldt),
                         unembed_matrix(params, cfg).astype(ldt),
                         preferred_element_type=jnp.float32)
-    return mask_padded_logits(logits, cfg.vocab), cache
+    return mask_padded_logits(logits, cfg.vocab)
+
+
+def decode_step_sharded(params, cfg, token, cache, pos, *, policy, seq_axis):
+    """One decode step over a sequence-sharded KV cache — the body the
+    serving engine wraps in ``shard_map`` (params/token/pos replicated,
+    cache sharded along its S axis over ``seq_axis``).
+
+    Per layer: the token's K/V land on exactly the shard owning position
+    ``pos`` (drop-mode scatter at local coordinates), each shard sweeps
+    its slice in partial-statistics mode, and the statistics fold through
+    ``policy.merge_strategy`` — with "packed" that is ONE collective per
+    layer; everything outside attention is replicated compute. Windowed
+    (ring-buffer) archs keep the GSPMD path: the wrap-around write
+    straddles shard boundaries.
+    """
+    if cfg.sliding_window:
+        raise NotImplementedError(
+            "sequence-sharded decode covers linear caches; windowed "
+            "ring-buffer caches decode through the GSPMD path")
+    x = embed_inputs(params, cfg, token)
+    dt = _cdtype(cfg)
+
+    def body(x, inp):
+        layer_p, ck, cv = inp
+        layer_p = jax.tree.map(lambda a: a.astype(dt)
+                               if a.dtype == jnp.float32 and a.ndim > 1
+                               else a, layer_p)
+        h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
+        a, (ck, cv) = attn_decode_sharded(h, layer_p["attn"], cfg, ck, cv,
+                                          pos, seq_axis=seq_axis,
+                                          policy=policy)
+        x = _finish_block(x, h, a, layer_p, cfg, policy=policy)
+        return x, {"k": ck, "v": cv}
+
+    x, cache = jax.lax.scan(body, x, (params["layers"],
+                                      cache["k"], cache["v"]),
+                            unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    return _final_logits(params, cfg, x), cache
 
 
 def _qkv_single(x, layer_p, cfg, pos):

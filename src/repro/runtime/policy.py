@@ -26,6 +26,7 @@ from typing import Callable, Mapping, Optional
 EXP_BACKENDS = ("exact", "vexp", "vexp_hw")
 KERNEL_BACKENDS = ("pallas", "reference", "xla")
 ACCUM_DTYPES = ("float32", "bfloat16")
+MERGE_STRATEGIES = ("packed", "split")
 
 # Canonical correspondence between policy kernel backends and the legacy
 # ``attention_impl`` names (the pure-jnp flash scan is the reference
@@ -49,6 +50,7 @@ _ENV_FIELDS = {
     "INTERPRET": "interpret",
     "ACCUM_DTYPE": "accum_dtype",
     "AUTOTUNE": "autotune",
+    "MERGE_STRATEGY": "merge_strategy",
 }
 
 _TRUTHY = ("1", "true", "yes", "on")
@@ -75,6 +77,12 @@ class ExecPolicy:
                     accumulate in f32).
     autotune        pick block sizes by timing candidates per device+shape
                     bucket (memoized in kernels.dispatch).
+    merge_strategy  how sequence-parallel decode folds per-shard softmax
+                    statistics: "packed" all_gathers one contiguous
+                    (acc | m | l) tile — a single collective per merge —
+                    and folds locally; "split" is the pmax + 2×psum
+                    three-collective form. Identical algebra either way;
+                    autotune times both per (device kind, shape bucket).
     """
 
     exp_backend: str = "vexp"
@@ -86,6 +94,7 @@ class ExecPolicy:
     interpret: Optional[bool] = None
     accum_dtype: str = "float32"
     autotune: bool = False
+    merge_strategy: str = "packed"
 
     def __post_init__(self):
         if self.exp_backend not in EXP_BACKENDS:
@@ -98,6 +107,10 @@ class ExecPolicy:
         if self.accum_dtype not in ACCUM_DTYPES:
             raise ValueError(
                 f"accum_dtype {self.accum_dtype!r} not in {ACCUM_DTYPES}")
+        if self.merge_strategy not in MERGE_STRATEGIES:
+            raise ValueError(
+                f"merge_strategy {self.merge_strategy!r} "
+                f"not in {MERGE_STRATEGIES}")
         if self.accum_dtype == "bfloat16" and self.kernel_backend != "pallas":
             # Only the Pallas kernels carry (m, l, acc) in policy-selected
             # scratch dtypes; the reference/xla paths accumulate in f32
@@ -135,7 +148,8 @@ class ExecPolicy:
         return (f"exp={self.exp_backend} kernel={self.kernel_backend} "
                 f"blocks=(q{self.block_q},k{self.block_k},"
                 f"r{self.block_rows},s{self.block_s}) "
-                f"accum={self.accum_dtype} autotune={self.autotune}")
+                f"accum={self.accum_dtype} merge={self.merge_strategy} "
+                f"autotune={self.autotune}")
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)

@@ -283,6 +283,69 @@ class TestPerSlotDecodeKernel:
                                        rtol=2e-3)
 
 
+# -------------------------------------------------- donated zero-copy decode
+
+class TestDonatedDecodeStep:
+    def test_cache_and_pos_buffers_donated(self, cfg, params):
+        """The decode step donates the KV cache and the slot-position
+        vector: the pre-step buffers must be consumed (reused in place),
+        not left alive next to freshly allocated outputs."""
+        srv = Server(cfg, params, max_batch=2, max_seq=64)
+        prompts = _prompts(cfg, (5,))
+        srv.submit(Request(0, prompts[0].copy(), 8))
+        g = srv._groups["default"]
+        g.admit()
+        cache_before, pos_before = g.cache["k"], g.pos_dev
+        g.decode_once()
+        assert cache_before.is_deleted(), "KV cache was re-allocated"
+        assert pos_before.is_deleted(), "position buffer was copied"
+        srv.drain()
+
+    def test_positions_advance_device_side(self, cfg, params):
+        """Slot positions live on device and advance by the liveness
+        vector inside the decode program — the host mirrors (lens) must
+        stay in lockstep without ever being shipped down."""
+        srv = Server(cfg, params, max_batch=2, max_seq=64)
+        prompts = _prompts(cfg, (5, 9))
+        srv.submit(Request(0, prompts[0].copy(), 6))
+        srv.submit(Request(1, prompts[1].copy(), 3))
+        g = srv._groups["default"]
+        g.admit()
+        for _ in range(4):
+            g.decode_once()
+        live = [j for j in range(2) if g.reqs[j] is not None]
+        pos = np.asarray(g.pos_dev)
+        for j in range(2):
+            expect = g.lens[j] if j in live else 0   # parked at finish
+            assert pos[j] == expect, (j, pos, g.lens)
+        srv.drain()
+
+
+def test_write_token_kv_oob_drop_negative_positions():
+    """The sharded decode write hands every shard the same token with
+    shard-local positions: anything outside [0, S) — including *negative*
+    positions, which a bare mode="drop" scatter would wrap numpy-style —
+    must leave the cache untouched."""
+    from repro.models.transformer import _write_token_kv
+    for layout in ("bshd", "bhsd"):
+        shape = (2, 5, 3, 8) if layout == "bshd" else (2, 3, 5, 8)
+        kv_shape = (2, 1, 3, 8) if layout == "bshd" else (2, 3, 1, 8)
+        cache = jnp.zeros(shape, jnp.float32)
+        kv = jnp.ones(kv_shape, jnp.float32)
+        # row 0 in-slice at 1; row 1 below the slice (the owner's
+        # neighbour shard sees lpos in [-S, 0)) — must drop, not wrap
+        out = _write_token_kv(cache, kv, jnp.array([1, -2]), layout,
+                              oob_drop=True)
+        s_ax = cache_seq_axis(layout, stacked=False)
+        rows = np.asarray(jnp.moveaxis(out, s_ax, 1))    # (B, S, ...)
+        assert (rows[0, 1] == 1).all(), layout
+        assert (rows[1] == 0).all(), f"{layout}: negative pos wrapped"
+        # above the slice: also dropped
+        out2 = _write_token_kv(cache, kv, jnp.array([5, 7]), layout,
+                               oob_drop=True)
+        assert (np.asarray(out2) == 0).all(), layout
+
+
 # ------------------------------------------------------- cache layout axis
 
 def test_cache_seq_axis():

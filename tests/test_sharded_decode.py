@@ -197,6 +197,196 @@ class TestShardedDecode:
         assert res["delta"] < 2e-3
 
 
+@pytest.mark.slow
+class TestPackedMerge:
+    """ISSUE 4 tentpole: the packed single-collective (m, l, acc) merge."""
+
+    @pytest.mark.parametrize("layout", ["bshd", "bhsd"])
+    def test_packed_token_identity_all_exp_backends(self, layout):
+        """merge_strategy="packed" == "split" == unsharded fused decode —
+        allclose values and identical greedy tokens under all three exp
+        backends, both layouts, ragged (B,) lengths including a length-1
+        row and a shard-boundary-straddling one."""
+        res = _run_sub(f"""
+        layout = {layout!r}
+        b, h, hkv, d, smax = 3, 8, 4, 64, 1024
+        q, kc, vc = qkv(b, h, hkv, d, smax, layout, seed=2)
+        clen = jnp.array([1, 700, 1024], jnp.int32)
+        w = jax.random.normal(jax.random.PRNGKey(7), (h * d, 256),
+                              jnp.float32)
+        mesh = mesh2x4()
+        kcs, vcs = shard_cache(mesh, kc, vc, layout)
+        out = {{}}
+        for exp in ("exact", "vexp", "vexp_hw"):
+            row = {{}}
+            ref = decode_attention(
+                q, kc, vc, clen, layout=layout,
+                policy=ExecPolicy(exp_backend=exp, kernel_backend="pallas",
+                                  block_s=128))
+            tok_r = jnp.argmax(ref.reshape(b, -1) @ w, -1)
+            for strat in ("packed", "split"):
+                pol = ExecPolicy(exp_backend=exp, kernel_backend="pallas",
+                                 block_s=128, merge_strategy=strat)
+                with mesh:
+                    shr = decode_attention_sharded(
+                        q, kcs, vcs, clen, mesh=mesh, layout=layout,
+                        policy=pol)
+                tok_s = jnp.argmax(shr.reshape(b, -1) @ w, -1)
+                row[strat] = {{
+                    "delta": float(jnp.abs(ref - shr).max()),
+                    "tokens_equal": bool((tok_r == tok_s).all()),
+                }}
+            out[exp] = row
+        print(json.dumps(out))
+        """)
+        for exp, row in res.items():
+            for strat, r in row.items():
+                assert r["tokens_equal"], f"{exp}/{strat}: tokens diverged"
+                assert r["delta"] < 2e-3, f"{exp}/{strat}: {r['delta']}"
+
+    def test_packed_is_single_collective(self):
+        """The whole point: the packed program lowers to exactly ONE
+        collective (one stablehlo.all_gather, no all_reduce); the split
+        program carries three all_reduces (pmax + 2 psum)."""
+        res = _run_sub("""
+        import re
+        from repro.kernels.decode_attention.ops import _sharded_program
+        b, h, hkv, d, smax = 3, 8, 4, 64, 1024
+        q, kc, vc = qkv(b, h, hkv, d, smax, "bshd")
+        clen = jnp.array([1, 700, 1024], jnp.int32)
+        mesh = mesh2x4()
+        kcs, vcs = shard_cache(mesh, kc, vc, "bshd")
+        out = {}
+        for strat in ("packed", "split"):
+            pol = ExecPolicy(kernel_backend="pallas", block_s=128,
+                             merge_strategy=strat)
+            txt = _sharded_program(mesh, "model", None, None, "bshd",
+                                   pol).lower(q, kcs, vcs, clen).as_text()
+            out[strat] = {
+                "all_gather": len(re.findall(
+                    r'stablehlo\\.all_gather"', txt)),
+                "all_reduce": len(re.findall(
+                    r'stablehlo\\.all_reduce"', txt)),
+            }
+        print(json.dumps(out))
+        """)
+        assert res["packed"] == {"all_gather": 1, "all_reduce": 0}
+        assert res["split"] == {"all_gather": 0, "all_reduce": 3}
+
+    def test_overflow_guard_large_m_spread(self):
+        """Per-shard maxima spread over hundreds of logits: the packed
+        fold subtracts the global max *before* exponentiation, so huge
+        spreads must neither overflow nor diverge from the unsharded
+        kernel (which sweeps the same scores sequentially)."""
+        res = _run_sub("""
+        b, h, hkv, d, smax = 2, 4, 2, 64, 512
+        q, kc, vc = qkv(b, h, hkv, d, smax, "bshd", seed=13)
+        # scores ~ N(0, 60^2): per-shard m values land hundreds apart,
+        # exp(m_i) alone would overflow f32 (exp(200) = inf)
+        q = q * 60.0
+        clen = jnp.array([313, 512], jnp.int32)
+        mesh = mesh2x4()
+        kcs, vcs = shard_cache(mesh, kc, vc, "bshd")
+        out = {}
+        for exp in ("exact", "vexp"):
+            pol = ExecPolicy(exp_backend=exp, kernel_backend="pallas",
+                             block_s=128, merge_strategy="packed")
+            ref = decode_attention(q, kc, vc, clen, layout="bshd",
+                                   policy=pol)
+            with mesh:
+                shr = decode_attention_sharded(
+                    q, kcs, vcs, clen, mesh=mesh, layout="bshd",
+                    policy=pol)
+            out[exp] = {
+                "finite": bool(jnp.isfinite(shr).all()),
+                "delta": float(jnp.abs(ref - shr).max()),
+            }
+        print(json.dumps(out))
+        """)
+        for exp, r in res.items():
+            assert r["finite"], f"{exp}: packed merge overflowed"
+            assert r["delta"] < 2e-3, f"{exp}: {r['delta']}"
+
+
+@pytest.mark.slow
+class TestShardedServing:
+    """ISSUE 4 tentpole: the slot engine's SPMD decode wiring."""
+
+    def test_engine_token_identity_all_exp_backends(self):
+        """Sharded slot-engine serving (kv_mode="seq", 8-way KV mesh) is
+        token-identical to single-device serving for all three exp
+        backends — mixed prompt lengths, slot reuse via a 2-slot pool on
+        3 requests."""
+        res = _run_sub("""
+        import numpy as np
+        from repro.configs import get_config
+        from repro.models import api
+        from repro.launch.serve import Server, Request
+        from repro.launch.mesh import make_host_mesh
+        from repro.runtime import resolve_policy
+        cfg = get_config("gpt2-small").reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab, (n,), dtype=np.int32)
+                   for n in (5, 11, 7)]
+        def serve(mesh, kv_mode, exp):
+            pol = resolve_policy(cfg, env={}, exp_backend=exp,
+                                 kernel_backend="pallas")
+            srv = Server(cfg, params, max_batch=2, max_seq=64, mesh=mesh,
+                         policy=pol, kv_mode=kv_mode)
+            reqs = [Request(i, prompts[i].copy(), 5) for i in range(3)]
+            srv.run(reqs)
+            return {r.rid: r.out for r in reqs}, srv
+        out = {}
+        for exp in ("exact", "vexp", "vexp_hw"):
+            plain, _ = serve(make_host_mesh(1, 1), "auto", exp)
+            shard, srv = serve(make_host_mesh(1, 8), "seq", exp)
+            out[exp] = {"kv_axis": srv.kv_axis,
+                        "identical": plain == shard}
+        print(json.dumps(out))
+        """)
+        for exp, r in res.items():
+            assert r["kv_axis"] == "model", f"{exp}: engine did not shard"
+            assert r["identical"], f"{exp}: sharded tokens diverged"
+
+    def test_engine_one_collective_per_layer_and_donation(self):
+        """The engine's sharded decode program lowers to exactly one
+        all_gather (the layers are scanned, so the loop body appears once)
+        and zero all_reduces, and its donated cache + position buffers are
+        actually consumed (zero cache re-allocation per step)."""
+        res = _run_sub("""
+        import re
+        import numpy as np
+        from repro.configs import get_config
+        from repro.models import api
+        from repro.launch.serve import Server, Request
+        from repro.launch.mesh import make_host_mesh
+        from repro.runtime import resolve_policy
+        cfg = get_config("gpt2-small").reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        pol = resolve_policy(cfg, env={}, kernel_backend="pallas")
+        srv = Server(cfg, params, max_batch=2, max_seq=64,
+                     mesh=make_host_mesh(1, 8), policy=pol, kv_mode="seq")
+        rng = np.random.default_rng(0)
+        r = Request(0, rng.integers(0, cfg.vocab, (5,), dtype=np.int32), 4)
+        srv.submit(r)
+        g = srv._groups["default"]
+        g.admit()
+        txt = g._decode.lower(g.params_decode, g.last, g.cache, g.pos_dev,
+                              g.live_dev).as_text()
+        cache_before, pos_before = g.cache["k"], g.pos_dev
+        g.decode_once()
+        print(json.dumps({
+            "all_gather": len(re.findall(r'stablehlo\\.all_gather"', txt)),
+            "all_reduce": len(re.findall(r'stablehlo\\.all_reduce"', txt)),
+            "cache_donated": cache_before.is_deleted(),
+            "pos_donated": pos_before.is_deleted(),
+        }))
+        """)
+        assert res["all_gather"] == 1 and res["all_reduce"] == 0
+        assert res["cache_donated"] and res["pos_donated"]
+
+
 class TestShardingWiring:
     def test_decode_kv_axis_modes(self):
         cfg = get_config("gpt2-small")
