@@ -4,7 +4,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: ci test bench sweep serve-smoke spmd-test spmd-serve-smoke
+.PHONY: ci test bench sweep serve-smoke serve-smoke-recurrent spmd-test \
+	spmd-serve-smoke
 
 ci:
 	$(PY) -m pytest -x -q
@@ -33,6 +34,18 @@ serve-smoke:
 	    --requests 6 --prompt-len 24 --mixed-lengths --max-new 8 \
 	    --max-batch 2 --max-seq 64 \
 	    --policy-groups "eval=exact,bulk=vexp"
+
+# Recurrent families (ssm + hybrid) through the same slot engine: the
+# family-agnostic DecodeState pool serves mamba2's (h, conv) snapshots
+# and recurrentgemma's mixed recurrent/attention periods with ragged
+# mixed-length admission.
+serve-smoke-recurrent:
+	$(PY) -m repro.launch.serve --arch mamba2-1.3b --reduced \
+	    --requests 4 --prompt-len 12 --mixed-lengths --max-new 6 \
+	    --max-batch 2 --max-seq 64
+	$(PY) -m repro.launch.serve --arch recurrentgemma-9b --reduced \
+	    --requests 4 --prompt-len 12 --mixed-lengths --max-new 6 \
+	    --max-batch 2 --max-seq 64
 
 # The same slot engine end-to-end through the SPMD serve loop: KV cache
 # sequence-sharded over 8 fake host devices, decode through the fused

@@ -22,6 +22,10 @@ sequence-sharded over 8 fake host devices, fused partial-statistics
 decode with the packed single-collective merge) in a subprocess —
 XLA_FLAGS must land before jax initializes.
 
+The ``recurrent`` section serves the ssm (mamba2) and hybrid
+(recurrentgemma) reduced configs through the same slot engine — the
+family-agnostic DecodeState pool — on a mixed-length workload.
+
 Rows carry tokens/s as the primary scalar; per-request p50/p95 completion
 latency (submit -> tokens materialized, measured at the finish-time
 device sync) rides in the note. Results persist to ``BENCH_serving.json``.
@@ -156,6 +160,30 @@ def _sharded_arm():
             "sharded": sharded, "single_device": single}
 
 
+def _recurrent_arm():
+    """Recurrent families through the same slot engine: mixed-length
+    continuous batching over the family-agnostic DecodeState pool (ssm =
+    mamba2 per-layer (h, conv) snapshots; hybrid = recurrentgemma mixed
+    recurrent/attention periods). Prompt lengths stay inside the hybrid
+    reduced config's sliding window (its ragged admission width)."""
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.runtime import resolve_policy
+
+    rng = np.random.default_rng(2)
+    lens = [int(x) for x in rng.integers(4, 13, N_REQUESTS)]
+    out = {}
+    for fam, arch in (("ssm", "mamba2-1.3b"),
+                      ("hybrid", "recurrentgemma-9b")):
+        cfg = get_config(arch).reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        pol = resolve_policy(cfg, env={})
+        res = _run_engine(cfg, params, lens, policy=pol)
+        res["arch"] = arch
+        out[fam] = res
+    return out
+
+
 def _fixed_chunk_runner(cfg, params, lens, *, policy=None):
     """The old driver's schedule (uniform lengths only): whole-batch
     prefill, then scalar-position decode for the batch-wide max_new.
@@ -233,6 +261,7 @@ def run_bench() -> dict:
             }),
         "fixed_chunk_baseline": {"tok_s": fixed_tok_s},
         "steady_state": _steady_state(cfg, params, policy=pol),
+        "recurrent": _recurrent_arm(),
     }
     # sharded serving needs a multi-device host platform: XLA_FLAGS must
     # precede jax init, so the arm runs in a subprocess (best-effort — a
@@ -283,6 +312,11 @@ def report():
     rows.append(("steady_decode_tok_s", ss["decode_tok_s"],
                  f"decode-only; prefill={ss['prefill_s'] * 1e3:.1f}ms "
                  f"({ss['prefill_tok_s']:.1f} tok/s) measured separately"))
+    for fam, r in res.get("recurrent", {}).items():
+        rows.append((f"recurrent_{fam}_tok_s", r["tok_s"],
+                     f"{r['arch']} mixed-length slot engine; "
+                     f"req_p50={r['p50_req_ms']:.1f}ms;"
+                     f"req_p95={r['p95_req_ms']:.1f}ms"))
     sh = res.get("sharded", {})
     if "error" not in sh and sh:
         rows.append(("sharded_decode_tok_s",

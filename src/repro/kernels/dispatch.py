@@ -121,6 +121,26 @@ def _vexp_fallback(x, *, policy: ExecPolicy):
     return policy.exp_fn()(x)
 
 
+def exp_callable(policy: Optional[ExecPolicy] = None,
+                 exp_impl: str = "vexp") -> Callable:
+    """Elementwise exp for model-internal gates under a policy.
+
+    The recurrent families' exponentials — the RG-LRU gate
+    ``a = exp(c·r·log a)``, the SSD decays/softplus and the SiLU gates —
+    are the softmax-free sites where the paper's exp-backend choice still
+    applies. This is their one resolution rule: ``policy.exp_backend``
+    wins, the legacy ``exp_impl`` config string is the fallback — so a
+    serving ``--policy-groups`` spec flips recurrent-gate numerics exactly
+    like it flips attention softmax numerics. Every kernel backend
+    resolves to the core datapath here: gates fuse into the surrounding
+    elementwise work under XLA, and a per-gate ``pallas_call`` would cost
+    more than the exp itself (the tiled kernel stays reserved for the
+    standalone ``vexp`` op above).
+    """
+    from repro.core.vexp import get_exp_fn
+    return get_exp_fn(policy.exp_backend if policy is not None else exp_impl)
+
+
 def _softmax_fallback(x, axis=-1, *, policy: ExecPolicy):
     from repro.core.softmax import softmax as core_softmax
     return core_softmax(x, axis=axis, exp_impl=policy.exp_backend)

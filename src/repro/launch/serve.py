@@ -5,40 +5,51 @@ prompts with token 0, attended the padding during prefill, and passed one
 scalar ``cache_len`` to decode — silently corrupting every request shorter
 than the longest in its batch). The structural fix is per-slot state:
 
-* a fixed pool of ``max_batch`` KV-cache slots per policy group, allocated
-  once at ``max_seq`` (or the sliding window — windowed archs serve
-  through the same fused flash-decode kernel as linear ones now that it
-  understands windows and both cache layouts; no reference fallback);
-* ragged admission — queued requests are right-padded to a pow2 length
-  bucket, prefilled as one batch with per-request ``prompt_len`` (padding
-  masked out of attention, pad K/V rows zeroed), and their real cache rows
-  are written into freed slots;
+* a fixed pool of ``max_batch`` decode-state slots per policy group — a
+  ``models.decode_state.DecodeState`` (KV cache + positions for the
+  transformer families, batched per-layer ``(h, conv)`` snapshots for
+  ssm, a mixed per-period state for hybrid), allocated once at
+  ``max_seq`` (or the sliding window). The engine is state-kind-agnostic:
+  admission, decode, freeing, donation and device-side liveness all go
+  through the protocol, and the engine never branches on the model
+  family;
+* ragged admission — queued requests are right-padded to the state's
+  prefill width (a pow2 length bucket, or the fixed window for hybrid),
+  prefilled as one batch with per-request ``prompt_len`` (padding masked
+  out of attention / dt-masked out of the recurrences), and their real
+  rows are written into freed slots — KV rows by cache scatter,
+  recurrent states at each row's *last real token*;
 * per-slot decode — one fixed-shape ``(max_batch, 1)`` decode program per
   policy group with a per-slot ``(B,)`` position vector, so each slot
   advances at its own length (the kernels mask each row against its own
-  ``cache_len``);
+  ``cache_len``; recurrences carry position in their state);
 * continuous batching — a slot is freed the step its request finishes
-  (``max_new`` reached or the linear cache exhausted) and the next queued
-  request is admitted mid-decode, instead of burning steps on dead slots.
+  (``max_new`` reached or a linear cache exhausted), its state is reset
+  through the protocol (stale recurrent ``h``/``conv`` must not bleed
+  into the next occupant), and the next queued request is admitted
+  mid-decode instead of burning steps on dead slots.
 
 Per-request execution policies: requests carry a ``group`` name and each
-group owns one ExecPolicy, one cache pool and exactly one decode
+group owns one ExecPolicy, one state pool and exactly one decode
 executable (PR 1's one-executable-per-policy contract), so eval traffic
 can run ``exact`` numerics while bulk traffic runs ``vexp`` without
-contaminating each other's batches or caches.
+contaminating each other's batches or caches — including the recurrent
+families, whose RG-LRU / SSD gate exponentials follow the same policy.
 
 The decode hot loop is collective- and copy-minimal:
 
-* **SPMD wiring** — when ``distributed.sharding.decode_kv_axis`` reports
-  a sequence-sharded decode cache on the serving mesh, each
-  pallas-backend group's decode step is ONE ``shard_map`` program built
-  at engine startup: per layer, the token's K/V land on the owning shard
-  (drop-mode scatter), every shard sweeps its slice in
-  partial-statistics mode, and the statistics fold through the policy's
-  ``merge_strategy`` — "packed" is a single all_gather of the contiguous
-  (acc | m | l) tile, i.e. exactly one collective per layer.
-* **Donated step** — the KV cache and the per-slot position vector are
-  donated through the decode program (buffers reused in place: no cache
+* **SPMD wiring** — when the state pool reports the capability
+  (``DecodeState.supports_seq_sharding``; linear KV caches only) and
+  ``distributed.sharding.decode_kv_axis`` reports a sequence-sharded
+  decode cache on the serving mesh, each pallas-backend group's decode
+  step is ONE ``shard_map`` program built at engine startup: per layer,
+  the token's K/V land on the owning shard (drop-mode scatter), every
+  shard sweeps its slice in partial-statistics mode, and the statistics
+  fold through the policy's ``merge_strategy`` — "packed" is a single
+  all_gather of the contiguous (acc | m | l) tile, i.e. exactly one
+  collective per layer.
+* **Donated step** — the state pool and the per-slot position vector are
+  donated through the decode program (buffers reused in place: no state
   re-allocation per step), positions advance device-side (`pos + live`),
   and emitted tokens stay device-resident — a steady-state decode step
   performs zero host syncs and zero host->device transfers.
@@ -58,7 +69,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import api
-from repro.models.transformer import cache_seq_axis
+from repro.models.decode_state import decode_state_for, _len_bucket  # noqa: F401  (re-export)
 from repro.runtime import ExecPolicy, resolve_policy, parse_policy_groups
 from .mesh import make_host_mesh
 
@@ -77,142 +88,8 @@ class Request:
     t_done: float = 0.0
 
 
-def _len_bucket(n: int, cap: int) -> int:
-    """Pow2-rounded prefill length (>=8) so ragged admission shares a small
-    set of prefill executables; capped at the cache's sequence capacity."""
-    b = 8
-    while b < n:
-        b *= 2
-    return min(b, cap)
-
-
-# (repr(cfg), policy, kv_axis[, mesh]) -> (prefill_fn, prefill_plain_fn,
-# decode_fn). jax.jit caches per function object, so the jitted closures
-# must outlive any one Server — otherwise every server restart recompiles
-# the programs. Greedy serving never reads logits on the host, so all
-# programs return argmaxed (B, 1) token ids — one fused executable per
-# step, no eager argmax dispatches.
-#
-# decode_fn(params, last, cache, pos, live) -> (next, cache, pos + live):
-# the KV cache and the per-slot position vector are DONATED (their input
-# buffers are reused for the outputs), so a decode step allocates no new
-# cache and the slot positions advance device-side — the hot loop performs
-# zero host->device transfers and zero host syncs.
-_PROGRAM_CACHE: dict = {}
-
-
-def _programs(cfg, policy, mesh=None, kv_axis=None, decode_policy=None):
-    # decode_policy: the (possibly merge-strategy-autotuned) policy the
-    # decode program is built against; prefill keeps the group policy so
-    # its in-jit autotune cache reads stay live.
-    dpol = policy if decode_policy is None else decode_policy
-    key = (repr(cfg), policy, dpol, kv_axis,
-           mesh if kv_axis is not None else None)
-    if key not in _PROGRAM_CACHE:
-        pol = policy
-
-        def prefill_fn(p, toks, plens):
-            logits, cache = api.prefill(
-                p, cfg, {"tokens": toks, "prompt_len": plens}, policy=pol)
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache
-
-        def prefill_plain_fn(p, toks):
-            # every row full-length: no padding mask to apply (the common
-            # uniform-traffic admission; skips the ragged machinery)
-            logits, cache = api.prefill(p, cfg, {"tokens": toks},
-                                        policy=pol)
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache
-
-        if kv_axis is None:
-            def decode_fn(p, t, c, pos, live):
-                logits, cache = api.decode_step(p, cfg, t, c, pos,
-                                                policy=dpol)
-                return (jnp.argmax(logits, -1).astype(jnp.int32), cache,
-                        pos + live)
-
-            decode = jax.jit(decode_fn, donate_argnums=(2, 3))
-        else:
-            # Sequence-sharded decode: ONE shard_map program per policy
-            # group, built here at engine startup — the fused
-            # partial-statistics path instead of GSPMD lowering. The
-            # cache lives (and stays) sharded along its S axis; each
-            # layer's shard statistics fold through the policy's merge
-            # strategy ("packed": one collective per layer).
-            from jax.sharding import PartitionSpec as P
-            from repro.distributed.compression import shard_map
-            from repro.distributed.sharding import serve_cache_sharding
-            from repro.models.transformer import decode_step_sharded
-            # one source of truth for the pool placement: the program's
-            # in/out specs are the spec of the sharding the engine
-            # allocates the pool under.
-            cspec = {name: s.spec for name, s in
-                     serve_cache_sharding(cfg, mesh, kv_axis).items()}
-
-            def decode_local(p, t, c, pos, live):
-                logits, c = decode_step_sharded(p, cfg, t, c, pos,
-                                                policy=dpol,
-                                                seq_axis=kv_axis)
-                return (jnp.argmax(logits, -1).astype(jnp.int32), c,
-                        pos + live)
-
-            decode = jax.jit(
-                shard_map(decode_local, mesh=mesh,
-                          in_specs=(P(), P(), cspec, P(), P()),
-                          out_specs=(P(), cspec, P())),
-                donate_argnums=(2, 3))
-
-        _PROGRAM_CACHE[key] = (jax.jit(prefill_fn),
-                               jax.jit(prefill_plain_fn),
-                               decode)
-    return _PROGRAM_CACHE[key]
-
-
-def _autotune_warmup(cfg, policy, max_batch, cache_s, mesh=None,
-                     kv_axis=None):
-    """Eagerly tune the decode-attention block size for this group's decode
-    shape. Timing is meaningless inside the jitted decode program (tracers,
-    not device work), so the tuner only ever *reads* its cache there — this
-    one eager call at the real (max_batch, cache_s) shape times the
-    candidates, memoizes the winner for the jit path to pick up, and
-    persists it to disk so the next server start skips even this.
-
-    On a sequence-sharded group it additionally times the two collective
-    merge strategies (packed single-collective vs pmax+2×psum) at the
-    group's exact decode shape and returns the policy with the winner
-    baked in (the shard_map decode program takes the policy statically,
-    so the engine must resolve it before building the program). Returns
-    the — possibly tuned — policy.
-    """
-    if not policy.autotune or policy.kernel_backend != "pallas":
-        return policy
-    from repro.kernels.dispatch import dispatch, autotune_policy
-    lay = cfg.kv_cache_layout
-    kv_shape = ((max_batch, cfg.n_kv_heads, cache_s, cfg.hd)
-                if lay == "bhsd" else
-                (max_batch, cache_s, cfg.n_kv_heads, cfg.hd))
-    q = jnp.zeros((max_batch, 1, cfg.n_heads, cfg.hd),
-                  jnp.dtype(cfg.compute_dtype))
-    kv = jnp.zeros(kv_shape, jnp.bfloat16)      # init_cache's dtype
-    clen = jnp.full((max_batch,), cache_s, jnp.int32)
-    dispatch("decode_attention", policy)(q, kv, kv, clen, layout=lay,
-                                         policy=policy)
-    if kv_axis is None:
-        return policy
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.kernels.decode_attention.ops import _sharded_program
-    from repro.models.transformer import cache_seq_axis as _csa
-    spec = [None] * 4
-    spec[_csa(lay, stacked=False)] = kv_axis
-    kvs = jax.device_put(kv, NamedSharding(mesh, P(*spec)))
-    return autotune_policy(
-        "decode_attention_sharded", policy,
-        lambda p: _sharded_program(mesh, kv_axis, None, None, lay,
-                                   p)(q, kvs, kvs, clen),
-        q, kvs)
-
-
 class _Group:
-    """One policy group: ExecPolicy + cache-slot pool + jit programs.
+    """One policy group: ExecPolicy + DecodeState slot pool + scheduling.
 
     Greedy scheduling decisions depend only on token *counts* (max_new,
     cache capacity), never on token values — so emitted tokens stay on
@@ -220,7 +97,9 @@ class _Group:
     and each request's token ids are materialized once, when it finishes.
     The decode loop therefore never blocks on a device->host sync and
     JAX's async dispatch pipelines the steps exactly like the fixed-shape
-    driver it replaced.
+    driver it replaced. Everything state-kind-specific — pool layout,
+    admission scatter, program construction, donation, SPMD placement —
+    lives behind ``self.state`` (models.decode_state).
     """
 
     def __init__(self, cfg, params, policy, max_batch, cache_s, *,
@@ -228,44 +107,27 @@ class _Group:
         self.cfg, self.params, self.policy = cfg, params, policy
         self.max_batch, self.cache_s = max_batch, cache_s
         self.mesh, self.kv_axis = mesh, kv_axis
+        self.state = decode_state_for(cfg)(
+            cfg, params, policy, max_batch, cache_s, mesh=mesh,
+            kv_axis=kv_axis)
         self.queue: deque = deque()
         self.reqs: list = [None] * max_batch
-        self.lens = np.zeros(max_batch, np.int64)   # valid cache positions
+        self.lens = np.zeros(max_batch, np.int64)   # tokens held per slot
         self.ntok = np.zeros(max_batch, np.int64)   # tokens emitted per slot
-        # Device-side slot state: last tokens, per-slot decode positions and
-        # a 0/1 liveness vector. The decode program advances pos by live
-        # in-place (donated), so the steady-state loop never ships a
-        # position vector host->device; lens/ntok above are host *mirrors*
+        # Device-side slot state: last tokens and a 0/1 liveness vector
+        # (per-slot decode positions live inside the DecodeState and are
+        # donated through its step). lens/ntok above are host *mirrors*
         # maintained from scheduling events alone (never read back).
-        self.last = jnp.zeros((max_batch, 1), jnp.int32)
-        self.pos_dev = jnp.zeros((max_batch,), jnp.int32)
-        self.live_dev = jnp.zeros((max_batch,), jnp.int32)
-        self._repl = None           # mesh-replicated sharding (SPMD groups)
-        self._cache_shard = None    # sharded cache placement (SPMD groups)
-        if kv_axis is not None:
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            from repro.distributed.sharding import serve_cache_sharding
-            self._repl = NamedSharding(mesh, P())
-            self._cache_shard = serve_cache_sharding(cfg, mesh, kv_axis)
-            # decode runs over the mesh; prefill stays on the default
-            # device (its outputs are re-placed at admission).
-            self.params_decode = jax.device_put(params, self._repl)
-            self.last, self.pos_dev, self.live_dev = jax.device_put(
-                (self.last, self.pos_dev, self.live_dev), self._repl)
-        else:
-            self.params_decode = params
-        self.cache = None                           # allocated on first admit
+        self.last = self.state.place_tokens(
+            jnp.zeros((max_batch, 1), jnp.int32))
+        self.live_dev = self.state.place_tokens(
+            jnp.zeros((max_batch,), jnp.int32))
         self.decode_steps = 0
         self.decode_s: list = []    # per-step *dispatch* wall time (async:
                                     # compute overlaps; see req_lat for real
                                     # latency, measured at the finish sync)
         self.req_lat: list = []     # per-request submit->done wall latency
         self._toks: dict = {}                       # slot -> [(B,1) arrays]
-        decode_policy = _autotune_warmup(cfg, policy, max_batch, cache_s,
-                                         mesh, kv_axis)
-        (self._prefill, self._prefill_plain,
-         self._decode) = _programs(cfg, policy, mesh, kv_axis,
-                                   decode_policy)
 
     # ------------------------------------------------------------ admission
 
@@ -278,7 +140,7 @@ class _Group:
         if not take:
             return
         slots = np.array([j for j, _ in take])
-        sp = _len_bucket(max(len(r.prompt) for _, r in take), self.cache_s)
+        sp = self.state.prefill_width(max(len(r.prompt) for _, r in take))
         # prefill always runs at the full pool width so admitting 1 or
         # max_batch requests hits the same executable per length bucket;
         # rows without an admitted request are dummies (length-1, ignored).
@@ -288,58 +150,21 @@ class _Group:
             toks[j, :len(r.prompt)] = r.prompt
             plens[j] = len(r.prompt)
         full = len(take) == self.max_batch
-        if (full and all(len(r.prompt) == sp for _, r in take)
-                and self.policy.kernel_backend != "pallas"):
-            # uniform exact-bucket wave: no padding exists, skip the mask.
-            # (Not under a pallas policy: the ragged path demotes pallas
-            # flash-attention to the reference scan, so the fast path
-            # would prefill through a different implementation than solo
-            # serving and could flip a near-tie greedy argmax.)
-            first, pref = self._prefill_plain(self.params, jnp.asarray(toks))
-        else:
-            first, pref = self._prefill(self.params, jnp.asarray(toks),
-                                        jnp.asarray(plens))
-        if self._repl is not None:
-            # SPMD group: prefill ran on the default device; move its
-            # outputs onto the decode mesh (tokens replicated, cache rows
-            # merged into the mesh-sharded pool below).
-            first = jax.device_put(first, self._repl)
-        # write admitted rows into the persistent slot pool; the sequence
-        # axis is resolved from the cache layout — "bshd" stacked caches
-        # are (L, B, S, Hkv, hd), "bhsd" are (L, B, Hkv, S, hd).
-        ax = cache_seq_axis(self.cfg.kv_cache_layout)
+        uniform = (full and all(len(r.prompt) == sp for _, r in take)
+                   and self.policy.kernel_backend != "pallas")
+        # uniform exact-bucket wave: no padding exists, skip the mask.
+        # (Not under a pallas policy: the ragged path demotes pallas
+        # flash-attention to the reference scan, so the fast path would
+        # prefill through a different implementation than solo serving
+        # and could flip a near-tie greedy argmax.)
+        first = self.state.prefill_into(slots, toks, plens, full=full,
+                                        uniform=uniform)
         if full:
-            # whole pool admitted at once: the pool cache is just the
-            # prefill cache padded out to capacity (no scatter, no zeros)
-            pad = [(0, 0)] * pref["k"].ndim
-            pad[ax] = (0, self.cache_s - sp)
-            self.cache = {n: jnp.pad(pref[n], pad) for n in ("k", "v")}
-            if self._cache_shard is not None:
-                self.cache = jax.device_put(self.cache, self._cache_shard)
             self.last = first
         else:
-            if self.cache is None:
-                self.cache = api.init_cache(self.cfg, self.max_batch,
-                                            self.cache_s)
-                if self._cache_shard is not None:
-                    self.cache = jax.device_put(self.cache,
-                                                self._cache_shard)
-            idx = [slice(None)] * self.cache["k"].ndim
-            idx[1] = slots
-            idx[ax] = slice(0, sp)
-            idx = tuple(idx)
-            row = (slice(None), slots)
-            for name in ("k", "v"):
-                rows = pref[name][row]
-                if self._repl is not None:
-                    rows = jax.device_put(rows, self._repl)
-                self.cache[name] = self.cache[name].at[idx].set(rows)
             self.last = self.last.at[slots].set(first[slots])
-        # one batched device-side slot-state update per admission wave
-        sl = jnp.asarray(slots)
-        self.pos_dev = self.pos_dev.at[sl].set(
-            jnp.asarray([len(r.prompt) for _, r in take], jnp.int32))
-        self.live_dev = self.live_dev.at[sl].set(1)
+        # one batched device-side liveness update per admission wave
+        self.live_dev = self.live_dev.at[jnp.asarray(slots)].set(1)
         now = time.perf_counter()
         for j, r in take:
             self.reqs[j] = r
@@ -356,25 +181,25 @@ class _Group:
 
     def decode_once(self):
         """One batched decode step over the live slots (no-op when idle)."""
-        if self.cfg.sliding_window is None:
+        cap = self.state.max_len()
+        if cap is not None:
             # a linear cache is exhausted when the next write would fall
             # past the last slot — stop the request instead of letting a
             # clamped write silently overwrite the final cache row.
+            # (Recurrent and ring-buffer state reports no cap.)
             for j in range(self.max_batch):
-                if self.reqs[j] is not None and self.lens[j] >= self.cache_s:
+                if self.reqs[j] is not None and self.lens[j] >= cap:
                     self._finish(j, "length_cap")
         live = [j for j in range(self.max_batch) if self.reqs[j] is not None]
         if not live:
             return
-        # dead slots decode their stale token at position 0: harmless (the
-        # slot has no request, and admission prefill overwrites row 0
-        # before the slot is read again). The position vector lives on
-        # device (live slots advance by +1 inside the donated program), so
-        # the hot loop ships nothing host->device and syncs on nothing.
+        # dead slots decode their stale token over zeroed/parked state:
+        # harmless (the slot has no request, and admission overwrites the
+        # slot's state before it is read again). Positions live on device
+        # (live slots advance by +1 inside the donated program), so the
+        # hot loop ships nothing host->device and syncs on nothing.
         t0 = time.perf_counter()
-        nxt, self.cache, self.pos_dev = self._decode(
-            self.params_decode, self.last, self.cache, self.pos_dev,
-            self.live_dev)
+        nxt = self.state.step(self.last, self.live_dev)
         self.last = nxt
         self.decode_s.append(time.perf_counter() - t0)
         self.decode_steps += 1
@@ -395,10 +220,11 @@ class _Group:
         r.t_done = time.perf_counter()   # after the sync: true completion
         self.req_lat.append(r.t_done - r.t_submit)
         self.reqs[j] = None          # slot freed; next admit() reuses it
-        # park the slot device-side (live=0 excludes it from position
-        # advance; pos=0 matches the dead-slot write convention)
+        # park the slot device-side: live=0 excludes it from position
+        # advance, and the state resets the slot (recurrent h/conv is
+        # read unconditionally — a stale occupant must not bleed).
         self.live_dev = self.live_dev.at[j].set(0)
-        self.pos_dev = self.pos_dev.at[j].set(0)
+        self.state.reset_slots([j])
 
     @property
     def busy(self) -> bool:
@@ -409,23 +235,22 @@ class Server:
     """Slot-level continuous-batching server.
 
     One ExecPolicy per *group* (default: a single group from the usual
-    resolution chain), each with its own ``max_batch``-slot cache pool and
+    resolution chain), each with its own ``max_batch``-slot state pool and
     exactly one decode executable. ``run(requests)`` drives admission and
     decode until every request is finished.
 
-    Transformer-family configs only (dense / moe / vlm): ssm and hybrid
-    recurrences have no per-slot cache positions yet — serve those one
-    batch at a time through ``models.api`` directly.
+    Every decoding family serves through the same engine: the per-slot
+    state is a ``models.decode_state.DecodeState`` — a KV cache for the
+    transformer families, per-layer recurrent snapshots for ssm, a mixed
+    per-period state for hybrid — and the scheduler only ever talks to
+    that protocol.
     """
 
     def __init__(self, cfg, params, *, max_batch=4, max_seq=512, mesh=None,
                  policy: ExecPolicy | None = None,
                  policy_groups: Optional[dict] = None,
                  kv_mode: str = "auto"):
-        if cfg.family in ("ssm", "hybrid", "audio"):
-            raise NotImplementedError(
-                f"the slot engine serves transformer-family configs; "
-                f"{cfg.family!r} has no per-slot cache positions")
+        state_cls = decode_state_for(cfg)   # raises for encoder-only archs
         self.cfg, self.params = cfg, params
         self.max_batch, self.max_seq = max_batch, max_seq
         self.mesh = mesh or make_host_mesh()
@@ -441,14 +266,15 @@ class Server:
                 print(f"[serve] autotune: {n} block-size winners loaded "
                       f"from {_dispatch.autotune_cache_path()}")
         self.cache_s = min(max_seq, cfg.sliding_window or max_seq)
-        # Serve-loop SPMD wiring: when the cache placement rules report a
-        # sequence-sharded decode cache on this mesh, pallas-backend groups
-        # route their decode step through the fused sharded path (one
-        # shard_map program per group, built once here at startup) instead
-        # of GSPMD-lowering the unsharded program. Windowed archs keep the
-        # GSPMD path (the ring-buffer wrap write straddles shards).
+        # Serve-loop SPMD wiring: when the state kind supports it (a
+        # capability probed via the DecodeState protocol — linear KV
+        # caches only) and the cache placement rules report a
+        # sequence-sharded decode cache on this mesh, pallas-backend
+        # groups route their decode step through the fused sharded path
+        # (one shard_map program per group, built once here at startup)
+        # instead of GSPMD-lowering the unsharded program.
         self.kv_axis = None
-        if cfg.sliding_window is None:
+        if state_cls.supports_seq_sharding(cfg):
             from repro.distributed.sharding import decode_kv_axis
             ax = decode_kv_axis(cfg, self.mesh, max_batch, kv_mode=kv_mode)
             if (ax is not None and self.mesh.shape[ax] > 1

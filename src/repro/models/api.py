@@ -40,9 +40,7 @@ def init_params(cfg, key):
 
 def loss_fn(params, cfg, batch, *, policy=None):
     cfg = _apply_policy(cfg, policy)
-    if cfg.family in ("ssm", "hybrid"):
-        return _mod(cfg).loss_fn(params, cfg, batch)
-    return transformer.loss_fn(params, cfg, batch, policy=policy)
+    return _mod(cfg).loss_fn(params, cfg, batch, policy=policy)
 
 
 def forward(params, cfg, batch, *, policy=None):
@@ -51,30 +49,27 @@ def forward(params, cfg, batch, *, policy=None):
     if cfg.family in ("vlm", "audio"):
         out = m.forward(params, cfg, batch.get("tokens"),
                         batch.get("extra"), policy=policy)
-    elif cfg.family in ("ssm", "hybrid"):
-        out = m.forward(params, cfg, batch["tokens"])
     else:
         out = m.forward(params, cfg, batch["tokens"], policy=policy)
     return out[0] if isinstance(out, tuple) else out
 
 
 def prefill(params, cfg, batch, *, policy=None):
-    """Prompt forward -> (last_logits, cache).
+    """Prompt forward -> (last_logits, decode_state).
 
     ``batch["prompt_len"]`` (optional, (B,) int32) marks ragged
-    right-padded prompts: attention masks the padding, pad K/V rows are
-    zeroed, and logits are taken at each row's last real token
-    (transformer families only).
+    right-padded prompts — every decoding family honors it: attention
+    masks the padding (recurrences dt/gather-mask it), pad K/V rows are
+    zeroed, and logits (and recurrent states) are taken at each row's
+    last real token.
     """
     cfg = _apply_policy(cfg, policy)
     m = _mod(cfg)
     prompt_len = batch.get("prompt_len")
-    if prompt_len is not None and (cfg.family in ("ssm", "hybrid", "audio")):
-        raise NotImplementedError(
-            f"per-request prompt_len is not supported for the "
-            f"{cfg.family!r} family")
     if cfg.family == "audio":
         # encoder-only: "prefill" is a full encode; no cache/decode exists.
+        if prompt_len is not None:
+            raise ValueError("encoder-only arch has no ragged prefill")
         from .layers import mask_padded_logits
         x, _ = transformer.forward(params, cfg, None, batch["extra"],
                                    policy=policy)
@@ -85,38 +80,31 @@ def prefill(params, cfg, batch, *, policy=None):
         return transformer.prefill(params, cfg, batch["tokens"],
                                    batch.get("extra"),
                                    prompt_len=prompt_len, policy=policy)
-    if cfg.family in ("ssm", "hybrid"):
-        return m.prefill(params, cfg, batch["tokens"])
-    return transformer.prefill(params, cfg, batch["tokens"],
-                               prompt_len=prompt_len, policy=policy)
+    return m.prefill(params, cfg, batch["tokens"],
+                     prompt_len=prompt_len, policy=policy)
 
 
 def init_cache(cfg, batch_size, seq_len):
-    if cfg.family == "ssm":
-        return ssm.init_state(cfg, batch_size)
-    if cfg.family == "hybrid":
-        return hybrid.init_cache(cfg, batch_size, seq_len)
+    """Family-uniform decode-state constructor (the DecodeState pool
+    allocator): every decoding family exposes
+    ``init_cache(cfg, batch, seq_len)`` — KV families size their cache by
+    ``seq_len``, recurrent families document it as a no-op (state is O(1)
+    in sequence length). ``ssm.init_state`` remains as a deprecation
+    shim."""
     if cfg.family == "audio":
         raise ValueError("encoder-only arch has no decode cache")
-    return transformer.init_cache(cfg, batch_size, seq_len)
+    return _mod(cfg).init_cache(cfg, batch_size, seq_len)
 
 
 def decode_step(params, cfg, token, cache, pos, *, policy=None):
     """One decode step. ``pos`` may be a scalar (whole batch at one
-    position) or a per-slot (B,) vector (continuous batching; transformer
-    families only)."""
+    position) or a per-slot (B,) vector (continuous batching) for every
+    decoding family — recurrences ignore it, KV caches scatter by it."""
     cfg = _apply_policy(cfg, policy)
-    m = _mod(cfg)
     if cfg.family == "audio":
         raise ValueError("encoder-only arch has no decode step")
-    if cfg.family in ("ssm", "hybrid"):
-        if getattr(pos, "ndim", 0):
-            raise NotImplementedError(
-                f"per-slot decode positions are not supported for the "
-                f"{cfg.family!r} family")
-        return m.decode_step(params, cfg, token, cache, pos)
-    return transformer.decode_step(params, cfg, token, cache, pos,
-                                   policy=policy)
+    return _mod(cfg).decode_step(params, cfg, token, cache, pos,
+                                 policy=policy)
 
 
 # ----------------------------------------------------------- input specs

@@ -1,0 +1,439 @@
+"""Family-agnostic per-slot serving state: the DecodeState protocol.
+
+The slot engine (``launch.serve``) used to hardcode its per-slot state as
+a ``(kv_cache, (B,) positions)`` pair — an assumption smeared across
+admission, decode, freeing and donation that made recurrent families
+(ssm's per-layer ``(h, conv)`` snapshots, hybrid's mixed
+recurrent/attention periods) unservable. This module is the replacement
+boundary: one ``DecodeState`` object per policy group owning
+
+  * the pool state pytree (``data``) — whatever arrays the family carries
+    between decode steps, allocated once at pool width;
+  * the per-slot device-side position vector (``pos_dev``), threaded and
+    donated through the decode program so positions advance device-side;
+  * the jitted prefill/decode programs (family-dispatched through
+    ``models.api``, so one program builder covers every family).
+
+The engine talks only to the protocol:
+
+  ``prefill_into(slots, toks, plens, full=, uniform=)``
+      run the pool-width (ragged right-padded) prefill and write the
+      admitted rows into freed slots; returns the first greedy tokens.
+  ``step(last, live)``
+      one donated decode step over the pool; returns the next tokens.
+  ``reset_slots(idx)``
+      park freed slots (zero positions; recurrent states also zero their
+      rows — stale ``h``/``conv`` from a previous occupant is read
+      unconditionally every step, unlike KV rows which are masked by
+      ``cache_len``).
+  ``max_len()`` / ``prefill_width(n)`` / ``supports_seq_sharding(cfg)``
+      capacity, admission width and SPMD capability probes — the engine
+      never branches on the model family, only on these.
+
+The generic pool ops (scatter admitted rows, pad a full-pool prefill to
+capacity, zero freed slots) are driven by each family's leaf-axis
+metadata (``state_spec.LeafAxes`` from ``transformer.cache_axes`` /
+``ssm.state_axes`` / ``hybrid.cache_axes``): every leaf has one slot axis
+and at most one sequence axis, which is all those operations need.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import api
+
+
+def _len_bucket(n: int, cap: int) -> int:
+    """Pow2-rounded prefill length (>=8) so ragged admission shares a small
+    set of prefill executables; capped at the cache's sequence capacity."""
+    b = 8
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+# (repr(cfg), policy, decode_policy, kv_axis[, mesh]) -> (prefill_fn,
+# prefill_plain_fn, decode_fn). jax.jit caches per function object, so the
+# jitted closures must outlive any one Server — otherwise every server
+# restart recompiles the programs. Greedy serving never reads logits on
+# the host, so all programs return argmaxed (B, 1) token ids — one fused
+# executable per step, no eager argmax dispatches.
+#
+# decode_fn(params, last, state, pos, live) -> (next, state, pos + live):
+# the state pytree and the per-slot position vector are DONATED (their
+# input buffers are reused for the outputs), so a decode step allocates no
+# new state and the slot positions advance device-side — the hot loop
+# performs zero host->device transfers and zero host syncs. The builder is
+# family-generic: prefill/decode dispatch through models.api.
+_PROGRAM_CACHE: dict = {}
+
+
+def _programs(cfg, policy, mesh=None, kv_axis=None, decode_policy=None):
+    # decode_policy: the (possibly merge-strategy-autotuned) policy the
+    # decode program is built against; prefill keeps the group policy so
+    # its in-jit autotune cache reads stay live.
+    dpol = policy if decode_policy is None else decode_policy
+    key = (repr(cfg), policy, dpol, kv_axis,
+           mesh if kv_axis is not None else None)
+    if key not in _PROGRAM_CACHE:
+        pol = policy
+
+        def prefill_fn(p, toks, plens):
+            logits, state = api.prefill(
+                p, cfg, {"tokens": toks, "prompt_len": plens}, policy=pol)
+            return jnp.argmax(logits, -1).astype(jnp.int32), state
+
+        def prefill_plain_fn(p, toks):
+            # every row full-length: no padding mask to apply (the common
+            # uniform-traffic admission; skips the ragged machinery)
+            logits, state = api.prefill(p, cfg, {"tokens": toks},
+                                        policy=pol)
+            return jnp.argmax(logits, -1).astype(jnp.int32), state
+
+        if kv_axis is None:
+            def decode_fn(p, t, c, pos, live):
+                logits, state = api.decode_step(p, cfg, t, c, pos,
+                                                policy=dpol)
+                return (jnp.argmax(logits, -1).astype(jnp.int32), state,
+                        pos + live)
+
+            decode = jax.jit(decode_fn, donate_argnums=(2, 3))
+        else:
+            # Sequence-sharded decode (a KVDecodeState-only capability —
+            # probed via supports_seq_sharding, never via the family):
+            # ONE shard_map program per policy group, built here at engine
+            # startup — the fused partial-statistics path instead of GSPMD
+            # lowering. The cache lives (and stays) sharded along its S
+            # axis; each layer's shard statistics fold through the
+            # policy's merge strategy ("packed": one collective per
+            # layer).
+            from jax.sharding import PartitionSpec as P
+            from repro.distributed.compression import shard_map
+            from repro.distributed.sharding import serve_cache_sharding
+            from .transformer import decode_step_sharded
+            # one source of truth for the pool placement: the program's
+            # in/out specs are the spec of the sharding the engine
+            # allocates the pool under.
+            cspec = {name: s.spec for name, s in
+                     serve_cache_sharding(cfg, mesh, kv_axis).items()}
+
+            def decode_local(p, t, c, pos, live):
+                logits, c = decode_step_sharded(p, cfg, t, c, pos,
+                                                policy=dpol,
+                                                seq_axis=kv_axis)
+                return (jnp.argmax(logits, -1).astype(jnp.int32), c,
+                        pos + live)
+
+            decode = jax.jit(
+                shard_map(decode_local, mesh=mesh,
+                          in_specs=(P(), P(), cspec, P(), P()),
+                          out_specs=(P(), cspec, P())),
+                donate_argnums=(2, 3))
+
+        _PROGRAM_CACHE[key] = (jax.jit(prefill_fn),
+                               jax.jit(prefill_plain_fn),
+                               decode)
+    return _PROGRAM_CACHE[key]
+
+
+class DecodeState:
+    """Base of the per-family serving-state implementations.
+
+    Subclasses provide ``kind``, ``_state_axes(cfg)`` and (optionally)
+    capability overrides; the pool algebra below is generic.
+    """
+
+    kind = "state"
+
+    @classmethod
+    def supports_seq_sharding(cls, cfg) -> bool:
+        """Whether this state can decode over a sequence-sharded pool
+        (the SPMD serve loop). Only linear KV caches can."""
+        return False
+
+    def __init__(self, cfg, params, policy, pool_width, cache_s, *,
+                 mesh=None, kv_axis=None):
+        self.cfg, self.params, self.policy = cfg, params, policy
+        self.pool_width, self.cache_s = pool_width, cache_s
+        self.mesh, self.kv_axis = mesh, kv_axis
+        self.axes = self._state_axes(cfg)
+        self.data = None                 # pool pytree; set on first admit
+        self.pos_dev = jnp.zeros((pool_width,), jnp.int32)
+        self.params_decode = params
+        self._repl = None                # mesh-replicated sharding (SPMD)
+        self._state_shard = None         # sharded pool placement (SPMD)
+        self._setup_placement()
+        if self._repl is not None:
+            self.params_decode = jax.device_put(params, self._repl)
+            self.pos_dev = jax.device_put(self.pos_dev, self._repl)
+        decode_policy = self._autotune_warmup()
+        (self._prefill, self._prefill_plain,
+         self._decode) = _programs(cfg, policy, mesh, kv_axis,
+                                   decode_policy)
+
+    # ------------------------------------------------------- family hooks
+
+    def _state_axes(self, cfg):
+        raise NotImplementedError
+
+    def _setup_placement(self):
+        pass                             # single-device default
+
+    def _autotune_warmup(self):
+        return self.policy
+
+    def max_len(self):
+        """Length at which a slot must stop decoding (None = unbounded:
+        recurrent state and ring-buffer windows never exhaust)."""
+        return None
+
+    def prefill_width(self, n: int) -> int:
+        """Admission width for a wave whose longest prompt is ``n``."""
+        return _len_bucket(n, self.cache_s)
+
+    # --------------------------------------------------------- placement
+
+    def place_tokens(self, x):
+        """Place an engine-side array (tokens/liveness) next to the
+        decode program's inputs (replicated on the mesh for SPMD)."""
+        return x if self._repl is None else jax.device_put(x, self._repl)
+
+    def _place_state(self, tree):
+        if self._state_shard is None:
+            return tree
+        return jax.device_put(tree, self._state_shard)
+
+    # ------------------------------------------------------- engine ops
+
+    def prefill_into(self, slots, toks, plens, *, full, uniform=False):
+        """One pool-width batched prefill; admitted rows land in freed
+        slots. ``toks`` (pool_width, sp) right-padded prompts, ``plens``
+        (pool_width,) real lengths (1 for rows without a request);
+        ``full`` = the whole pool admitted at once (the prefill output
+        *is* the pool, padded to capacity — no scatter); ``uniform`` =
+        run the unmasked plain prefill (no padding exists). Returns the
+        (pool_width, 1) first greedy tokens, placed for decode."""
+        if uniform:
+            first, pref = self._prefill_plain(self.params,
+                                              jnp.asarray(toks))
+        else:
+            first, pref = self._prefill(self.params, jnp.asarray(toks),
+                                        jnp.asarray(plens))
+        first = self.place_tokens(first)
+        sp = toks.shape[1]
+        if full:
+            def pad(leaf, ax):
+                if ax.seq is None or leaf.shape[ax.seq] == self.cache_s:
+                    return leaf
+                widths = [(0, 0)] * leaf.ndim
+                widths[ax.seq] = (0, self.cache_s - leaf.shape[ax.seq])
+                return jnp.pad(leaf, widths)
+
+            self.data = self._place_state(
+                jax.tree.map(pad, pref, self.axes))
+        else:
+            if self.data is None:
+                self.data = self._place_state(
+                    api.init_cache(self.cfg, self.pool_width,
+                                   self.cache_s))
+            sl = jnp.asarray(np.asarray(slots))
+
+            def insert(pool, leaf, ax):
+                rows_idx = [slice(None)] * leaf.ndim
+                rows_idx[ax.batch] = sl
+                rows = leaf[tuple(rows_idx)]
+                if self._repl is not None:
+                    rows = jax.device_put(rows, self._repl)
+                idx = [slice(None)] * pool.ndim
+                idx[ax.batch] = sl
+                if ax.seq is not None:
+                    idx[ax.seq] = slice(0, sp)
+                return pool.at[tuple(idx)].set(rows)
+
+            self.data = jax.tree.map(insert, self.data, pref, self.axes)
+        sl = jnp.asarray(np.asarray(slots))
+        self.pos_dev = self.pos_dev.at[sl].set(
+            jnp.asarray(np.asarray(plens)[np.asarray(slots)], jnp.int32))
+        return first
+
+    def step(self, last, live):
+        """One donated decode step over the pool; positions advance by
+        ``live`` device-side. Returns the (pool_width, 1) next tokens."""
+        nxt, self.data, self.pos_dev = self._decode(
+            self.params_decode, last, self.data, self.pos_dev, live)
+        return nxt
+
+    def reset_slots(self, slots):
+        """Park freed slots: zero their positions and (where
+        ``_reset_leaf`` says so) state rows, so a stale occupant can
+        never bleed into the next request admitted into the slot
+        (recurrent ``h``/``conv`` is read unconditionally every step)."""
+        sl = jnp.asarray(np.asarray(slots))
+        self.pos_dev = self.pos_dev.at[sl].set(0)
+        if self.data is not None:
+            def zero(leaf, ax):
+                if not self._reset_leaf(ax):
+                    return leaf
+                idx = [slice(None)] * leaf.ndim
+                idx[ax.batch] = sl
+                return leaf.at[tuple(idx)].set(0)
+
+            self.data = jax.tree.map(zero, self.data, self.axes)
+
+    def _reset_leaf(self, ax) -> bool:
+        """Whether ``reset_slots`` must zero a leaf with these axes.
+        Default: every leaf (recurrent snapshots are read
+        unconditionally). KV-bearing states skip their sequence leaves —
+        decode masks those rows by ``cache_len`` and admission prefill
+        overwrites them, so zeroing (S, Hkv, hd) rows per finish would
+        out-cost a decode step."""
+        return True
+
+    # ----------------------------------------------------------- shared
+
+    def _linear_cap(self):
+        # A pool smaller than the sliding window can never wrap its ring
+        # buffer correctly (the write cursor is pos % window, which runs
+        # past the pool's extent) — such a pool behaves like a linear
+        # cache and must stop slots at capacity, exactly like a
+        # window-less cache. Only a full-window pool decodes unbounded.
+        w = self.cfg.sliding_window
+        if w is None or self.cache_s < w:
+            return self.cache_s
+        return None
+
+
+class KVDecodeState(DecodeState):
+    """Transformer families (dense / moe / vlm): today's KV cache +
+    per-slot positions, including the sequence-sharded SPMD path."""
+
+    kind = "kv"
+
+    @classmethod
+    def supports_seq_sharding(cls, cfg) -> bool:
+        # windowed archs keep the GSPMD path: the ring-buffer wrap write
+        # straddles shard boundaries.
+        return cfg.sliding_window is None
+
+    def _state_axes(self, cfg):
+        from .transformer import cache_axes
+        return cache_axes(cfg)
+
+    def max_len(self):
+        # a linear cache is exhausted when the next write would fall past
+        # the last slot; ring-buffer windows wrap instead.
+        return self._linear_cap()
+
+    def _setup_placement(self):
+        if self.kv_axis is None:
+            return
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed.sharding import serve_cache_sharding
+        # decode runs over the mesh; prefill stays on the default device
+        # (its outputs are re-placed at admission).
+        self._repl = NamedSharding(self.mesh, P())
+        self._state_shard = serve_cache_sharding(self.cfg, self.mesh,
+                                                 self.kv_axis)
+
+    def _reset_leaf(self, ax) -> bool:
+        return False      # pure KV: every leaf is cache_len-masked
+
+    def _autotune_warmup(self):
+        """Eagerly tune the decode-attention block size for this group's
+        decode shape. Timing is meaningless inside the jitted decode
+        program (tracers, not device work), so the tuner only ever
+        *reads* its cache there — this one eager call at the real
+        (pool_width, cache_s) shape times the candidates, memoizes the
+        winner for the jit path to pick up, and persists it to disk so
+        the next server start skips even this.
+
+        On a sequence-sharded group it additionally times the two
+        collective merge strategies (packed single-collective vs
+        pmax+2×psum) at the group's exact decode shape and returns the
+        policy with the winner baked in (the shard_map decode program
+        takes the policy statically, so it must resolve before the
+        program is built). Returns the — possibly tuned — policy.
+        """
+        cfg, policy = self.cfg, self.policy
+        if not policy.autotune or policy.kernel_backend != "pallas":
+            return policy
+        from repro.kernels.dispatch import dispatch, autotune_policy
+        lay = cfg.kv_cache_layout
+        kv_shape = ((self.pool_width, cfg.n_kv_heads, self.cache_s, cfg.hd)
+                    if lay == "bhsd" else
+                    (self.pool_width, self.cache_s, cfg.n_kv_heads, cfg.hd))
+        q = jnp.zeros((self.pool_width, 1, cfg.n_heads, cfg.hd),
+                      jnp.dtype(cfg.compute_dtype))
+        kv = jnp.zeros(kv_shape, jnp.bfloat16)      # init_cache's dtype
+        clen = jnp.full((self.pool_width,), self.cache_s, jnp.int32)
+        dispatch("decode_attention", policy)(q, kv, kv, clen, layout=lay,
+                                             policy=policy)
+        if self.kv_axis is None:
+            return policy
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.kernels.decode_attention.ops import _sharded_program
+        from .transformer import cache_seq_axis as _csa
+        spec = [None] * 4
+        spec[_csa(lay, stacked=False)] = self.kv_axis
+        kvs = jax.device_put(kv, NamedSharding(self.mesh, P(*spec)))
+        return autotune_policy(
+            "decode_attention_sharded", policy,
+            lambda p: _sharded_program(self.mesh, self.kv_axis, None, None,
+                                       lay, p)(q, kvs, kvs, clen),
+            q, kvs)
+
+
+class RecurrentDecodeState(DecodeState):
+    """ssm (mamba2/SSD): batched per-layer (h, conv) snapshots. No
+    sequence axis anywhere — a slot's state is O(1) in its length, so
+    there is no capacity cap and admission scatters whole slot rows."""
+
+    kind = "recurrent"
+
+    def _state_axes(self, cfg):
+        from .ssm import state_axes
+        return state_axes(cfg)
+
+
+class HybridDecodeState(DecodeState):
+    """hybrid (recurrentgemma/griffin): mixed per-period state — RG-LRU
+    ``(h, conv)`` snapshots next to ring-buffer local-attention KV."""
+
+    kind = "hybrid"
+
+    def _state_axes(self, cfg):
+        from .hybrid import cache_axes
+        return cache_axes(cfg)
+
+    def max_len(self):
+        return self._linear_cap()
+
+    def _reset_leaf(self, ax) -> bool:
+        # zero only the recurrent snapshots; the ring-buffer KV leaves
+        # are cache_len-masked and fully overwritten by the fixed-width
+        # admission prefill, so zeroing them per finish is wasted work.
+        return ax.seq is None
+
+    def prefill_width(self, n: int) -> int:
+        # Fixed admission width: the RG-LRU associative scan's combine
+        # tree — and therefore its fp summation order — depends on the
+        # scan *length*, so pow2 buckets would make a row's state drift
+        # with the admission wave it rode in (vs. solo serving). A fixed
+        # width keeps batched tokens bit-identical to solo tokens; it is
+        # bounded by the sliding window, so the cost stays modest.
+        return self.cache_s
+
+
+def decode_state_for(cfg):
+    """The DecodeState implementation serving ``cfg`` (the one family
+    dispatch of the serving stack)."""
+    if cfg.family == "ssm":
+        return RecurrentDecodeState
+    if cfg.family == "hybrid":
+        return HybridDecodeState
+    if cfg.family == "audio":
+        raise ValueError("encoder-only arch has no decode state to serve")
+    return KVDecodeState

@@ -18,11 +18,13 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.vexp import get_exp_fn
+from repro.kernels.dispatch import exp_callable
 from .layers import (dense_init, embed_init, norm_init, norm_apply,
                      vexp_sigmoid, gelu, mlp_init, mlp_apply, cross_entropy,
                      mask_padded_logits)
-from .transformer import (attn_init, attn_apply, attn_decode)
+from .state_spec import LeafAxes
+from .transformer import (attn_init, attn_apply, attn_decode, _qkv,
+                          _rope_pos, _write_token_kv)
 
 RG_LRU_C = 8.0     # Griffin's fixed exponent scale
 
@@ -51,14 +53,19 @@ def rec_layer_init(key, cfg, dtype=jnp.float32):
     }
 
 
-def _rg_lru(xw, p, cfg, h0=None):
+def _rg_lru(xw, p, cfg, h0=None, last_idx=None, policy=None):
     """RG-LRU over a sequence. xw: (B, S, W). Returns (y, h_last).
 
     h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
     log a_t = -c * r_t * softplus(-lam)  (= c*r_t*log sigmoid(lam) <= 0).
     Parallelized with an associative scan in the log-decay domain.
+
+    ``last_idx`` (B,) gathers each row's state at that position instead of
+    the sequence end (ragged right-padded prefill: the state at the last
+    *real* token — a prefix-scan element depends only on positions <= it,
+    so no masking of the padded tail is needed).
     """
-    exp_fn = get_exp_fn(cfg.exp_impl)
+    exp_fn = exp_callable(policy, cfg.exp_impl)
     xf = xw.astype(jnp.float32)
     r = vexp_sigmoid(xf @ p["w_rec_gate"].astype(jnp.float32), exp_fn)
     i = vexp_sigmoid(xf @ p["w_input_gate"].astype(jnp.float32), exp_fn)
@@ -77,18 +84,28 @@ def _rg_lru(xw, p, cfg, h0=None):
     la_acc, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
     if h0 is not None:
         h = h + exp_fn(la_acc) * h0[:, None, :]
-    return h.astype(xw.dtype), h[:, -1]
+    if last_idx is None:
+        h_last = h[:, -1]
+    else:
+        h_last = jnp.take_along_axis(
+            h, jnp.asarray(last_idx, jnp.int32).reshape(-1, 1, 1), axis=1
+        )[:, 0]
+    return h.astype(xw.dtype), h_last
 
 
-def rec_layer_apply(x, p, cfg, h0=None, conv_state=None):
-    """Full-sequence recurrent block. Returns (y, (h_last, conv_state))."""
-    exp_fn = get_exp_fn(cfg.exp_impl)
+def rec_layer_apply(x, p, cfg, h0=None, conv_state=None, last_idx=None,
+                    valid_len=None, policy=None):
+    """Full-sequence recurrent block. Returns (y, (h_last, conv_state)).
+
+    ``last_idx``/``valid_len`` (both (B,), = prompt_len - 1 / prompt_len)
+    take each row's recurrent and conv state at its last real token."""
     hin = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
     u = hin @ p["wx"]
     # temporal conv (depthwise, causal)
     from .ssm import _causal_conv
-    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
-    y, h_last = _rg_lru(u, p, cfg, h0)
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state,
+                                 valid_len=valid_len)
+    y, h_last = _rg_lru(u, p, cfg, h0, last_idx=last_idx, policy=policy)
     gate = gelu(hin @ p["wy"])
     out = (y * gate) @ p["w_out"]
     x = x + out
@@ -97,9 +114,9 @@ def rec_layer_apply(x, p, cfg, h0=None, conv_state=None):
     return x, (h_last, conv_state)
 
 
-def rec_layer_decode(x, p, cfg, state):
+def rec_layer_decode(x, p, cfg, state, policy=None):
     """Single-token decode. state: {"h": (B, W), "conv": (B, W-1, W)}."""
-    exp_fn = get_exp_fn(cfg.exp_impl)
+    exp_fn = exp_callable(policy, cfg.exp_impl)
     hin = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
     u = hin @ p["wx"]
     from .ssm import _causal_conv
@@ -131,29 +148,33 @@ def attn_layer_init(key, cfg, dtype=jnp.float32):
                             cfg.use_bias, dtype)}
 
 
-def attn_layer_apply(x, p, cfg, pos):
+def attn_layer_apply(x, p, cfg, pos, kv_valid=None, policy=None):
     h = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
-    a, kv = attn_apply(h, p["attn"], cfg, pos, window=cfg.sliding_window)
+    a, kv = attn_apply(h, p["attn"], cfg, pos, window=cfg.sliding_window,
+                       kv_valid=kv_valid, policy=policy)
     x = x + a
     h2 = norm_apply(x, p["ln_mlp"], cfg.norm, cfg.norm_eps)
     x = x + mlp_apply(h2, p["mlp"], cfg.act, cfg.exp_impl)
     return x, kv
 
 
-def attn_layer_decode(x, p, cfg, ck, cv, pos, wpos):
-    h = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
-    from .transformer import _qkv
+def attn_layer_decode(x, p, cfg, ck, cv, pos, wpos, policy=None):
+    """Single-token local-attention decode. ``pos`` (and the ring-buffer
+    write cursor ``wpos``) may be a scalar or a per-slot (B,) vector — the
+    continuous-batching engine's slots each advance at their own
+    position; the scatter write and the per-row cache_len mask keep them
+    independent."""
     from repro.core.attention import decode_attention
     b = x.shape[0]
-    q, k, v = _qkv(h, p["attn"], cfg, jnp.full((b, 1), pos, jnp.int32))
-    ck = jax.lax.dynamic_update_slice_in_dim(
-        ck, k.astype(ck.dtype), wpos, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(
-        cv, v.astype(cv.dtype), wpos, axis=1)
+    h = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
+    q, k, v = _qkv(h, p["attn"], cfg, _rope_pos(b, pos))
+    ck = _write_token_kv(ck, k, wpos, "bshd")
+    cv = _write_token_kv(cv, v, wpos, "bshd")
     w = cfg.sliding_window
-    valid = jnp.minimum(pos + 1, w)
+    pos = jnp.asarray(pos, jnp.int32)
+    valid = jnp.minimum(pos + 1, w) if w else pos + 1
     o = decode_attention(q, ck, cv, cache_len=valid, exp_impl=cfg.exp_impl,
-                         mm_dtype=cfg.attn_mm_dtype)
+                         mm_dtype=cfg.attn_mm_dtype, policy=policy)
     x = x + o.reshape(b, 1, -1) @ p["attn"]["wo"]
     h2 = norm_apply(x, p["ln_mlp"], cfg.norm, cfg.norm_eps)
     x = x + mlp_apply(h2, p["mlp"], cfg.act, cfg.exp_impl)
@@ -200,7 +221,7 @@ def _cast(layer_p, dt):
                         layer_p)
 
 
-def forward(params, cfg, tokens):
+def forward(params, cfg, tokens, *, policy=None):
     dt = jnp.dtype(cfg.compute_dtype)
     x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
     b, s = tokens.shape
@@ -211,12 +232,13 @@ def forward(params, cfg, tokens):
         period_p = _cast(period_p, dt)
 
         def rec_body(x, rec_p):
-            y, _ = rec_layer_apply(x, rec_p, cfg)
+            y, _ = rec_layer_apply(x, rec_p, cfg, policy=policy)
             return y, None
 
         x, _ = jax.lax.scan(rec_body, x, period_p["recs"],
                             unroll=cfg.unroll_scans)
-        x, _ = attn_layer_apply(x, period_p["attn"], cfg, pos)
+        x, _ = attn_layer_apply(x, period_p["attn"], cfg, pos,
+                                policy=policy)
         return x, None
 
     if cfg.remat:
@@ -226,15 +248,15 @@ def forward(params, cfg, tokens):
                         unroll=n_per if cfg.unroll_scans else 1)
     if tail:
         def tail_body(x, rec_p):
-            y, _ = rec_layer_apply(x, rec_p, cfg)
+            y, _ = rec_layer_apply(x, rec_p, cfg, policy=policy)
             return y, None
         x, _ = jax.lax.scan(tail_body, x, _cast(params["tail"], dt),
                             unroll=cfg.unroll_scans)
     return norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
 
 
-def loss_fn(params, cfg, batch):
-    x = forward(params, cfg, batch["tokens"])
+def loss_fn(params, cfg, batch, *, policy=None):
+    x = forward(params, cfg, batch["tokens"], policy=policy)
     return cross_entropy(x, params["unembed"], batch["labels"],
                          chunk=cfg.loss_chunk, exp_impl=cfg.exp_impl,
                          mask=batch.get("mask"), unroll=cfg.unroll_scans)
@@ -259,24 +281,59 @@ def init_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
     return cache
 
 
-def prefill(params, cfg, tokens):
+def cache_axes(cfg):
+    """DecodeState leaf metadata for the mixed per-period state: the
+    recurrent snapshots carry only a slot axis; the local-attention KV
+    leaves additionally have a sequence axis (ring-buffer window)."""
+    period, n_per, tail = _period_counts(cfg)
+    axes = {"periods": {"rec_h": LeafAxes(2), "rec_conv": LeafAxes(2),
+                        "k": LeafAxes(1, 2), "v": LeafAxes(1, 2)}}
+    if tail:
+        axes["tail"] = {"h": LeafAxes(1), "conv": LeafAxes(1)}
+    return axes
+
+
+def prefill(params, cfg, tokens, *, prompt_len=None, policy=None):
+    """Prompt forward -> (last_logits, cache).
+
+    ``prompt_len`` (B,) marks ragged right-padded prompts: padding is
+    masked out of the local attention (and its pad K/V rows zeroed), each
+    recurrent layer's (h, conv) state is gathered at the row's last real
+    token, and so are the returned logits. Ragged batches must fit the
+    sliding window (the ring-buffer roll is batch-uniform)."""
     dt = jnp.dtype(cfg.compute_dtype)
     x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
     b, s = tokens.shape
     pos = jnp.arange(s)[None, :].astype(jnp.int32)
     period, n_per, tail = _period_counts(cfg)
     win = min(s, cfg.sliding_window or s)
+    plen = kv_valid = last_idx = None
+    if prompt_len is not None:
+        if cfg.sliding_window and s > cfg.sliding_window:
+            raise ValueError(
+                f"ragged prefill of {s} tokens exceeds the sliding window "
+                f"({cfg.sliding_window}): the ring-buffer roll is batch-"
+                f"uniform; prefill ragged windowed batches at <= window")
+        plen = jnp.asarray(prompt_len, jnp.int32).reshape(-1)
+        kv_valid = jnp.arange(s)[None, :] < plen[:, None]        # (B, S)
+        last_idx = jnp.clip(plen - 1, 0, s - 1)
 
     def body(x, period_p):
         period_p = _cast(period_p, dt)
 
         def rec_body(x, rec_p):
-            y, (h, conv) = rec_layer_apply(x, rec_p, cfg)
+            y, (h, conv) = rec_layer_apply(x, rec_p, cfg, last_idx=last_idx,
+                                           valid_len=plen, policy=policy)
             return y, (h, conv.astype(jnp.float32))
 
         x, (hs, convs) = jax.lax.scan(rec_body, x, period_p["recs"],
                                       unroll=cfg.unroll_scans)
-        x, (k, v) = attn_layer_apply(x, period_p["attn"], cfg, pos)
+        x, (k, v) = attn_layer_apply(x, period_p["attn"], cfg, pos,
+                                     kv_valid=kv_valid, policy=policy)
+        if kv_valid is not None:
+            # pad rows must not reach the decode cache (freed-slot hygiene)
+            k = jnp.where(kv_valid[:, :, None, None], k, 0)
+            v = jnp.where(kv_valid[:, :, None, None], v, 0)
         k, v = k[:, -win:], v[:, -win:]
         if cfg.sliding_window and s > cfg.sliding_window:
             # ring-buffer layout: slot = absolute position % window
@@ -293,24 +350,35 @@ def prefill(params, cfg, tokens):
     cache = {"periods": pcache}
     if tail:
         def tail_body(x, rec_p):
-            y, (h, conv) = rec_layer_apply(x, rec_p, cfg)
+            y, (h, conv) = rec_layer_apply(x, rec_p, cfg, last_idx=last_idx,
+                                           valid_len=plen, policy=policy)
             return y, {"h": h, "conv": conv.astype(jnp.float32)}
         x, tcache = jax.lax.scan(tail_body, x, _cast(params["tail"], dt),
                                  unroll=cfg.unroll_scans)
         cache["tail"] = tcache
     x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    if prompt_len is None:
+        xl = x[:, -1:]
+    else:
+        idx = last_idx[:, None, None]
+        xl = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
     ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
-    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:].astype(ldt),
+    logits = jnp.einsum("bsd,dv->bsv", xl.astype(ldt),
                         params["unembed"].astype(ldt),
                         preferred_element_type=jnp.float32)
     return mask_padded_logits(logits, cfg.vocab), cache
 
 
-def decode_step(params, cfg, token, cache, pos):
+def decode_step(params, cfg, token, cache, pos, *, policy=None):
+    """One decode step. ``pos`` is a scalar (whole batch at one position)
+    or a per-slot (B,) vector — the continuous-batching engine's slots
+    each advance independently through their own ring-buffer cursor."""
     dt = jnp.dtype(cfg.compute_dtype)
     x = jnp.take(params["embed"], token, axis=0).astype(dt)
     period, n_per, tail = _period_counts(cfg)
     w = cfg.sliding_window
+    pos = jnp.asarray(pos, jnp.int32)
     wpos = pos % w if w else pos
 
     def body(x, inp):
@@ -319,14 +387,16 @@ def decode_step(params, cfg, token, cache, pos):
 
         def rec_body(x, rec_inp):
             rec_p, h, conv = rec_inp
-            y, new = rec_layer_decode(x, rec_p, cfg, {"h": h, "conv": conv})
+            y, new = rec_layer_decode(x, rec_p, cfg, {"h": h, "conv": conv},
+                                      policy=policy)
             return y, (new["h"], new["conv"].astype(jnp.float32))
 
         x, (hs, convs) = jax.lax.scan(
             rec_body, x, (period_p["recs"], pc["rec_h"], pc["rec_conv"]),
             unroll=cfg.unroll_scans)
         x, ck, cv = attn_layer_decode(x, period_p["attn"], cfg,
-                                      pc["k"], pc["v"], pos, wpos)
+                                      pc["k"], pc["v"], pos, wpos,
+                                      policy=policy)
         return x, {"rec_h": hs, "rec_conv": convs, "k": ck, "v": cv}
 
     n_per = cfg.n_layers // cfg.attn_period
@@ -337,7 +407,7 @@ def decode_step(params, cfg, token, cache, pos):
         def tail_body(x, inp):
             rec_p, h, conv = inp
             y, new = rec_layer_decode(x, rec_p, cfg,
-                                      {"h": h, "conv": conv})
+                                      {"h": h, "conv": conv}, policy=policy)
             return y, {"h": new["h"], "conv": new["conv"].astype(jnp.float32)}
         x, tcache = jax.lax.scan(
             tail_body, x, (_cast(params["tail"], dt), cache["tail"]["h"],

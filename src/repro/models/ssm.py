@@ -15,13 +15,16 @@ Decode is a single state update: h ← a·h + Δt·(B ⊗ x); y = C·h + D·x.
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 
-from repro.core.vexp import get_exp_fn
+from repro.kernels.dispatch import exp_callable
 from .layers import (dense_init, norm_init, norm_apply, embed_init,
                      vexp_softplus, vexp_silu, cross_entropy,
                      mask_padded_logits)
+from .state_spec import LeafAxes
 
 
 def ssm_dims(cfg):
@@ -57,9 +60,15 @@ def _split_proj(zxbcdt, cfg):
     return z, x, Bc, Cc, dt
 
 
-def _causal_conv(u, w, b, state=None):
+def _causal_conv(u, w, b, state=None, valid_len=None):
     """Depthwise causal conv along seq. u: (B, S, C); w: (W, C).
-    state: optional (B, W-1, C) left context (decode). Returns (y, new_state)."""
+    state: optional (B, W-1, C) left context (decode).
+
+    ``valid_len`` selects where the returned left-context state ends: by
+    default it is the last W-1 inputs; a per-row (B,) count gathers the
+    window ending at each row's last *real* token (ragged right-padded
+    prefill), and a static int slices at that position (chunk-padded
+    uniform prefill). Returns (y, new_state)."""
     width = w.shape[0]
     if state is None:
         pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
@@ -67,33 +76,72 @@ def _causal_conv(u, w, b, state=None):
         pad = state.astype(u.dtype)
     full = jnp.concatenate([pad, u], axis=1)
     y = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(width)) + b
-    return y, full[:, -(width - 1):]
+    if valid_len is None:
+        new_state = full[:, full.shape[1] - (width - 1):]
+    elif isinstance(valid_len, int):
+        new_state = full[:, valid_len:valid_len + width - 1]
+    else:
+        idx = (jnp.asarray(valid_len, jnp.int32).reshape(-1, 1)
+               + jnp.arange(width - 1)[None, :])
+        new_state = jnp.take_along_axis(full, idx[..., None], axis=1)
+    return y, new_state
 
 
-def ssm_layer_apply(x, p, cfg, return_state=False):
-    """Full-sequence SSD. x: (B, S, D) -> (B, S, D) [, final state]."""
-    exp_fn = get_exp_fn(cfg.exp_impl)
+def ssm_layer_apply(x, p, cfg, return_state=False, prompt_len=None,
+                    policy=None):
+    """Full-sequence SSD. x: (B, S, D) -> (B, S, D) [, final state].
+
+    Arbitrary sequence lengths are supported: the sequence is padded to
+    the next ``cfg.ssm_chunk`` multiple and the pad steps are masked by
+    zeroing their ``dt`` — a zero step size makes the decay
+    ``a = exp(0·A) = 1`` and the update contribution exactly 0.0, so the
+    padded tail neither moves the state nor perturbs any real position
+    (bitwise — which is also why a row produces identical values at any
+    right-padded batch width). ``prompt_len`` (B,) extends the same mask
+    to ragged right-padded prompts; with ``return_state`` each row's
+    ``(h, conv)`` is the state at its *last real token*, not the padded
+    end. The chunk size is always ``cfg.ssm_chunk`` (never shrunk to a
+    short sequence) so a row's chunk decomposition — and therefore its fp
+    summation order — is independent of how far its batch was padded.
+    """
+    exp_fn = exp_callable(policy, cfg.exp_impl)
     b, s, d = x.shape
     di, nh, ds, ng, conv_dim = ssm_dims(cfg)
     hd = cfg.ssm_headdim
-    q = min(cfg.ssm_chunk, s)
-    assert s % q == 0, "seq must divide ssm_chunk"
-    nc = s // q
+    q = cfg.ssm_chunk
+    pad = (-s) % q
+    sp = s + pad
+    nc = sp // q
+    valid = None
+    if prompt_len is not None:
+        plen = jnp.asarray(prompt_len, jnp.int32).reshape(-1)
+        valid = jnp.arange(sp)[None, :] < plen[:, None]          # (B, Sp)
+    elif pad:
+        valid = jnp.broadcast_to(jnp.arange(sp)[None, :] < s, (b, sp))
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
 
     h = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
     z, xin, Bc, Cc, dt = _split_proj(h @ p["in_proj"], cfg)
     conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
-    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    state_at = None
+    if return_state:
+        state_at = plen if prompt_len is not None else s
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                        valid_len=state_at)
     conv_out = vexp_silu(conv_out, exp_fn)
     xin, Bc, Cc = jnp.split(conv_out, [di, di + ng * ds], axis=-1)
 
     dt = vexp_softplus(dt.astype(jnp.float32) + p["dt_bias"], exp_fn)  # (B,S,nh)
+    if valid is not None:
+        # pad/ragged steps: dt = 0 -> decay 1, update 0 (state untouched).
+        dt = jnp.where(valid[..., None], dt, 0.0)
     A = -exp_fn(p["A_log"])                                            # (nh,)
     la = dt * A                                                        # log a_t <= 0
 
-    xh = xin.astype(jnp.float32).reshape(b, s, nh, hd)
-    Bh = Bc.astype(jnp.float32).reshape(b, s, ng, ds)
-    Ch = Cc.astype(jnp.float32).reshape(b, s, ng, ds)
+    xh = xin.astype(jnp.float32).reshape(b, sp, nh, hd)
+    Bh = Bc.astype(jnp.float32).reshape(b, sp, ng, ds)
+    Ch = Cc.astype(jnp.float32).reshape(b, sp, ng, ds)
     gph = nh // ng                                  # heads per group
     # chunked views: (B, nc, Q, ...)
     xc = xh.reshape(b, nc, q, nh, hd)
@@ -159,19 +207,19 @@ def ssm_layer_apply(x, p, cfg, return_state=False):
                          preferred_element_type=jnp.float32)
     y_inter = y_inter.reshape(b, nc, q, nh, hd)
 
-    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    y = (y_intra + y_inter).reshape(b, sp, nh, hd)
     y = y + xh * p["D"][None, None, :, None]
-    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y.reshape(b, sp, di).astype(x.dtype)
     y = y * vexp_silu(z, exp_fn)
-    out = x + y @ p["out_proj"]
+    out = (x + y @ p["out_proj"])[:, :s]
     if return_state:
         return out, {"h": h_final, "conv": conv_state.astype(jnp.float32)}
     return out
 
 
-def ssm_layer_decode(x, p, cfg, state):
+def ssm_layer_decode(x, p, cfg, state, policy=None):
     """Single-token decode. state: {"h": (B,nh,hd,ds), "conv": (B,W-1,C)}."""
-    exp_fn = get_exp_fn(cfg.exp_impl)
+    exp_fn = exp_callable(policy, cfg.exp_impl)
     b = x.shape[0]
     di, nh, ds, ng, conv_dim = ssm_dims(cfg)
     hd = cfg.ssm_headdim
@@ -198,7 +246,12 @@ def ssm_layer_decode(x, p, cfg, state):
     y = jnp.einsum("bhds,bhs->bhd", hnew, Ch) + xh * p["D"][None, :, None]
     y = y.reshape(b, 1, di).astype(x.dtype)
     y = y * vexp_silu(z, exp_fn)
-    return x + y @ p["out_proj"], {"h": hnew, "conv": new_conv}
+    # conv state stays f32 like init_cache/prefill allocate it — the conv
+    # window is computed in compute dtype, and returning it as bf16 would
+    # silently flip the carried state's dtype after the first step (and
+    # break the serving engine's donated in-place state update).
+    return (x + y @ p["out_proj"],
+            {"h": hnew, "conv": new_conv.astype(jnp.float32)})
 
 
 # ------------------------------------------------------------- full model
@@ -213,7 +266,7 @@ def init_params(cfg, key):
             "unembed": dense_init(ks[-2], cfg.d_model, cfg.vocab_padded)}
 
 
-def forward(params, cfg, tokens):
+def forward(params, cfg, tokens, *, policy=None):
     dt = jnp.dtype(cfg.compute_dtype)
     x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
 
@@ -221,7 +274,7 @@ def forward(params, cfg, tokens):
         layer_p = jax.tree.map(
             lambda a: a.astype(dt)
             if a.dtype == jnp.float32 and a.ndim > 1 else a, layer_p)
-        return ssm_layer_apply(x, layer_p, cfg), None
+        return ssm_layer_apply(x, layer_p, cfg, policy=policy), None
 
     if cfg.remat:
         body = jax.checkpoint(body, prevent_cse=False)
@@ -230,14 +283,21 @@ def forward(params, cfg, tokens):
     return norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
 
 
-def loss_fn(params, cfg, batch):
-    x = forward(params, cfg, batch["tokens"])
+def loss_fn(params, cfg, batch, *, policy=None):
+    x = forward(params, cfg, batch["tokens"], policy=policy)
     return cross_entropy(x, params["unembed"], batch["labels"],
                          chunk=cfg.loss_chunk, exp_impl=cfg.exp_impl,
                          mask=batch.get("mask"), unroll=cfg.unroll_scans)
 
 
-def init_state(cfg, batch):
+def init_cache(cfg, batch, seq_len=None):
+    """Decode state for ``batch`` rows (the family-uniform constructor).
+
+    ``seq_len`` is accepted for signature parity with the KV families and
+    deliberately unused: recurrent state is O(1) in sequence length —
+    per layer one (B, nh, hd, ds) SSD state and one (B, W-1, C) conv
+    left-context, regardless of how long the sequence was or will be.
+    """
     di, nh, ds, ng, conv_dim = ssm_dims(cfg)
     shape_h = (cfg.n_layers, batch, nh, cfg.ssm_headdim, ds)
     shape_c = (cfg.n_layers, batch, cfg.conv_width - 1, conv_dim)
@@ -245,17 +305,37 @@ def init_state(cfg, batch):
             "conv": jnp.zeros(shape_c, jnp.float32)}
 
 
-def prefill(params, cfg, tokens):
+def init_state(cfg, batch):
+    """Deprecated alias of ``init_cache`` (pre-DecodeState signature)."""
+    warnings.warn("ssm.init_state(cfg, batch) is deprecated; use "
+                  "ssm.init_cache(cfg, batch, seq_len) / models.api."
+                  "init_cache — the family-uniform constructor",
+                  DeprecationWarning, stacklevel=2)
+    return init_cache(cfg, batch)
+
+
+def state_axes(cfg):
+    """DecodeState leaf metadata: slot axis per leaf, no sequence axis."""
+    return {"h": LeafAxes(1), "conv": LeafAxes(1)}
+
+
+def prefill(params, cfg, tokens, *, prompt_len=None, policy=None):
     """Returns (last_logits, state): one full-sequence SSD pass per layer,
-    collecting each layer's final (h, conv) state for subsequent decode."""
+    collecting each layer's final (h, conv) state for subsequent decode.
+
+    ``prompt_len`` (B,) marks ragged right-padded prompts: pad steps are
+    dt-masked out of the recurrence, each row's state is taken at its
+    last *real* token, and so are the returned logits."""
     dt = jnp.dtype(cfg.compute_dtype)
     x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    b, s = tokens.shape
 
     def body(x, layer_p):
         layer_p = jax.tree.map(
             lambda a: a.astype(dt)
             if a.dtype == jnp.float32 and a.ndim > 1 else a, layer_p)
-        y, state = ssm_layer_apply(x, layer_p, cfg, return_state=True)
+        y, state = ssm_layer_apply(x, layer_p, cfg, return_state=True,
+                                   prompt_len=prompt_len, policy=policy)
         return y, state
 
     if cfg.remat:
@@ -263,14 +343,25 @@ def prefill(params, cfg, tokens):
     x, state = jax.lax.scan(body, x, params["layers"],
                             unroll=cfg.n_layers if cfg.unroll_scans else 1)
     x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    if prompt_len is None:
+        xl = x[:, -1:]
+    else:
+        plen = jnp.asarray(prompt_len, jnp.int32).reshape(-1)
+        idx = jnp.clip(plen - 1, 0, s - 1)[:, None, None]
+        xl = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
     ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
-    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:].astype(ldt),
+    logits = jnp.einsum("bsd,dv->bsv", xl.astype(ldt),
                         params["unembed"].astype(ldt),
                         preferred_element_type=jnp.float32)
     return mask_padded_logits(logits, cfg.vocab), state
 
 
-def decode_step(params, cfg, token, state, pos):
+def decode_step(params, cfg, token, state, pos, *, policy=None):
+    """One decode step. ``pos`` (scalar or per-slot (B,)) is accepted for
+    the family-uniform signature and unused — the recurrence carries all
+    positional information in its state."""
+    del pos
     dt = jnp.dtype(cfg.compute_dtype)
     x = jnp.take(params["embed"], token, axis=0).astype(dt)
 
@@ -279,7 +370,8 @@ def decode_step(params, cfg, token, state, pos):
         layer_p = jax.tree.map(
             lambda a: a.astype(dt)
             if a.dtype == jnp.float32 and a.ndim > 1 else a, layer_p)
-        y, new = ssm_layer_decode(x, layer_p, cfg, {"h": h, "conv": conv})
+        y, new = ssm_layer_decode(x, layer_p, cfg, {"h": h, "conv": conv},
+                                  policy=policy)
         return y, new
 
     x, new_state = jax.lax.scan(

@@ -1,0 +1,36 @@
+"""Per-leaf axis metadata for decode-state pytrees (DecodeState protocol).
+
+Every family's decode state — a transformer KV cache, an SSM's per-layer
+``(h, conv)`` snapshots, a hybrid's mixed periods — is a pytree of arrays
+in which each leaf has one *slot* (batch) axis and at most one *sequence*
+axis. That is all the slot engine needs to know to scatter admitted rows
+into a pool, pad a full-pool prefill out to capacity, or zero a freed
+slot; the per-family ``cache_axes()/state_axes()`` functions next to each
+family's ``init_cache`` return a pytree of ``LeafAxes`` matching the
+state's structure, and ``models.decode_state`` drives the generic ops.
+
+``LeafAxes`` is deliberately *not* registered as a pytree node so it
+survives ``jax.tree.map`` as a leaf (a plain tuple would be flattened).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+
+class LeafAxes:
+    """Axis roles of one decode-state leaf.
+
+    batch  index of the slot (pool/batch) axis.
+    seq    index of the sequence axis, or None for per-slot snapshots
+           (recurrent ``h``/``conv`` state has no sequence extent).
+    """
+
+    __slots__ = ("batch", "seq")
+
+    def __init__(self, batch: int, seq: Optional[int] = None):
+        self.batch = batch
+        self.seq = seq
+
+    def __repr__(self):
+        return f"LeafAxes(batch={self.batch}, seq={self.seq})"

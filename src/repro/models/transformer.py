@@ -94,6 +94,14 @@ def cache_seq_axis(layout: str, stacked: bool = True) -> int:
     return base + (1 if stacked else 0)
 
 
+def cache_axes(cfg):
+    """DecodeState leaf metadata: slot axis + layout-resolved sequence
+    axis of each stacked KV-cache leaf (the slot engine's scatter spec)."""
+    from .state_spec import LeafAxes
+    ax = cache_seq_axis(cfg.kv_cache_layout)
+    return {"k": LeafAxes(1, ax), "v": LeafAxes(1, ax)}
+
+
 def _rope_pos(b, pos):
     """(B, 1) rope positions from a scalar or per-row (B,) position."""
     pos = jnp.asarray(pos, jnp.int32)

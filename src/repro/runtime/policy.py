@@ -61,7 +61,14 @@ _FALSY = ("0", "false", "no", "off")
 class ExecPolicy:
     """How to execute the softmax/attention stack.
 
-    exp_backend     "exact" | "vexp" | "vexp_hw"   (core.vexp.EXP_FNS)
+    exp_backend     "exact" | "vexp" | "vexp_hw"   (core.vexp.EXP_FNS).
+                    Governs every exponential in the stack, not just the
+                    attention softmax: the recurrent families' gates —
+                    hybrid's RG-LRU ``a = exp(c·r·log a)``, ssm's SSD
+                    decays / softplus / SiLU — resolve through
+                    ``kernels.dispatch.exp_callable(policy, ...)``, so a
+                    serving policy group flips recurrent-gate numerics
+                    exactly like softmax numerics.
     kernel_backend  "pallas"    — the Pallas TPU kernels (interpreted on CPU)
                     "reference" — pure-jnp blockwise implementations
                     "xla"       — XLA-fused materialized paths

@@ -114,6 +114,20 @@ class TestDispatch:
         with pytest.raises(ValueError):
             kd.dispatch("conv3d", ExecPolicy())
 
+    def test_exp_callable_resolution(self):
+        """The recurrent-gate exp resolution: policy.exp_backend wins,
+        the legacy exp_impl string is the fallback — so --policy-groups
+        flips RG-LRU / SSD gate numerics like softmax numerics."""
+        from repro.core.vexp import EXP_FNS
+        for exp in ("exact", "vexp", "vexp_hw"):
+            pol = ExecPolicy(exp_backend=exp)
+            assert kd.exp_callable(pol) is EXP_FNS[exp]
+            # policy beats the legacy string
+            assert kd.exp_callable(pol, "exact") is EXP_FNS[exp]
+        assert kd.exp_callable(None, "vexp_hw") is EXP_FNS["vexp_hw"]
+        with pytest.raises(ValueError):
+            kd.exp_callable(None, "nope")
+
     def test_no_hardcoded_exp_in_kernels(self):
         """Acceptance guard: no kernel body may pin vexp_f32 — the exp
         backend must arrive via the policy/registry."""

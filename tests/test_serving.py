@@ -144,13 +144,18 @@ class TestRaggedPrefill:
         k = np.asarray(cb["k"], np.float32)
         assert (k[:, 0, 5:] == 0).all() and (k[:, 1, 11:] == 0).all()
 
-    def test_prompt_len_rejected_for_recurrent_families(self):
+    def test_prompt_len_accepted_for_recurrent_families(self):
+        """Ragged prefill is family-uniform now (the DecodeState refactor):
+        an ssm prompt_len batch must not raise and must return per-row
+        last-real-token logits (full coverage in
+        tests/test_recurrent_serving.py)."""
         mcfg = get_config("mamba2-1.3b").reduced()
         mparams = api.init_params(mcfg, jax.random.PRNGKey(0))
-        with pytest.raises(NotImplementedError):
-            api.prefill(mparams, mcfg,
-                        {"tokens": jnp.zeros((1, 8), jnp.int32),
-                         "prompt_len": jnp.array([4])})
+        logits, state = api.prefill(
+            mparams, mcfg, {"tokens": jnp.zeros((2, 8), jnp.int32),
+                            "prompt_len": jnp.array([4, 8])})
+        assert logits.shape == (2, 1, mcfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
 
 
 # --------------------------------------------------- scheduler / slot algebra
@@ -204,8 +209,8 @@ class TestScheduler:
             srv.submit(Request(0, np.zeros(17, np.int32), 4))
         with pytest.raises(ValueError):   # unknown group
             srv.submit(Request(1, np.zeros(4, np.int32), 4, group="nope"))
-        with pytest.raises(NotImplementedError):
-            Server(get_config("mamba2-1.3b").reduced(), params)
+        with pytest.raises(ValueError):   # encoder-only: no decode state
+            Server(get_config("hubert-xlarge").reduced(), params)
 
     def test_len_bucket(self):
         assert [_len_bucket(n, 512) for n in (1, 8, 9, 100)] == \
@@ -295,7 +300,8 @@ class TestDonatedDecodeStep:
         srv.submit(Request(0, prompts[0].copy(), 8))
         g = srv._groups["default"]
         g.admit()
-        cache_before, pos_before = g.cache["k"], g.pos_dev
+        cache_before = g.state.data["k"]
+        pos_before = g.state.pos_dev
         g.decode_once()
         assert cache_before.is_deleted(), "KV cache was re-allocated"
         assert pos_before.is_deleted(), "position buffer was copied"
@@ -314,7 +320,7 @@ class TestDonatedDecodeStep:
         for _ in range(4):
             g.decode_once()
         live = [j for j in range(2) if g.reqs[j] is not None]
-        pos = np.asarray(g.pos_dev)
+        pos = np.asarray(g.state.pos_dev)
         for j in range(2):
             expect = g.lens[j] if j in live else 0   # parked at finish
             assert pos[j] == expect, (j, pos, g.lens)

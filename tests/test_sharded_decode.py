@@ -372,9 +372,10 @@ class TestShardedServing:
         srv.submit(r)
         g = srv._groups["default"]
         g.admit()
-        txt = g._decode.lower(g.params_decode, g.last, g.cache, g.pos_dev,
-                              g.live_dev).as_text()
-        cache_before, pos_before = g.cache["k"], g.pos_dev
+        st = g.state
+        txt = st._decode.lower(st.params_decode, g.last, st.data,
+                               st.pos_dev, g.live_dev).as_text()
+        cache_before, pos_before = st.data["k"], st.pos_dev
         g.decode_once()
         print(json.dumps({
             "all_gather": len(re.findall(r'stablehlo\\.all_gather"', txt)),
