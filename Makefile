@@ -4,8 +4,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: ci test bench sweep serve-smoke serve-smoke-recurrent spmd-test \
-	spmd-serve-smoke
+.PHONY: ci test bench sweep serve-smoke serve-smoke-recurrent \
+	serve-smoke-paged spmd-test spmd-serve-smoke spmd-serve-smoke-paged
 
 ci:
 	$(PY) -m pytest -x -q
@@ -47,6 +47,15 @@ serve-smoke-recurrent:
 	    --requests 4 --prompt-len 12 --mixed-lengths --max-new 6 \
 	    --max-batch 2 --max-seq 64
 
+# Paged KV pool + copy-on-write shared-prefix cache through the same
+# engine: block-table indirection, refcounted pages, hot shared-prefix
+# admission (8-token page so the 24-token prefix actually shares).
+serve-smoke-paged:
+	$(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 6 --prompt-len 32 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 --paged --block-page 8 \
+	    --shared-prefix 24 --policy-groups "eval=exact,bulk=vexp"
+
 # The same slot engine end-to-end through the SPMD serve loop: KV cache
 # sequence-sharded over 8 fake host devices, decode through the fused
 # partial-statistics path with the packed single-collective merge.
@@ -55,3 +64,12 @@ spmd-serve-smoke:
 	    $(PY) -m repro.launch.serve --arch gpt2-small --reduced \
 	    --requests 6 --prompt-len 24 --mixed-lengths --max-new 8 \
 	    --max-batch 2 --max-seq 64 --kv-mode seq
+
+# Sharded paged serving: page pools sharded over the seq axis, tables
+# holding partition-local ids, one packed collective per layer.
+spmd-serve-smoke-paged:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	    $(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 6 --prompt-len 24 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 --kv-mode seq --kernel-backend pallas \
+	    --paged --block-page 8 --shared-prefix 16

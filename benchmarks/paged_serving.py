@@ -1,0 +1,320 @@
+"""Paged-KV serving benchmark (ISSUE 6 acceptance): the paged block pool
++ shared-prefix cache against contiguous per-slot serving.
+
+Four arms on the reduced GPT-2 config:
+
+  identity          paged serving must emit exactly the contiguous
+                    engine's greedy tokens under all three exp backends
+                    (the perf numbers below are meaningless if this row
+                    is not all-true);
+  decode_parity     steady-state decode tok/s, paged vs contiguous, same
+                    phase-separated measurement as BENCH_serving (admit
+                    -> sync, N full-pool decode steps -> sync). The paged
+                    step adds only the block-table indirection, so the
+                    ratio should sit within a few percent of 1;
+  prefix_amortize   admission wall time for a long prompt served COLD
+                    (full prefill) vs HOT (its prefix pages attach to the
+                    cache; only the tail suffix is prefilled) — the hot
+                    wave should amortize toward the suffix's share;
+  oversubscription  a pool whose physical page budget is ~half the
+                    summed logical footprint serves 8 prefix-sharing
+                    requests concurrently: peak logical tokens / physical
+                    capacity > 2 with zero cache evictions (live state is
+                    never evicted — sharing alone carries the pool).
+
+Results persist to ``BENCH_paged_serving.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+
+OUT_PATH = os.environ.get("BENCH_PAGED_SERVING_PATH",
+                          "BENCH_paged_serving.json")
+
+N_TIMED = 5          # median-of-N (container noise is large + asymmetric)
+MAX_BATCH = 4
+MAX_SEQ = 128
+UNIFORM_LEN = 32
+STEADY_STEPS = 40
+PAGE = 4             # deep chains on the reduced config's short prompts
+PARITY_PAGE = 16     # decode parity at a serving-realistic page size
+
+
+def _median(xs, key=None):
+    xs = sorted(xs, key=key)
+    return xs[len(xs) // 2]
+
+
+def _mk_server(cfg, params, *, paged, policy=None, max_batch=MAX_BATCH,
+               max_seq=MAX_SEQ, **kw):
+    from repro.launch.serve import Server
+    return Server(cfg, params, max_batch=max_batch, max_seq=max_seq,
+                  policy=policy, paged=paged, **kw)
+
+
+def _identity_arm(cfg, params):
+    from repro.launch.serve import Request
+    from repro.runtime import resolve_policy
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab, (16,), dtype=np.int32)
+    prompts = []
+    for n in (5, 20, 24, 30, 11, 28):
+        p = rng.integers(0, cfg.vocab, (n,), dtype=np.int32)
+        if n >= 20:
+            p[:16] = prefix           # prefix-sharing rows in the mix
+        prompts.append(p)
+
+    out = {}
+    for exp in ("exact", "vexp", "vexp_hw"):
+        pol = resolve_policy(cfg, env={}, exp_backend=exp)
+        res = {}
+        for paged in (False, True):
+            srv = _mk_server(cfg, params, paged=paged, policy=pol,
+                             max_batch=2, max_seq=64,
+                             block_page=PAGE if paged else None)
+            reqs = [Request(i, p.copy(), 5) for i, p in enumerate(prompts)]
+            srv.run(reqs)
+            res[paged] = {r.rid: r.out for r in reqs}
+        out[exp] = res[False] == res[True]
+    return out
+
+
+def _steady_decode(cfg, params, *, paged, n_timed=N_TIMED):
+    """Steady-state decode tok/s with a full pool and no admissions or
+    finishes inside the timed window (mirrors BENCH_serving)."""
+    from repro.launch.serve import Request
+
+    def once():
+        srv = _mk_server(cfg, params, paged=paged,
+                         block_page=PAGE if paged else None)
+        rng = np.random.default_rng(0)
+        for i in range(MAX_BATCH):
+            srv.submit(Request(i, rng.integers(
+                0, cfg.vocab, (UNIFORM_LEN,), dtype=np.int32),
+                max_new=STEADY_STEPS + 8))
+        g = srv._groups["default"]
+        g.admit()
+        jax.block_until_ready(g.last)
+        t1 = time.perf_counter()
+        for _ in range(STEADY_STEPS):
+            g.decode_once()
+        jax.block_until_ready(g.last)
+        return MAX_BATCH * STEADY_STEPS / (time.perf_counter() - t1)
+
+    once()                            # compile
+    return _median([once() for _ in range(n_timed)])
+
+
+def _decode_parity_arm(cfg, params):
+    # interleave the two runners so container noise hits both alike
+    from repro.launch.serve import Request
+
+    def runner(paged, page):
+        def once():
+            srv = _mk_server(cfg, params, paged=paged,
+                             block_page=page if paged else None)
+            rng = np.random.default_rng(0)
+            for i in range(MAX_BATCH):
+                srv.submit(Request(i, rng.integers(
+                    0, cfg.vocab, (UNIFORM_LEN,), dtype=np.int32),
+                    max_new=STEADY_STEPS + 8))
+            g = srv._groups["default"]
+            g.admit()
+            jax.block_until_ready(g.last)
+            t1 = time.perf_counter()
+            for _ in range(STEADY_STEPS):
+                g.decode_once()
+            jax.block_until_ready(g.last)
+            return MAX_BATCH * STEADY_STEPS / (time.perf_counter() - t1)
+        once()
+        return once
+
+    def parity(page):
+        paged_once, contig_once = runner(True, page), runner(False, page)
+        pr, cr = [], []
+        for _ in range(N_TIMED):
+            pr.append(paged_once())
+            cr.append(contig_once())
+        # best-of-N on both sides: container stalls are one-sided and
+        # large relative to a burst, so medians still carry them
+        paged_tok_s, contig_tok_s = max(pr), max(cr)
+        return {"paged_decode_tok_s": paged_tok_s,
+                "contiguous_decode_tok_s": contig_tok_s,
+                "ratio": paged_tok_s / contig_tok_s}
+
+    # Headline parity is at the shipped default page size; the deep-table
+    # page measures the XLA fallback's per-page gather cost (the pallas
+    # path drives the table DMA in-kernel and does not pay it).
+    from repro.runtime import resolve_policy
+    default_page = resolve_policy(cfg, env={}).block_page
+    out = parity(default_page)
+    out["page"] = default_page
+    deep = parity(PARITY_PAGE)
+    deep["page"] = PARITY_PAGE
+    out["deep_tables"] = deep
+    return out
+
+
+def _prefix_amortize_arm(cfg, params):
+    """Cold vs hot admission wall time for the same long prompt family:
+    hot admissions attach the cached prefix pages and prefill only the
+    suffix (a much smaller length bucket)."""
+    from repro.launch.serve import Request
+    rng = np.random.default_rng(3)
+    # Deep prompt: 116 of 120 tokens shared -> cold prefills the full
+    # 128 bucket, hot attaches 29 pages and prefills a 4-token suffix.
+    # Short prompts would hide the amortization behind the fixed costs
+    # (host hashing, the prefix-KV gather, program dispatch).
+    prefix = rng.integers(0, cfg.vocab, (116,), dtype=np.int32)
+
+    def prompt():
+        p = rng.integers(0, cfg.vocab, (120,), dtype=np.int32)
+        p[:116] = prefix
+        return p
+
+    def once():
+        srv = _mk_server(cfg, params, paged=True, max_batch=1,
+                         block_page=PAGE)
+        g = srv._groups["default"]
+        # time the prefill programs themselves alongside the wall
+        # admission: at reduced scale the fixed admission costs (host
+        # hashing, allocator walks, dispatch) are a large floor under
+        # the wall ratio; the program ratio is the amortization itself.
+        prog_s = []
+
+        def timed(fn):
+            def run(*a, **k):
+                t0 = time.perf_counter()
+                r = fn(*a, **k)
+                jax.block_until_ready(r)
+                prog_s.append(time.perf_counter() - t0)
+                return r
+            return run
+
+        st = g.state
+        st._prefill = timed(st._prefill)
+        st._hist_prefill = timed(st._hist_prefill)
+        # cold: seeds the cache (full 128-bucket prefill)
+        srv.submit(Request(0, prompt(), 2))
+        g.admit()
+        while g.busy:
+            g.decode_once()
+            g.admit()
+        cold = g.admit_s[0]
+        # hot: same prefix, fresh suffix -> attach + tiny suffix prefill
+        srv.submit(Request(1, prompt(), 2))
+        g.admit()
+        while g.busy:
+            g.decode_once()
+            g.admit()
+        hot = g.admit_s[1]
+        stats = srv.stats()["default"]["pool"]["prefix"]
+        return {"cold_admit_s": cold, "hot_admit_s": hot,
+                "hot_over_cold": hot / cold,
+                "cold_prefill_s": prog_s[0], "hot_prefill_s": prog_s[1],
+                "prefill_hot_over_cold": prog_s[1] / prog_s[0],
+                "hit_tokens": stats["hit_tokens"]}
+
+    once()                            # compile both buckets
+    return _median([once() for _ in range(N_TIMED)],
+                   key=lambda r: r["hot_over_cold"])
+
+
+def _oversubscription_arm(cfg, params):
+    """8 requests sharing a 44-token prefix through a pool whose budget
+    covers ~half their summed logical footprint. A primer request seeds
+    the cache, then all 8 run concurrently on shared physical pages."""
+    from repro.launch.serve import Request
+    rng = np.random.default_rng(4)
+    prefix = rng.integers(0, cfg.vocab, (44,), dtype=np.int32)
+
+    def prompt():
+        p = rng.integers(0, cfg.vocab, (47,), dtype=np.int32)
+        p[:44] = prefix
+        return p
+
+    cache_s = 64                      # ns = 16 pages/slot at PAGE=4
+    n_shared = 11                     # full prefix pages: (47-1)//4
+    budget = 1 + n_shared + 8 * (16 - n_shared)    # scratch+shared+fresh
+    srv = _mk_server(cfg, params, paged=True, max_batch=8, max_seq=cache_s,
+                     block_page=PAGE, block_budget=budget)
+    srv.run([Request(0, prompt(), 1)])             # primer: publish chain
+    srv.run([Request(1 + i, prompt(), 8) for i in range(8)])
+    pool = srv.stats()["default"]["pool"]
+    capacity_tokens = pool["pages_allocatable"] * pool["page"]
+    return {
+        "pages_budget": budget,
+        "physical_capacity_tokens": capacity_tokens,
+        "peak_logical_tokens": pool["peak_logical_tokens"],
+        "oversubscription": pool["peak_logical_tokens"] / capacity_tokens,
+        "prefix_evictions": pool["prefix"]["evictions"],
+        "prefix_hits": pool["prefix"]["hits"],
+    }
+
+
+def run_bench() -> dict:
+    from repro.configs import get_config
+    from repro.models import api
+
+    cfg = get_config("gpt2-small").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    results = {
+        "identity": _identity_arm(cfg, params),
+        "decode_parity": _decode_parity_arm(cfg, params),
+        "prefix_amortize": _prefix_amortize_arm(cfg, params),
+        "oversubscription": _oversubscription_arm(cfg, params),
+    }
+    dev = jax.devices()[0]
+    return {
+        "device": f"{dev.platform}:{getattr(dev, 'device_kind', '')}",
+        "backend": jax.default_backend(),
+        "config": {"page": PAGE, "max_batch": MAX_BATCH,
+                   "max_seq": MAX_SEQ, "uniform_len": UNIFORM_LEN,
+                   "steady_steps": STEADY_STEPS},
+        "unix_time": time.time(),
+        "results": results,
+    }
+
+
+def report():
+    """Benchmark rows + BENCH_paged_serving.json side effect."""
+    payload = run_bench()
+    with open(OUT_PATH, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    res = payload["results"]
+    rows = []
+    ident = res["identity"]
+    rows.append(("token_identity", float(all(ident.values())),
+                 ";".join(f"{k}={v}" for k, v in ident.items())))
+    dp = res["decode_parity"]
+    deep = dp["deep_tables"]
+    rows.append(("paged_decode_tok_s", dp["paged_decode_tok_s"],
+                 f"contiguous={dp['contiguous_decode_tok_s']:.1f};"
+                 f"ratio={dp['ratio']:.3f} at page={dp['page']} "
+                 f"(>=0.95 target); deep tables page={deep['page']} "
+                 f"ratio={deep['ratio']:.3f} (XLA fallback pays the "
+                 f"per-page gather the pallas table-DMA path does not)"))
+    pa = res["prefix_amortize"]
+    rows.append(("hot_admit_over_cold", pa["hot_over_cold"],
+                 f"cold={pa['cold_admit_s'] * 1e3:.1f}ms;"
+                 f"hot={pa['hot_admit_s'] * 1e3:.1f}ms;"
+                 f"prefill_program_ratio={pa['prefill_hot_over_cold']:.3f};"
+                 f"hit_tokens={pa['hit_tokens']}"))
+    ov = res["oversubscription"]
+    rows.append(("oversubscription", ov["oversubscription"],
+                 f"peak_logical={ov['peak_logical_tokens']}tok over "
+                 f"{ov['physical_capacity_tokens']}tok physical; "
+                 f"evictions={ov['prefix_evictions']} (>=2x, 0 expected)"))
+    rows.append(("json", 0.0, f"written to {OUT_PATH}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in report():
+        print(f"paged_serving/{name},{val},{note}")

@@ -60,7 +60,7 @@ def main() -> None:
 
     from . import (snitch_model, exp_accuracy, model_accuracy,
                    softmax_speed, flashattention, e2e_models,
-                   policy_sweep, serving)
+                   policy_sweep, serving, paged_serving)
 
     sections = {
         "snitch_model": snitch_model.report,       # Fig.6 + Table III
@@ -71,6 +71,7 @@ def main() -> None:
         "e2e_models": e2e_models.report,           # Fig.1 + Fig.8
         "policy_sweep": policy_sweep.report,       # ExecPolicy backends
         "serving": serving.report,                 # continuous batching
+        "paged_serving": paged_serving.report,     # paged KV + prefix cache
         "sharded_decode": _sharded_decode_report,  # seq-parallel decode
         "collective_merge": _collective_merge_report,  # packed vs split
     }

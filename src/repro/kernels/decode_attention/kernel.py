@@ -322,3 +322,200 @@ def decode_attention_bhsd(q, k_cache, v_cache, cache_len, *, sm_scale: float,
         q, k_cache, v_cache, cache_len, jnp.zeros((1,), jnp.int32),
         sm_scale=sm_scale, s_valid=k_cache.shape[2], block_s=block_s,
         interpret=interpret, exp_impl=exp_impl)
+
+
+# -------------------------------------------------------------- paged sweep
+#
+# Block-table indirection: the KV "cache" is a pool of fixed-size physical
+# pages — "bshd": (N, page, Hkv, d), "bhsd": (N, Hkv, page, d) — and each
+# batch row owns a row of ``block_tab`` (B, nS) int32 mapping its logical
+# page index to a physical pool page. The table rides in as a
+# scalar-prefetch argument (SMEM), so the K/V BlockSpec index maps read
+# ``tab[b, si]`` to drive the page DMA — the sweep walks a row's *logical*
+# pages while fetching wherever the allocator placed them, and the online
+# softmax math is unchanged from the contiguous kernel.
+#
+# The grid is (B, nS) with ALL KV heads folded into one block (decode
+# pages are tiny, so fetching every head's slice of a page in one cell
+# amortizes grid/DMA bookkeeping the way ``block_b`` row-batching does for
+# the contiguous sweep — per-row tables make row-batching impossible).
+# Entries of ``block_tab`` past a row's allocated extent must point at a
+# real (reserved/scratch) page: the index map always fetches, compute is
+# masked by ``cache_len``.
+
+def _paged_kernel(tab_ref, len_ref, off_ref, q_ref, k_ref, v_ref, *refs,
+                  page: int, ns: int, sm_scale: float, exp_impl: str,
+                  window, layout: str, partial: bool, packed: bool = False):
+    if packed:
+        op_ref, m_ref, l_ref, acc_ref = refs
+    elif partial:
+        om_ref, ol_ref, oacc_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
+    bi = pl.program_id(0)
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ln = len_ref[bi]
+    seq_off = off_ref[0]
+    g_start = si * page + seq_off        # absolute position of this page
+    exp_fn = get_exp_fn(exp_impl)
+    live = g_start < ln
+    if window is not None:
+        live &= (g_start + page) > (ln - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * sm_scale       # (Hkv, G, d)
+        k = k_ref[0]          # (Hkv, page, d) bhsd / (page, Hkv, d) bshd
+        v = v_ref[0]
+        if layout == "bhsd":
+            kdims = (((2,), (2,)), ((0,), (0,)))
+            vdims = (((2,), (1,)), ((0,), (0,)))
+        else:                                             # "bshd"
+            kdims = (((2,), (2,)), ((0,), (1,)))
+            vdims = (((2,), (0,)), ((0,), (1,)))
+        s = jax.lax.dot_general(q.astype(k.dtype), k, kdims,
+                                preferred_element_type=jnp.float32)
+        # (Hkv, G, page)
+        kpos = g_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        keep = kpos < ln
+        if window is not None:
+            keep &= kpos >= ln - window
+        s = jnp.where(keep, s, NEG_INF)
+        m_prev = m_ref[...].astype(jnp.float32)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = exp_fn(m_prev - m_new)
+        p = exp_fn(s - m_new)
+        p = jnp.where(keep, p, 0.0)
+        l_ref[...] = (l_ref[...].astype(jnp.float32) * alpha
+                      + jnp.sum(p, -1, keepdims=True)).astype(l_ref.dtype)
+        acc_ref[...] = (acc_ref[...].astype(jnp.float32) * alpha
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, vdims,
+                            preferred_element_type=jnp.float32)
+                        ).astype(acc_ref.dtype)
+        m_ref[...] = m_new.astype(m_ref.dtype)
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        if packed:
+            op_ref[0] = jnp.concatenate(
+                [acc_ref[...].astype(op_ref.dtype),
+                 m_ref[...].astype(op_ref.dtype),
+                 l_ref[...].astype(op_ref.dtype)], axis=-1)
+        elif partial:
+            om_ref[0] = m_ref[...].astype(om_ref.dtype)
+            ol_ref[0] = l_ref[...].astype(ol_ref.dtype)
+            oacc_ref[0] = acc_ref[...].astype(oacc_ref.dtype)
+        else:
+            inv = 1.0 / jnp.maximum(l_ref[...].astype(jnp.float32), 1e-30)
+            o_ref[0] = (acc_ref[...].astype(jnp.float32)
+                        * inv).astype(o_ref.dtype)
+
+
+def _paged_call(q, k_pool, v_pool, block_tab, cache_len, seq_offset, *,
+                sm_scale, interpret, exp_impl, window, layout, accum_dtype,
+                partial, packed):
+    from jax.experimental.pallas import tpu as pltpu
+    b, hkv, g, d = q.shape
+    page = k_pool.shape[2] if layout == "bhsd" else k_pool.shape[1]
+    ns = block_tab.shape[1]
+    kernel = functools.partial(
+        _paged_kernel, page=page, ns=ns, sm_scale=sm_scale,
+        exp_impl=exp_impl, window=window, layout=layout, partial=partial,
+        packed=packed)
+    q_spec = pl.BlockSpec((1, hkv, g, d),
+                          lambda bi, si, tab, ln, off: (bi, 0, 0, 0))
+    if layout == "bhsd":
+        kv_spec = pl.BlockSpec(
+            (1, hkv, page, d),
+            lambda bi, si, tab, ln, off: (tab[bi, si], 0, 0, 0))
+    else:
+        kv_spec = pl.BlockSpec(
+            (1, page, hkv, d),
+            lambda bi, si, tab, ln, off: (tab[bi, si], 0, 0, 0))
+    out_map = lambda bi, si, tab, ln, off: (bi, 0, 0, 0)   # noqa: E731
+    adt = _ACCUM_DTYPES[accum_dtype]
+    scratch = [pltpu.VMEM((hkv, g, 1), adt), pltpu.VMEM((hkv, g, 1), adt),
+               pltpu.VMEM((hkv, g, d), adt)]
+    if packed:
+        out_shape = jax.ShapeDtypeStruct((b, hkv, g, d + 2), jnp.float32)
+        out_specs = pl.BlockSpec((1, hkv, g, d + 2), out_map)
+    elif partial:
+        out_shape = [jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+                     jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+                     jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32)]
+        stat = pl.BlockSpec((1, hkv, g, 1), out_map)
+        out_specs = [stat, stat, pl.BlockSpec((1, hkv, g, d), out_map)]
+    else:
+        out_shape = jax.ShapeDtypeStruct(q.shape, q.dtype)
+        out_specs = pl.BlockSpec((1, hkv, g, d), out_map)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3, grid=(b, ns),
+        in_specs=[q_spec, kv_spec, kv_spec], out_specs=out_specs,
+        scratch_shapes=scratch)
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(
+        block_tab, cache_len, seq_offset, q, k_pool, v_pool)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "sm_scale", "interpret", "exp_impl", "window", "layout", "accum_dtype"))
+def decode_attention_kernel_paged(q, k_pool, v_pool, block_tab, cache_len,
+                                  seq_offset, *, sm_scale: float,
+                                  interpret: bool = False,
+                                  exp_impl: str = "vexp", window=None,
+                                  layout: str = "bshd",
+                                  accum_dtype: str = "float32"):
+    """Paged flash-decode. q: (B, Hkv, G, d); pools: (N, page, Hkv, d)
+    ("bshd") or (N, Hkv, page, d) ("bhsd"); block_tab: (B, nS) int32
+    physical page per logical page (entries past a row's extent must
+    reference a valid reserved page); cache_len: (B,) int32; seq_offset:
+    (1,) int32 absolute position of logical page 0 (shard-local tables).
+    Returns (B, Hkv, G, d)."""
+    return _paged_call(q, k_pool, v_pool, block_tab, cache_len, seq_offset,
+                       sm_scale=sm_scale, interpret=interpret,
+                       exp_impl=exp_impl, window=window, layout=layout,
+                       accum_dtype=accum_dtype, partial=False, packed=False)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "sm_scale", "interpret", "exp_impl", "window", "layout", "accum_dtype"))
+def decode_attention_kernel_paged_partial(q, k_pool, v_pool, block_tab,
+                                          cache_len, seq_offset, *,
+                                          sm_scale: float,
+                                          interpret: bool = False,
+                                          exp_impl: str = "vexp",
+                                          window=None, layout: str = "bshd",
+                                          accum_dtype: str = "float32"):
+    """Paged partial-statistics sweep: raw (m, l, acc) per shard, masked in
+    global coordinates — the paged counterpart of
+    ``decode_attention_kernel_partial`` (block tables shard with the
+    sequence axis, so each shard sweeps its local table slice)."""
+    return _paged_call(q, k_pool, v_pool, block_tab, cache_len, seq_offset,
+                       sm_scale=sm_scale, interpret=interpret,
+                       exp_impl=exp_impl, window=window, layout=layout,
+                       accum_dtype=accum_dtype, partial=True, packed=False)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "sm_scale", "interpret", "exp_impl", "window", "layout", "accum_dtype"))
+def decode_attention_kernel_paged_packed(q, k_pool, v_pool, block_tab,
+                                         cache_len, seq_offset, *,
+                                         sm_scale: float,
+                                         interpret: bool = False,
+                                         exp_impl: str = "vexp",
+                                         window=None, layout: str = "bshd",
+                                         accum_dtype: str = "float32"):
+    """Paged packed partial mode: one contiguous (B, Hkv, G, d+2) f32
+    [acc | m | l] tile per shard — the single-collective merge unit."""
+    return _paged_call(q, k_pool, v_pool, block_tab, cache_len, seq_offset,
+                       sm_scale=sm_scale, interpret=interpret,
+                       exp_impl=exp_impl, window=window, layout=layout,
+                       accum_dtype=accum_dtype, partial=True, packed=True)

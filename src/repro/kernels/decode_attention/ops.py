@@ -31,13 +31,18 @@ import jax.numpy as jnp
 
 from repro.runtime.policy import ExecPolicy
 from .kernel import (decode_attention_kernel, decode_attention_kernel_partial,
-                     decode_attention_kernel_packed, decode_attention_bhsd)
+                     decode_attention_kernel_packed, decode_attention_bhsd,
+                     decode_attention_kernel_paged,
+                     decode_attention_kernel_paged_partial,
+                     decode_attention_kernel_paged_packed)
 
 __all__ = ["decode_attention", "decode_attention_partial",
            "decode_attention_partial_packed",
            "decode_attention_partial_merged",
            "decode_attention_sharded", "decode_attention_policy",
-           "decode_attention_bhsd"]
+           "decode_attention_bhsd", "decode_attention_paged",
+           "decode_attention_paged_partial_merged",
+           "decode_attention_paged_policy", "paged_gather"]
 
 
 def _seq_axis(layout: str) -> int:
@@ -264,6 +269,121 @@ def decode_attention_sharded(q, k_cache, v_cache, cache_len, *, mesh,
             q, k_cache)
     fn = _sharded_program(mesh, seq_axis, window, sm_scale, layout, policy)
     return fn(q, k_cache, v_cache, clen)
+
+
+# ------------------------------------------------------------ paged entries
+
+def _prepare_paged(q, k_pool, v_pool, block_tab, cache_len, layout):
+    """Group queries, lane-pad d (q AND pools), broadcast cache_len."""
+    b, _, h, d = q.shape
+    hkv = k_pool.shape[1] if layout == "bhsd" else k_pool.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    d_pad = -(-d // 128) * 128
+    if d_pad != d:
+        qg = jnp.pad(qg, [(0, 0)] * 3 + [(0, d_pad - d)])
+        pad4 = [(0, 0)] * 3 + [(0, d_pad - d)]
+        k_pool = jnp.pad(k_pool, pad4)
+        v_pool = jnp.pad(v_pool, pad4)
+    tab = jnp.asarray(block_tab, jnp.int32)
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
+                            (b,))
+    return qg, k_pool, v_pool, tab, clen
+
+
+@functools.partial(jax.jit, static_argnames=("window", "sm_scale", "layout",
+                                             "interpret", "policy"))
+def decode_attention_paged(q, k_pool, v_pool, block_tab, cache_len, *,
+                           window=None, sm_scale=None, layout="bshd",
+                           interpret=None,
+                           policy: Optional[ExecPolicy] = None):
+    """Paged flash-decode. q: (B, 1, H, d); pools: (N, page, Hkv, d)
+    ("bshd") or (N, Hkv, page, d) ("bhsd"); ``block_tab`` (B, nS) int32
+    maps each row's logical pages to physical pool pages (entries past a
+    row's extent must reference a valid reserved page — the reserved
+    scratch page 0 by convention); ``cache_len`` scalar or (B,) int32.
+    The page size is whatever the pool was allocated with (a static shape
+    here — never re-tuned per call). Returns (B, 1, H, d)."""
+    exp_impl, accum, _, interpret = _policy_kernel_args(policy, 0, interpret)
+    b, _, h, d = q.shape
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    qg, kp, vp, tab, clen = _prepare_paged(q, k_pool, v_pool, block_tab,
+                                           cache_len, layout)
+    out = decode_attention_kernel_paged(
+        qg, kp, vp, tab, clen, jnp.zeros((1,), jnp.int32), sm_scale=scale,
+        interpret=interpret, exp_impl=exp_impl, window=window, layout=layout,
+        accum_dtype=accum)
+    return out[..., :d].reshape(b, 1, h, d)
+
+
+def decode_attention_paged_partial_merged(q, k_pool, v_pool, block_tab,
+                                          cache_len, seq_offset, *, seq_axis,
+                                          window=None, sm_scale=None,
+                                          layout="bshd",
+                                          policy: ExecPolicy):
+    """Shard-local paged sweep + collective merge (call INSIDE shard_map).
+
+    The paged counterpart of ``decode_attention_partial_merged``: the pool
+    holds this shard's *local* physical pages, ``block_tab`` its local
+    (B, nS_local) table slice with local page ids, ``seq_offset`` the
+    absolute position of local logical page 0; ``cache_len`` stays
+    global. Statistics fold per ``policy.merge_strategy`` exactly like
+    the contiguous path. Returns the normalized (B, 1, H, d) output."""
+    from repro.core.softmax import (SoftmaxStats, stats_merge_collective,
+                                    stats_merge_collective_packed)
+    b, _, h, d = q.shape
+    exp_impl, accum, _, interpret = _policy_kernel_args(policy, 0, None)
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    qg, kp, vp, tab, clen = _prepare_paged(q, k_pool, v_pool, block_tab,
+                                           cache_len, layout)
+    off = jnp.asarray(seq_offset, jnp.int32).reshape(1)
+    exp_fn = policy.exp_fn()
+    if policy.merge_strategy == "packed":
+        packed = decode_attention_kernel_paged_packed(
+            qg, kp, vp, tab, clen, off, sm_scale=scale, interpret=interpret,
+            exp_impl=exp_impl, window=window, layout=layout,
+            accum_dtype=accum)
+        stats, acc = stats_merge_collective_packed(packed, seq_axis,
+                                                   exp_fn=exp_fn)
+        acc = acc[..., :d]
+    else:
+        m, l, acc = decode_attention_kernel_paged_partial(
+            qg, kp, vp, tab, clen, off, sm_scale=scale, interpret=interpret,
+            exp_impl=exp_impl, window=window, layout=layout,
+            accum_dtype=accum)
+        acc = acc[..., :d]
+        stats, acc = stats_merge_collective(
+            SoftmaxStats(m=m, l=l), acc, seq_axis, exp_fn=exp_fn)
+    out = acc * (1.0 / jnp.maximum(stats.l, 1e-30))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def paged_gather(pool, block_tab, layout="bshd"):
+    """Materialize a contiguous per-row cache from a paged pool — the
+    reference/xla semantics of block-table indirection (and the oracle
+    the kernel tests compare against). Returns (B, nS*page, Hkv, d) for
+    "bshd" pools, (B, Hkv, nS*page, d) for "bhsd"."""
+    tab = jnp.asarray(block_tab, jnp.int32)
+    b, ns = tab.shape
+    gathered = pool[tab]                       # (B, nS, *page_shape)
+    if layout == "bhsd":                       # (B, nS, Hkv, page, d)
+        g = gathered.transpose(0, 2, 1, 3, 4)  # (B, Hkv, nS, page, d)
+        return g.reshape(b, g.shape[1], ns * g.shape[3], g.shape[4])
+    # "bshd": (B, nS, page, Hkv, d)
+    return gathered.reshape(b, ns * gathered.shape[2], *gathered.shape[3:])
+
+
+def decode_attention_paged_policy(q, k_pool, v_pool, block_tab, cache_len, *,
+                                  window=None, sm_scale=None, layout="bshd",
+                                  policy: ExecPolicy):
+    """kernels.dispatch entry for the paged sweep (pallas backend).
+
+    No per-call autotuning: the page size is baked into the pool's shape
+    at allocation (``DecodeState`` tunes ``block_page`` once, *before*
+    the pool exists)."""
+    return decode_attention_paged(q, k_pool, v_pool, block_tab, cache_len,
+                                  window=window, sm_scale=sm_scale,
+                                  layout=layout, policy=policy)
 
 
 def decode_attention_policy(q, k_cache, v_cache, cache_len, *, window=None,

@@ -51,7 +51,7 @@ from repro.runtime.policy import ExecPolicy
 _TABLE: Dict[Tuple[str, str], str] = {}
 
 OPS = ("vexp", "softmax", "flash_attention", "decode_attention",
-       "decode_attention_sharded")
+       "decode_attention_sharded", "decode_attention_paged")
 
 
 def register(op: str, backend: str, target: str) -> None:
@@ -94,6 +94,17 @@ register("decode_attention_sharded", "reference",
          "repro.kernels.dispatch:_decode_sharded_fallback")
 register("decode_attention_sharded", "xla",
          "repro.kernels.dispatch:_decode_sharded_fallback")
+
+# Paged decode over a block pool + per-row block table: the pallas backend
+# drives the page DMA from the scalar-prefetched table inside the kernel;
+# the reference/xla backends materialize the gather (pool[tab]) and run
+# the contiguous core reduction — same semantics, one extra copy.
+register("decode_attention_paged", "pallas",
+         "repro.kernels.decode_attention.ops:decode_attention_paged_policy")
+register("decode_attention_paged", "reference",
+         "repro.kernels.dispatch:_decode_paged_fallback")
+register("decode_attention_paged", "xla",
+         "repro.kernels.dispatch:_decode_paged_fallback")
 
 
 def dispatch(op: str, policy: ExecPolicy) -> Callable:
@@ -169,6 +180,21 @@ def _decode_fallback(q, k_cache, v_cache, cache_len, *, window=None,
                             layout=layout)
 
 
+def _decode_paged_fallback(q, k_pool, v_pool, block_tab, cache_len, *,
+                           window=None, sm_scale=None, layout="bshd",
+                           policy: ExecPolicy):
+    """reference/xla paged decode: gather the block table to a contiguous
+    per-row cache and run the core reduction (the oracle semantics of the
+    paged pallas sweep)."""
+    from repro.core.attention import decode_attention
+    from repro.kernels.decode_attention.ops import paged_gather
+    k = paged_gather(k_pool, block_tab, layout)
+    v = paged_gather(v_pool, block_tab, layout)
+    return decode_attention(q, k, v, cache_len, window=window,
+                            sm_scale=sm_scale, exp_impl=policy.exp_backend,
+                            layout=layout)
+
+
 def _decode_sharded_fallback(q, k_cache, v_cache, cache_len, *, mesh=None,
                              seq_axis="model", window=None, sm_scale=None,
                              layout="bshd", policy: ExecPolicy):
@@ -199,6 +225,10 @@ CANDIDATES = {
     # split form. Same algebra; the winner is interconnect-dependent.
     "decode_attention_sharded": [{"merge_strategy": "packed"},
                                  {"merge_strategy": "split"}],
+    # Paged decode tunes the page size — but only at POOL CONSTRUCTION
+    # (the page is the pool's physical block shape; DecodeState times
+    # candidates on a synthetic pool before allocating the real one).
+    "decode_attention_paged": [{"block_page": p} for p in (32, 64, 128)],
 }
 
 # repr((device_kind, op, shape_bucket, policy_sans_blocks)) -> winning

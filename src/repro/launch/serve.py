@@ -103,13 +103,25 @@ class _Group:
     """
 
     def __init__(self, cfg, params, policy, max_batch, cache_s, *,
-                 mesh=None, kv_axis=None):
+                 mesh=None, kv_axis=None, paged=False, block_page=None,
+                 block_budget=None, prefix_cache=True):
         self.cfg, self.params, self.policy = cfg, params, policy
         self.max_batch, self.cache_s = max_batch, cache_s
         self.mesh, self.kv_axis = mesh, kv_axis
-        self.state = decode_state_for(cfg)(
-            cfg, params, policy, max_batch, cache_s, mesh=mesh,
-            kv_axis=kv_axis)
+        # Whether the state actually pages is a protocol capability:
+        # decode_state_for may resolve ``paged=True`` to a contiguous
+        # state (O(1) recurrent state has nothing to page).
+        state_cls = decode_state_for(cfg, paged=paged)
+        self.paged = state_cls.is_paged
+        if self.paged:
+            self.state = state_cls(
+                cfg, params, policy, max_batch, cache_s, mesh=mesh,
+                kv_axis=kv_axis, page=block_page, n_pages=block_budget,
+                prefix_cache=prefix_cache)
+        else:
+            self.state = state_cls(
+                cfg, params, policy, max_batch, cache_s, mesh=mesh,
+                kv_axis=kv_axis)
         self.queue: deque = deque()
         self.reqs: list = [None] * max_batch
         self.lens = np.zeros(max_batch, np.int64)   # tokens held per slot
@@ -126,21 +138,60 @@ class _Group:
         self.decode_s: list = []    # per-step *dispatch* wall time (async:
                                     # compute overlaps; see req_lat for real
                                     # latency, measured at the finish sync)
+        self.admit_s: list = []     # per-wave admission (prefill) wall time
         self.req_lat: list = []     # per-request submit->done wall latency
+        self.peak_logical = 0       # max summed live tokens (paged bench)
+        self.peak_pages = 0         # max physical pages in use
         self._toks: dict = {}                       # slot -> [(B,1) arrays]
 
     # ------------------------------------------------------------ admission
 
+    def _take_wave(self, free):
+        """Pop an admission wave off the queue: the maximal FIFO prefix
+        that shares the HEAD request's prefill bucket. A long queued
+        prompt cannot inflate the whole wave's prefill shape — the wave
+        closes at it and it heads the NEXT wave at its own bucket, so
+        shorter requests admitted alongside it never pay its width.
+        Admission order stays strictly FIFO (no overtaking: request
+        identity, not arrival luck, decides service order — and solo/
+        batched token identity tests pin this). Paged groups additionally
+        close the wave at (a) a request whose fresh-page need does not
+        fit the pool's free+evictable budget (admission blocks on free
+        pages; the decode loop never does), and (b) a request colder
+        than the wave's prefix-hit depth — one shared history shape per
+        prefill program, and a colder row would drag the wave's depth
+        down, discarding the hotter rows' cache hits."""
+        take = []
+        bucket = head_h = avail = None
+        while free and self.queue:
+            r = self.queue[0]
+            b = self.state.prefill_width(len(r.prompt))
+            if bucket is not None and b > bucket:
+                break
+            if self.paged:
+                if avail is None:
+                    avail = self.state.free_with_evictable()
+                need, h = self.state.admission_need(
+                    r.prompt, cap_h=head_h)
+                if head_h is not None and h < head_h:
+                    break
+                if not (need <= avail).all():
+                    break
+                avail = avail - need
+                if head_h is None:
+                    head_h = h
+            if bucket is None:
+                bucket = b
+            take.append((free.pop(0), self.queue.popleft()))
+        return take, bucket
+
     def admit(self, admit_log=None):
         """Fill freed slots from the queue with one ragged batched prefill."""
         free = [j for j in range(self.max_batch) if self.reqs[j] is None]
-        take = []
-        while free and self.queue:
-            take.append((free.pop(0), self.queue.popleft()))
+        take, sp = self._take_wave(free)
         if not take:
             return
         slots = np.array([j for j, _ in take])
-        sp = self.state.prefill_width(max(len(r.prompt) for _, r in take))
         # prefill always runs at the full pool width so admitting 1 or
         # max_batch requests hits the same executable per length bucket;
         # rows without an admitted request are dummies (length-1, ignored).
@@ -157,8 +208,11 @@ class _Group:
         # flash-attention to the reference scan, so the fast path would
         # prefill through a different implementation than solo serving
         # and could flip a near-tie greedy argmax.)
+        t0 = time.perf_counter()
         first = self.state.prefill_into(slots, toks, plens, full=full,
                                         uniform=uniform)
+        jax.block_until_ready(first)
+        self.admit_s.append(time.perf_counter() - t0)
         if full:
             self.last = first
         else:
@@ -176,6 +230,17 @@ class _Group:
                 admit_log.append(r.rid)
             if self.ntok[j] >= r.max_new:
                 self._finish(j, "max_new")
+        self._bump_peaks()
+
+    def _bump_peaks(self):
+        """Track oversubscription highs (paged pools only): summed live
+        logical tokens vs physical pages actually held."""
+        if not self.paged:
+            return
+        logical = int(sum(self.lens[j] for j in range(self.max_batch)
+                          if self.reqs[j] is not None))
+        self.peak_logical = max(self.peak_logical, logical)
+        self.peak_pages = max(self.peak_pages, self.state.alloc.n_used())
 
     # --------------------------------------------------------------- decode
 
@@ -211,6 +276,11 @@ class _Group:
                 self._finish(j, "max_new")
 
     def _finish(self, j, reason):
+        # logical footprint and held pages grow monotonically between
+        # scheduling events, so sampling the peak just before a slot
+        # releases (plus at admission/stats) is exact — and keeps the
+        # decode hot loop free of per-step host accounting.
+        self._bump_peaks()
         r = self.reqs[j]
         # one device->host sync per finished request: gather its column
         # from the logged per-step argmax vectors.
@@ -249,10 +319,17 @@ class Server:
     def __init__(self, cfg, params, *, max_batch=4, max_seq=512, mesh=None,
                  policy: ExecPolicy | None = None,
                  policy_groups: Optional[dict] = None,
-                 kv_mode: str = "auto"):
-        state_cls = decode_state_for(cfg)   # raises for encoder-only archs
+                 kv_mode: str = "auto", paged: bool = False,
+                 block_page: Optional[int] = None,
+                 block_budget: Optional[int] = None,
+                 prefix_cache: bool = True):
+        # raises for encoder-only archs; under --paged this resolves the
+        # paged state class so the seq-sharding capability probe below
+        # reflects what will actually serve
+        state_cls = decode_state_for(cfg, paged=paged)
         self.cfg, self.params = cfg, params
         self.max_batch, self.max_seq = max_batch, max_seq
+        self.paged = state_cls.is_paged
         self.mesh = mesh or make_host_mesh()
         self.policy = policy if policy is not None else resolve_policy(cfg)
         if self.policy.autotune or (policy_groups and any(
@@ -280,6 +357,17 @@ class Server:
             if (ax is not None and self.mesh.shape[ax] > 1
                     and self.cache_s % self.mesh.shape[ax] == 0):
                 self.kv_axis = ax
+        if self.paged and self.kv_axis is not None:
+            # a sharded paged pool needs the page count per slot to split
+            # evenly over the shards; pin the page size up front (the
+            # autotuner must not pick one that breaks divisibility).
+            nsh = self.mesh.shape[self.kv_axis]
+            page_hint = int(block_page or self.policy.block_page)
+            ns = -(-self.cache_s // page_hint)
+            if ns % nsh != 0:
+                self.kv_axis = None
+            elif block_page is None:
+                block_page = page_hint
         groups = dict(policy_groups) if policy_groups else {}
         if "default" not in groups:
             groups["default"] = self.policy
@@ -289,7 +377,10 @@ class Server:
                          mesh=self.mesh,
                          kv_axis=(self.kv_axis
                                   if pol.kernel_backend == "pallas"
-                                  else None))
+                                  else None),
+                         paged=paged, block_page=block_page,
+                         block_budget=block_budget,
+                         prefix_cache=prefix_cache)
             for name, pol in groups.items()}
         self.admit_log: list = []    # rids in admission order (tests/debug)
 
@@ -346,9 +437,23 @@ class Server:
                 "p50_req_s": lat[len(lat) // 2] if lat else 0.0,
                 "p95_req_s": lat[min(int(len(lat) * 0.95),
                                      len(lat) - 1)] if lat else 0.0,
+                "admit_waves": len(g.admit_s),
+                "admit_s_total": float(sum(g.admit_s)),
                 "policy": g.policy.describe(),
                 "kv_axis": g.kv_axis,
             }
+            if g.paged:
+                g._bump_peaks()          # sample mid-decode footprint
+                pool = g.state.pool_stats()
+                pool["peak_pages"] = g.peak_pages
+                pool["peak_logical_tokens"] = g.peak_logical
+                # summed live tokens the physical pool could hold if every
+                # page were exclusive — >1.0 oversubscription means prefix
+                # sharing is carrying logical state past physical capacity
+                cap = pool["pages_allocatable"] * pool["page"]
+                pool["peak_oversubscription"] = (g.peak_logical / cap
+                                                 if cap else 0.0)
+                out[name]["pool"] = pool
         return out
 
 
@@ -376,6 +481,23 @@ def main():
                          'round-robin); omit for a single default group')
     ap.add_argument("--autotune", action="store_true",
                     help="autotune kernel block sizes per shape bucket")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV block pool (per-slot "
+                         "block tables + refcounted allocator + shared-"
+                         "prefix cache) instead of contiguous slot rows")
+    ap.add_argument("--block-page", type=int, default=None,
+                    help="KV page size in tokens (default: autotuned over "
+                         "the decode_attention_paged candidates, or the "
+                         "policy's block_page off the pallas backend)")
+    ap.add_argument("--block-budget", type=int, default=None,
+                    help="physical pages in the pool (default: one full "
+                         "reservation per slot + per-shard scratch; set "
+                         "lower to exercise prefix-sharing oversubscription)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the shared-prefix block cache (paged only)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give all generated requests an identical first N "
+                         "tokens (exercises the paged prefix cache)")
     ap.add_argument("--kv-mode", default="auto",
                     choices=["auto", "seq", "batch"],
                     help='decode-cache placement: "seq" shards the KV '
@@ -405,18 +527,25 @@ def main():
     mesh = make_host_mesh(1, n_model)
     server = Server(cfg, params, max_batch=args.max_batch,
                     max_seq=args.max_seq, mesh=mesh, policy=policy,
-                    policy_groups=groups, kv_mode=args.kv_mode)
+                    policy_groups=groups, kv_mode=args.kv_mode,
+                    paged=args.paged, block_page=args.block_page,
+                    block_budget=args.block_budget,
+                    prefix_cache=not args.no_prefix_cache)
     print(f"[serve] mesh {dict(server.mesh.shape)}; sharded decode axis: "
-          f"{server.kv_axis}")
+          f"{server.kv_axis}" + ("; paged" if server.paged else ""))
     rng = np.random.default_rng(0)
     names = sorted(groups) if groups else ["default"]
+    shared = rng.integers(0, cfg.vocab, (max(args.shared_prefix, 0),),
+                          dtype=np.int32)
     reqs = []
     for i in range(args.requests):
         plen = (int(rng.integers(4, args.prompt_len + 1))
                 if args.mixed_lengths else args.prompt_len)
-        reqs.append(Request(i, rng.integers(0, cfg.vocab, (plen,),
-                                            dtype=np.int32),
-                            args.max_new, group=names[i % len(names)]))
+        plen = max(plen, len(shared) + 1)   # >= 1 fresh suffix token
+        prompt = rng.integers(0, cfg.vocab, (plen,), dtype=np.int32)
+        prompt[:len(shared)] = shared
+        reqs.append(Request(i, prompt, args.max_new,
+                            group=names[i % len(names)]))
     t0 = time.perf_counter()
     out = server.run(reqs)
     dt = time.perf_counter() - t0
@@ -427,6 +556,16 @@ def main():
         print(f"  group {name}: {s['decode_steps']} decode steps, "
               f"request latency p50 {s['p50_req_s'] * 1e3:.1f}ms "
               f"p95 {s['p95_req_s'] * 1e3:.1f}ms")
+        if "pool" in s:
+            p = s["pool"]
+            line = (f"    pool: page={p['page']} used {p['pages_used']}/"
+                    f"{p['pages_allocatable']} peak {p['peak_pages']} "
+                    f"(logical {p['peak_logical_tokens']} tok, "
+                    f"oversub {p['peak_oversubscription']:.2f}x)")
+            if "prefix" in p:
+                line += (f", prefix hit rate "
+                         f"{p['prefix']['hit_rate']:.2f}")
+            print(line)
     for r in out[:3]:
         print(f"  req {r.rid} [{r.group}] len={len(r.prompt)}: "
               f"{r.out[:8]}... ({r.finish_reason})")

@@ -80,6 +80,13 @@ def prefill(params, cfg, batch, *, policy=None):
         return transformer.prefill(params, cfg, batch["tokens"],
                                    batch.get("extra"),
                                    prompt_len=prompt_len, policy=policy)
+    hist = batch.get("hist")
+    if hist is not None:
+        # suffix prefill against a shared-prefix KV history (paged
+        # prefix-cache hot path) — transformer families only.
+        return transformer.prefill(params, cfg, batch["tokens"],
+                                   prompt_len=prompt_len, policy=policy,
+                                   hist=hist)
     return m.prefill(params, cfg, batch["tokens"],
                      prompt_len=prompt_len, policy=policy)
 
@@ -105,6 +112,32 @@ def decode_step(params, cfg, token, cache, pos, *, policy=None):
         raise ValueError("encoder-only arch has no decode step")
     return _mod(cfg).decode_step(params, cfg, token, cache, pos,
                                  policy=policy)
+
+
+def init_paged_cache(cfg, batch_size, n_pages, page):
+    """Paged decode-state constructor: KV families get slotless page
+    pools driven by per-slot block tables (transformer: no slot axis at
+    all; hybrid: pools for KV, per-slot leaves for the O(1) recurrent
+    state). Recurrent (ssm) families have nothing to page — the caller
+    uses ``init_cache`` there."""
+    if cfg.family == "audio":
+        raise ValueError("encoder-only arch has no decode cache")
+    if cfg.family == "ssm":
+        raise ValueError("recurrent state is O(1) per slot; nothing to page")
+    if cfg.family == "hybrid":
+        return hybrid.init_paged_cache(cfg, batch_size, n_pages, page)
+    return transformer.init_paged_cache(cfg, n_pages, page)
+
+
+def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
+    """One decode step over a paged cache (see ``init_paged_cache``).
+    ``tables`` (B, nS) int32 maps each slot's logical pages to physical
+    pool pages; read-only inside the step."""
+    cfg = _apply_policy(cfg, policy)
+    if cfg.family in ("audio", "ssm"):
+        raise ValueError(f"{cfg.family} family has no paged decode step")
+    return _mod(cfg).decode_step_paged(params, cfg, token, cache, tables,
+                                       pos, policy=policy)
 
 
 # ----------------------------------------------------------- input specs

@@ -147,6 +147,7 @@ class DecodeState:
     """
 
     kind = "state"
+    is_paged = False   # True for the block-pool states below
 
     @classmethod
     def supports_seq_sharding(cls, cfg) -> bool:
@@ -427,13 +428,550 @@ class HybridDecodeState(DecodeState):
         return self.cache_s
 
 
-def decode_state_for(cfg):
+# --------------------------------------------------------------- paged pool
+
+# (repr(cfg), policy, decode_policy, page, kv_axis[, mesh]) ->
+# (prefill_hist_fn, decode_fn). Same lifetime rationale as _PROGRAM_CACHE.
+_PAGED_PROGRAM_CACHE: dict = {}
+
+
+def _paged_programs(cfg, policy, page, mesh=None, kv_axis=None,
+                    decode_policy=None):
+    dpol = policy if decode_policy is None else decode_policy
+    key = (repr(cfg), policy, dpol, page, kv_axis,
+           mesh if kv_axis is not None else None)
+    if key not in _PAGED_PROGRAM_CACHE:
+        pol = policy
+
+        def prefill_hist_fn(p, toks, plens, hist):
+            # suffix prefill against the shared-prefix KV gathered from
+            # the pool (prefix-cache hot admission)
+            logits, state = api.prefill(
+                p, cfg, {"tokens": toks, "prompt_len": plens,
+                         "hist": hist}, policy=pol)
+            return jnp.argmax(logits, -1).astype(jnp.int32), state
+
+        # The pool donates everywhere except the CPU backend: XLA-CPU
+        # lowers the page scatter to a full-pool materialization whether
+        # or not the input buffer is donated, so donation there buys no
+        # in-place update — it only adds an alias-restoring copy of the
+        # whole pool per step (~25% of a reduced decode step). Positions
+        # always donate; they are what keeps the hot loop host-sync-free.
+        pool_d = () if jax.default_backend() == "cpu" else (2,)
+
+        if kv_axis is None:
+            def decode_fn(p, t, c, tab, pos, live):
+                logits, c = api.decode_step_paged(p, cfg, t, c, tab, pos,
+                                                  policy=dpol)
+                return (jnp.argmax(logits, -1).astype(jnp.int32), c,
+                        pos + live)
+
+            decode = jax.jit(decode_fn, donate_argnums=pool_d + (4,))
+        else:
+            from jax.sharding import PartitionSpec as P
+            from repro.distributed.compression import shard_map
+            from .transformer import decode_step_paged_sharded
+            cspec = {"k": P(None, kv_axis), "v": P(None, kv_axis)}
+            tspec = P(None, kv_axis)
+
+            def decode_local(p, t, c, tab, pos, live):
+                logits, c = decode_step_paged_sharded(
+                    p, cfg, t, c, tab, pos, policy=dpol, seq_axis=kv_axis)
+                return (jnp.argmax(logits, -1).astype(jnp.int32), c,
+                        pos + live)
+
+            decode = jax.jit(
+                shard_map(decode_local, mesh=mesh,
+                          in_specs=(P(), P(), cspec, tspec, P(), P()),
+                          out_specs=(P(), cspec, P())),
+                donate_argnums=pool_d + (4,))
+
+        _PAGED_PROGRAM_CACHE[key] = (jax.jit(prefill_hist_fn), decode)
+    return _PAGED_PROGRAM_CACHE[key]
+
+
+def tune_block_page(cfg, policy, pool_width, cache_s):
+    """Resolve the pool's page size BEFORE the pool exists: the page size
+    is a pool-construction parameter (it shapes every KV leaf), so unlike
+    ``block_s`` it can never be re-tuned per call — this one eager
+    autotune over ``CANDIDATES["decode_attention_paged"]`` times each
+    candidate on a synthetic pool of the group's real decode shape and
+    the winner is baked into the pool. Non-autotuning / non-pallas
+    policies use ``policy.block_page`` as-is."""
+    if not policy.autotune or policy.kernel_backend != "pallas":
+        return policy.block_page
+    from repro.kernels.dispatch import autotune_policy, dispatch
+    lay = cfg.kv_cache_layout
+    q = jnp.zeros((pool_width, 1, cfg.n_heads, cfg.hd),
+                  jnp.dtype(cfg.compute_dtype))
+    clen = jnp.full((pool_width,), cache_s, jnp.int32)
+
+    def run(p):
+        pg = p.block_page
+        ns = -(-cache_s // pg)
+        n = 1 + pool_width * ns
+        shape = ((n, cfg.n_kv_heads, pg, cfg.hd) if lay == "bhsd"
+                 else (n, pg, cfg.n_kv_heads, cfg.hd))
+        pool = jnp.zeros(shape, jnp.bfloat16)
+        tab = jnp.arange(1, 1 + pool_width * ns,
+                         dtype=jnp.int32).reshape(pool_width, ns)
+        return dispatch("decode_attention_paged", p)(
+            q, pool, pool, tab, clen, layout=lay, policy=p)
+
+    tuned = autotune_policy("decode_attention_paged", policy, run, q)
+    return tuned.block_page
+
+
+def _paged_scatter_impl(pool, rows, g, sl, page, lay, batch_ax):
+    if sl is not None:
+        rows = jnp.take(rows, sl, axis=batch_ax)
+    L = rows.shape[0]
+    nc = g.shape[0] // rows.shape[1]
+    if lay == "bhsd":
+        n, hkv, sp, hd = rows.shape[1:]
+        r = jnp.pad(rows, [(0, 0)] * 3 + [(0, nc * page - sp), (0, 0)])
+        r = r.reshape(L, n, hkv, nc, page, hd).transpose(0, 1, 3, 2, 4, 5)
+        r = r.reshape(L, n * nc, hkv, page, hd)
+    else:
+        n, sp, hkv, hd = rows.shape[1:]
+        r = jnp.pad(rows, [(0, 0)] * 2 + [(0, nc * page - sp),
+                                          (0, 0), (0, 0)])
+        r = r.reshape(L, n * nc, page, hkv, hd)
+    return pool.at[:, g].set(r.astype(pool.dtype))
+
+
+_paged_scatter_jit = jax.jit(_paged_scatter_impl,
+                             static_argnums=(4, 5, 6))
+
+
+def _paged_scatter(pool, rows, gids, page, lay, *, rows_sel=None):
+    """Scatter per-slot prefill KV into pool pages. ``pool`` is a stacked
+    (L, N, page, Hkv, hd) ("bshd") / (L, N, Hkv, page, hd) ("bhsd") pool;
+    ``rows`` the admitted rows of the prefill cache, (L, n, sp, Hkv, hd) /
+    (L, n, Hkv, sp, hd); ``gids`` (n, ceil(sp/page)) GLOBAL page positions
+    (the sharded pool's global axis order is partition-major, matching
+    the allocator's gid layout). A partial last page is zero-padded —
+    those positions sit beyond every reader's ``cache_len`` until decode
+    overwrites them. Jitted (shape-keyed) so an admission pays one
+    dispatch, not one per pad/reshape/scatter op. ``rows_sel=(sl, axis)``
+    folds the admitted-row gather of the full prefill cache into the
+    same program instead of an eager advanced-index on the host path."""
+    g = jnp.asarray(np.asarray(gids).reshape(-1), jnp.int32)
+    if rows_sel is None:
+        return _paged_scatter_jit(pool, rows, g, None, page, lay, 0)
+    sl, batch_ax = rows_sel
+    return _paged_scatter_jit(pool, rows, g, jnp.asarray(sl), page, lay,
+                              int(batch_ax))
+
+
+def _paged_gather_hist_impl(pool, g, page, lay):
+    b, hp = g.shape
+    got = pool[:, g.reshape(-1)]
+    L = got.shape[0]
+    if lay == "bhsd":                       # (L, B*hP, Hkv, page, hd)
+        hkv, hd = got.shape[2], got.shape[4]
+        got = got.reshape(L, b, hp, hkv, page, hd)
+        got = got.transpose(0, 1, 2, 4, 3, 5).reshape(L, b, hp * page,
+                                                      hkv, hd)
+    else:                                   # (L, B*hP, page, Hkv, hd)
+        got = got.reshape(L, b, hp * page, *got.shape[3:])
+    return got
+
+
+_paged_gather_jit = jax.jit(_paged_gather_hist_impl,
+                            static_argnums=(2, 3))
+
+
+# One dispatch for an admission's table-row + position writes.
+_admit_rows_jit = jax.jit(
+    lambda tab, pos, sl, rows, pl: (tab.at[sl].set(rows),
+                                    pos.at[sl].set(pl)))
+
+
+def _paged_gather_hist(pool, gids, page, lay):
+    """Gather prefix pages into a contiguous (L, B, h, Hkv, hd) history
+    (always "bshd" — the ``hist`` contract of ``transformer.prefill``).
+    Rows without a history point at the scratch page; their gathered
+    content is arbitrary and their outputs are ignored. Jitted for the
+    same hot-admission dispatch reason as ``_paged_scatter``."""
+    g = jnp.asarray(np.asarray(gids), jnp.int32)
+    return _paged_gather_jit(pool, g, page, lay)
+
+
+class PagedKVDecodeState(KVDecodeState):
+    """Transformer families over a paged pool: fixed-size KV pages behind
+    per-slot block tables, a host-side refcounted allocator, and a
+    shared-prefix page cache.
+
+    The tentpole invariants:
+
+      * full reservation — a slot's whole table (ceil(cache_s/page)
+        columns, minus its prefix-cache hits) is allocated at admission,
+        so the decode hot loop NEVER touches the allocator or the tables:
+        zero host work, zero host syncs, no preemption.
+      * oversubscription comes from sharing, not from overcommit — N
+        slots on a shared prefix of P pages store P + N*suffix physical
+        pages against N*(P+suffix) logical tokens.
+      * no shared page is ever written — decode writes only at positions
+        >= the slot's prompt length, which lie strictly past every full
+        (hashable, shareable) prompt page; ``BlockAllocator.cow`` remains
+        the defensive discipline for any future in-page writer.
+    """
+
+    kind = "paged-kv"
+    is_paged = True
+
+    def __init__(self, cfg, params, policy, pool_width, cache_s, *,
+                 mesh=None, kv_axis=None, n_pages=None, page=None,
+                 prefix_cache=True):
+        from .block_pool import BlockAllocator, PrefixCache
+        self.page = int(page or tune_block_page(cfg, policy, pool_width,
+                                                cache_s))
+        self.ns = -(-cache_s // self.page)          # table columns per slot
+        nsh = 1 if kv_axis is None else mesh.shape[kv_axis]
+        if kv_axis is not None and self.ns % nsh:
+            raise ValueError(
+                f"table width {self.ns} not divisible by {nsh} shards")
+        if n_pages is None:
+            n_pages = nsh + pool_width * self.ns    # scratch + full pool
+        if n_pages % nsh:
+            raise ValueError(f"page budget {n_pages} not divisible by "
+                             f"{nsh} shards")
+        self.n_pages = int(n_pages)
+        self.alloc = BlockAllocator(
+            self.n_pages, n_partitions=nsh,
+            cols_per_part=None if nsh == 1 else self.ns // nsh)
+        self.use_prefix = bool(prefix_cache) and cfg.sliding_window is None
+        self.pcache = PrefixCache(self.alloc, self.page) \
+            if self.use_prefix else None
+        self.slot_pages = [[] for _ in range(pool_width)]
+        self.tables = None                          # device (B, nS) int32
+        super().__init__(cfg, params, policy, pool_width, cache_s,
+                         mesh=mesh, kv_axis=kv_axis)
+        self._hist_prefill, self._decode_paged = _paged_programs(
+            cfg, policy, self.page, mesh, kv_axis, self._decode_policy)
+
+    # ------------------------------------------------------------ plumbing
+
+    def _autotune_warmup(self):
+        # the contiguous decode-attention tune is meaningless here and
+        # the page size was already resolved before pool construction
+        self._decode_policy = self.policy
+        return self.policy
+
+    def _placed_tables(self, arr):
+        if self.kv_axis is None:
+            return jnp.asarray(arr, jnp.int32)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.device_put(jnp.asarray(arr, jnp.int32),
+                              NamedSharding(self.mesh, P(None,
+                                                         self.kv_axis)))
+
+    def _setup_placement(self):
+        if self.kv_axis is None:
+            return
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        self._repl = NamedSharding(self.mesh, P())
+        self._state_shard = {
+            "k": NamedSharding(self.mesh, P(None, self.kv_axis)),
+            "v": NamedSharding(self.mesh, P(None, self.kv_axis))}
+
+    def _ensure_pool(self):
+        if self.data is None:
+            self.data = self._place_state(api.init_paged_cache(
+                self.cfg, self.pool_width, self.n_pages, self.page))
+            self.tables = self._placed_tables(
+                np.zeros((self.pool_width, self.ns), np.int32))
+
+    def _local_ids(self, gids):
+        """Device-table values for global page ids (partition-local on a
+        sharded pool: each shard indexes its own pool slice)."""
+        g = np.asarray(gids, np.int64)
+        return (g % self.alloc.per_part).astype(np.int32)
+
+    # ------------------------------------------------------------- budget
+
+    def pages_per_slot(self) -> int:
+        return self.ns
+
+    def free_with_evictable(self):
+        """Per-partition page budget: free pages plus prefix-cache pages
+        held only by the cache (refcount 1) — live state is never
+        evicted, so those are genuinely reclaimable under pressure."""
+        free = self.alloc.free_counts()
+        if self.pcache is not None:
+            ev = np.zeros_like(free)
+            for gid, _, _ in self.pcache._entries.values():
+                if self.alloc.refcount(gid) == 1:
+                    ev[self.alloc.part_of(gid)] += 1
+            free = free + ev
+        return free
+
+    def admission_need(self, prompt, *, cap_h=None):
+        """(per-partition fresh-page counts, hit depth) for admitting one
+        request. The hit depth is this prompt's own prefix-cache depth
+        (capped at ``cap_h``, the wave's shared depth); fresh pages are
+        the reserved columns ``[h, ns)`` mapped to their partitions."""
+        h = 0
+        if self.pcache is not None:
+            p = np.asarray(prompt).reshape(-1)
+            h = min(self.pcache.probe(p), (len(p) - 1) // self.page)
+        if cap_h is not None:
+            h = min(h, cap_h)
+        need = np.zeros(self.alloc.n_partitions, np.int64)
+        for c in range(h, self.ns):
+            need[self.alloc.part_of_col(c)] += 1
+        return need, h
+
+    def can_admit(self, n_slots: int) -> bool:
+        """Whether ``n_slots`` full (cold) reservations fit."""
+        per_part = (self.ns if self.alloc.n_partitions == 1
+                    else self.ns // self.alloc.n_partitions)
+        return bool((self.free_with_evictable() >= n_slots * per_part).all())
+
+    def pool_stats(self) -> dict:
+        s = {"page": self.page, "pages_total": self.n_pages,
+             "pages_allocatable": self.n_pages - self.alloc.n_partitions,
+             "pages_used": self.alloc.n_used(),
+             "pages_free": self.alloc.n_free()}
+        s["utilization"] = s["pages_used"] / max(s["pages_allocatable"], 1)
+        if self.pcache is not None:
+            s["prefix"] = self.pcache.stats()
+        return s
+
+    # ------------------------------------------------------- engine ops
+
+    def prefill_into(self, slots, toks, plens, *, full, uniform=False):
+        self._ensure_pool()
+        slots = list(np.asarray(slots).reshape(-1))
+        toks_np = np.asarray(toks)
+        plens_np = np.asarray(plens).reshape(-1)
+        page, ns = self.page, self.ns
+
+        # ---- prefix probe: the wave's shared history depth is the MIN
+        # over its rows (one uniform hist shape per prefill program);
+        # a cold row in the wave degrades it to a cold admission.
+        h_pages = 0
+        if self.pcache is not None and slots:
+            h_pages = ns
+            for j in slots:
+                n_hit = self.pcache.probe(toks_np[j, :plens_np[j]])
+                # a hit must leave >= 1 suffix token (the prefill needs a
+                # real position to emit the first logits from)
+                n_hit = min(n_hit, (int(plens_np[j]) - 1) // page)
+                h_pages = min(h_pages, n_hit)
+        h = h_pages * page
+
+        # ---- allocate: attach the shared prefix, reserve the rest of
+        # each slot's table up front (full reservation)
+        new_tab = {}
+        for j in slots:
+            held = []
+            if h_pages:
+                held = self.pcache.attach(toks_np[j, :plens_np[j]],
+                                          max_pages=h_pages)
+                assert len(held) == h_pages
+            held = held + self.alloc.alloc_cols(range(h_pages, ns))
+            self.slot_pages[j] = held
+            new_tab[j] = held
+
+        # ---- prefill (cold: full prompts; hot: suffix against the
+        # gathered history) + page scatter of the computed KV
+        lay = self.cfg.kv_cache_layout
+        sl = jnp.asarray(np.asarray(slots))
+        if h_pages == 0:
+            if uniform:
+                first, pref = self._prefill_plain(self.params,
+                                                  jnp.asarray(toks))
+            else:
+                first, pref = self._prefill(self.params, jnp.asarray(toks),
+                                            jnp.asarray(plens))
+            sp = toks.shape[1]
+            col0 = 0
+        else:
+            hist_tab = np.zeros((self.pool_width, h_pages), np.int64)
+            for j in slots:
+                hist_tab[j] = new_tab[j][:h_pages]
+            hist = {kname: _paged_gather_hist(self.data[kname], hist_tab,
+                                              page, lay)
+                    for kname in ("k", "v")}
+            sp = _len_bucket(int((plens_np - h).max()), self.cache_s - h)
+            toks_suf = np.ones((self.pool_width, sp), toks_np.dtype)
+            plens_suf = np.ones((self.pool_width,), plens_np.dtype)
+            for j in slots:
+                n_suf = int(plens_np[j]) - h
+                toks_suf[j, :n_suf] = toks_np[j, h:h + n_suf]
+                plens_suf[j] = n_suf
+            first, pref = self._hist_prefill(
+                self.params, jnp.asarray(toks_suf), jnp.asarray(plens_suf),
+                hist)
+            col0 = h_pages
+        first = self.place_tokens(first)
+
+        nc = -(-sp // page)
+        gids = np.zeros((len(slots), nc), np.int64)
+        for i, j in enumerate(slots):
+            gids[i] = new_tab[j][col0:col0 + nc]
+        for kname in ("k", "v"):
+            ax = self.axes[kname]
+            self.data[kname] = _paged_scatter(
+                self.data[kname], pref[kname], gids, page, lay,
+                rows_sel=(sl, ax.batch))
+
+        # ---- publish full prompt pages to the prefix cache (the cache
+        # takes its own refs, so shared prefixes outlive their slot)
+        if self.pcache is not None:
+            for j in slots:
+                prompt = toks_np[j, :plens_np[j]]
+                for c in range(h_pages, int(plens_np[j]) // page):
+                    self.pcache.insert(prompt, c, self.slot_pages[j][c])
+
+        # ---- table rows + positions (one fused device update)
+        tab_rows = np.zeros((len(slots), ns), np.int32)
+        for i, j in enumerate(slots):
+            tab_rows[i] = self._local_ids(new_tab[j])
+        self.tables, self.pos_dev = _admit_rows_jit(
+            self.tables, self.pos_dev, sl, jnp.asarray(tab_rows),
+            jnp.asarray(plens_np[np.asarray(slots)], jnp.int32))
+        return first
+
+    def step(self, last, live):
+        nxt, self.data, self.pos_dev = self._decode_paged(
+            self.params_decode, last, self.data, self.tables, self.pos_dev,
+            live)
+        return nxt
+
+    def reset_slots(self, slots):
+        sl = jnp.asarray(np.asarray(slots))
+        self.pos_dev = self.pos_dev.at[sl].set(0)
+        for j in np.asarray(slots).reshape(-1):
+            for gid in self.slot_pages[int(j)]:
+                self.alloc.decref(int(gid))
+            self.slot_pages[int(j)] = []
+        if self.tables is not None:
+            self.tables = self.tables.at[sl].set(0)
+
+
+class PagedHybridDecodeState(HybridDecodeState):
+    """Hybrid family over a paged pool: the O(1) recurrent leaves keep
+    their slot rows (generic scatter/zero), the ring-buffer KV leaves
+    live in slotless page pools behind a fixed per-slot ring table of
+    ceil(window/page) pages — allocated whole at admission, freed whole
+    at finish. No prefix cache: a ring's page content depends on the
+    slot's wrap phase, so pages are never content-addressable."""
+
+    kind = "paged-hybrid"
+    is_paged = True
+
+    def __init__(self, cfg, params, policy, pool_width, cache_s, *,
+                 mesh=None, kv_axis=None, n_pages=None, page=None,
+                 prefix_cache=True):
+        from .block_pool import BlockAllocator
+        if kv_axis is not None:
+            raise ValueError("paged hybrid state is single-partition")
+        self.page = int(page or policy.block_page)
+        self.ns = -(-cache_s // self.page)
+        if n_pages is None:
+            n_pages = 1 + pool_width * self.ns
+        self.n_pages = int(n_pages)
+        self.alloc = BlockAllocator(self.n_pages)
+        self.pcache = None
+        self.use_prefix = False
+        self.slot_pages = [[] for _ in range(pool_width)]
+        self.tables = None
+        super().__init__(cfg, params, policy, pool_width, cache_s,
+                         mesh=mesh, kv_axis=kv_axis)
+        _, self._decode_paged = _paged_programs(cfg, policy, self.page,
+                                                None, None, policy)
+
+    def can_admit(self, n_slots: int) -> bool:
+        return self.alloc.n_free() >= n_slots * self.ns
+
+    def free_with_evictable(self):
+        return self.alloc.free_counts()
+
+    def admission_need(self, prompt, *, cap_h=None):
+        return np.array([self.ns], np.int64), 0
+
+    def pages_per_slot(self) -> int:
+        return self.ns
+
+    def pool_stats(self) -> dict:
+        s = {"page": self.page, "pages_total": self.n_pages,
+             "pages_allocatable": self.n_pages - 1,
+             "pages_used": self.alloc.n_used(),
+             "pages_free": self.alloc.n_free()}
+        s["utilization"] = s["pages_used"] / max(s["pages_allocatable"], 1)
+        return s
+
+    def _ensure_pool(self):
+        if self.data is None:
+            self.data = api.init_paged_cache(self.cfg, self.pool_width,
+                                             self.n_pages, self.page)
+            self.tables = jnp.zeros((self.pool_width, self.ns), jnp.int32)
+
+    def prefill_into(self, slots, toks, plens, *, full, uniform=False):
+        self._ensure_pool()
+        slots = list(np.asarray(slots).reshape(-1))
+        plens_np = np.asarray(plens).reshape(-1)
+        if uniform:
+            first, pref = self._prefill_plain(self.params,
+                                              jnp.asarray(toks))
+        else:
+            first, pref = self._prefill(self.params, jnp.asarray(toks),
+                                        jnp.asarray(plens))
+        sp = toks.shape[1]
+        sl = jnp.asarray(np.asarray(slots))
+        gids = np.zeros((len(slots), -(-sp // self.page)), np.int64)
+        tab_rows = np.zeros((len(slots), self.ns), np.int32)
+        for i, j in enumerate(slots):
+            held = self.alloc.alloc_cols(range(self.ns))
+            self.slot_pages[j] = held
+            tab_rows[i] = held
+            gids[i] = held[:gids.shape[1]]
+        self.tables = self.tables.at[sl].set(jnp.asarray(tab_rows))
+
+        def place(pool, leaf, ax):
+            if ax.seq is None:           # recurrent leaf: slot-row scatter
+                rows_idx = [slice(None)] * leaf.ndim
+                rows_idx[ax.batch] = sl
+                idx = [slice(None)] * pool.ndim
+                idx[ax.batch] = sl
+                return pool.at[tuple(idx)].set(leaf[tuple(rows_idx)])
+            return _paged_scatter(pool, leaf, gids, self.page, "bshd",
+                                  rows_sel=(sl, ax.batch))
+
+        self.data = jax.tree.map(place, self.data, pref, self.axes)
+        self.pos_dev = self.pos_dev.at[sl].set(
+            jnp.asarray(plens_np[np.asarray(slots)], jnp.int32))
+        return first
+
+    def step(self, last, live):
+        nxt, self.data, self.pos_dev = self._decode_paged(
+            self.params_decode, last, self.data, self.tables, self.pos_dev,
+            live)
+        return nxt
+
+    def reset_slots(self, slots):
+        super().reset_slots(slots)       # positions + recurrent leaf rows
+        sl = jnp.asarray(np.asarray(slots))
+        for j in np.asarray(slots).reshape(-1):
+            for gid in self.slot_pages[int(j)]:
+                self.alloc.decref(int(gid))
+            self.slot_pages[int(j)] = []
+        if self.tables is not None:
+            self.tables = self.tables.at[sl].set(0)
+
+
+def decode_state_for(cfg, paged=False):
     """The DecodeState implementation serving ``cfg`` (the one family
-    dispatch of the serving stack)."""
+    dispatch of the serving stack). ``paged`` selects the block-pool
+    states; recurrent state is O(1) per slot — nothing to page — so ssm
+    serves through the contiguous state either way."""
     if cfg.family == "ssm":
         return RecurrentDecodeState
     if cfg.family == "hybrid":
-        return HybridDecodeState
+        return PagedHybridDecodeState if paged else HybridDecodeState
     if cfg.family == "audio":
         raise ValueError("encoder-only arch has no decode state to serve")
-    return KVDecodeState
+    return PagedKVDecodeState if paged else KVDecodeState

@@ -370,6 +370,108 @@ def prefill(params, cfg, tokens, *, prompt_len=None, policy=None):
     return mask_padded_logits(logits, cfg.vocab), cache
 
 
+def init_paged_cache(cfg, batch, n_pages, page, dtype=jnp.bfloat16):
+    """Paged hybrid state: the recurrent leaves keep their slot axis
+    (O(1) per slot — nothing to page), the local-attention KV leaves
+    become slotless page pools (n_per, N, page, Hkv, hd), always "bshd".
+    Every period indexes the same per-slot ring block table: each slot
+    owns a fixed W/page pages for the life of its request and the write
+    column wraps at the window — paging changes where the ring lives,
+    not its semantics."""
+    period, n_per, tail = _period_counts(cfg)
+    w = cfg.lru_width or cfg.d_model
+    cache = {"periods": {
+        "rec_h": jnp.zeros((n_per, period - 1, batch, w), jnp.float32),
+        "rec_conv": jnp.zeros((n_per, period - 1, batch,
+                               cfg.conv_width - 1, w), jnp.float32),
+        "k": jnp.zeros((n_per, n_pages, page, cfg.n_kv_heads, cfg.hd),
+                       dtype),
+        "v": jnp.zeros((n_per, n_pages, page, cfg.n_kv_heads, cfg.hd),
+                       dtype),
+    }}
+    if tail:
+        cache["tail"] = {
+            "h": jnp.zeros((tail, batch, w), jnp.float32),
+            "conv": jnp.zeros((tail, batch, cfg.conv_width - 1, w),
+                              jnp.float32)}
+    return cache
+
+
+def attn_layer_decode_paged(x, p, cfg, pk, pv, tables, pos, wpos,
+                            policy=None):
+    """``attn_layer_decode`` against a page pool: the ring write lands in
+    page ``tables[b, wpos // page]`` at offset ``wpos % page``; validity
+    stays by-length (the ring holds exactly the window)."""
+    from .transformer import _paged_attn, _write_token_kv_paged
+    b = x.shape[0]
+    page = pk.shape[1]
+    h = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
+    q, k, v = _qkv(h, p["attn"], cfg, _rope_pos(b, pos))
+    gids = tables[jnp.arange(b), wpos // page]
+    pk = _write_token_kv_paged(pk, k, gids, wpos % page, "bshd")
+    pv = _write_token_kv_paged(pv, v, gids, wpos % page, "bshd")
+    w = cfg.sliding_window
+    pos = jnp.asarray(pos, jnp.int32)
+    valid = jnp.minimum(pos + 1, w) if w else pos + 1
+    o = _paged_attn(q, pk, pv, tables, valid, cfg, policy, lay="bshd")
+    x = x + o.reshape(b, 1, -1) @ p["attn"]["wo"]
+    h2 = norm_apply(x, p["ln_mlp"], cfg.norm, cfg.norm_eps)
+    x = x + mlp_apply(h2, p["mlp"], cfg.act, cfg.exp_impl)
+    return x, pk, pv
+
+
+def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
+    """One decode step over a paged hybrid cache (see init_paged_cache).
+    ``tables`` (B, W/page) int32 ring block table shared by every period;
+    ``pos`` per-slot (B,) int32."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], token, axis=0).astype(dt)
+    b = x.shape[0]
+    period, n_per, tail = _period_counts(cfg)
+    w = cfg.sliding_window
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    wpos = pos % w if w else pos
+
+    def body(x, inp):
+        period_p, pc = inp
+        period_p = _cast(period_p, dt)
+
+        def rec_body(x, rec_inp):
+            rec_p, h, conv = rec_inp
+            y, new = rec_layer_decode(x, rec_p, cfg, {"h": h, "conv": conv},
+                                      policy=policy)
+            return y, (new["h"], new["conv"].astype(jnp.float32))
+
+        x, (hs, convs) = jax.lax.scan(
+            rec_body, x, (period_p["recs"], pc["rec_h"], pc["rec_conv"]),
+            unroll=cfg.unroll_scans)
+        x, pk, pv = attn_layer_decode_paged(x, period_p["attn"], cfg,
+                                            pc["k"], pc["v"], tables, pos,
+                                            wpos, policy=policy)
+        return x, {"rec_h": hs, "rec_conv": convs, "k": pk, "v": pv}
+
+    n_per = cfg.n_layers // cfg.attn_period
+    x, pcache = jax.lax.scan(body, x, (params["periods"], cache["periods"]),
+                             unroll=n_per if cfg.unroll_scans else 1)
+    new_cache = {"periods": pcache}
+    if tail:
+        def tail_body(x, inp):
+            rec_p, h, conv = inp
+            y, new = rec_layer_decode(x, rec_p, cfg,
+                                      {"h": h, "conv": conv}, policy=policy)
+            return y, {"h": new["h"], "conv": new["conv"].astype(jnp.float32)}
+        x, tcache = jax.lax.scan(
+            tail_body, x, (_cast(params["tail"], dt), cache["tail"]["h"],
+                           cache["tail"]["conv"]), unroll=cfg.unroll_scans)
+        new_cache["tail"] = tcache
+    x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(ldt),
+                        params["unembed"].astype(ldt),
+                        preferred_element_type=jnp.float32)
+    return mask_padded_logits(logits, cfg.vocab), new_cache
+
+
 def decode_step(params, cfg, token, cache, pos, *, policy=None):
     """One decode step. ``pos`` is a scalar (whole batch at one position)
     or a per-slot (B,) vector — the continuous-batching engine's slots

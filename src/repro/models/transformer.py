@@ -197,6 +197,34 @@ def attn_decode_sharded(x, p, cfg, cache_k, cache_v, pos, *, seq_axis,
     return o.reshape(b, 1, -1) @ p["wo"], (ck, cv)
 
 
+def _attn_apply_hist(x, p, cfg, pos, hk, hv, *, suffix_valid=None,
+                     policy=None):
+    """Suffix attention against a prepended KV history (paged prefix-cache
+    hot path): queries are the suffix tokens at absolute positions ``pos``
+    (already offset by the history length), keys/values are
+    ``[history | suffix]``. ``hk``/``hv`` (B, h, Hkv, hd) hold the shared
+    prefix's already-roped KV gathered from the pool — always "bshd"
+    regardless of ``cfg.kv_cache_layout``. Returns y and the *suffix-only*
+    (k, v) (the prefix pages already exist; only the suffix is scattered
+    back). The ``q_offset``/``kv_valid`` path demotes pallas to the flash
+    scan inside ``attention`` — prefix-hot prefill is rare and short."""
+    b, s, _ = x.shape
+    h = hk.shape[1]
+    q, k, v = _qkv(x, p, cfg, pos)
+    kcat = jnp.concatenate([hk.astype(k.dtype), k], axis=1)
+    vcat = jnp.concatenate([hv.astype(v.dtype), v], axis=1)
+    kv_valid = None
+    if suffix_valid is not None:
+        kv_valid = jnp.concatenate(
+            [jnp.ones((b, h), bool), suffix_valid], axis=1)
+    o = attention(q, kcat, vcat, causal=True, window=None, q_offset=h,
+                  exp_impl=cfg.exp_impl, impl=cfg.attention_impl,
+                  unroll=cfg.unroll_scans, block_k=cfg.attn_block_k,
+                  mm_dtype=cfg.attn_mm_dtype, kv_valid=kv_valid,
+                  policy=policy)
+    return o.reshape(b, s, -1) @ p["wo"], (k, v)
+
+
 # --------------------------------------------------------------------- block
 
 def block_init(key, cfg, dtype=jnp.float32):
@@ -233,6 +261,16 @@ def block_apply(x, p, cfg, pos, *, kv_valid=None, policy=None):
     else:
         m = mlp_apply(h, p["mlp"], cfg.act, cfg.exp_impl, policy=policy)
     return x + m, kv, aux
+
+
+def block_apply_hist(x, p, cfg, pos, hk, hv, *, suffix_valid=None,
+                     policy=None):
+    """``block_apply`` with a prepended KV history (see _attn_apply_hist).
+    Returns (y, suffix_kv)."""
+    h = norm_apply(x, p["ln_attn"], cfg.norm, cfg.norm_eps)
+    a, kv = _attn_apply_hist(h, p["attn"], cfg, pos, hk, hv,
+                             suffix_valid=suffix_valid, policy=policy)
+    return _finish_block(x, h, a, p, cfg, policy=policy), kv
 
 
 def block_decode(x, p, cfg, cache_k, cache_v, pos, *, policy=None):
@@ -358,7 +396,8 @@ def init_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def prefill(params, cfg, tokens, extra=None, *, prompt_len=None, policy=None):
+def prefill(params, cfg, tokens, extra=None, *, prompt_len=None, policy=None,
+            hist=None):
     """Forward over the prompt; returns (last_logits, cache).
 
     ``prompt_len`` (B,) enables ragged right-padded batches: tokens beyond
@@ -367,10 +406,22 @@ def prefill(params, cfg, tokens, extra=None, *, prompt_len=None, policy=None):
     their K/V cache rows are zeroed, and the returned logits are each
     row's *last real* position (not the padded tail). Without it, every
     row is assumed full-length (the previous behaviour, unchanged).
+
+    ``hist`` enables *suffix* prefill against a shared-prefix KV history
+    (the paged engine's prefix-cache hot path): a stacked
+    {"k": (L, B, h, Hkv, hd), "v": ...} of already-computed history KV
+    (always "bshd", bf16). ``tokens`` are then only each row's suffix,
+    attending causally over ``[history | suffix]`` at absolute positions
+    ``h + i``; ``prompt_len`` counts *suffix* tokens; the returned cache
+    and logits cover the suffix only. Linear caches only — a windowed
+    arch's ring roll has no meaningful history split.
     """
     if prompt_len is not None and extra is not None:
         raise ValueError("prompt_len is only supported for token-only "
                          "prefill (no vlm/audio extra inputs)")
+    if hist is not None and (extra is not None or cfg.sliding_window):
+        raise ValueError("history-conditioned prefill requires a token-only "
+                         "arch with a linear (non-windowed) cache")
     x = embed_inputs(params, cfg, tokens, extra)
     b, s, _ = x.shape
     if (prompt_len is not None and cfg.sliding_window
@@ -379,19 +430,25 @@ def prefill(params, cfg, tokens, extra=None, *, prompt_len=None, policy=None):
             f"ragged prefill of {s} tokens exceeds the sliding window "
             f"({cfg.sliding_window}): the ring-buffer roll is batch-"
             f"uniform; prefill ragged windowed batches at <= window")
-    pos = jnp.arange(s)[None, :].astype(jnp.int32)
+    hlen = 0 if hist is None else hist["k"].shape[2]
+    pos = (jnp.arange(s) + hlen)[None, :].astype(jnp.int32)
     kv_valid = None
     if prompt_len is not None:
         plen = jnp.asarray(prompt_len, jnp.int32).reshape(-1)
         kv_valid = jnp.arange(s)[None, :] < plen[:, None]        # (B, S)
     dt = _cdtype(cfg)
 
-    def body(x, layer_p):
+    def body(x, inp):
+        layer_p = inp if hist is None else inp[0]
         layer_p = jax.tree.map(lambda a: a.astype(dt)
                                if a.dtype == jnp.float32 and a.ndim > 1
                                else a, layer_p)
-        y, kv, _ = block_apply(x, layer_p, cfg, pos, kv_valid=kv_valid,
-                               policy=policy)
+        if hist is None:
+            y, kv, _ = block_apply(x, layer_p, cfg, pos, kv_valid=kv_valid,
+                                   policy=policy)
+        else:
+            y, kv = block_apply_hist(x, layer_p, cfg, pos, inp[1], inp[2],
+                                     suffix_valid=kv_valid, policy=policy)
         k, v = kv
         if kv_valid is not None:
             # pad rows must not reach the decode cache: decode masks by
@@ -410,7 +467,9 @@ def prefill(params, cfg, tokens, extra=None, *, prompt_len=None, policy=None):
 
     if cfg.remat:
         body = jax.checkpoint(body, prevent_cse=False)
-    x, cache = jax.lax.scan(body, x, params["layers"],
+    xs = (params["layers"] if hist is None
+          else (params["layers"], hist["k"], hist["v"]))
+    x, cache = jax.lax.scan(body, x, xs,
                             unroll=cfg.n_layers if cfg.unroll_scans else 1)
     x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
     if prompt_len is None:
@@ -529,6 +588,172 @@ def _decode_windowed(h, layer_p, cfg, ck, cv, pos, wpos, *, policy=None):
                          mm_dtype=cfg.attn_mm_dtype,
                          layout=cfg.kv_cache_layout, policy=policy)
     return o.reshape(b, 1, -1) @ layer_p["attn"]["wo"], None
+
+
+# ------------------------------------------------------------- paged decode
+
+def init_paged_cache(cfg, n_pages, page, dtype=jnp.bfloat16):
+    """Paged KV pool: (L, N, page, Hkv, hd) ("bshd") / (L, N, Hkv, page, hd)
+    ("bhsd") ×2. Unlike ``init_cache`` there is no slot axis — physical
+    pages are handed to slots by the host-side ``BlockAllocator`` through
+    per-slot block tables; page 0 is the reserved scratch page every
+    unassigned table entry points at."""
+    if cfg.kv_cache_layout == "bhsd":
+        shape = (cfg.n_layers, n_pages, cfg.n_kv_heads, page, cfg.hd)
+    else:
+        shape = (cfg.n_layers, n_pages, page, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _write_token_kv_paged(pool, kv, gids, offs, layout, *, oob_drop=False):
+    """Scatter one token's K (or V) per slot into its physical page.
+
+    pool: (N, page, Hkv, hd) "bshd" / (N, Hkv, page, hd) "bhsd"; kv as in
+    ``_write_token_kv``; ``gids``/``offs`` (B,) physical page id and
+    in-page offset per slot. Dead slots point at the reserved scratch
+    page — their writes collide there harmlessly (scratch is never part
+    of any live sweep's masked-in range). ``oob_drop``: the sharded path
+    remaps non-owned rows to gid == N, a genuinely droppable index.
+
+    The (page, offset) coordinates are flattened to one row index into a
+    reshaped pool: a single-index-array scatter vectorizes on CPU/XLA
+    where the equivalent multi-array advanced-index scatter scalarizes
+    (~2x the decode-step overhead of the whole indirection)."""
+    kv = kv.astype(pool.dtype)
+    kw = {"mode": "drop"} if oob_drop else {}
+    if layout == "bhsd":
+        n, hkv, page, hd = pool.shape
+        idx = (gids[:, None] * hkv + jnp.arange(hkv)[None, :]) * page \
+            + offs[:, None]
+        flat = pool.reshape(n * hkv * page, hd)
+        return flat.at[idx].set(kv[:, :, 0], **kw).reshape(pool.shape)
+    n, page = pool.shape[0], pool.shape[1]
+    flat = pool.reshape((n * page,) + pool.shape[2:])
+    return flat.at[gids * page + offs].set(kv[:, 0], **kw).reshape(pool.shape)
+
+
+def _paged_attn(q, pool_k, pool_v, tab, cache_len, cfg, policy, lay=None):
+    """Policy-routed paged sweep: pallas drives the page DMA from the
+    table inside the kernel; reference/xla (and the policy-less legacy
+    path) gather the table into a contiguous cache first — identical
+    semantics, the oracle the kernel is tested against. ``lay`` overrides
+    ``cfg.kv_cache_layout`` (the hybrid family's pools are always
+    "bshd")."""
+    lay = lay or cfg.kv_cache_layout
+    if policy is not None:
+        from repro.kernels.dispatch import dispatch as k_dispatch
+        return k_dispatch("decode_attention_paged", policy)(
+            q, pool_k, pool_v, tab, cache_len, window=None, sm_scale=None,
+            layout=lay, policy=policy)
+    from repro.kernels.decode_attention.ops import paged_gather
+    k = paged_gather(pool_k, tab, lay)
+    v = paged_gather(pool_v, tab, lay)
+    return decode_attention(q, k, v, cache_len=cache_len,
+                            exp_impl=cfg.exp_impl,
+                            mm_dtype=cfg.attn_mm_dtype, layout=lay)
+
+
+def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
+    """One decode step over a paged KV pool. token: (B, 1) int32; cache:
+    stacked pools from ``init_paged_cache``; ``tables`` (B, nS) int32
+    block table shared by every layer (each layer's pool is indexed by
+    the same logical->physical map); pos: per-slot (B,) int32. Returns
+    (logits, new_cache) — tables are read-only here; the host allocator
+    updates them only at scheduling events.
+
+    Windowed archs run ring-buffer paging: each slot owns a fixed table
+    of W/page pages, the write column wraps at W and validity is by
+    length only — same semantics as ``decode_step``'s ring cache."""
+    x = embed_inputs(params, cfg, token)
+    b = x.shape[0]
+    dt = _cdtype(cfg)
+    lay = cfg.kv_cache_layout
+    page = cache["k"].shape[3 if lay == "bhsd" else 2]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    if cfg.sliding_window:
+        w = cfg.sliding_window
+        wpos, clen = pos % w, jnp.minimum(pos + 1, w)
+    else:
+        wpos, clen = pos, pos + 1
+    gids = tables[jnp.arange(b), wpos // page]
+    offs = wpos % page
+
+    def body(x, inp):
+        layer_p, pk, pv = inp
+        layer_p = jax.tree.map(lambda a: a.astype(dt)
+                               if a.dtype == jnp.float32 and a.ndim > 1
+                               else a, layer_p)
+        h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
+        q, k, v = _qkv(h, layer_p["attn"], cfg, _rope_pos(b, pos))
+        if lay == "bhsd":
+            k, v = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+        pk = _write_token_kv_paged(pk, k, gids, offs, lay)
+        pv = _write_token_kv_paged(pv, v, gids, offs, lay)
+        o = _paged_attn(q, pk, pv, tables, clen, cfg, policy)
+        a = o.reshape(b, 1, -1) @ layer_p["attn"]["wo"]
+        x = _finish_block(x, h, a, layer_p, cfg, policy=policy)
+        return x, {"k": pk, "v": pv}
+
+    x, cache = jax.lax.scan(body, x, (params["layers"],
+                                      cache["k"], cache["v"]),
+                            unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    return _final_logits(params, cfg, x), cache
+
+
+def decode_step_paged_sharded(params, cfg, token, cache, tables, pos, *,
+                              policy, seq_axis):
+    """Paged decode over a sequence-sharded pool — the body the serving
+    engine wraps in ``shard_map``. The pool's page axis is sharded over
+    ``seq_axis``; ``tables`` is each shard's (B, nS_local) slice holding
+    *local* page ids (logical page column j lives on shard j // nS_local
+    by the allocator's partitioning). The token's K/V land on exactly the
+    owning shard (drop-mode page scatter), each shard sweeps its local
+    pages in partial-statistics mode and the statistics fold through
+    ``policy.merge_strategy`` — one collective per layer when packed."""
+    if cfg.sliding_window:
+        raise NotImplementedError(
+            "sequence-sharded paged decode covers linear caches; windowed "
+            "ring tables decode through the unsharded paged path")
+    x = embed_inputs(params, cfg, token)
+    b = x.shape[0]
+    dt = _cdtype(cfg)
+    lay = cfg.kv_cache_layout
+    page = cache["k"].shape[3 if lay == "bhsd" else 2]
+    n_local = cache["k"].shape[1]
+    ns_local = tables.shape[1]
+    s_local = ns_local * page
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    off = jax.lax.axis_index(seq_axis) * s_local
+    lp = pos - off
+    own = (lp >= 0) & (lp < s_local)
+    lpc = jnp.clip(lp, 0, s_local - 1)
+    gids = jnp.where(own, tables[jnp.arange(b), lpc // page], n_local)
+    offs = jnp.where(own, lpc % page, 0)
+    from repro.kernels.decode_attention.ops import \
+        decode_attention_paged_partial_merged
+
+    def body(x, inp):
+        layer_p, pk, pv = inp
+        layer_p = jax.tree.map(lambda a: a.astype(dt)
+                               if a.dtype == jnp.float32 and a.ndim > 1
+                               else a, layer_p)
+        h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
+        q, k, v = _qkv(h, layer_p["attn"], cfg, _rope_pos(b, pos))
+        if lay == "bhsd":
+            k, v = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+        pk = _write_token_kv_paged(pk, k, gids, offs, lay, oob_drop=True)
+        pv = _write_token_kv_paged(pv, v, gids, offs, lay, oob_drop=True)
+        o = decode_attention_paged_partial_merged(
+            q, pk, pv, tables, pos + 1, off, seq_axis=seq_axis, layout=lay,
+            policy=policy)
+        a = o.reshape(b, 1, -1) @ layer_p["attn"]["wo"]
+        x = _finish_block(x, h, a, layer_p, cfg, policy=policy)
+        return x, {"k": pk, "v": pv}
+
+    x, cache = jax.lax.scan(body, x, (params["layers"],
+                                      cache["k"], cache["v"]),
+                            unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    return _final_logits(params, cfg, x), cache
 
 
 def _finish_block(x, h, a, layer_p, cfg, *, policy=None):

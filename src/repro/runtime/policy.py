@@ -47,6 +47,7 @@ _ENV_FIELDS = {
     "BLOCK_K": "block_k",
     "BLOCK_ROWS": "block_rows",
     "BLOCK_S": "block_s",
+    "BLOCK_PAGE": "block_page",
     "INTERPRET": "interpret",
     "ACCUM_DTYPE": "accum_dtype",
     "AUTOTUNE": "autotune",
@@ -76,6 +77,12 @@ class ExecPolicy:
                     the reference flash scan's KV block.
     block_rows      fused-softmax row-block size.
     block_s         decode-attention KV block size.
+    block_page      paged-KV physical block (page) size in tokens: the
+                    unit of the paged pool's free-list allocator AND the
+                    paged decode kernel's sweep step (one page fetch per
+                    grid cell). Fixed at pool construction — the
+                    autotuner times candidates once, before the pool is
+                    allocated, never per call.
     interpret       Pallas interpreter flag; None = auto (CPU -> True).
     accum_dtype     accumulation dtype of the Pallas kernels' (m, l, acc)
                     scratch statistics ("float32" is the paper-faithful
@@ -98,6 +105,7 @@ class ExecPolicy:
     block_k: int = 128
     block_rows: int = 64
     block_s: int = 512
+    block_page: int = 64
     interpret: Optional[bool] = None
     accum_dtype: str = "float32"
     autotune: bool = False
@@ -129,7 +137,8 @@ class ExecPolicy:
                 f"kernel backend (got kernel_backend="
                 f"{self.kernel_backend!r}); the reference/xla paths "
                 f"always accumulate in float32")
-        for f in ("block_q", "block_k", "block_rows", "block_s"):
+        for f in ("block_q", "block_k", "block_rows", "block_s",
+                  "block_page"):
             v = getattr(self, f)
             if not (isinstance(v, int) and v > 0):
                 raise ValueError(f"{f} must be a positive int, got {v!r}")
@@ -154,7 +163,8 @@ class ExecPolicy:
     def describe(self) -> str:
         return (f"exp={self.exp_backend} kernel={self.kernel_backend} "
                 f"blocks=(q{self.block_q},k{self.block_k},"
-                f"r{self.block_rows},s{self.block_s}) "
+                f"r{self.block_rows},s{self.block_s},"
+                f"p{self.block_page}) "
                 f"accum={self.accum_dtype} merge={self.merge_strategy} "
                 f"autotune={self.autotune}")
 
@@ -165,7 +175,8 @@ class ExecPolicy:
 # --------------------------------------------------------------- resolution
 
 def _parse(field: str, raw: str):
-    if field in ("block_q", "block_k", "block_rows", "block_s"):
+    if field in ("block_q", "block_k", "block_rows", "block_s",
+                 "block_page"):
         try:
             return int(raw)
         except ValueError:

@@ -1,0 +1,257 @@
+"""Property tests (hypothesis) for the paged-KV host bookkeeping:
+``models.block_pool.BlockAllocator`` (refcounted free-list page allocator,
+optionally partitioned for sequence-sharded pools) and ``PrefixCache``
+(content-addressed full-page prompt sharing with LRU leaf eviction).
+
+Everything here is pure host-side numpy — no jax programs — so the suite
+sweeps many random traces cheaply. The allocator's ``check()`` verifies
+the structural invariants (free pages have no refs, no page is both free
+and live, nothing leaks) after every trace."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.block_pool import (BlockAllocator, BlockPoolError,
+                                     OutOfBlocks, PrefixCache)
+
+
+# ---------------------------------------------------------------- allocator
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 2 ** 31 - 1))
+def test_alloc_free_roundtrip_any_trace(per_part, seed):
+    """A random alloc/incref/decref trace never corrupts the allocator:
+    refcounts and free lists stay consistent, and releasing every
+    outstanding reference returns the pool to fully free."""
+    rng = np.random.default_rng(seed)
+    alloc = BlockAllocator(per_part)
+    held = []                          # one entry per outstanding reference
+    for _ in range(60):
+        op = rng.integers(0, 3)
+        if op == 0:                    # allocate one page
+            try:
+                held.append(alloc.alloc_cols([0])[0])
+            except OutOfBlocks:
+                assert alloc.n_free() == 0
+        elif op == 1 and held:         # share an existing reference
+            gid = held[int(rng.integers(len(held)))]
+            alloc.incref(gid)
+            held.append(gid)
+        elif op == 2 and held:         # drop a reference
+            gid = held.pop(int(rng.integers(len(held))))
+            alloc.decref(gid)
+        alloc.check()
+        # refcounts must equal the references this trace holds
+        for g in set(held):
+            assert alloc.refcount(g) == held.count(g)
+    for gid in held:
+        alloc.decref(gid)
+    alloc.check()
+    assert alloc.n_free() == per_part - 1 and alloc.n_used() == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 16))
+def test_double_free_and_scratch_free_raise(per_part):
+    alloc = BlockAllocator(per_part)
+    gid = alloc.alloc_cols([0])[0]
+    alloc.decref(gid)
+    with pytest.raises(BlockPoolError):
+        alloc.decref(gid)              # double free
+    with pytest.raises(BlockPoolError):
+        alloc.decref(alloc.scratch_id())   # the reserved page is untouchable
+    with pytest.raises(BlockPoolError):
+        alloc.incref(gid)              # incref of an unallocated page
+    alloc.check()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 4))
+def test_partitioned_alloc_cols_respects_ownership(per_part, n_parts):
+    """Sharded pools: every page allocated for table column ``c`` must
+    come from the partition owning that column slice, and all-or-nothing
+    allocation rolls back cleanly on partition exhaustion."""
+    cols_per_part = 3
+    alloc = BlockAllocator(per_part * n_parts, n_partitions=n_parts,
+                           cols_per_part=cols_per_part)
+    cols = list(range(n_parts * cols_per_part))
+    if alloc.can_alloc_cols(cols):
+        got = alloc.alloc_cols(cols)
+        for c, gid in zip(cols, got):
+            assert alloc.part_of(gid) == c // cols_per_part
+        for gid in got:
+            alloc.decref(gid)
+    # exhaust partition 0, then ask for more than it has: nothing sticks
+    free0 = int(alloc.free_counts()[0])
+    with pytest.raises(OutOfBlocks):
+        alloc.alloc_cols([0] * (free0 + 1))
+    assert int(alloc.free_counts()[0]) == free0     # rollback complete
+    alloc.check()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 16), st.integers(2, 5))
+def test_cow_never_touches_the_shared_page(per_part, sharers):
+    """Copy-on-write: a writer holding a shared page gets a FRESH page
+    (same partition), the shared page keeps its other references, and an
+    exclusively-held page is returned as-is (no copy)."""
+    alloc = BlockAllocator(per_part)
+    gid = alloc.alloc_cols([0])[0]
+    for _ in range(sharers - 1):
+        alloc.incref(gid)
+    new = alloc.cow(gid)
+    assert new != gid                       # shared -> private clone
+    assert alloc.part_of(new) == alloc.part_of(gid)
+    assert alloc.refcount(gid) == sharers - 1   # writer's ref moved off
+    assert alloc.refcount(new) == 1
+    alloc.check()
+    # exclusive page: write in place
+    assert alloc.cow(new) == new
+    assert alloc.refcount(new) == 1
+
+
+def test_reset_returns_every_page():
+    """A full-reservation slot release (decref of its whole table) puts
+    every non-shared page back on the free list."""
+    alloc = BlockAllocator(16)
+    tabs = [alloc.alloc_cols(range(5)) for _ in range(3)]
+    assert alloc.n_free() == 15 - 15
+    for tab in tabs:
+        for gid in tab:
+            alloc.decref(gid)
+    assert alloc.n_free() == 15 and alloc.n_used() == 0
+    alloc.check()
+
+
+# ------------------------------------------------------------- prefix cache
+
+def _prompt(rng, n):
+    return rng.integers(0, 997, (n,), dtype=np.int32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+def test_prefix_cache_probe_attach_insert(page, seed):
+    """insert -> probe/attach round-trip: a prompt re-seen after caching
+    attaches to exactly its full pages, each attach incref'ing the page;
+    a diverging prompt attaches only through the common full-page prefix."""
+    rng = np.random.default_rng(seed)
+    alloc = BlockAllocator(64)
+    cache = PrefixCache(alloc, page)
+    prompt = _prompt(rng, page * 3 + page // 2)     # 3 full pages + tail
+    gids = alloc.alloc_cols(range(4))
+    for i in range(3):
+        assert cache.insert(prompt, i, gids[i])
+    assert cache.probe(prompt) == 3
+    got = cache.attach(prompt)
+    assert got == gids[:3]
+    for g in got:
+        assert alloc.refcount(g) == 3   # slot + cache + attacher
+    # divergence inside page 1: only page 0 is shared
+    fork = prompt.copy()
+    fork[page + 1] = (fork[page + 1] + 1) % 997
+    assert cache.probe(fork) == 1
+    assert cache.attach(fork) == gids[:1]
+    # re-inserting an already-cached position takes no extra reference
+    before = alloc.refcount(gids[0])
+    assert not cache.insert(prompt, 0, gids[0])
+    assert alloc.refcount(gids[0]) == before
+    alloc.check()
+
+
+def test_prefix_cache_eviction_is_lru_leaf_first():
+    """Pressure evicts least-recently-used LEAF entries (chain tails), so
+    interior pages never orphan their descendants; live-slot pages lose
+    only the cache's reference and stay allocated."""
+    page = 4
+    alloc = BlockAllocator(8)          # 7 allocatable
+    cache = PrefixCache(alloc, page)
+    rng = np.random.default_rng(0)
+    a = _prompt(rng, page * 2)         # chain A: 2 pages
+    b = _prompt(rng, page * 2)         # chain B: 2 pages
+    ga = alloc.alloc_cols(range(2))
+    gb = alloc.alloc_cols(range(2))
+    for i in range(2):
+        cache.insert(a, i, ga[i])
+        cache.insert(b, i, gb[i])
+    cache.attach(a)                    # A is hot; also: a live slot holds A
+    for g in ga + gb:
+        alloc.decref(g)                # admitting slots released
+    assert alloc.n_free() == 3
+    # demand 4 fresh pages: eviction is lazy (one page at a time) and must
+    # pick the cold chain B's TAIL first — never A (hot) and never an
+    # interior page before its descendant.
+    got = alloc.alloc_cols(range(4))
+    assert len(got) == 4
+    assert cache.evictions == 1 and cache.probe(b) == 1
+    # one more: B's root goes next (now a leaf)
+    got += alloc.alloc_cols([0])
+    assert cache.probe(b) == 0 and cache.probe(a) == 2
+    # pool exhausted and only live-slot pages remain cached: the cache
+    # gives up its references (A's entries go tail-first) but the pages
+    # stay allocated — live state is NEVER evicted, allocation fails.
+    with pytest.raises(OutOfBlocks):
+        alloc.alloc_cols([0])
+    assert all(alloc.refcount(g) == 1 for g in ga)   # attach refs survive
+    for g in got + ga:
+        alloc.decref(g)
+    alloc.check()
+    assert alloc.n_free() == 7
+
+
+def test_prefix_cache_drop_all_releases_everything():
+    page = 4
+    alloc = BlockAllocator(16)
+    cache = PrefixCache(alloc, page)
+    rng = np.random.default_rng(1)
+    p = _prompt(rng, page * 4)
+    gids = alloc.alloc_cols(range(4))
+    for i in range(4):
+        cache.insert(p, i, gids[i])
+    for g in gids:
+        alloc.decref(g)                # slot gone; cache holds the chain
+    assert alloc.n_used() == 4
+    cache.drop_all()
+    assert alloc.n_used() == 0 and alloc.n_free() == 15
+    alloc.check()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_prefix_cache_random_trace_invariants(seed):
+    """Random interleaving of insert/attach/evict/release keeps the
+    allocator consistent and the cache's chains walkable (probe never
+    sees a gap: if page i hits, pages 0..i-1 hit too)."""
+    rng = np.random.default_rng(seed)
+    page = 4
+    alloc = BlockAllocator(24)
+    cache = PrefixCache(alloc, page)
+    prompts = [_prompt(rng, page * int(rng.integers(1, 4))) for _ in range(4)]
+    held = []
+    for _ in range(40):
+        op = rng.integers(0, 3)
+        p = prompts[int(rng.integers(len(prompts)))]
+        n_full = len(p) // page
+        if op == 0:                    # admit: attach hits, alloc the rest
+            h = cache.probe(p)
+            try:
+                fresh = alloc.alloc_cols(range(h, n_full))
+            except OutOfBlocks:
+                continue
+            gids = cache.attach(p, max_pages=h) + fresh
+            for i in range(h, n_full):
+                cache.insert(p, i, gids[i])
+            held.append(gids)
+        elif op == 1 and held:         # finish: release a random slot
+            for g in held.pop(int(rng.integers(len(held)))):
+                alloc.decref(g)
+        else:                          # chain walkability under any state
+            hits = [h in cache._entries for h in cache.chain(p)]
+            assert hits == sorted(hits, reverse=True), "gap in cached chain"
+        alloc.check()
+    for gids in held:
+        for g in gids:
+            alloc.decref(g)
+    cache.drop_all()
+    assert alloc.n_used() == 0

@@ -1,0 +1,305 @@
+"""Paged-KV serving tests (ISSUE 6 tentpole).
+
+The contract: a server whose KV lives in fixed-size pool pages behind
+per-slot block tables — with a refcounted allocator and a shared-prefix
+page cache on top — must emit exactly the greedy tokens of contiguous
+per-slot serving, under every exp backend, both cache layouts, sliding
+windows, the hybrid family, and the sequence-sharded decode path. The
+paged pallas sweep itself is checked against its gather-then-reduce
+oracle, and the prefix cache must amortize (hot attach) without ever
+changing tokens — including mid-decode admission into a hot prefix and
+eviction under pool pressure."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import api
+from repro.launch.serve import Server, Request
+from repro.runtime import resolve_policy
+
+EXP_BACKENDS = ("exact", "vexp", "vexp_hw")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("gpt2-small").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, lens, seed=0, prefix=None):
+    rng = np.random.default_rng(seed)
+    out = []
+    for n in lens:
+        p = rng.integers(0, cfg.vocab, (n,), dtype=np.int32)
+        if prefix is not None:
+            p[:len(prefix)] = prefix
+        out.append(p)
+    return out
+
+
+def _serve(cfg, params, prompts, *, paged, max_new=5, max_batch=2,
+           max_seq=64, policy=None, **kw):
+    srv = Server(cfg, params, max_batch=max_batch, max_seq=max_seq,
+                 policy=policy, paged=paged, **kw)
+    reqs = [Request(i, p.copy(), max_new) for i, p in enumerate(prompts)]
+    srv.run(reqs)
+    return {r.rid: r.out for r in reqs}, srv
+
+
+# --------------------------------------------------------- kernel vs oracle
+
+class TestPagedKernelOracle:
+    @pytest.mark.parametrize("layout", ["bshd", "bhsd"])
+    def test_paged_sweep_matches_gather_oracle(self, layout):
+        """The pallas paged sweep (block tables drive the page DMA via
+        scalar prefetch) == gather-to-contiguous + core reduction, with
+        ragged per-row lengths and a shuffled, alias-free table."""
+        from repro.kernels.decode_attention.ops import (
+            decode_attention_paged, paged_gather)
+        from repro.core.attention import decode_attention
+        b, h, hkv, d, page, ns = 3, 8, 4, 32, 16, 4
+        n_pages = 1 + b * ns
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+        shape = ((n_pages, hkv, page, d) if layout == "bhsd"
+                 else (n_pages, page, hkv, d))
+        kp = jax.random.normal(ks[1], shape, jnp.float32)
+        vp = jax.random.normal(ks[2], shape, jnp.float32)
+        rng = np.random.default_rng(0)
+        tab = rng.permutation(np.arange(1, n_pages))[:b * ns]
+        tab = jnp.asarray(tab.reshape(b, ns), jnp.int32)
+        clen = jnp.array([1, page * 2 + 3, page * ns], jnp.int32)
+        got = decode_attention_paged(q, kp, vp, tab, clen, layout=layout,
+                                     interpret=True)
+        ref = decode_attention(q, paged_gather(kp, tab, layout),
+                               paged_gather(vp, tab, layout), clen,
+                               layout=layout)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-3)
+
+
+# -------------------------------------------------------- serving identity
+
+class TestPagedIdentity:
+    @pytest.mark.parametrize("exp", EXP_BACKENDS)
+    def test_paged_matches_contiguous(self, cfg, params, exp):
+        """Paged serving (slot churn, ragged lengths, 2-slot pool over 4
+        requests) is token-identical to contiguous serving under every
+        exp backend."""
+        pol = resolve_policy(cfg, env={}, exp_backend=exp)
+        prompts = _prompts(cfg, (5, 11, 7, 20))
+        ref, _ = _serve(cfg, params, prompts, paged=False, policy=pol)
+        got, srv = _serve(cfg, params, prompts, paged=True, policy=pol,
+                          block_page=8)
+        assert ref == got
+        # drained: only the prefix cache's own references remain resident
+        pool = srv.stats()["default"]["pool"]
+        assert pool["pages_used"] == pool["prefix"]["pages"]
+
+    def test_paged_matches_contiguous_bhsd(self, cfg, params):
+        """Head-major (bhsd) pool layout: same identity."""
+        from dataclasses import replace
+        c = replace(cfg, kv_cache_layout="bhsd")
+        prompts = _prompts(c, (5, 11, 7))
+        ref, _ = _serve(c, params, prompts, paged=False)
+        got, _ = _serve(c, params, prompts, paged=True, block_page=8)
+        assert ref == got
+
+    def test_paged_matches_contiguous_pallas(self, cfg, params):
+        """The pallas-backend route (paged flash sweep inside the jitted
+        decode step) agrees with pallas contiguous serving."""
+        pol = resolve_policy(cfg, env={}, kernel_backend="pallas")
+        prompts = _prompts(cfg, (5, 11, 7))
+        ref, _ = _serve(cfg, params, prompts, paged=False, policy=pol)
+        got, _ = _serve(cfg, params, prompts, paged=True, policy=pol,
+                        block_page=8)
+        assert ref == got
+
+    def test_windowed_ring_paged(self, params):
+        """Sliding-window archs page the ring buffer (fixed table, wrap
+        by write column): identical tokens, including post-wrap decode."""
+        c = get_config("h2o-danube3-4b").reduced()   # window = 16
+        p = api.init_params(c, jax.random.PRNGKey(1))
+        prompts = _prompts(c, (3, 9, 13), seed=2)
+        ref, _ = _serve(c, p, prompts, paged=False, max_new=12, max_seq=64)
+        got, _ = _serve(c, p, prompts, paged=True, max_new=12, max_seq=64,
+                        block_page=8)
+        assert ref == got
+
+    def test_hybrid_paged(self):
+        """Hybrid family: KV periods page, recurrent rows stay per-slot."""
+        c = get_config("recurrentgemma-9b").reduced()
+        p = api.init_params(c, jax.random.PRNGKey(1))
+        prompts = _prompts(c, (3, 9, 13), seed=2)
+        ref, _ = _serve(c, p, prompts, paged=False, max_new=10, max_seq=64)
+        got, _ = _serve(c, p, prompts, paged=True, max_new=10, max_seq=64,
+                        block_page=8)
+        assert ref == got
+
+
+# ----------------------------------------------------------- prefix cache
+
+class TestSharedPrefix:
+    @pytest.mark.parametrize("exp", EXP_BACKENDS)
+    def test_hot_prefix_matches_cold_solo(self, cfg, params, exp):
+        """A request admitted onto a HOT shared prefix (its first pages
+        attach to cached pages; only the suffix is prefilled) emits
+        exactly the tokens it gets served cold and alone."""
+        pol = resolve_policy(cfg, env={}, exp_backend=exp)
+        rng = np.random.default_rng(5)
+        prefix = rng.integers(0, cfg.vocab, (16,), dtype=np.int32)
+        a, b = _prompts(cfg, (24, 30), seed=6, prefix=prefix)
+        cold, _ = _serve(cfg, params, [b], paged=True, policy=pol,
+                         block_page=4)
+        srv = Server(cfg, params, max_batch=1, max_seq=64, policy=pol,
+                     paged=True, block_page=4)
+        ra, rb = Request(0, a.copy(), 5), Request(1, b.copy(), 5)
+        srv.run([ra, rb])              # a seeds the cache, b rides it hot
+        pool = srv.stats()["default"]["pool"]
+        assert pool["prefix"]["hits"] >= 4     # 16-token prefix, page 4
+        assert rb.out == cold[0]
+
+    def test_mid_decode_admission_into_hot_prefix(self, cfg, params):
+        """Continuous batching: a slot freed mid-decode readmits a queued
+        request whose prefix is hot in the cache — tokens must match the
+        contiguous server's (which shares nothing)."""
+        rng = np.random.default_rng(9)
+        prefix = rng.integers(0, cfg.vocab, (12,), dtype=np.int32)
+        prompts = _prompts(cfg, (20, 14, 26, 18, 22), seed=7, prefix=prefix)
+        ref, _ = _serve(cfg, params, prompts, paged=False, max_batch=2,
+                        max_new=4)
+        got, srv = _serve(cfg, params, prompts, paged=True, max_batch=2,
+                          max_new=4, block_page=4)
+        assert ref == got
+        assert srv.stats()["default"]["pool"]["prefix"]["hits"] > 0
+
+    def test_eviction_under_pressure_keeps_identity(self, cfg, params):
+        """A pool too small to cache every chain forces LRU evictions
+        between waves; admission blocks until pages free up, tokens never
+        change, and live state survives (only cache refs are evicted)."""
+        prompts = _prompts(cfg, (30, 28, 26, 31, 29), seed=8)
+        ref, _ = _serve(cfg, params, prompts, paged=False, max_batch=2,
+                        max_new=4)
+        # budget: 2 slots' full reservation + 1 spare + scratch -> the
+        # published chains cannot all stay resident
+        got, srv = _serve(cfg, params, prompts, paged=True, max_batch=2,
+                          max_new=4, block_page=4, block_budget=2 * 8 + 2)
+        assert ref == got
+        pool = srv.stats()["default"]["pool"]
+        assert pool["prefix"]["evictions"] > 0
+        assert pool["pages_used"] <= pool["pages_allocatable"]
+
+    def test_prefix_cache_off_still_serves(self, cfg, params):
+        prompts = _prompts(cfg, (24, 24), seed=11)
+        ref, _ = _serve(cfg, params, prompts, paged=False)
+        got, srv = _serve(cfg, params, prompts, paged=True, block_page=4,
+                          prefix_cache=False)
+        assert ref == got
+        assert "prefix" not in srv.stats()["default"]["pool"]
+
+
+# ------------------------------------------------------- splittable waves
+
+class TestSplittableAdmission:
+    def test_long_prompt_does_not_inflate_wave(self, cfg, params):
+        """The wave bucket is the HEAD request's: a longer-bucket request
+        queued behind a short head closes the wave and heads the next one
+        at its own bucket — no padded co-prefill at the long bucket, no
+        overtaking (admission order stays strictly FIFO), and tokens
+        still match a run that never waved them together."""
+        prompts = _prompts(cfg, (5, 40, 6), seed=12)
+        ref, _ = _serve(cfg, params, prompts, paged=False, max_batch=1)
+        got, srv = _serve(cfg, params, prompts, paged=False, max_batch=2)
+        assert got == ref
+        assert srv.admit_log == [0, 1, 2]
+        # the long request (idx 1) must not ride the short head's wave:
+        # three requests -> three single-request admission waves (a
+        # max-width wave would have co-prefilled [0, 1] in one)
+        assert len(srv._groups["default"].admit_s) == 3
+
+    def test_admission_blocks_on_pool_budget(self, cfg, params):
+        """Paged: a wave only admits what the free+evictable page budget
+        affords; the rest queues (no OutOfBlocks mid-serve)."""
+        prompts = _prompts(cfg, (10, 10, 10, 10), seed=13)
+        # 1 reservation (8 pages) + scratch: strictly one slot at a time
+        got, srv = _serve(cfg, params, prompts, paged=True, max_batch=2,
+                          block_page=8, block_budget=9)
+        ref, _ = _serve(cfg, params, prompts, paged=False, max_batch=2)
+        assert got == ref
+        assert srv._groups["default"].peak_pages <= 8
+
+
+# --------------------------------------------------------- sharded paged
+
+def _run_sub(body: str) -> dict:
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    prelude = textwrap.dedent(f"""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["REPRO_AUTOTUNE_CACHE"] = "off"
+    import sys
+    sys.path.insert(0, {os.path.abspath(src)!r})
+    import json
+    import numpy as np
+    import jax
+    """)
+    script = prelude + textwrap.dedent(body)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-3000:]}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+class TestShardedPaged:
+    def test_sharded_paged_token_identity(self):
+        """Sequence-sharded paged serving (block tables shard with the
+        pool's page axis; per-shard free lists) == unsharded contiguous
+        serving, with shared-prefix traffic in the mix."""
+        res = _run_sub("""
+        from repro.configs import get_config
+        from repro.models import api
+        from repro.launch.serve import Server, Request
+        from repro.launch.mesh import make_host_mesh
+        from repro.runtime import resolve_policy
+        cfg = get_config("gpt2-small").reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prefix = rng.integers(0, cfg.vocab, (16,), dtype=np.int32)
+        prompts = []
+        for n in (5, 20, 24, 30):
+            p = rng.integers(0, cfg.vocab, (n,), dtype=np.int32)
+            if n >= 20:
+                p[:16] = prefix
+            prompts.append(p)
+        def serve(mesh, kv_mode, paged):
+            pol = resolve_policy(cfg, env={}, kernel_backend="pallas")
+            srv = Server(cfg, params, max_batch=2, max_seq=64, mesh=mesh,
+                         policy=pol, kv_mode=kv_mode, paged=paged,
+                         block_page=8)
+            reqs = [Request(i, p.copy(), 5) for i, p in enumerate(prompts)]
+            srv.run(reqs)
+            return {r.rid: r.out for r in reqs}, srv
+        plain, _ = serve(make_host_mesh(1, 1), "auto", False)
+        shard, srv = serve(make_host_mesh(1, 8), "seq", True)
+        pool = srv.stats()["default"]["pool"]
+        print(json.dumps({"kv_axis": srv.kv_axis,
+                          "identical": plain == shard,
+                          "hits": pool["prefix"]["hits"]}))
+        """)
+        assert res["kv_axis"] == "model", "paged engine did not shard"
+        assert res["identical"], "sharded paged tokens diverged"
+        assert res["hits"] > 0
