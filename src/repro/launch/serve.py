@@ -69,6 +69,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import api
+from repro.models.block_pool import OutOfBlocks
 from repro.models.decode_state import decode_state_for, _len_bucket  # noqa: F401  (re-export)
 from repro.runtime import ExecPolicy, resolve_policy, parse_policy_groups
 from .mesh import make_host_mesh
@@ -155,14 +156,19 @@ class _Group:
         Admission order stays strictly FIFO (no overtaking: request
         identity, not arrival luck, decides service order — and solo/
         batched token identity tests pin this). Paged groups additionally
-        close the wave at (a) a request whose fresh-page need does not
-        fit the pool's free+evictable budget (admission blocks on free
-        pages; the decode loop never does), and (b) a request colder
-        than the wave's prefix-hit depth — one shared history shape per
-        prefill program, and a colder row would drag the wave's depth
-        down, discarding the hotter rows' cache hits."""
+        close the wave at (a) a request whose fresh-page need PLUS the
+        evictable hit pages its admission pins does not fit the pool's
+        free+evictable budget (a hit on a cache-only refcount-1 page
+        consumes supply too: attach pins the page, so it must not be
+        counted both as "no fresh page needed" and as "reclaimable";
+        admission blocks on free pages — the decode loop never does),
+        and (b) a request colder than the wave's prefix-hit depth — one
+        shared history shape per prefill program, and a colder row would
+        drag the wave's depth down, discarding the hotter rows' cache
+        hits."""
         take = []
         bucket = head_h = avail = None
+        pinned = set()     # evictable hit pages already debited this wave
         while free and self.queue:
             r = self.queue[0]
             b = self.state.prefill_width(len(r.prompt))
@@ -175,9 +181,12 @@ class _Group:
                     r.prompt, cap_h=head_h)
                 if head_h is not None and h < head_h:
                     break
-                if not (need <= avail).all():
+                pin, pin_gids = self.state.admission_pin(r.prompt, h,
+                                                         pinned)
+                if not ((need + pin) <= avail).all():
                     break
-                avail = avail - need
+                avail = avail - need - pin
+                pinned.update(pin_gids)
                 if head_h is None:
                     head_h = h
             if bucket is None:
@@ -209,8 +218,22 @@ class _Group:
         # prefill through a different implementation than solo serving
         # and could flip a near-tie greedy argmax.)
         t0 = time.perf_counter()
-        first = self.state.prefill_into(slots, toks, plens, full=full,
-                                        uniform=uniform)
+        try:
+            first = self.state.prefill_into(slots, toks, plens, full=full,
+                                            uniform=uniform)
+        except OutOfBlocks:
+            # Defensive backstop: the admission gate debits fresh need AND
+            # pinned evictable supply per row, so this is unreachable by
+            # construction — but a failed allocation must never crash the
+            # server. prefill_into released every page the wave held;
+            # re-queue it in FIFO order and retry once live slots free
+            # pages. With nothing in flight no page can ever free, so
+            # retrying would spin forever — surface the error instead.
+            for _, r in reversed(take):
+                self.queue.appendleft(r)
+            if not any(q is not None for q in self.reqs):
+                raise
+            return
         jax.block_until_ready(first)
         self.admit_s.append(time.perf_counter() - t0)
         if full:

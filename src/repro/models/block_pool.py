@@ -182,7 +182,11 @@ class BlockAllocator:
         if self.refs[gid] == 1:
             return gid
         new = self._alloc_one(self.part_of(gid))
-        self.refs[gid] -= 1          # > 0 by construction: no free-list push
+        # decref, not a raw decrement: _alloc_one may have run the
+        # eviction hook, which can drop the cache's reference on ``gid``
+        # mid-call — the release here may then be the LAST reference and
+        # the page must return to the free list.
+        self.decref(gid)
         return new
 
     def check(self) -> None:
@@ -234,6 +238,22 @@ class PrefixCache:
                 break
             n += 1
         return n
+
+    def hit_gids(self, tokens: np.ndarray,
+                 max_pages: Optional[int] = None) -> List[int]:
+        """Gids of the longest cached prefix's pages (in page order,
+        capped at ``max_pages``). No references taken and no LRU stamp —
+        the read-only companion of ``attach`` for admission accounting."""
+        gids: List[int] = []
+        hashes = self.chain(tokens)
+        if max_pages is not None:
+            hashes = hashes[:max_pages]
+        for h in hashes:
+            ent = self._entries.get(h)
+            if ent is None:
+                break
+            gids.append(ent[0])
+        return gids
 
     def attach(self, tokens: np.ndarray,
                max_pages: Optional[int] = None) -> List[int]:
@@ -295,28 +315,38 @@ class PrefixCache:
 
     def _evict_for(self, part: int, n: int) -> int:
         """Allocator pressure hook: release cache references until >= ``n``
-        pages of ``part`` hit the free list (or nothing evictable is
-        left). Only *leaf* entries (no cached children) are evictable —
-        an interior page must outlive its descendants so chains stay
-        walkable; evicting LRU leaves peels chains from the tail."""
+        pages of ``part`` hit the free list (or nothing that can relieve
+        ``part`` is left). Only *leaf* entries (no cached children) are
+        evictable — an interior page must outlive its descendants so
+        chains stay walkable; evicting LRU leaves peels chains from the
+        tail. On a partitioned pool a chain's page for column ``c`` lives
+        in partition ``part_of_col(c)``, so exposing a page of ``part``
+        may require peeling deeper leaves in LATER partitions first —
+        but a chain that never reaches ``part`` cannot relieve it, and
+        its leaves are left alone (draining them would strip the whole
+        cache without freeing a single page where it is needed)."""
         freed = 0
         while freed < n:
             leaves = [h for h in self._entries if h not in self._children]
-            if not leaves:
-                break
-            # LRU leaf whose page lives in the starved partition first;
-            # fall back to any LRU leaf (frees future pressure elsewhere).
             in_part = [h for h in leaves
                        if self.alloc.part_of(self._entries[h][0]) == part]
-            pick = min(in_part or leaves, key=lambda h: self._last_use[h])
+            if not in_part:
+                # fall back only to leaves whose chain passes through the
+                # starved partition (chains start at column 0, so a leaf
+                # deeper than ``part``'s column range has cached ancestors
+                # inside it): peeling such a leaf exposes an ancestor
+                # strictly closer to — eventually inside — ``part``.
+                in_part = [h for h in leaves
+                           if self.alloc.part_of_col(self._entries[h][1])
+                           > part]
+                if not in_part:
+                    break
+            pick = min(in_part, key=lambda h: self._last_use[h])
             gid = self._entries[pick][0]
             was = self.alloc.refcount(gid)
-            right_part = self.alloc.part_of(gid) == part
             self._evict_one(pick)
-            if was == 1 and right_part:
+            if was == 1 and self.alloc.part_of(gid) == part:
                 freed += 1
-            if not in_part and freed == 0 and len(self._entries) == 0:
-                break
         return freed
 
     # ------------------------------------------------------------ teardown

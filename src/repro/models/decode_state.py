@@ -729,6 +729,27 @@ class PagedKVDecodeState(KVDecodeState):
                     else self.ns // self.alloc.n_partitions)
         return bool((self.free_with_evictable() >= n_slots * per_part).all())
 
+    def admission_pin(self, prompt, h, reserved):
+        """Evictable supply this request's admission will consume beyond
+        its fresh-page need: per-partition counts (and gids) of its first
+        ``h`` hit pages that are cache-only (refcount 1) and not already
+        in ``reserved`` (pages pinned earlier in the same wave).
+        ``free_with_evictable`` counts those pages as reclaimable while
+        ``admission_need`` counts them as hits needing no fresh page —
+        but attach raises their refcount, so the admission gate must
+        debit them or it double-counts the supply and a later row's
+        allocation can run out of pages mid-prefill."""
+        pin = np.zeros(self.alloc.n_partitions, np.int64)
+        gids = []
+        if self.pcache is None or not h:
+            return pin, gids
+        p = np.asarray(prompt).reshape(-1)
+        for gid in self.pcache.hit_gids(p, max_pages=h):
+            if gid not in reserved and self.alloc.refcount(gid) == 1:
+                pin[self.alloc.part_of(gid)] += 1
+                gids.append(gid)
+        return pin, gids
+
     def pool_stats(self) -> dict:
         s = {"page": self.page, "pages_total": self.n_pages,
              "pages_allocatable": self.n_pages - self.alloc.n_partitions,
@@ -760,20 +781,44 @@ class PagedKVDecodeState(KVDecodeState):
                 # real position to emit the first logits from)
                 n_hit = min(n_hit, (int(plens_np[j]) - 1) // page)
                 h_pages = min(h_pages, n_hit)
+
+        # ---- attach the shared prefix FIRST, for every row, before any
+        # fresh-page allocation: attach pins the hit pages (refcount++),
+        # so an eviction triggered by a later row's alloc_cols can no
+        # longer free a chain another row probed. If a probed page
+        # vanished anyway (evicted in the probe->attach window), degrade
+        # the wave to the depth every row actually holds — never crash.
+        held_pref = {j: [] for j in slots}
+        if h_pages:
+            for j in slots:
+                held_pref[j] = self.pcache.attach(toks_np[j, :plens_np[j]],
+                                                  max_pages=h_pages)
+            got = min(len(held_pref[j]) for j in slots)
+            if got < h_pages:
+                for j in slots:
+                    for gid in held_pref[j][got:]:
+                        self.alloc.decref(int(gid))
+                    held_pref[j] = held_pref[j][:got]
+                h_pages = got
         h = h_pages * page
 
-        # ---- allocate: attach the shared prefix, reserve the rest of
-        # each slot's table up front (full reservation)
+        # ---- reserve the rest of each slot's table up front (full
+        # reservation). All-or-nothing for the whole wave: on OutOfBlocks
+        # every page the wave holds (attached and fresh) is released, so
+        # the engine can re-queue the wave with no pages leaked.
+        from .block_pool import OutOfBlocks
         new_tab = {}
+        try:
+            for j in slots:
+                new_tab[j] = held_pref[j] + self.alloc.alloc_cols(
+                    range(h_pages, ns))
+        except OutOfBlocks:
+            for j in slots:
+                for gid in new_tab.get(j, held_pref[j]):
+                    self.alloc.decref(int(gid))
+            raise
         for j in slots:
-            held = []
-            if h_pages:
-                held = self.pcache.attach(toks_np[j, :plens_np[j]],
-                                          max_pages=h_pages)
-                assert len(held) == h_pages
-            held = held + self.alloc.alloc_cols(range(h_pages, ns))
-            self.slot_pages[j] = held
-            new_tab[j] = held
+            self.slot_pages[j] = new_tab[j]
 
         # ---- prefill (cold: full prompts; hot: suffix against the
         # gathered history) + page scatter of the computed KV
@@ -893,6 +938,9 @@ class PagedHybridDecodeState(HybridDecodeState):
     def admission_need(self, prompt, *, cap_h=None):
         return np.array([self.ns], np.int64), 0
 
+    def admission_pin(self, prompt, h, reserved):
+        return np.zeros(1, np.int64), []    # no prefix cache: nothing pins
+
     def pages_per_slot(self) -> int:
         return self.ns
 
@@ -924,11 +972,21 @@ class PagedHybridDecodeState(HybridDecodeState):
         sl = jnp.asarray(np.asarray(slots))
         gids = np.zeros((len(slots), -(-sp // self.page)), np.int64)
         tab_rows = np.zeros((len(slots), self.ns), np.int32)
-        for i, j in enumerate(slots):
-            held = self.alloc.alloc_cols(range(self.ns))
-            self.slot_pages[j] = held
-            tab_rows[i] = held
-            gids[i] = held[:gids.shape[1]]
+        # all-or-nothing for the wave: a mid-wave OutOfBlocks releases the
+        # earlier rows' rings so the engine can re-queue without a leak
+        from .block_pool import OutOfBlocks
+        try:
+            for i, j in enumerate(slots):
+                held = self.alloc.alloc_cols(range(self.ns))
+                self.slot_pages[j] = held
+                tab_rows[i] = held
+                gids[i] = held[:gids.shape[1]]
+        except OutOfBlocks:
+            for j in slots:
+                for gid in self.slot_pages[j]:
+                    self.alloc.decref(int(gid))
+                self.slot_pages[j] = []
+            raise
         self.tables = self.tables.at[sl].set(jnp.asarray(tab_rows))
 
         def place(pool, leaf, ax):

@@ -111,6 +111,35 @@ def test_cow_never_touches_the_shared_page(per_part, sharers):
     assert alloc.refcount(new) == 1
 
 
+def test_cow_under_eviction_pressure_frees_last_ref():
+    """cow on an exhausted pool: _alloc_one's eviction hook can drop the
+    cache's reference on the very page being cloned, making the writer's
+    release the LAST reference — the page must hit the free list, not
+    leak with refcount 0."""
+    page = 4
+    alloc = BlockAllocator(3)              # 2 allocatable
+    cache = PrefixCache(alloc, page)
+    rng = np.random.default_rng(2)
+    g = _prompt(rng, page)                 # chain G: 1 page
+    x = _prompt(rng, page)                 # chain X: 1 page
+    gid_g = alloc.alloc_cols([0])[0]       # the writer's page...
+    cache.insert(g, 0, gid_g)              # ...also cached: refcount 2
+    gid_x = alloc.alloc_cols([0])[0]
+    cache.insert(x, 0, gid_x)
+    alloc.decref(gid_x)                    # X cache-only, NEWER than G
+    # pool exhausted; the writer clones its shared page. Eviction walks
+    # LRU order: G's entry goes first (drops the cache ref, frees
+    # nothing), then X (frees the page the clone takes). The writer's
+    # release of gid_g is now the last reference.
+    new = alloc.cow(gid_g)
+    assert new == gid_x                    # clone landed on X's freed page
+    alloc.check()                          # raw decrement leaked gid_g here
+    assert alloc.refcount(gid_g) == 0
+    alloc.decref(new)
+    alloc.check()
+    assert alloc.n_free() == 2 and alloc.n_used() == 0
+
+
 def test_reset_returns_every_page():
     """A full-reservation slot release (decref of its whole table) puts
     every non-shared page back on the free list."""
@@ -198,6 +227,54 @@ def test_prefix_cache_eviction_is_lru_leaf_first():
         alloc.decref(g)
     alloc.check()
     assert alloc.n_free() == 7
+
+
+def test_starved_partition_spares_unrelated_chains():
+    """Eviction for a starved partition must not drain chains that never
+    reach it: a chain confined to partition 0's columns cannot relieve
+    partition 1, so exhausting partition 1 fails WITHOUT stripping the
+    partition-0 chain from the cache."""
+    page = 4
+    alloc = BlockAllocator(8, n_partitions=2, cols_per_part=3)
+    cache = PrefixCache(alloc, page)
+    rng = np.random.default_rng(3)
+    p = _prompt(rng, page * 2)             # 2 pages: columns 0-1, part 0
+    gids = alloc.alloc_cols([0, 1])
+    for i in range(2):
+        cache.insert(p, i, gids[i])
+    for g in gids:
+        alloc.decref(g)                    # cache-only chain in partition 0
+    held = alloc.alloc_cols([3, 4, 5])     # exhaust partition 1
+    with pytest.raises(OutOfBlocks):
+        alloc.alloc_cols([3])
+    assert cache.probe(p) == 2, "unrelated chain was drained"
+    for g in held:
+        alloc.decref(g)
+    cache.drop_all()
+    alloc.check()
+
+
+def test_cross_partition_peel_reaches_starved_partition():
+    """The converse: a chain that spans partitions IS peeled from its
+    deepest (later-partition) leaf down, until a page of the starved
+    partition frees — cross-partition eviction bounded to chains that
+    actually pass through the shortage."""
+    page = 4
+    alloc = BlockAllocator(8, n_partitions=2, cols_per_part=3)
+    cache = PrefixCache(alloc, page)
+    rng = np.random.default_rng(4)
+    p = _prompt(rng, page * 4)             # 4 pages: columns 0-3, parts 0+1
+    gids = alloc.alloc_cols([0, 1, 2, 3])
+    for i in range(4):
+        cache.insert(p, i, gids[i])
+    for g in gids:
+        alloc.decref(g)                    # partition 0 fully cached
+    got = alloc.alloc_cols([0])            # starve partition 0
+    assert alloc.part_of(got[0]) == 0
+    assert cache.probe(p) == 2             # tail peeled through part 1
+    alloc.decref(got[0])
+    cache.drop_all()
+    alloc.check()
 
 
 def test_prefix_cache_drop_all_releases_everything():

@@ -202,6 +202,99 @@ class TestSharedPrefix:
         assert pool["prefix"]["evictions"] > 0
         assert pool["pages_used"] <= pool["pages_allocatable"]
 
+    def test_hot_wave_does_not_double_count_evictable(self, cfg, params):
+        """A wave of requests hitting the same cache-only (refcount-1)
+        prefix must not count those pages BOTH as prefix hits (no fresh
+        page needed) and as evictable supply: attach pins them, so the
+        old gate admitted waves the pool cannot hold and alloc raised
+        OutOfBlocks mid-prefill. The gate now debits pinned pages, the
+        wave splits, and tokens stay identical to contiguous serving."""
+        rng = np.random.default_rng(21)
+        prefix = rng.integers(0, cfg.vocab, (8,), dtype=np.int32)
+        prompts = _prompts(cfg, (10, 10, 10), seed=22, prefix=prefix)
+
+        def serve(paged, **kw):
+            srv = Server(cfg, params, max_batch=2, max_seq=64, paged=paged,
+                         **kw)
+            reqs = [Request(i, p.copy(), 4) for i, p in enumerate(prompts)]
+            srv.run([reqs[0]])         # seeds the prefix page (refcount 1)
+            srv.run(reqs[1:])          # B+C both hit it in one wave
+            return {r.rid: r.out for r in reqs}, srv
+
+        ref, _ = serve(False)
+        # budget: free(13) + evictable(1) + scratch(1). The buggy gate
+        # admits B and C together (2*7 fresh <= 13+1), attach pins the
+        # hit page, and C's 7-page alloc finds only 6 free -> crash.
+        got, srv = serve(True, block_page=8, block_budget=15)
+        assert got == ref
+        assert srv.stats()["default"]["pool"]["prefix"]["hits"] >= 2
+        assert srv.admit_log == [0, 1, 2]
+
+    def test_short_attach_degrades_wave_depth(self, cfg, params,
+                                              monkeypatch):
+        """If a probed chain page vanishes before attach can pin it (the
+        probe->attach window), the wave degrades to the depth every row
+        actually holds — surplus attach refs released, no assert, tokens
+        identical to contiguous serving."""
+        rng = np.random.default_rng(31)
+        prefix = rng.integers(0, cfg.vocab, (16,), dtype=np.int32)
+        prompts = _prompts(cfg, (20, 20, 20), seed=32, prefix=prefix)
+
+        def reqs():
+            return [Request(i, p.copy(), 4) for i, p in enumerate(prompts)]
+
+        srv_ref = Server(cfg, params, max_batch=2, max_seq=64)
+        rr = reqs()
+        srv_ref.run([rr[0]])
+        srv_ref.run(rr[1:])
+        ref = {r.rid: r.out for r in rr}
+
+        srv = Server(cfg, params, max_batch=2, max_seq=64, paged=True,
+                     block_page=8)
+        state = srv._groups["default"].state
+        rp = reqs()
+        srv.run([rp[0]])               # seed: 2 full prefix pages cached
+        orig, calls = state.pcache.attach, {"n": 0}
+
+        def short_attach(tokens, max_pages=None):
+            got = orig(tokens, max_pages=max_pages)
+            calls["n"] += 1
+            if calls["n"] == 2 and len(got) > 1:   # 2nd row comes up short
+                state.alloc.decref(got[-1])
+                got = got[:-1]
+            return got
+
+        monkeypatch.setattr(state.pcache, "attach", short_attach)
+        srv.run(rp[1:])                # B attaches 2 pages, C only 1
+        assert calls["n"] == 2
+        assert {r.rid: r.out for r in rp} == ref
+
+    def test_prefill_outofblocks_requeues_wave(self, cfg, params,
+                                               monkeypatch):
+        """Backstop: an OutOfBlocks escaping prefill must not crash the
+        engine while other requests are in flight — the wave re-queues
+        (FIFO preserved) and admits once pages free up."""
+        from repro.models.block_pool import OutOfBlocks
+        prompts = _prompts(cfg, (10, 20), seed=23)   # distinct buckets
+        ref, _ = _serve(cfg, params, prompts, paged=False, max_new=6)
+        srv = Server(cfg, params, max_batch=2, max_seq=64, paged=True,
+                     block_page=8)
+        g = srv._groups["default"]
+        orig, calls = g.state.prefill_into, {"n": 0}
+
+        def flaky(*a, **kw):
+            calls["n"] += 1
+            if calls["n"] == 2:        # the 2nd wave's first attempt
+                raise OutOfBlocks("injected")
+            return orig(*a, **kw)
+
+        monkeypatch.setattr(g.state, "prefill_into", flaky)
+        reqs = [Request(i, p.copy(), 6) for i, p in enumerate(prompts)]
+        srv.run(reqs)
+        assert calls["n"] >= 3         # failed attempt retried
+        assert {r.rid: r.out for r in reqs} == ref
+        assert srv.admit_log == [0, 1]
+
     def test_prefix_cache_off_still_serves(self, cfg, params):
         prompts = _prompts(cfg, (24, 24), seed=11)
         ref, _ = _serve(cfg, params, prompts, paged=False)
