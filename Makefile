@@ -4,14 +4,26 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: ci test bench sweep serve-smoke serve-smoke-recurrent \
-	serve-smoke-paged spmd-test spmd-serve-smoke spmd-serve-smoke-paged
+.PHONY: ci test analyze analysis-test bench sweep serve-smoke \
+	serve-smoke-recurrent serve-smoke-paged spmd-test spmd-serve-smoke \
+	spmd-serve-smoke-paged
 
 ci:
 	$(PY) -m pytest -x -q
 
 test:
 	$(PY) -m pytest -q
+
+# Hot-path contract lint (repro.analysis Layer 1): AST rules over
+# src/repro diffed against the justified baseline. Stdlib-only — needs
+# no JAX, so CI runs it as its own fast job. Fails on any NEW finding.
+analyze:
+	$(PY) -m repro.analysis src/repro
+
+# Both analyzer layers' own tests (AST rules on the planted fixtures +
+# jaxpr/lowering audits of the real decode programs).
+analysis-test:
+	$(PY) -m pytest -q -m analysis
 
 # SPMD decode tests on 8 fake host devices: the sequence-parallel
 # (shard_map partial-softmax merge) decode paths and the multi-pod

@@ -27,3 +27,6 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: multi-device subprocess tests (deselect with "
         "-m 'not slow' for a quick pass)")
+    config.addinivalue_line(
+        "markers", "analysis: repro.analysis contract checks (AST lint "
+        "layer + jaxpr program audits; select with -m analysis)")

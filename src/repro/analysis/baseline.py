@@ -1,0 +1,186 @@
+"""Baseline suppression file: load/match/write ``baseline.toml``.
+
+Every entry suppresses exactly one finding key — ``(rule, path, symbol,
+detail)``, line-insensitive — and MUST carry a non-placeholder ``reason``
+string. An entry without a justification, or one covering a symbol the
+registry marks step-strict (per-decode-step code has no acceptable host
+work), is a *config error*: the CLI exits 2 without running to green.
+
+Python 3.10 has no ``tomllib``, and the repo takes no third-party deps,
+so this module carries a parser for the TOML subset the file actually
+uses: comments, ``key = "string"`` / ``key = <int>`` pairs, and
+``[[suppress]]`` array-of-table headers. ``tomllib`` is preferred when
+the interpreter has it (3.11+), keeping the file honest TOML.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import os
+import re
+from dataclasses import dataclass, field
+
+from . import registry
+from .findings import RunResult
+from .rules import canon_path
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.toml")
+
+_PLACEHOLDER = re.compile(r"^\s*(TODO|FIXME|XXX)\b", re.IGNORECASE)
+
+_KEYS = ("rule", "path", "symbol", "detail", "reason")
+
+
+class BaselineError(ValueError):
+    """Malformed baseline file or illegal suppression (exit code 2)."""
+
+
+@dataclass
+class Baseline:
+    path: str
+    entries: list = field(default_factory=list)   # list[dict]
+
+    def split(self, findings) -> RunResult:
+        """Diff findings against the baseline.
+
+        Returns a RunResult with ``new`` (unsuppressed findings — these
+        fail the run), ``suppressed``, and ``stale`` (baseline entries
+        that matched nothing — reported so the file shrinks as debt is
+        paid, but not failing)."""
+        used = [False] * len(self.entries)
+        res = RunResult(findings=list(findings))
+        for f in findings:
+            hit = None
+            for i, e in enumerate(self.entries):
+                if self._matches(e, f):
+                    hit = i
+                    break
+            if hit is None:
+                res.new.append(f)
+            else:
+                used[hit] = True
+                res.suppressed.append(f)
+        res.stale = [e for e, u in zip(self.entries, used) if not u]
+        return res
+
+    @staticmethod
+    def _matches(entry, finding) -> bool:
+        return (entry["rule"] == finding.rule
+                and entry["path"] == canon_path(finding.path)
+                and entry["symbol"] == finding.symbol
+                and entry["detail"] == finding.detail)
+
+
+def _parse_mini_toml(text: str, path: str) -> dict:
+    """Parse the TOML subset baseline.toml uses (see module docstring)."""
+    doc: dict = {}
+    current: dict | None = None    # table being filled (None = top level)
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line == "[[suppress]]":
+            current = {}
+            doc.setdefault("suppress", []).append(current)
+            continue
+        if line.startswith("["):
+            raise BaselineError(
+                f"{path}:{lineno}: unsupported table {line!r} (only "
+                f"[[suppress]] entries)")
+        m = re.match(r'^([A-Za-z_][\w-]*)\s*=\s*(.+?)\s*$', line)
+        if not m:
+            raise BaselineError(f"{path}:{lineno}: cannot parse {raw!r}")
+        key, val = m.group(1), m.group(2)
+        if val.startswith('"') and val.endswith('"') and len(val) >= 2:
+            parsed: object = val[1:-1]
+        elif re.fullmatch(r"-?\d+", val):
+            parsed = int(val)
+        else:
+            raise BaselineError(
+                f"{path}:{lineno}: value for {key!r} must be a quoted "
+                f"string or integer, got {val!r}")
+        (doc if current is None else current)[key] = parsed
+    return doc
+
+
+def load_baseline(path: str | None = None) -> Baseline:
+    """Load and validate ``baseline.toml``. Raises BaselineError on a
+    malformed file, a missing/placeholder justification, or an entry
+    covering step-strict code. A missing file is an empty baseline."""
+    path = path or DEFAULT_BASELINE
+    if not os.path.exists(path):
+        return Baseline(path=path)
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    try:
+        import tomllib
+        doc = tomllib.loads(text)
+    except ModuleNotFoundError:
+        doc = _parse_mini_toml(text, path)
+    except Exception as e:   # tomllib parse failure
+        raise BaselineError(f"{path}: invalid TOML: {e}") from e
+
+    entries = doc.get("suppress", [])
+    if not isinstance(entries, list):
+        raise BaselineError(f"{path}: 'suppress' must be array-of-tables")
+    for i, e in enumerate(entries):
+        where = f"{path}: [[suppress]] #{i + 1}"
+        missing = [k for k in _KEYS if not isinstance(e.get(k), str)
+                   or not e.get(k).strip()]
+        # symbol/detail may be empty strings only when explicitly given
+        for opt in ("symbol",):
+            if opt in missing and isinstance(e.get(opt), str):
+                missing.remove(opt)
+        if missing:
+            raise BaselineError(
+                f"{where}: missing or empty field(s): {', '.join(missing)}"
+                f" — every suppression needs rule/path/symbol/detail and "
+                f"a justification ('reason')")
+        if _PLACEHOLDER.match(e["reason"]):
+            raise BaselineError(
+                f"{where}: placeholder justification {e['reason']!r} — "
+                f"write the actual reason this finding is acceptable")
+        e["path"] = canon_path(e["path"])
+        for suffix, glob in registry.STEP_STRICT:
+            if e["path"].endswith(canon_path(suffix)) and \
+                    fnmatch.fnmatch(e["symbol"], glob):
+                raise BaselineError(
+                    f"{where}: {e['symbol']!r} in {e['path']} is "
+                    f"step-strict (per-decode-step code) — fix the "
+                    f"finding; suppressions are for scheduling-event "
+                    f"code only")
+    return Baseline(path=path, entries=list(entries))
+
+
+def write_baseline(path: str, findings) -> int:
+    """Write a baseline covering ``findings`` with placeholder reasons.
+
+    Deliberately NOT a way to get to green: the placeholders fail
+    validation until a human replaces each with a real justification.
+    Returns the number of entries written."""
+    seen = set()
+    lines = [
+        "# repro.analysis baseline — suppressed findings, one table per",
+        "# finding key (rule/path/symbol/detail; line-insensitive).",
+        "# Every entry MUST carry a real justification in 'reason';",
+        "# placeholder reasons (TODO/FIXME) fail validation.",
+        "",
+        "version = 1",
+    ]
+    for f in findings:
+        key = (f.rule, canon_path(f.path), f.symbol, f.detail)
+        if key in seen:
+            continue
+        seen.add(key)
+        lines += [
+            "",
+            "[[suppress]]",
+            f'rule = "{f.rule}"',
+            f'path = "{canon_path(f.path)}"',
+            f'symbol = "{f.symbol}"',
+            f'detail = "{f.detail}"',
+            'reason = "TODO: justify this suppression"',
+        ]
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write("\n".join(lines) + "\n")
+    return len(seen)

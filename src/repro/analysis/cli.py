@@ -1,0 +1,109 @@
+"""``python -m repro.analysis`` — the AST-lint layer as a CI gate.
+
+Exit codes:
+
+* **0** — no findings, or every finding is covered by a justified
+  baseline entry (stale entries are reported but don't fail);
+* **1** — at least one NEW finding (not in the baseline);
+* **2** — config error: unparseable baseline, a suppression without a
+  real justification, or a suppression covering step-strict code.
+
+Stdlib-only by design: the CI job that runs this does not install JAX.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .baseline import (DEFAULT_BASELINE, Baseline, BaselineError,
+                       load_baseline, write_baseline)
+from .findings import RunResult
+from .rules import ALL_RULES, run_rules
+
+
+def run_analysis(paths, *, baseline_path: str | None = None,
+                 use_baseline: bool = True, rules=None) -> RunResult:
+    """Library entry point (the pytest wrappers call this)."""
+    findings, _ = run_rules(paths, rules=rules)
+    base = load_baseline(baseline_path) if use_baseline else Baseline("")
+    return base.split(findings)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Hot-path contract lint over repro sources "
+                    "(AST layer; the jaxpr audit layer runs under "
+                    "pytest, see repro.analysis.jaxpr_audit).")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to analyze "
+                         "(e.g. src/repro)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline TOML (default: the package's "
+                         "baseline.toml)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: report every finding "
+                         "(exit 1 if any)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to --baseline with "
+                         "placeholder reasons (placeholders still fail "
+                         "validation until justified)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in ALL_RULES:
+            doc = (r.__doc__ or "").strip().splitlines()[0]
+            print(f"{r.name:<24} {doc}")
+        return 0
+
+    findings, n_files = run_rules(args.paths)
+
+    if args.write_baseline:
+        n = write_baseline(args.baseline, findings)
+        print(f"wrote {n} suppression(s) to {args.baseline} — fill in "
+              f"each 'reason' before this baseline will validate")
+        return 0
+
+    try:
+        base = (Baseline("") if args.no_baseline
+                else load_baseline(args.baseline))
+    except BaselineError as e:
+        print(f"repro.analysis: baseline error: {e}", file=sys.stderr)
+        return 2
+
+    res = base.split(findings)
+
+    if args.as_json:
+        print(json.dumps({
+            "files": n_files,
+            "new": [f.__dict__ | {"severity": str(f.severity)}
+                    for f in res.new],
+            "suppressed": len(res.suppressed),
+            "stale": res.stale,
+        }, indent=2, default=str))
+    else:
+        _report(res, n_files)
+    return 1 if res.failed else 0
+
+
+def _report(res: RunResult, n_files: int) -> None:
+    for f in res.new:
+        print(f.render())
+    for e in res.stale:
+        print(f"stale baseline entry (matched nothing — remove it): "
+              f"{e['rule']} {e['path']} [{e.get('symbol', '')}] "
+              f"{e['detail']}")
+    verdict = "FAIL" if res.failed else "ok"
+    print(f"repro.analysis: {verdict} — {len(res.findings)} finding(s) "
+          f"({len(res.new)} new, {len(res.suppressed)} suppressed, "
+          f"{len(res.stale)} stale) over {n_files} file(s)")
+
+
+if __name__ == "__main__":   # pragma: no cover
+    sys.exit(main())

@@ -1,0 +1,64 @@
+"""Finding/severity model shared by every analysis rule.
+
+A finding's *identity* (``Finding.key``) is deliberately line-insensitive:
+``(rule, path, symbol, detail)``. Lines shift on every edit; what the
+baseline suppresses is "this construct in this function", not "line 212".
+``detail`` is a short stable token for the flagged construct (e.g. the
+call that syncs: ``"jax.block_until_ready"``), so two different syncs in
+one function baseline independently while a pure reformat stays quiet.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+
+class Severity(enum.IntEnum):
+    """Ordered so ``max()`` over findings gives the run's worst level."""
+
+    WARN = 1     # suspicious; host-scalar false positives possible
+    ERROR = 2    # a contract violation: fix it or justify it in baseline
+
+    def __str__(self) -> str:  # pragma: no cover - trivial
+        return self.name.lower()
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str          # rule name (kebab-case, stable)
+    severity: Severity
+    path: str          # posix path as given to the runner
+    line: int          # 1-indexed source line (display only; not identity)
+    symbol: str        # enclosing qualname ("" for module level)
+    detail: str        # stable token for the construct (baseline identity)
+    message: str       # human sentence
+
+    @property
+    def key(self) -> tuple:
+        return (self.rule, self.path, self.symbol, self.detail)
+
+    def render(self) -> str:
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return (f"{self.path}:{self.line}: {self.severity} "
+                f"{self.rule}{sym}: {self.message}")
+
+
+@dataclass
+class RunResult:
+    """One analysis run: raw findings split against a baseline."""
+
+    findings: list = field(default_factory=list)   # all Finding objects
+    new: list = field(default_factory=list)        # not covered by baseline
+    suppressed: list = field(default_factory=list)
+    stale: list = field(default_factory=list)      # baseline entries unused
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.new)
+
+
+def format_findings(findings, *, header: str | None = None) -> str:
+    lines = [header] if header else []
+    lines += [f.render() for f in findings]
+    return "\n".join(lines)

@@ -1,0 +1,226 @@
+"""Layer 2: audits over *lowered programs* (imports JAX; runs in pytest).
+
+Where the AST layer reads source, this layer reads what XLA will
+actually execute. Three audits, each a report function plus an assert
+wrapper that raises a typed ``AssertionError`` subclass:
+
+* **collectives** — count and kinds of StableHLO collective ops in the
+  lowered program. The serving contract (PR-4) is a hard budget: the
+  packed sharded decode step is exactly ONE ``all_gather`` per layer,
+  and unsharded programs are collective-free.
+* **donation** — every ``donate_argnums`` buffer must actually be
+  consumed (aliased to an output) by the lowered program. XLA only
+  *warns* on an unconsumed donation at execution time; a dtype drift in
+  the carry silently turns donation off and doubles decode-state memory
+  (the PR-5 bf16 conv-state bug). Consumed donations show up as
+  ``tf.aliasing_output`` attributes on ``@main`` parameters.
+* **carry stability** — the decode carry pytree (state, positions) must
+  come out of the step with the same treedef, dtypes, shapes (and
+  shardings, when present) it went in with. Checked abstractly via
+  ``jax.eval_shape``, so no device execution is needed.
+
+All three accept either a jitted callable plus example/abstract args, an
+already-``.lower()``-ed object, or (for the text-based audits) the
+StableHLO text itself — keeping them cheap to aim at any program the
+engine builds.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp  # noqa: F401  (callers pass jnp dtypes through us)
+
+# StableHLO collective op names as they appear in lowered text. Matched
+# with a trailing delimiter so e.g. `all_gather` never counts
+# `all_gather_something`.
+COLLECTIVE_KINDS = (
+    "all_gather",
+    "all_reduce",
+    "all_to_all",
+    "collective_permute",
+    "collective_broadcast",
+    "reduce_scatter",
+)
+
+_COLLECTIVE_RE = re.compile(
+    r'"?stablehlo\.(' + "|".join(COLLECTIVE_KINDS) + r')"?[\s("]')
+
+
+class AuditError(AssertionError):
+    """Base for audit failures (AssertionError so pytest renders it)."""
+
+
+class CollectiveBudgetError(AuditError):
+    pass
+
+
+class DonationError(AuditError):
+    pass
+
+
+class CarryStabilityError(AuditError):
+    pass
+
+
+def lowered_text(target, *args, **kwargs) -> str:
+    """StableHLO text for ``target``.
+
+    ``target`` may be: the text itself (str), a ``Lowered`` object, or a
+    callable — jitted callables are ``.lower(*args)``-ed directly, plain
+    callables are wrapped in ``jax.jit`` first (fine for inspection; the
+    wrapper is never executed)."""
+    if isinstance(target, str):
+        return target
+    if hasattr(target, "as_text"):
+        return target.as_text()
+    if hasattr(target, "lower"):
+        return target.lower(*args, **kwargs).as_text()
+    return jax.jit(target).lower(*args, **kwargs).as_text()
+
+
+# ------------------------------------------------------------- collectives
+
+def collective_counts(target, *args, **kwargs) -> dict:
+    """``{kind: count}`` over every collective in the lowered program
+    (kinds with zero occurrences are omitted)."""
+    text = lowered_text(target, *args, **kwargs)
+    counts: dict = {}
+    for m in _COLLECTIVE_RE.finditer(text):
+        counts[m.group(1)] = counts.get(m.group(1), 0) + 1
+    return counts
+
+
+def assert_collective_budget(target, budget: dict, *args, **kwargs):
+    """Assert the program's collectives are EXACTLY ``budget``
+    (``{kind: count}``); kinds absent from the budget must not appear at
+    all. ``budget={}`` asserts a collective-free program."""
+    got = collective_counts(target, *args, **kwargs)
+    want = {k: v for k, v in budget.items() if v}
+    if got != want:
+        raise CollectiveBudgetError(
+            f"collective budget violated: program has {got or 'none'}, "
+            f"budget allows {want or 'none'} — the serving contract is "
+            f"a hard per-layer collective count, any drift is a perf "
+            f"regression")
+    return got
+
+
+# ---------------------------------------------------------------- donation
+
+_MAIN_SIG_RE = re.compile(r"func\.func\s+public\s+@main\((.*?)\)\s*->",
+                          re.DOTALL)
+# Two lowerings of a consumed donation: plain jit pairs the donated
+# input to its output at trace time (``tf.aliasing_output = N``);
+# shard_map programs defer the pairing to XLA and mark the param
+# ``jax.buffer_donor = true`` instead. A dropped donation (the PR-5
+# dtype drift) loses the attribute in the plain-jit case, which is
+# where the engine's unsharded programs live — the strong check.
+_ALIAS_ATTRS = ("tf.aliasing_output", "jax.buffer_donor")
+
+
+@dataclass
+class DonationReport:
+    donated_leaves: int            # array leaves in donated arg positions
+    aliased_params: int            # @main params carrying aliasing_output
+
+    @property
+    def fully_consumed(self) -> bool:
+        return self.aliased_params >= self.donated_leaves
+
+
+def donation_report(target, donate_argnums, *args, **kwargs):
+    """How many donated buffers the lowered program actually consumes.
+
+    ``target`` must be the jitted-with-donation callable (or its
+    ``Lowered``/text); ``donate_argnums`` re-states the donated arg
+    positions so the expected leaf count can be derived from ``args``.
+    When ``target`` is pre-lowered text, pass the expected leaf count
+    directly as ``donate_argnums`` (int)."""
+    if isinstance(donate_argnums, int):
+        expected = donate_argnums
+    else:
+        expected = 0
+        for i in donate_argnums:
+            expected += len(jax.tree_util.tree_leaves(args[i]))
+    text = lowered_text(target, *args, **kwargs)
+    m = _MAIN_SIG_RE.search(text)
+    aliased = sum(m.group(1).count(a) for a in _ALIAS_ATTRS) if m else 0
+    return DonationReport(donated_leaves=expected, aliased_params=aliased)
+
+
+def assert_all_donated(target, donate_argnums, *args, **kwargs):
+    rep = donation_report(target, donate_argnums, *args, **kwargs)
+    if not rep.fully_consumed:
+        raise DonationError(
+            f"donation not consumed: {rep.donated_leaves} donated "
+            f"buffer leaves but only {rep.aliased_params} aliased "
+            f"outputs in the lowered program — an unconsumed donation "
+            f"silently doubles decode-state memory (the PR-5 dtype-"
+            f"drift class)")
+    return rep
+
+
+# ---------------------------------------------------------- carry stability
+
+def _leaf_desc(leaf):
+    shape = tuple(getattr(leaf, "shape", ()))
+    dtype = getattr(leaf, "dtype", None)
+    sharding = getattr(leaf, "sharding", None)
+    return shape, dtype, sharding
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path) or "<root>"
+
+
+def carry_mismatches(carry_in, carry_out) -> list:
+    """Human-readable mismatch list between two carry pytrees. Empty
+    means the carry is stable (same treedef; every leaf keeps shape and
+    dtype; shardings compared when both sides expose one)."""
+    in_leaves, in_def = jax.tree_util.tree_flatten_with_path(carry_in)
+    out_leaves, out_def = jax.tree_util.tree_flatten_with_path(carry_out)
+    if in_def != out_def:
+        return [f"carry treedef changed across the step: "
+                f"{in_def} -> {out_def}"]
+    out = []
+    for (path, a), (_, b) in zip(in_leaves, out_leaves):
+        (sa, da, ha), (sb, db, hb) = _leaf_desc(a), _leaf_desc(b)
+        where = _path_str(path)
+        if da != db:
+            out.append(f"{where}: dtype {da} -> {db} (dtype drift "
+                       f"defeats donation — the PR-5 bug class)")
+        if sa != sb:
+            out.append(f"{where}: shape {sa} -> {sb}")
+        if ha is not None and hb is not None and ha != hb:
+            out.append(f"{where}: sharding {ha} -> {hb}")
+    return out
+
+
+def carry_report(fn, args, carry_map: dict, kwargs=None) -> list:
+    """Audit a step function's carry abstractly.
+
+    ``carry_map`` maps input arg position -> output tuple index for each
+    carried value (e.g. ``{2: 1, 3: 2}`` for
+    ``decode_fn(params, tok, cache, pos, live) -> (logits, cache,
+    pos')``). Runs under ``jax.eval_shape`` — abstract, no FLOPs, and
+    donation on the jitted ``fn`` is ignored so the same program object
+    the engine runs can be audited directly."""
+    outs = jax.eval_shape(fn, *args, **(kwargs or {}))
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    msgs = []
+    for argnum, outidx in sorted(carry_map.items()):
+        for m in carry_mismatches(args[argnum], outs[outidx]):
+            msgs.append(f"carry arg {argnum} -> out {outidx}: {m}")
+    return msgs
+
+
+def assert_carry_stable(fn, args, carry_map: dict, kwargs=None):
+    msgs = carry_report(fn, args, carry_map, kwargs=kwargs)
+    if msgs:
+        raise CarryStabilityError(
+            "decode carry is not stable across the step:\n  "
+            + "\n  ".join(msgs))

@@ -1,0 +1,145 @@
+"""Hot-path registry: which code the serving contracts bind to.
+
+Two ways into the registry, both consumed purely at the AST level (the
+analyzer never imports the analyzed modules):
+
+* the ``@hot_path`` marker decorator — zero-overhead identity, placed on
+  the per-decode-step functions and the serve-loop scheduling functions.
+  The AST rule recognizes the decorator *by name* (``hot_path`` /
+  ``registry.hot_path``), so fixture files don't need the import to be
+  analyzable;
+* ``HOT_PATH_FUNCTIONS`` — qualname globs per path suffix, for functions
+  that cannot carry a decorator (the jitted inner closures of the
+  decode-program builders).
+
+Marking discipline (enforced by tests, documented in README):
+
+* **per-decode-step code** (``DecodeState.step``, ``decode_once``, the
+  ``decode_fn`` closures, ``transformer.decode_step*``, the dispatch
+  decode adapters) must lint CLEAN — no baseline entries allowed; a
+  host sync here runs once per generated token;
+* **scheduling-event code** (``admit``, ``_finish``, ``Server.stats``)
+  is audited by the same rule; its per-event syncs are by design (PR-2/
+  PR-6 conventions) and live in ``baseline.toml`` with justifications,
+  so any NEW sync added to these functions still fails CI.
+
+This module must stay import-light (stdlib only): model modules import
+it for the marker, and the CLI runs without JAX installed.
+"""
+
+from __future__ import annotations
+
+_HOT_ATTR = "__repro_hot_path__"
+
+
+def hot_path(fn):
+    """Mark ``fn`` as serving-hot-path for ``repro.analysis``.
+
+    Identity decorator: returns ``fn`` unchanged apart from a marker
+    attribute, so decorated functions keep their source (``inspect``),
+    signature, and jit behavior. The host-sync lint rule matches the
+    decorator syntactically; the attribute exists for runtime
+    introspection and tests.
+    """
+    try:
+        setattr(fn, _HOT_ATTR, True)
+    except (AttributeError, TypeError):   # builtins/partials: marker only
+        pass
+    return fn
+
+
+def is_hot_path(fn) -> bool:
+    return bool(getattr(fn, _HOT_ATTR, False))
+
+
+# Qualname globs (fnmatch) of hot-path functions that cannot carry the
+# decorator, per path suffix: the jitted closures inside the decode/
+# prefill program builders. Host calls inside these would either break
+# tracing outright or constant-fold a host value into the compiled
+# program — both are bugs the lint catches before a test has to.
+HOT_PATH_FUNCTIONS = {
+    "repro/models/decode_state.py": (
+        "_programs.decode_fn",
+        "_programs.decode_local",
+        "_programs.prefill_fn",
+        "_programs.prefill_plain_fn",
+        "_paged_programs.decode_fn",
+        "_paged_programs.decode_local",
+        "_paged_programs.prefill_hist_fn",
+    ),
+}
+
+# Per-decode-step symbols that must stay finding-free: baseline entries
+# covering them are rejected by the CLI (a justified suppression is for
+# scheduling-event code only — the decode step itself has no acceptable
+# host work). Matched as (path suffix, qualname glob).
+STEP_STRICT = (
+    ("repro/launch/serve.py", "_Group.decode_once"),
+    ("repro/launch/serve.py", "Server.step"),
+    ("repro/models/decode_state.py", "*step"),
+    ("repro/models/decode_state.py", "_programs.*"),
+    ("repro/models/decode_state.py", "_paged_programs.*"),
+    ("repro/models/transformer.py", "decode_step*"),
+    ("repro/kernels/dispatch.py", "_decode*"),
+)
+
+# Modules holding refcounted-page bookkeeping: the refcount-pairing rule
+# (raw .refs mutation, unguarded allocation loops) applies here. The
+# ``fixtures/analysis`` entries are the analyzer's own planted-violation
+# test modules (never on the ``make analyze`` path, which scans
+# ``src/repro`` only) — registered here so the CLI reproduces each
+# finding end to end.
+ALLOC_MODULES = (
+    "repro/models/block_pool.py",
+    "repro/models/decode_state.py",
+    "fixtures/analysis/bad_refcount.py",
+    "fixtures/analysis/clean.py",
+)
+# Methods allowed to touch ``.refs`` storage directly — the refcount
+# primitives themselves plus construction/verification.
+REFS_PRIMITIVES = ("incref", "decref", "_alloc_one", "__init__", "check")
+# Call names that take a page reference (allocate or incref) — a loop
+# accumulating these needs a release-on-exception guard.
+ALLOC_CALLS = ("_alloc_one", "alloc_cols", "incref", "attach")
+# Call names that release page references (what a guard must reach).
+RELEASE_CALLS = ("decref", "_evict_one", "drop_all", "release")
+
+# Engine source contracts (promoted from test source-string greps).
+# serve.py: no family branch, no not-implemented escape hatch.
+ENGINE_CONTRACT_FILES = (
+    "repro/launch/serve.py",
+    "fixtures/analysis/bad_family_branch.py",   # planted-violation fixture
+)
+
+# Kernel-routing contracts: (path suffix, function, forbidden names in
+# any If test, required-call substring or None). ``decode_attention_policy``
+# must not branch at all on layout/window/cache_len (PR-3: no silent
+# reference fallback); core ``decode_attention``'s pallas-routing gate
+# must reach the fused kernel without testing layout or window.
+FALLBACK_CONTRACTS = (
+    {
+        "path": "repro/kernels/decode_attention/ops.py",
+        "function": "decode_attention_policy",
+        "forbid_if_names": ("layout", "window", "cache_len", "cl"),
+        "forbid_call_substrings": ("core_decode", "_decode_fallback",
+                                   "attention_xla", "attention_flash"),
+        "require_call": "decode_attention",
+    },
+    {
+        "path": "repro/core/attention.py",
+        "function": "decode_attention",
+        # only the If that routes to the kernel is constrained; the rule
+        # finds it by the required call below.
+        "forbid_if_names": ("layout", "window"),
+        "forbid_call_substrings": (),
+        "require_call": "decode_attention_policy",
+        "gate_only": True,
+    },
+    {   # planted-violation fixture (tests/fixtures/analysis)
+        "path": "fixtures/analysis/bad_fallback.py",
+        "function": "decode_attention_policy",
+        "forbid_if_names": ("layout", "window", "cache_len"),
+        "forbid_call_substrings": ("core_decode",),
+        "require_call": "decode_attention",
+    },
+)

@@ -1,0 +1,658 @@
+"""AST lint rules over ``src/repro/**`` (Layer 1 of the analyzer).
+
+Pure stdlib: the analyzed modules are never imported, so the rules run
+in a bare CI job (and on fixture files with planted violations that
+would not even import). Each rule is a class with a stable kebab-case
+``name`` and a ``check(SourceModule) -> [Finding]``; applicability is
+path-suffix based, with constructor overrides so the test suite can aim
+a rule at fixture files.
+
+The rule catalog (severities in parentheses):
+
+``host-sync-in-hot-path``
+    ``.item()``/``.tolist()``, ``jax.device_get``, ``block_until_ready``
+    (either form), ``jax.device_put``, ``np.asarray``/``np.array`` on a
+    non-literal (error); bare ``int()``/``float()``/``bool()`` on a
+    non-constant (warn — the argument may be a host scalar) — inside
+    functions marked ``@hot_path`` or registered in
+    ``registry.HOT_PATH_FUNCTIONS``. Inside jitted closures these are
+    trace-time bugs; in the engine loop they are per-token host syncs.
+
+``refcount-pairing``
+    Raw mutation of ``.refs`` storage outside the refcount primitives
+    (error — the PR-6 ``cow()`` leak: a raw decrement skipped the
+    free-list return), and allocation/incref loops with no
+    release-on-exception guard (error — a mid-loop raise strands every
+    reference already taken).
+
+``jit-retrace-hazard``
+    Mutable default argument on a jitted function (error — each call
+    with the default re-traces or, worse, silently shares state across
+    traces), and ``functools.lru_cache`` over a function whose
+    parameters flow into array ops (warn — array-keyed memoization
+    either crashes on unhashable inputs or pins device buffers alive).
+
+``engine-family-branch``
+    ``launch/serve.py`` must stay family-agnostic: any ``*.family``
+    attribute access or ``NotImplemented``/``NotImplementedError``
+    escape hatch in the engine is an error (PR-5 contract).
+
+``silent-fallback``
+    ``decode_attention_policy`` must route every configuration to the
+    fused kernel — no branch on layout/window/cache_len, no call into
+    the reference reduction (PR-3 contract); core ``decode_attention``'s
+    pallas gate must not test layout or window either.
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+import os
+from dataclasses import dataclass, field
+
+from . import registry
+from .findings import Finding, Severity
+
+
+def canon_path(path: str) -> str:
+    """Stable path identity for baselines: posix separators, stripped to
+    the ``repro/``-rooted suffix when one exists (the same file must
+    match whether the analyzer was invoked as ``src/repro``, ``.`` or an
+    absolute path)."""
+    p = path.replace(os.sep, "/")
+    marker = "/repro/"
+    i = p.find(marker)
+    if i >= 0:
+        return p[i + 1:]
+    if p.startswith("repro/"):
+        return p
+    return p.lstrip("./")
+
+
+def _dotted(node) -> str | None:
+    """'jax.numpy.asarray' for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+_LITERALS = (ast.List, ast.Tuple, ast.Dict, ast.Set, ast.ListComp,
+             ast.DictComp, ast.SetComp, ast.GeneratorExp, ast.Constant)
+
+
+@dataclass
+class SourceModule:
+    """One parsed file + the derived maps every rule needs."""
+
+    path: str
+    text: str
+    tree: ast.AST
+    parents: dict = field(default_factory=dict)
+    # function node -> dotted qualname ("Class.method", "outer.inner")
+    qualnames: dict = field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, path: str) -> "SourceModule":
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        tree = ast.parse(text, filename=path)
+        mod = cls(path=path, text=text, tree=tree)
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                mod.parents[child] = parent
+        def visit(node, stack):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    q = stack + [child.name]
+                    mod.qualnames[child] = ".".join(q)
+                    visit(child, q)
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, stack + [child.name])
+                else:
+                    visit(child, stack)
+        visit(tree, [])
+        return mod
+
+    @property
+    def canon(self) -> str:
+        return canon_path(self.path)
+
+    def functions(self):
+        """(node, qualname) for every (async) function def."""
+        return self.qualnames.items()
+
+    def enclosing_function(self, node):
+        """Qualname of the innermost function containing ``node`` ('' at
+        module level)."""
+        cur = node
+        while cur is not None:
+            if cur in self.qualnames:
+                return self.qualnames[cur]
+            cur = self.parents.get(cur)
+        return ""
+
+    def ancestors(self, node):
+        cur = self.parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self.parents.get(cur)
+
+
+def _walk_in_function(fn_node):
+    """Walk a function's own code: descends everything except nested
+    function/class defs (those are audited under their own qualname)."""
+    stack = list(ast.iter_child_nodes(fn_node))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _contains(root, node) -> bool:
+    for n in ast.walk(root):
+        if n is node:
+            return True
+    return False
+
+
+class Rule:
+    name = "rule"
+
+    def applies(self, mod: SourceModule) -> bool:
+        return True
+
+    def check(self, mod: SourceModule):
+        raise NotImplementedError      # noqa — abstract, not an escape hatch
+
+
+def _suffix_match(path: str, suffixes) -> bool:
+    c = canon_path(path)
+    return any(c.endswith(canon_path(s)) for s in suffixes)
+
+
+# --------------------------------------------------------------- host sync
+
+_SYNC_METHODS = {"item": ".item()", "tolist": ".tolist()",
+                 "block_until_ready": ".block_until_ready()"}
+_SYNC_DOTTED = {
+    "jax.block_until_ready": "device sync",
+    "jax.device_get": "device->host transfer",
+    "jax.device_put": "host->device transfer",
+}
+_NP_ROOTS = ("np", "numpy")
+_SCALARIZERS = ("int", "float", "bool")
+
+
+class HostSyncRule(Rule):
+    """Host syncs/transfers inside registered hot-path functions."""
+
+    name = "host-sync-in-hot-path"
+
+    def __init__(self, extra_functions=None):
+        # extra (path suffix -> qualname globs) on top of the registry —
+        # the fixture tests register their planted modules here.
+        self.extra_functions = dict(extra_functions or {})
+
+    def _registered_globs(self, mod):
+        globs = []
+        for table in (registry.HOT_PATH_FUNCTIONS, self.extra_functions):
+            for suffix, pats in table.items():
+                if _suffix_match(mod.path, (suffix,)):
+                    globs.extend(pats)
+        return globs
+
+    def _hot_functions(self, mod):
+        globs = self._registered_globs(mod)
+        hot = set()
+        for node, qual in mod.functions():
+            marked = any(
+                (_dotted(d) or "").split(".")[-1] == "hot_path"
+                for d in node.decorator_list)
+            if marked or any(fnmatch.fnmatch(qual, g) for g in globs):
+                hot.add(node)
+        # nested defs of a hot function are hot too (jitted closures)
+        for node, qual in mod.functions():
+            if node in hot:
+                continue
+            if any(a in hot for a in mod.ancestors(node)):
+                hot.add(node)
+        return hot
+
+    def check(self, mod):
+        out = []
+        for fn in self._hot_functions(mod):
+            qual = mod.qualnames[fn]
+            for node in _walk_in_function(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = self._classify(node)
+                if f is None:
+                    continue
+                detail, sev, msg = f
+                out.append(Finding(
+                    rule=self.name, severity=sev, path=mod.path,
+                    line=node.lineno, symbol=qual, detail=detail,
+                    message=msg))
+        return out
+
+    @staticmethod
+    def _classify(call):
+        func = call.func
+        if isinstance(func, ast.Attribute):
+            dotted = _dotted(func)
+            if dotted in _SYNC_DOTTED:
+                return (dotted, Severity.ERROR,
+                        f"{dotted}(...) is a {_SYNC_DOTTED[dotted]} — "
+                        f"hot-path steps must stay async on device")
+            root = dotted.split(".")[0] if dotted else None
+            if root in _NP_ROOTS and func.attr in ("asarray", "array"):
+                arg = call.args[0] if call.args else None
+                if arg is not None and not isinstance(arg, _LITERALS):
+                    d = f"{root}.{func.attr}"
+                    return (d, Severity.ERROR,
+                            f"{d}(...) on a non-literal materializes a "
+                            f"device value on the host (blocking sync)")
+                return None
+            if func.attr in _SYNC_METHODS and not call.args:
+                d = _SYNC_METHODS[func.attr]
+                return (d, Severity.ERROR,
+                        f"{d} blocks on the device value — one sync per "
+                        f"call in the decode hot path")
+        elif isinstance(func, ast.Name) and func.id in _SCALARIZERS:
+            if len(call.args) == 1 and not isinstance(call.args[0],
+                                                      ast.Constant):
+                return (f"{func.id}()", Severity.WARN,
+                        f"{func.id}(...) scalarizes its argument — a "
+                        f"blocking sync if it is a device array (host "
+                        f"mirrors are fine; justify in baseline)")
+        return None
+
+
+# ---------------------------------------------------------------- refcount
+
+class RefcountRule(Rule):
+    """Refcount-pairing discipline in the page-pool bookkeeping."""
+
+    name = "refcount-pairing"
+
+    def __init__(self, targets=None):
+        self.targets = tuple(targets or registry.ALLOC_MODULES)
+
+    def applies(self, mod):
+        return _suffix_match(mod.path, self.targets)
+
+    def check(self, mod):
+        if not self.applies(mod):
+            return []
+        out = []
+        for node in ast.walk(mod.tree):
+            out.extend(self._raw_refs(mod, node))
+            if isinstance(node, ast.Call):
+                out.extend(self._unguarded_alloc(mod, node))
+        return out
+
+    def _raw_refs(self, mod, node):
+        targets = []
+        if isinstance(node, ast.AugAssign):
+            targets = [node.target]
+        elif isinstance(node, ast.Assign):
+            targets = node.targets
+        hits = []
+        for t in targets:
+            refs_store = (
+                isinstance(t, ast.Subscript)
+                and isinstance(t.value, ast.Attribute)
+                and t.value.attr == "refs")
+            if not refs_store:
+                continue
+            qual = mod.enclosing_function(t)
+            if qual.split(".")[-1] in registry.REFS_PRIMITIVES:
+                continue
+            hits.append(Finding(
+                rule=self.name, severity=Severity.ERROR, path=mod.path,
+                line=t.lineno, symbol=qual, detail="refs[...]-mutation",
+                message="raw refcount mutation outside the incref/decref "
+                        "primitives — a raw decrement skips the free-list "
+                        "return (the PR-6 cow() leak class)"))
+        return hits
+
+    def _unguarded_alloc(self, mod, call):
+        name = None
+        if isinstance(call.func, ast.Attribute):
+            name = call.func.attr
+        elif isinstance(call.func, ast.Name):
+            name = call.func.id
+        if name not in registry.ALLOC_CALLS:
+            return []
+        qual = mod.enclosing_function(call)
+        if qual.split(".")[-1] in registry.REFS_PRIMITIVES + ("alloc_cols",):
+            pass  # the primitives guard internally; still checked below
+        in_loop = guarded = False
+        for anc in mod.ancestors(call):
+            if isinstance(anc, (ast.For, ast.While)):
+                in_loop = True
+            if isinstance(anc, ast.Try):
+                in_body = any(_contains(s, call) for s in anc.body)
+                if in_body and self._releases(anc):
+                    guarded = True
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break
+        if in_loop and not guarded:
+            return [Finding(
+                rule=self.name, severity=Severity.ERROR, path=mod.path,
+                line=call.lineno, symbol=qual,
+                detail=f"unguarded-{name}-loop",
+                message=f"loop accumulates references via {name}(...) "
+                        f"with no release-on-exception guard — a mid-loop "
+                        f"raise strands every page already taken")]
+        return []
+
+    @staticmethod
+    def _releases(try_node) -> bool:
+        region = [s for h in try_node.handlers for s in h.body]
+        region += try_node.finalbody
+        for stmt in region:
+            for n in ast.walk(stmt):
+                if isinstance(n, ast.Call):
+                    nm = (n.func.attr if isinstance(n.func, ast.Attribute)
+                          else n.func.id if isinstance(n.func, ast.Name)
+                          else None)
+                    if nm in registry.RELEASE_CALLS:
+                        return True
+        return False
+
+
+# ----------------------------------------------------------------- retrace
+
+class RetraceRule(Rule):
+    """jit-retrace / array-memoization hazards."""
+
+    name = "jit-retrace-hazard"
+
+    _MUTABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                ast.SetComp)
+    _ARRAY_ROOTS = ("jnp", "np", "numpy")
+
+    def check(self, mod):
+        out = []
+        jitted = self._jitted_names(mod)
+        for node, qual in mod.functions():
+            if self._is_jit_decorated(node) or node.name in jitted:
+                out.extend(self._mutable_defaults(mod, node, qual))
+            if self._is_lru_cached(node):
+                out.extend(self._lru_array_args(mod, node, qual))
+        # lambdas handed straight to jax.jit
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Call) and self._is_jit(node.func)
+                    and node.args
+                    and isinstance(node.args[0], ast.Lambda)):
+                lam = node.args[0]
+                for d in list(lam.args.defaults) + \
+                        [d for d in lam.args.kw_defaults if d is not None]:
+                    if isinstance(d, self._MUTABLE):
+                        out.append(self._mutable_finding(
+                            mod, d, mod.enclosing_function(node) or
+                            "<lambda>"))
+        return out
+
+    @staticmethod
+    def _is_jit(func_expr) -> bool:
+        d = _dotted(func_expr)
+        return d is not None and (d == "jit" or d.endswith(".jit"))
+
+    def _is_jit_decorated(self, fn) -> bool:
+        for dec in fn.decorator_list:
+            if self._is_jit(dec):
+                return True
+            if isinstance(dec, ast.Call):
+                if self._is_jit(dec.func):
+                    return True
+                d = _dotted(dec.func) or ""
+                if d.split(".")[-1] == "partial" and any(
+                        self._is_jit(a) for a in dec.args):
+                    return True
+        return False
+
+    def _jitted_names(self, mod):
+        names = set()
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Call) and self._is_jit(node.func)
+                    and node.args and isinstance(node.args[0], ast.Name)):
+                names.add(node.args[0].id)
+        return names
+
+    def _mutable_defaults(self, mod, fn, qual):
+        out = []
+        defaults = list(fn.args.defaults) + \
+            [d for d in fn.args.kw_defaults if d is not None]
+        for d in defaults:
+            if isinstance(d, self._MUTABLE):
+                out.append(self._mutable_finding(mod, d, qual))
+        return out
+
+    def _mutable_finding(self, mod, node, qual):
+        return Finding(
+            rule=self.name, severity=Severity.ERROR, path=mod.path,
+            line=node.lineno, symbol=qual, detail="mutable-default",
+            message="mutable default argument on a jitted function — "
+                    "unhashable as a static arg and shared across "
+                    "traces; every call risks a silent retrace")
+
+    @staticmethod
+    def _is_lru_cached(fn) -> bool:
+        for dec in fn.decorator_list:
+            d = _dotted(dec.func if isinstance(dec, ast.Call) else dec)
+            if d and d.split(".")[-1] == "lru_cache":
+                return True
+        return False
+
+    # containers in array-op args are shape/axis metadata (``(n,)`` in
+    # ``jnp.zeros``), not array values — skipped, as are nested calls
+    # (they own their own args) and dtype constructors on config scalars.
+    _SKIP_NODES = (ast.Call, ast.Tuple, ast.List, ast.Dict, ast.Set)
+    _METADATA_ATTRS = ("dtype",)
+
+    def _lru_array_args(self, mod, fn, qual):
+        params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)}
+        for node in _walk_in_function(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            if not d or d.split(".")[0] not in self._ARRAY_ROOTS:
+                continue
+            if d.split(".")[-1] in self._METADATA_ATTRS:
+                continue
+            stack = list(node.args) + [kw.value for kw in node.keywords]
+            while stack:
+                n = stack.pop()
+                if isinstance(n, self._SKIP_NODES):
+                    continue
+                if not (isinstance(n, ast.Name) and n.id in params):
+                    stack.extend(ast.iter_child_nodes(n))
+                    continue
+                return [Finding(
+                            rule=self.name, severity=Severity.WARN,
+                            path=mod.path, line=fn.lineno, symbol=qual,
+                            detail="lru_cache-array-arg",
+                            message=f"functools.lru_cache over {fn.name!r}"
+                                    f" whose parameter {n.id!r} flows into"
+                                    f" {d} — array-keyed memoization "
+                                    f"crashes on unhashable inputs or "
+                                    f"pins device buffers alive")]
+        return []
+
+
+# ---------------------------------------------------------- engine contract
+
+class EngineContractRule(Rule):
+    """serve.py stays family-branch-free (PR-5 acceptance, as AST)."""
+
+    name = "engine-family-branch"
+
+    def __init__(self, targets=None):
+        self.targets = tuple(targets or registry.ENGINE_CONTRACT_FILES)
+
+    def applies(self, mod):
+        return _suffix_match(mod.path, self.targets)
+
+    def check(self, mod):
+        if not self.applies(mod):
+            return []
+        out = []
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Attribute) and node.attr == "family":
+                out.append(Finding(
+                    rule=self.name, severity=Severity.ERROR,
+                    path=mod.path, line=node.lineno,
+                    symbol=mod.enclosing_function(node), detail=".family",
+                    message="family attribute access in the engine — "
+                            "every family-specific decision belongs "
+                            "behind the DecodeState protocol"))
+            if isinstance(node, ast.Name) and node.id in (
+                    "NotImplementedError", "NotImplemented"):
+                out.append(Finding(
+                    rule=self.name, severity=Severity.ERROR,
+                    path=mod.path, line=node.lineno,
+                    symbol=mod.enclosing_function(node), detail=node.id,
+                    message=f"{node.id} escape hatch in the engine — the "
+                            f"slot engine must serve every family it "
+                            f"admits"))
+        return out
+
+
+# ----------------------------------------------------------- silent fallback
+
+class FallbackContractRule(Rule):
+    """Kernel-routing functions must not silently fall back (PR-3)."""
+
+    name = "silent-fallback"
+
+    def __init__(self, contracts=None):
+        self.contracts = tuple(contracts or registry.FALLBACK_CONTRACTS)
+
+    def applies(self, mod):
+        return _suffix_match(mod.path,
+                             tuple(c["path"] for c in self.contracts))
+
+    def check(self, mod):
+        out = []
+        for spec in self.contracts:
+            if not _suffix_match(mod.path, (spec["path"],)):
+                continue
+            fn = next((node for node, q in mod.functions()
+                       if q.split(".")[-1] == spec["function"]), None)
+            if fn is None:
+                continue
+            out.extend(self._check_fn(mod, fn, spec))
+        return out
+
+    def _check_fn(self, mod, fn, spec):
+        out = []
+        qual = mod.qualnames[fn]
+        required = spec.get("require_call")
+        req_call = None
+        if required:
+            for node in _walk_in_function(fn):
+                if isinstance(node, ast.Call):
+                    d = _dotted(node.func) or ""
+                    if d.split(".")[-1].startswith(required) \
+                            or required in d:
+                        req_call = node
+                        break
+            if req_call is None:
+                out.append(Finding(
+                    rule=self.name, severity=Severity.ERROR,
+                    path=mod.path, line=fn.lineno, symbol=qual,
+                    detail=f"missing-{required}",
+                    message=f"{qual} no longer routes through "
+                            f"{required} — the fused-kernel contract "
+                            f"is gone"))
+                return out
+        if spec.get("gate_only") and req_call is not None:
+            ifs = [a for a in mod.ancestors(req_call)
+                   if isinstance(a, ast.If) and _contains(fn, a)]
+        else:
+            ifs = [n for n in _walk_in_function(fn)
+                   if isinstance(n, ast.If)]
+        forbid = set(spec.get("forbid_if_names", ()))
+        for node in ifs:
+            names = {n.id for n in ast.walk(node.test)
+                     if isinstance(n, ast.Name)}
+            for bad in sorted(names & forbid):
+                out.append(Finding(
+                    rule=self.name, severity=Severity.ERROR,
+                    path=mod.path, line=node.lineno, symbol=qual,
+                    detail=f"if-{bad}",
+                    message=f"{qual} branches on {bad!r} — a "
+                            f"configuration-gated fallback is exactly "
+                            f"the silent-reference-fallback class this "
+                            f"contract forbids"))
+        for node in _walk_in_function(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func) or (
+                node.func.attr if isinstance(node.func, ast.Attribute)
+                else "")
+            for sub in spec.get("forbid_call_substrings", ()):
+                if d and sub in d:
+                    out.append(Finding(
+                        rule=self.name, severity=Severity.ERROR,
+                        path=mod.path, line=node.lineno, symbol=qual,
+                        detail=f"call-{sub}",
+                        message=f"{qual} calls {d} — the reference "
+                                f"reduction must not be reachable from "
+                                f"the kernel entry point"))
+        return out
+
+
+# ------------------------------------------------------------------ runner
+
+ALL_RULES = (HostSyncRule(), RefcountRule(), RetraceRule(),
+             EngineContractRule(), FallbackContractRule())
+
+
+def _expand(paths):
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d != "__pycache__"
+                                 and not d.startswith("."))
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+        elif p.endswith(".py"):
+            files.append(p)
+    return files
+
+
+def run_rules(paths, rules=None):
+    """Run ``rules`` (default: the full catalog) over ``paths`` (files
+    or directories). Returns (findings, n_files)."""
+    rules = list(ALL_RULES if rules is None else rules)
+    findings = []
+    files = _expand(paths)
+    for path in files:
+        try:
+            mod = SourceModule.parse(path)
+        except SyntaxError as e:
+            findings.append(Finding(
+                rule="parse-error", severity=Severity.ERROR, path=path,
+                line=e.lineno or 0, symbol="", detail="syntax-error",
+                message=f"cannot parse: {e.msg}"))
+            continue
+        for rule in rules:
+            findings.extend(rule.check(mod))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.detail))
+    return findings, len(files)

@@ -42,6 +42,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 import jax
 
+from repro.analysis.registry import hot_path
 from repro.runtime.policy import ExecPolicy
 
 # ------------------------------------------------------------------ registry
@@ -172,6 +173,7 @@ def _attention_xla(q, k, v, *, causal=True, window=None, sm_scale=None,
                          sm_scale=sm_scale, exp_impl=policy.exp_backend)
 
 
+@hot_path
 def _decode_fallback(q, k_cache, v_cache, cache_len, *, window=None,
                      sm_scale=None, layout="bshd", policy: ExecPolicy):
     from repro.core.attention import decode_attention
@@ -180,6 +182,7 @@ def _decode_fallback(q, k_cache, v_cache, cache_len, *, window=None,
                             layout=layout)
 
 
+@hot_path
 def _decode_paged_fallback(q, k_pool, v_pool, block_tab, cache_len, *,
                            window=None, sm_scale=None, layout="bshd",
                            policy: ExecPolicy):
@@ -195,6 +198,7 @@ def _decode_paged_fallback(q, k_pool, v_pool, block_tab, cache_len, *,
                             layout=layout)
 
 
+@hot_path
 def _decode_sharded_fallback(q, k_cache, v_cache, cache_len, *, mesh=None,
                              seq_axis="model", window=None, sm_scale=None,
                              layout="bshd", policy: ExecPolicy):

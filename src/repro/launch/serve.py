@@ -67,6 +67,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.registry import hot_path
 from repro.configs import get_config
 from repro.models import api
 from repro.models.block_pool import OutOfBlocks
@@ -194,6 +195,7 @@ class _Group:
             take.append((free.pop(0), self.queue.popleft()))
         return take, bucket
 
+    @hot_path
     def admit(self, admit_log=None):
         """Fill freed slots from the queue with one ragged batched prefill."""
         free = [j for j in range(self.max_batch) if self.reqs[j] is None]
@@ -267,6 +269,7 @@ class _Group:
 
     # --------------------------------------------------------------- decode
 
+    @hot_path
     def decode_once(self):
         """One batched decode step over the live slots (no-op when idle)."""
         cap = self.state.max_len()
@@ -298,6 +301,7 @@ class _Group:
             if self.ntok[j] >= self.reqs[j].max_new:
                 self._finish(j, "max_new")
 
+    @hot_path
     def _finish(self, j, reason):
         # logical footprint and held pages grow monotonically between
         # scheduling events, so sampling the peak just before a slot
@@ -425,6 +429,7 @@ class Server:
         r.t_submit = time.perf_counter()
         self._groups[r.group].queue.append(r)
 
+    @hot_path
     def step(self) -> bool:
         """One scheduler tick: admit into freed slots, then one decode step
         per busy group. Returns True while any work remains."""
@@ -448,6 +453,7 @@ class Server:
 
     # ------------------------------------------------------------ telemetry
 
+    @hot_path
     def stats(self) -> dict:
         """Per-group decode-step count and request-latency tail (submit ->
         tokens materialized; measured at a real device sync, unlike the
@@ -458,10 +464,10 @@ class Server:
             out[name] = {
                 "decode_steps": g.decode_steps,
                 "p50_req_s": lat[len(lat) // 2] if lat else 0.0,
-                "p95_req_s": lat[min(int(len(lat) * 0.95),
+                "p95_req_s": lat[min(len(lat) * 19 // 20,
                                      len(lat) - 1)] if lat else 0.0,
                 "admit_waves": len(g.admit_s),
-                "admit_s_total": float(sum(g.admit_s)),
+                "admit_s_total": sum(g.admit_s, 0.0),
                 "policy": g.policy.describe(),
                 "kv_axis": g.kv_axis,
             }

@@ -265,14 +265,21 @@ class PrefixCache:
         hashes = self.chain(tokens)
         if max_pages is not None:
             hashes = hashes[:max_pages]
-        for h in hashes:
-            ent = self._entries.get(h)
-            if ent is None:
-                break
-            self._clock += 1
-            self._last_use[h] = self._clock
-            self.alloc.incref(ent[0])
-            gids.append(ent[0])
+        try:
+            for h in hashes:
+                ent = self._entries.get(h)
+                if ent is None:
+                    break
+                self._clock += 1
+                self._last_use[h] = self._clock
+                self.alloc.incref(ent[0])
+                gids.append(ent[0])
+        except BaseException:
+            # exception-safety: release every reference this call took
+            # (incref raises before mutating, so gids is exact)
+            for gid in gids:
+                self.alloc.decref(gid)
+            raise
         self.hits += len(gids)
         self.misses += len(hashes) - len(gids)
         self.hit_tokens += len(gids) * self.page

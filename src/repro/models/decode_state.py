@@ -43,6 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.registry import hot_path
+
 from . import api
 
 
@@ -260,6 +262,7 @@ class DecodeState:
             jnp.asarray(np.asarray(plens)[np.asarray(slots)], jnp.int32))
         return first
 
+    @hot_path
     def step(self, last, live):
         """One donated decode step over the pool; positions advance by
         ``live`` device-side. Returns the (pool_width, 1) next tokens."""
@@ -790,9 +793,17 @@ class PagedKVDecodeState(KVDecodeState):
         # the wave to the depth every row actually holds — never crash.
         held_pref = {j: [] for j in slots}
         if h_pages:
-            for j in slots:
-                held_pref[j] = self.pcache.attach(toks_np[j, :plens_np[j]],
-                                                  max_pages=h_pages)
+            try:
+                for j in slots:
+                    held_pref[j] = self.pcache.attach(
+                        toks_np[j, :plens_np[j]], max_pages=h_pages)
+            except BaseException:
+                # release every row already attached: a wave must hold
+                # all of its references or none of them
+                for gids in held_pref.values():
+                    for gid in gids:
+                        self.alloc.decref(int(gid))
+                raise
             got = min(len(held_pref[j]) for j in slots)
             if got < h_pages:
                 for j in slots:
@@ -880,6 +891,7 @@ class PagedKVDecodeState(KVDecodeState):
             jnp.asarray(plens_np[np.asarray(slots)], jnp.int32))
         return first
 
+    @hot_path
     def step(self, last, live):
         nxt, self.data, self.pos_dev = self._decode_paged(
             self.params_decode, last, self.data, self.tables, self.pos_dev,
@@ -1004,6 +1016,7 @@ class PagedHybridDecodeState(HybridDecodeState):
             jnp.asarray(plens_np[np.asarray(slots)], jnp.int32))
         return first
 
+    @hot_path
     def step(self, last, live):
         nxt, self.data, self.pos_dev = self._decode_paged(
             self.params_decode, last, self.data, self.tables, self.pos_dev,

@@ -16,6 +16,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.registry import hot_path
 from repro.core.attention import attention, decode_attention
 from .layers import (dense_init, embed_init, norm_init, norm_apply,
                      apply_rope, mlp_init, mlp_apply, cross_entropy,
@@ -485,6 +486,7 @@ def prefill(params, cfg, tokens, extra=None, *, prompt_len=None, policy=None,
     return mask_padded_logits(logits, cfg.vocab), cache
 
 
+@hot_path
 def decode_step(params, cfg, token, cache, pos, *, policy=None):
     """One decode step. token: (B, 1) int32; pos: scalar int32 or per-slot
     (B,) int32 (position of each row's token — the serving engine's slots
@@ -533,6 +535,7 @@ def _final_logits(params, cfg, x):
     return mask_padded_logits(logits, cfg.vocab)
 
 
+@hot_path
 def decode_step_sharded(params, cfg, token, cache, pos, *, policy, seq_axis):
     """One decode step over a sequence-sharded KV cache — the body the
     serving engine wraps in ``shard_map`` (params/token/pos replicated,
@@ -653,6 +656,7 @@ def _paged_attn(q, pool_k, pool_v, tab, cache_len, cfg, policy, lay=None):
                             mm_dtype=cfg.attn_mm_dtype, layout=lay)
 
 
+@hot_path
 def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
     """One decode step over a paged KV pool. token: (B, 1) int32; cache:
     stacked pools from ``init_paged_cache``; ``tables`` (B, nS) int32
@@ -700,6 +704,7 @@ def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
     return _final_logits(params, cfg, x), cache
 
 
+@hot_path
 def decode_step_paged_sharded(params, cfg, token, cache, tables, pos, *,
                               policy, seq_axis):
     """Paged decode over a sequence-sharded pool — the body the serving

@@ -1,0 +1,3 @@
+# Planted-violation fixtures for repro.analysis (one module per rule,
+# plus a clean control). These are ANALYZED, mostly never imported —
+# keep each violation obvious and single-purpose.

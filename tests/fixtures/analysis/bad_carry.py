@@ -1,0 +1,19 @@
+"""Jaxpr-audit fixture: a decode-like step whose carry DRIFTS — the
+exact PR-5 bug class (a cast inside the step silently changes the carry
+dtype, the output no longer matches the donated input buffer, donation
+is dropped and decode-state memory doubles)."""
+
+import jax.numpy as jnp
+
+
+def drifting_step(params, tok, state, pos, live):
+    h = state["h"] + params["w"] * tok
+    # the planted bug: carry comes back bf16 while the pool is f32
+    h = h.astype(jnp.bfloat16)
+    return tok + 1, {"h": h, "conv": state["conv"]}, pos + live
+
+
+def shape_drifting_step(params, tok, state, pos, live):
+    # second drift class: the carry grows along an axis
+    h = jnp.concatenate([state["h"], state["h"][:, :1]], axis=1)
+    return tok + 1, {"h": h, "conv": state["conv"]}, pos + live

@@ -1,0 +1,22 @@
+"""Planted violations for the silent-fallback rule (a kernel entry point
+that quietly routes configurations back to the reference reduction)."""
+
+
+def core_decode(q, k, v, cache_len):
+    return q  # stand-in for the reference reduction
+
+
+def decode_attention(q, k, v, cache_len, *, policy=None):
+    return q  # stand-in for the fused kernel
+
+
+def decode_attention_policy(q, k, v, cache_len, *, layout="bshd",
+                            window=None, policy=None):
+    # ERROR: configuration-gated fallback (branches on layout)
+    if layout != "bshd":
+        # ERROR: reference reduction reachable from the kernel entry
+        return core_decode(q, k, v, cache_len)
+    # ERROR: second gate, on window
+    if window is not None:
+        return core_decode(q, k, v, cache_len)
+    return decode_attention(q, k, v, cache_len, policy=policy)

@@ -1,0 +1,20 @@
+"""Planted violations for the engine-family-branch rule (a miniature
+serve.py that does exactly what the engine contract forbids)."""
+
+
+class MiniEngine:
+    def __init__(self, cfg, state):
+        self.cfg, self.state = cfg, state
+
+    def admit(self, req):
+        # ERROR: family branch in the engine — belongs behind the
+        # DecodeState protocol
+        if self.cfg.family == "ssm":
+            return self.state.admit_recurrent(req)
+        return self.state.admit_kv(req)
+
+    def step(self):
+        if self.state.is_paged:
+            # ERROR: not-implemented escape hatch in the engine
+            raise NotImplementedError("paged decode unsupported")
+        return self.state.step()

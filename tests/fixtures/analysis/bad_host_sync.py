@@ -1,0 +1,42 @@
+"""Planted violations for the host-sync-in-hot-path rule."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.registry import hot_path
+
+
+@hot_path
+def decode_tick(state, tok):
+    # ERROR: per-step device->host scalarization
+    stop = state.done.item()
+    # ERROR: blocking materialization of a device array
+    host = np.asarray(state.last)
+    # ERROR: explicit transfer
+    mirror = jax.device_get(state.pos)
+    # ERROR: device sync
+    jax.block_until_ready(tok)
+    # WARN: int() on a non-constant (device scalar here)
+    n = int(state.steps)
+    return stop, host, mirror, n
+
+
+@hot_path
+def outer(state):
+    def inner(x):
+        # nested defs inherit hotness: still an ERROR
+        return x.tolist()
+    return inner(state)
+
+
+def cold_path(state):
+    # unmarked: the same calls are fine here (scheduling-event code
+    # registers itself explicitly; this function never did)
+    return np.asarray(state.last), int(state.steps)
+
+
+@hot_path
+def literal_ok(rows):
+    # np.asarray on a literal comprehension builds a HOST array — allowed
+    return np.asarray([r * 2 for r in range(4)]), jnp.zeros(3)

@@ -1,0 +1,45 @@
+"""Planted violations for the refcount-pairing rule."""
+
+import numpy as np
+
+
+class LeakyPool:
+    def __init__(self, n):
+        self.refs = np.zeros(n, np.int32)
+        self.free = list(range(n))
+
+    def incref(self, g):
+        self.refs[g] += 1
+
+    def decref(self, g):
+        self.refs[g] -= 1
+        if self.refs[g] == 0:
+            self.free.append(g)
+
+    def cow_leak(self, g):
+        # ERROR: raw refcount mutation outside the primitives — the page
+        # never returns to the free list when this hits zero (the PR-6
+        # cow() bug, replanted)
+        self.refs[g] -= 1
+        return self.free.pop()
+
+    def attach_leak(self, gids):
+        held = []
+        for g in gids:
+            # ERROR: unguarded incref loop — a raise mid-loop strands
+            # every reference already taken
+            self.incref(g)
+            held.append(g)
+        return held
+
+    def attach_guarded(self, gids):
+        held = []
+        try:
+            for g in gids:
+                self.incref(g)      # OK: release reachable on exception
+                held.append(g)
+        except BaseException:
+            for g in held:
+                self.decref(g)
+            raise
+        return held

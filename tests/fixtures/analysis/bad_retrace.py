@@ -1,0 +1,33 @@
+"""Planted violations for the jit-retrace-hazard rule."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def jitted_mutable_default(x, scales=[1.0, 2.0]):
+    # ERROR: mutable default on a jitted function
+    return x * scales[0]
+
+
+def assigned_later(x, table={}):
+    # ERROR once _assigned is jitted below (jit-by-assignment)
+    return x + table.get("bias", 0.0)
+
+
+_assigned = jax.jit(assigned_later)
+
+
+@functools.lru_cache(maxsize=None)
+def cached_norm(v):
+    # WARN: lru_cache over a parameter that flows into an array op —
+    # array inputs are unhashable (crash) or pinned alive (leak)
+    return jnp.sqrt(jnp.sum(v * v))
+
+
+@functools.lru_cache(maxsize=None)
+def cached_program(n_layers, dtype_name):
+    # OK: memoized on hashable config only; arrays never enter the key
+    return jnp.zeros((n_layers,), jnp.dtype(dtype_name))

@@ -1,0 +1,52 @@
+"""Clean control fixture: hot-path + pool + jit idioms the analyzer must
+stay quiet on, and a stable-carry step for the jaxpr-audit tests."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.registry import hot_path
+
+
+@hot_path
+def decode_tick(state, tok, live):
+    # device-only: no syncs, no transfers, positions advance on device
+    h = state["h"] * 0.5 + tok
+    return {"h": h, "pos": state["pos"] + live}, jnp.argmax(h, -1)
+
+
+def stable_step(params, tok, state, pos, live):
+    # carry (state, pos) keeps dtypes/shapes: donation-compatible
+    h = (state["h"] + params["w"] * tok).astype(state["h"].dtype)
+    conv = state["conv"]
+    return tok + 1, {"h": h, "conv": conv}, pos + live
+
+
+class TidyPool:
+    def __init__(self, n):
+        self.refs = [0] * n
+
+    def incref(self, g):
+        self.refs[g] += 1
+
+    def decref(self, g):
+        self.refs[g] -= 1
+
+    def attach(self, gids):
+        held = []
+        try:
+            for g in gids:
+                self.incref(g)
+                held.append(g)
+        except BaseException:
+            for g in held:
+                self.decref(g)
+            raise
+        return held
+
+
+@functools.lru_cache(maxsize=None)
+def program_for(width, dtype_name):
+    # hashable-config memoization: allowed
+    return jax.jit(lambda x: x * jnp.ones((width,), jnp.dtype(dtype_name)))

@@ -1,0 +1,258 @@
+"""repro.analysis Layer-2 tests: the serving programs the engine
+actually builds hold their lowered-program contracts —
+
+* unsharded decode programs are collective-free, fully consume their
+  donated carry, and keep the (state, positions) carry pytree stable
+  (dtype/shape) across the step — for the KV, recurrent and hybrid
+  families and the paged variants, under all three exp backends;
+* the sharded decode program spends exactly ONE all_gather per layer
+  (subprocess, 8 host devices);
+* the planted fixtures (dtype-drifting carry, two-collective step,
+  dropped donation) are each caught by the corresponding audit.
+
+Audits run on *lowered* programs and ``eval_shape`` — no XLA
+compilation, so the full family x backend matrix stays cheap.
+"""
+
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import api
+from repro.models.decode_state import _paged_programs, _programs
+from repro.runtime import resolve_policy
+from repro.analysis import jaxpr_audit as ja
+
+pytestmark = pytest.mark.analysis
+
+EXP_BACKENDS = ("exact", "vexp", "vexp_hw")
+FAMILY_ARCH = {"kv": "gpt2-small", "recurrent": "mamba2-1.3b",
+               "hybrid": "recurrentgemma-9b"}
+FIX = Path(__file__).parent / "fixtures" / "analysis"
+
+_cfg_cache, _params_cache = {}, {}
+
+
+def _cfg(arch):
+    if arch not in _cfg_cache:
+        _cfg_cache[arch] = get_config(arch).reduced()
+    return _cfg_cache[arch]
+
+
+def _params(arch):
+    if arch not in _params_cache:
+        _params_cache[arch] = api.init_params(_cfg(arch),
+                                              jax.random.PRNGKey(0))
+    return _params_cache[arch]
+
+
+def _load_fixture(name):
+    spec = importlib.util.spec_from_file_location(name,
+                                                  FIX / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _decode_args(arch, b=2, s=64):
+    cfg = _cfg(arch)
+    cache = api.init_cache(cfg, b, s)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    pos = jnp.ones((b,), jnp.int32)
+    live = jnp.ones((b,), jnp.int32)
+    return (_params(arch), tok, cache, pos, live)
+
+
+# ----------------------------------------------- engine programs (unsharded)
+
+class TestEngineDecodePrograms:
+    @pytest.mark.parametrize("exp", EXP_BACKENDS)
+    @pytest.mark.parametrize("family", sorted(FAMILY_ARCH))
+    def test_decode_is_collective_free_donated_and_carry_stable(
+            self, family, exp):
+        """One parametrization per (family, exp backend): the decode
+        program the slot engine runs must be collective-free, alias
+        every donated (state, positions) leaf, and return its carry
+        with identical treedef/dtypes/shapes."""
+        arch = FAMILY_ARCH[family]
+        cfg = _cfg(arch)
+        pol = resolve_policy(cfg, env={}, exp_backend=exp)
+        _, _, decode = _programs(cfg, pol)
+        args = _decode_args(arch)
+        txt = decode.lower(*args).as_text()
+
+        ja.assert_collective_budget(txt, {})           # zero collectives
+        n_carry = len(jax.tree_util.tree_leaves(args[2])) + 1
+        ja.assert_all_donated(txt, n_carry)            # cache + positions
+        ja.assert_carry_stable(decode, args, {2: 1, 3: 2})
+
+    @pytest.mark.parametrize("exp", EXP_BACKENDS)
+    def test_paged_decode_program(self, exp):
+        """Paged KV decode: collective-free, carry-stable for the pool,
+        tables and positions; positions always donate (the pool donates
+        everywhere but XLA-CPU, where the page scatter materializes the
+        pool regardless — mirrored here exactly as the builder does)."""
+        arch = FAMILY_ARCH["kv"]
+        cfg = _cfg(arch)
+        b, s, page = 2, 64, 16
+        ns = -(-s // page)
+        pool = api.init_paged_cache(cfg, b, 1 + b * ns, page)
+        tab = jnp.zeros((b, ns), jnp.int32)
+        args = (_params(arch), jnp.zeros((b, 1), jnp.int32), pool, tab,
+                jnp.ones((b,), jnp.int32), jnp.ones((b,), jnp.int32))
+
+        pol = resolve_policy(cfg, env={}, exp_backend=exp)
+        _, decode = _paged_programs(cfg, pol, page)
+        txt = decode.lower(*args).as_text()
+
+        ja.assert_collective_budget(txt, {})
+        pool_leaves = len(jax.tree_util.tree_leaves(pool))
+        donated = (1 if jax.default_backend() == "cpu"
+                   else pool_leaves + 1)
+        ja.assert_all_donated(txt, donated)
+        # carry stability is unconditional — pool AND positions
+        ja.assert_carry_stable(decode, args, {2: 1, 4: 2})
+
+    def test_paged_hybrid_decode_program(self):
+        """The hybrid family through the paged program builder (its KV
+        periods page; recurrent periods carry their snapshots)."""
+        arch = FAMILY_ARCH["hybrid"]
+        cfg = _cfg(arch)
+        b, s, page = 2, 64, 16
+        ns = -(-s // page)
+        pool = api.init_paged_cache(cfg, b, 1 + b * ns, page)
+        tab = jnp.zeros((b, ns), jnp.int32)
+        args = (_params(arch), jnp.zeros((b, 1), jnp.int32), pool, tab,
+                jnp.ones((b,), jnp.int32), jnp.ones((b,), jnp.int32))
+        pol = resolve_policy(cfg, env={})
+        _, decode = _paged_programs(cfg, pol, page)
+        ja.assert_collective_budget(decode.lower(*args).as_text(), {})
+        ja.assert_carry_stable(decode, args, {2: 1, 4: 2})
+
+
+# ------------------------------------------------------- sharded (8 devices)
+
+@pytest.mark.slow
+def test_sharded_decode_one_collective_per_layer_and_donation():
+    """The PR-4 budget through the audit API: the engine's seq-sharded
+    decode program spends exactly one all_gather (layers are scanned, so
+    the loop body lowers once) and nothing else, and every donated
+    carry leaf is aliased."""
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["REPRO_AUTOTUNE_CACHE"] = "off"
+        import sys
+        sys.path.insert(0, {src!r})
+        import json
+        import numpy as np
+        import jax
+        from repro.configs import get_config
+        from repro.models import api
+        from repro.launch.serve import Server, Request
+        from repro.launch.mesh import make_host_mesh
+        from repro.runtime import resolve_policy
+        from repro.analysis import jaxpr_audit as ja
+
+        cfg = get_config("gpt2-small").reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        pol = resolve_policy(cfg, env={{}}, kernel_backend="pallas")
+        srv = Server(cfg, params, max_batch=2, max_seq=64,
+                     mesh=make_host_mesh(1, 8), policy=pol, kv_mode="seq")
+        rng = np.random.default_rng(0)
+        srv.submit(Request(0, rng.integers(0, cfg.vocab, (5,),
+                                           dtype=np.int32), 4))
+        g = srv._groups["default"]
+        g.admit()
+        st = g.state
+        args = (st.params_decode, g.last, st.data, st.pos_dev, g.live_dev)
+        txt = st._decode.lower(*args).as_text()
+        counts = ja.collective_counts(txt)
+        ja.assert_collective_budget(txt, {{"all_gather": 1}})
+        rep = ja.donation_report(
+            txt, len(jax.tree_util.tree_leaves(st.data)) + 1)
+        stable = ja.carry_report(st._decode, args, {{2: 1, 3: 2}})
+        print(json.dumps({{"counts": counts,
+                           "donated": rep.fully_consumed,
+                           "carry_msgs": stable}}))
+    """).format(src=src)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-3000:]}"
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["counts"] == {"all_gather": 1}
+    assert res["donated"]
+    assert res["carry_msgs"] == []
+
+
+# --------------------------------------------------------- planted fixtures
+
+class TestPlantedProgramViolations:
+    def _carry_args(self):
+        params = {"w": jnp.ones((4,), jnp.float32)}
+        state = {"h": jnp.zeros((2, 4), jnp.float32),
+                 "conv": jnp.zeros((2, 3), jnp.float32)}
+        return (params, jnp.zeros((2, 1), jnp.int32), state,
+                jnp.zeros((2,), jnp.int32), jnp.ones((2,), jnp.int32))
+
+    def test_dtype_drifting_carry_caught(self):
+        bad = _load_fixture("bad_carry")
+        args = self._carry_args()
+        msgs = ja.carry_report(bad.drifting_step, args, {2: 1, 3: 2})
+        assert any("dtype" in m and "bfloat16" in m for m in msgs)
+        with pytest.raises(ja.CarryStabilityError, match="dtype"):
+            ja.assert_carry_stable(bad.drifting_step, args, {2: 1, 3: 2})
+
+    def test_shape_drifting_carry_caught(self):
+        bad = _load_fixture("bad_carry")
+        with pytest.raises(ja.CarryStabilityError, match="shape"):
+            ja.assert_carry_stable(bad.shape_drifting_step,
+                                   self._carry_args(), {2: 1, 3: 2})
+
+    def test_clean_fixture_carry_is_stable(self):
+        clean = _load_fixture("clean")
+        args = self._carry_args()
+        assert ja.carry_report(clean.stable_step, args, {2: 1, 3: 2}) == []
+
+    def test_two_collective_program_caught(self):
+        """shard_map on a 1-device mesh still lowers real collective ops,
+        so the budget check needs no multi-device subprocess."""
+        bad = _load_fixture("bad_collectives")
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("x",))
+        x = jnp.arange(8, dtype=jnp.float32)
+        two = bad.build_two_collective_step(mesh)
+        assert ja.collective_counts(two, x) == {"all_reduce": 2}
+        with pytest.raises(ja.CollectiveBudgetError):
+            ja.assert_collective_budget(two, {"all_reduce": 1}, x)
+        one = bad.build_one_collective_step(mesh)
+        ja.assert_collective_budget(one, {"all_reduce": 1}, x)
+
+    @pytest.mark.filterwarnings("ignore::UserWarning")
+    def test_dropped_donation_caught(self):
+        """The PR-5 failure mode in miniature: the output dtype no longer
+        matches the donated input aval, so the donation silently drops —
+        and the audit fails it."""
+        def drift(s):
+            return s.astype(jnp.bfloat16) * 2
+        f = jax.jit(drift, donate_argnums=(0,))
+        s = jnp.zeros((8,), jnp.float32)
+        rep = ja.donation_report(f, (0,), s)
+        assert rep.donated_leaves == 1 and rep.aliased_params == 0
+        with pytest.raises(ja.DonationError):
+            ja.assert_all_donated(f, (0,), s)
+
+    def test_consumed_donation_passes(self):
+        f = jax.jit(lambda s: s * 2, donate_argnums=(0,))
+        ja.assert_all_donated(f, (0,), jnp.zeros((8,), jnp.float32))

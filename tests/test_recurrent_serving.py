@@ -20,7 +20,6 @@ The headline guarantees, mirroring the transformer serving tests:
 """
 
 import dataclasses
-import inspect
 
 import numpy as np
 import pytest
@@ -364,13 +363,18 @@ class TestInitCacheUnification:
 # ------------------------------------------------- engine source contract
 
 def test_serve_source_is_family_agnostic():
-    """The acceptance criterion, literally: the slot engine contains no
-    family branch and no not-implemented escape hatch — every
-    family-specific decision lives behind the DecodeState protocol."""
+    """The acceptance criterion, as an AST rule: the analyzer's
+    engine-family-branch contract flags any ``*.family`` attribute
+    access and any NotImplemented escape hatch in the slot engine —
+    stronger than the old source-string grep (no false pass if the
+    branch is spelled ``self.cfg.family``), and the same rule CI runs
+    via `make analyze`."""
     import repro.launch.serve as serve_mod
-    src = inspect.getsource(serve_mod)
-    assert "cfg.family" not in src
-    assert "NotImplemented" not in src
+    from repro.analysis.rules import EngineContractRule, run_rules
+    findings, n_files = run_rules([serve_mod.__file__],
+                                  rules=[EngineContractRule()])
+    assert n_files == 1
+    assert findings == [], "\n".join(f.render() for f in findings)
 
 
 def test_decode_state_kinds():

@@ -409,12 +409,15 @@ class TestShardingWiring:
             assert ax == "model"
 
     def test_no_reference_fallback_branch(self):
-        """The acceptance criterion, literally: decode_attention_policy
-        must not contain a layout/window fallback to the reference
-        reduction."""
-        import inspect
+        """The acceptance criterion, as an AST rule: the analyzer's
+        silent-fallback contract forbids any layout/window/cache_len
+        gate and any reference-reduction call inside
+        decode_attention_policy (and constrains core decode_attention's
+        routing gate) — stronger than the old source-string grep, and
+        the same rule CI runs via `make analyze`."""
         from repro.kernels.decode_attention import ops
-        src = inspect.getsource(ops.decode_attention_policy)
-        assert "core_decode" not in src
-        assert 'layout != "bhsd"' not in src
-        assert "window is not None" not in src
+        from repro.analysis.rules import FallbackContractRule, run_rules
+        findings, n_files = run_rules([ops.__file__],
+                                      rules=[FallbackContractRule()])
+        assert n_files == 1
+        assert findings == [], "\n".join(f.render() for f in findings)
