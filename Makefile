@@ -5,8 +5,9 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: ci test analyze analysis-test bench sweep serve-smoke \
-	serve-smoke-recurrent serve-smoke-paged spmd-test spmd-serve-smoke \
-	spmd-serve-smoke-paged
+	serve-smoke-recurrent serve-smoke-paged serve-smoke-chunked \
+	spmd-test spmd-serve-smoke spmd-serve-smoke-paged \
+	spmd-serve-smoke-chunked
 
 ci:
 	$(PY) -m pytest -x -q
@@ -68,6 +69,19 @@ serve-smoke-paged:
 	    --max-batch 2 --max-seq 64 --paged --block-page 8 \
 	    --shared-prefix 24 --policy-groups "eval=exact,bulk=vexp"
 
+# Chunked prefill interleaved with decode: long mixed-length prompts
+# stream through the two-queue chunk scheduler in bounded 8-token
+# chunks (one chunk + one decode step per tick) while earlier
+# admissions keep decoding. Covers contiguous and paged pools.
+serve-smoke-chunked:
+	$(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 6 --prompt-len 40 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 --prefill-chunk 8
+	$(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 6 --prompt-len 40 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 --prefill-chunk 8 \
+	    --paged --block-page 8 --shared-prefix 16
+
 # The same slot engine end-to-end through the SPMD serve loop: KV cache
 # sequence-sharded over 8 fake host devices, decode through the fused
 # partial-statistics path with the packed single-collective merge.
@@ -85,3 +99,12 @@ spmd-serve-smoke-paged:
 	    --requests 6 --prompt-len 24 --mixed-lengths --max-new 8 \
 	    --max-batch 2 --max-seq 64 --kv-mode seq --kernel-backend pallas \
 	    --paged --block-page 8 --shared-prefix 16
+
+# Sharded chunked prefill: the batch-sharded chunk program writes cache
+# rows already carrying the pool sharding (no post-prefill re-placement
+# device_put — the jaxpr output-sharding audit pins this).
+spmd-serve-smoke-chunked:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	    $(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 6 --prompt-len 40 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 --kv-mode seq --prefill-chunk 8

@@ -26,6 +26,17 @@ The ``recurrent`` section serves the ssm (mamba2) and hybrid
 (recurrentgemma) reduced configs through the same slot engine — the
 family-agnostic DecodeState pool — on a mixed-length workload.
 
+The ``open_loop`` section drives the engine with a Poisson arrival
+process (requests arrive at ``--rate`` req/s regardless of service
+progress — closed-loop workloads can never show queueing delay) and
+compares the monolithic-wave scheduler against chunked prefill
+(``ExecPolicy.prefill_chunk``) at the same arrivals: per-engine-tick
+wall time (each tick synced, so a tick that runs a whole prefill wave
+pays for it honestly), per-request TTFT and completion p50/p95. The
+chunked arm's per-tick p95 must beat the monolithic arm's — one bounded
+chunk per tick is the whole point. Run just this section with
+``python -m benchmarks.serving --load-mode open [--rate R]``.
+
 Rows carry tokens/s as the primary scalar; per-request p50/p95 completion
 latency (submit -> tokens materialized, measured at the finish-time
 device sync) rides in the note. Results persist to ``BENCH_serving.json``.
@@ -52,6 +63,9 @@ MAX_SEQ = 128
 UNIFORM_LEN = 32
 N_TIMED = 5          # median-of-N (container noise is large + asymmetric)
 STEADY_STEPS = 12    # decode steps per steady-state phase measurement
+OPEN_RATE = 16.0     # Poisson arrival rate (req/s) for the open-loop arm
+OPEN_CHUNK = 16      # prefill chunk tokens for the chunked open-loop arm
+OPEN_TIMED = 3       # open-loop runs are wall-clock long; fewer medians
 
 
 def _requests(cfg, lens, groups=None):
@@ -225,6 +239,104 @@ def _fixed_chunk_runner(cfg, params, lens, *, policy=None):
     return once
 
 
+def _open_loop_runner(cfg, params, lens, arrivals, *, policy):
+    """Open-loop load: requests arrive on the fixed ``arrivals`` clock
+    (seconds from start) no matter how far behind the engine is — the
+    arrival process both arms share, so queueing delay is comparable.
+
+    Per-tick latency is measured at a device sync after every
+    ``Server.step()``: the engine's own dispatch times are async and
+    would hide a monolithic prefill wave inside a later sync. A tick
+    that admits a whole prompt pays its full prefill here; a chunked
+    tick pays one bounded chunk. Warms up (compiles every prefill
+    bucket / the chunk program) and returns a closure."""
+    from repro.launch.serve import Server, Request
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (n,), dtype=np.int32)
+               for n in lens]
+
+    def once():
+        srv = Server(cfg, params, max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                     policy=policy)
+        reqs = [Request(i, prompts[i], MAX_NEW) for i in range(len(lens))]
+        groups = list(srv._groups.values())
+        step_s: list = []
+        i = 0
+        t0 = time.perf_counter()
+        while True:
+            now = time.perf_counter() - t0
+            while i < len(reqs) and arrivals[i] <= now:
+                srv.submit(reqs[i])
+                i += 1
+            if not any(g.busy for g in groups):
+                if i >= len(reqs):
+                    break
+                # idle before the next arrival: sleep it off rather than
+                # spin (empty ticks would dilute the percentiles).
+                time.sleep(max(0.0, arrivals[i]
+                               - (time.perf_counter() - t0)))
+                continue
+            ts = time.perf_counter()
+            srv.step()
+            jax.block_until_ready([g.last for g in groups])
+            step_s.append(time.perf_counter() - ts)
+        wall = time.perf_counter() - t0
+        ntok = sum(len(r.out) for r in reqs)
+        ttft = sorted(x for g in groups for x in g.ttft)
+        lat = sorted(x for g in groups for x in g.req_lat)
+        step_s.sort()
+
+        def pct(xs, q):
+            return 1e3 * xs[min(int(len(xs) * q), len(xs) - 1)] \
+                if xs else 0.0
+
+        return {
+            "tok_s": ntok / wall,
+            "wall_s": wall,
+            "ticks": len(step_s),
+            "p50_step_ms": pct(step_s, 0.50),
+            "p95_step_ms": pct(step_s, 0.95),
+            "p50_ttft_ms": pct(ttft, 0.50),
+            "p95_ttft_ms": pct(ttft, 0.95),
+            "p50_req_ms": pct(lat, 0.50),
+            "p95_req_ms": pct(lat, 0.95),
+        }
+
+    once()                      # warmup: compile buckets / chunk program
+    return once
+
+
+def _open_loop_arm(cfg, params, *, policy, rate=OPEN_RATE,
+                   chunk=OPEN_CHUNK, n_timed=OPEN_TIMED):
+    """Chunked-vs-monolithic under identical Poisson arrivals. Prompt
+    lengths reach deep into the cache (long prefills are what make a
+    monolithic admission tick expensive); runs interleave so container
+    noise hits both arms alike; median by per-tick p95."""
+    import dataclasses
+
+    rng = np.random.default_rng(5)
+    lens = [int(x) for x in rng.integers(8, 97, N_REQUESTS)]
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, N_REQUESTS))
+    pol_chunk = dataclasses.replace(policy, prefill_chunk=chunk)
+    mono_once = _open_loop_runner(cfg, params, lens, arrivals,
+                                  policy=policy)
+    chunk_once = _open_loop_runner(cfg, params, lens, arrivals,
+                                   policy=pol_chunk)
+    mono_runs, chunk_runs = [], []
+    for _ in range(n_timed):
+        mono_runs.append(mono_once())
+        chunk_runs.append(chunk_once())
+    key = lambda r: r["p95_step_ms"]          # noqa: E731
+    return {
+        "rate_req_s": rate,
+        "chunk_tokens": chunk,
+        "lens": lens,
+        "monolithic": _median(mono_runs, key=key),
+        "chunked": _median(chunk_runs, key=key),
+    }
+
+
 def run_bench() -> dict:
     from repro.configs import get_config
     from repro.models import api
@@ -262,6 +374,7 @@ def run_bench() -> dict:
         "fixed_chunk_baseline": {"tok_s": fixed_tok_s},
         "steady_state": _steady_state(cfg, params, policy=pol),
         "recurrent": _recurrent_arm(),
+        "open_loop": _open_loop_arm(cfg, params, policy=pol),
     }
     # sharded serving needs a multi-device host platform: XLA_FLAGS must
     # precede jax init, so the arm runs in a subprocess (best-effort — a
@@ -312,6 +425,23 @@ def report():
     rows.append(("steady_decode_tok_s", ss["decode_tok_s"],
                  f"decode-only; prefill={ss['prefill_s'] * 1e3:.1f}ms "
                  f"({ss['prefill_tok_s']:.1f} tok/s) measured separately"))
+    ol = res.get("open_loop", {})
+    if ol:
+        for arm in ("monolithic", "chunked"):
+            r = ol[arm]
+            what = (f"chunk={ol['chunk_tokens']}tok"
+                    if arm == "chunked" else "whole-prompt waves")
+            rows.append((f"open_{arm}_step_p95_ms", r["p95_step_ms"],
+                         f"Poisson {ol['rate_req_s']:g}req/s, {what}; "
+                         f"ttft_p50/p95={r['p50_ttft_ms']:.0f}/"
+                         f"{r['p95_ttft_ms']:.0f}ms; "
+                         f"req_p95={r['p95_req_ms']:.0f}ms; "
+                         f"{r['tok_s']:.1f}tok/s"))
+        rows.append(("open_step_p95_ratio",
+                     ol["monolithic"]["p95_step_ms"]
+                     / max(ol["chunked"]["p95_step_ms"], 1e-9),
+                     "monolithic / chunked per-tick p95 (> 1 expected: "
+                     "the chunk budget bounds every tick)"))
     for fam, r in res.get("recurrent", {}).items():
         rows.append((f"recurrent_{fam}_tok_s", r["tok_s"],
                      f"{r['arch']} mixed-length slot engine; "
@@ -332,11 +462,49 @@ def report():
     return rows
 
 
+def _open_loop_main(argv):
+    """``--load-mode open [--rate R] [--chunk C]``: run just the
+    open-loop Poisson comparison and print its rows (no JSON write —
+    the full ``report()`` refreshes BENCH_serving.json)."""
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.runtime import resolve_policy
+
+    def _flag(name, default, cast):
+        return cast(argv[argv.index(name) + 1]) \
+            if name in argv else default
+
+    rate = _flag("--rate", OPEN_RATE, float)
+    chunk = _flag("--chunk", OPEN_CHUNK, int)
+    cfg = get_config("gpt2-small").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    ol = _open_loop_arm(cfg, params, policy=resolve_policy(cfg, env={}),
+                        rate=rate, chunk=chunk)
+    for arm in ("monolithic", "chunked"):
+        r = ol[arm]
+        print(f"open_loop/{arm}: step p50/p95="
+              f"{r['p50_step_ms']:.1f}/{r['p95_step_ms']:.1f}ms  "
+              f"ttft p50/p95={r['p50_ttft_ms']:.0f}/"
+              f"{r['p95_ttft_ms']:.0f}ms  "
+              f"req p50/p95={r['p50_req_ms']:.0f}/"
+              f"{r['p95_req_ms']:.0f}ms  {r['tok_s']:.1f}tok/s "
+              f"({r['ticks']} ticks)")
+    print(f"open_loop/step_p95_ratio,"
+          f"{ol['monolithic']['p95_step_ms'] / max(ol['chunked']['p95_step_ms'], 1e-9):.3g},"
+          f"rate={rate:g}req/s chunk={chunk}tok")
+
+
 if __name__ == "__main__":
     if "--sharded-json" in sys.argv:
         # subprocess mode (parent sets XLA_FLAGS before we ever import
         # jax): print one JSON line with the sharded phase measurement.
         print(json.dumps(_sharded_arm()))
+        sys.exit(0)
+    if "--load-mode" in sys.argv:
+        mode = sys.argv[sys.argv.index("--load-mode") + 1]
+        if mode != "open":
+            sys.exit(f"unknown --load-mode {mode!r} (only 'open')")
+        _open_loop_main(sys.argv)
         sys.exit(0)
     for name, val, note in report():
         print(f"serving/{name},{val:.6g},{note}")

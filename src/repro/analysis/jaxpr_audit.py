@@ -18,6 +18,14 @@ wrapper that raises a typed ``AssertionError`` subclass:
   come out of the step with the same treedef, dtypes, shapes (and
   shardings, when present) it went in with. Checked abstractly via
   ``jax.eval_shape``, so no device execution is needed.
+* **output shardings** — a designated output of the COMPILED program
+  must carry exactly an expected sharding pytree. The serving contract
+  (PR-8): the sharded chunk-prefill program's cache output carries the
+  pool sharding, so admitted rows are produced in place on the mesh and
+  the engine never re-places them with a post-prefill ``device_put``.
+  This one compiles (``eval_shape`` does not expose output shardings) —
+  cheap at test shapes, and the jit cache makes it free on a program
+  the engine already built.
 
 All three accept either a jitted callable plus example/abstract args, an
 already-``.lower()``-ed object, or (for the text-based audits) the
@@ -62,6 +70,10 @@ class DonationError(AuditError):
 
 
 class CarryStabilityError(AuditError):
+    pass
+
+
+class OutputShardingError(AuditError):
     pass
 
 
@@ -224,3 +236,59 @@ def assert_carry_stable(fn, args, carry_map: dict, kwargs=None):
         raise CarryStabilityError(
             "decode carry is not stable across the step:\n  "
             + "\n  ".join(msgs))
+
+
+# --------------------------------------------------------- output shardings
+
+def output_shardings(target, *args, **kwargs):
+    """Per-output sharding pytree of the COMPILED program.
+
+    ``target`` may be a ``Compiled`` object, a ``Lowered`` object, a
+    jitted callable, or a plain callable (wrapped in ``jax.jit``).
+    Callables/Lowereds are compiled here — this audit genuinely needs
+    the compiler's placement decision, which neither the jaxpr nor
+    ``eval_shape`` exposes."""
+    if hasattr(target, "output_shardings"):            # Compiled
+        return target.output_shardings
+    if hasattr(target, "lower"):                       # jitted callable
+        target = target.lower(*args, **kwargs)
+    elif not hasattr(target, "compile"):               # plain callable
+        target = jax.jit(target).lower(*args, **kwargs)
+    return target.compile().output_shardings
+
+
+def output_sharding_report(fn, out_index, want, *args, **kwargs) -> list:
+    """Mismatches between output ``out_index``'s compiled shardings and
+    the expected sharding pytree ``want`` (same treedef as that output;
+    pass ``out_index=None`` to compare the whole output tuple). Leaves
+    compare via ``Sharding.is_equivalent_to`` at each output's rank —
+    placement-equal shardings match even when spelled differently.
+    Empty list == contract holds."""
+    got = output_shardings(fn, *args, **kwargs)
+    outs = jax.eval_shape(fn, *args, **kwargs)
+    if out_index is not None:
+        got, outs = got[out_index], outs[out_index]
+    g_leaves, g_def = jax.tree_util.tree_flatten_with_path(got)
+    w_leaves, w_def = jax.tree_util.tree_flatten(want)
+    o_leaves = jax.tree_util.tree_leaves(outs)
+    if g_def != w_def:
+        return [f"output treedef differs from the expected sharding "
+                f"tree: {g_def} != {w_def}"]
+    msgs = []
+    for (path, g), w, o in zip(g_leaves, w_leaves, o_leaves):
+        same = (g.is_equivalent_to(w, o.ndim)
+                if hasattr(g, "is_equivalent_to") else g == w)
+        if not same:
+            msgs.append(f"{_path_str(path)}: compiled output sharding "
+                        f"{g} != expected {w}")
+    return msgs
+
+
+def assert_output_sharding(fn, out_index, want, *args, **kwargs):
+    msgs = output_sharding_report(fn, out_index, want, *args, **kwargs)
+    if msgs:
+        raise OutputShardingError(
+            "program output does not carry the expected sharding (rows "
+            "would need a re-placement device_put — the copy this "
+            "contract exists to forbid):\n  " + "\n  ".join(msgs))
+    return output_shardings(fn, *args, **kwargs)

@@ -63,9 +63,11 @@ HOT_PATH_FUNCTIONS = {
         "_programs.decode_local",
         "_programs.prefill_fn",
         "_programs.prefill_plain_fn",
+        "_programs.chunk_fn",
         "_paged_programs.decode_fn",
         "_paged_programs.decode_local",
         "_paged_programs.prefill_hist_fn",
+        "_paged_programs.chunk_fn",
     ),
 }
 
@@ -76,7 +78,14 @@ HOT_PATH_FUNCTIONS = {
 STEP_STRICT = (
     ("repro/launch/serve.py", "_Group.decode_once"),
     ("repro/launch/serve.py", "Server.step"),
+    # the chunk-step path runs every tick a prompt is streaming — it is
+    # held to the same zero-host-sync bar as the decode step (completion
+    # dispatch included: TTFT is sampled at the scheduling event, never
+    # at a sync)
+    ("repro/launch/serve.py", "_Group.prefill_chunk_once"),
+    ("repro/launch/serve.py", "_Group._chunk_done"),
     ("repro/models/decode_state.py", "*step"),
+    ("repro/models/decode_state.py", "*prefill_chunk_into"),
     ("repro/models/decode_state.py", "_programs.*"),
     ("repro/models/decode_state.py", "_paged_programs.*"),
     ("repro/models/transformer.py", "decode_step*"),

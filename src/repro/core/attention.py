@@ -48,14 +48,19 @@ def _gqa_scores(q: jax.Array, k: jax.Array, scale: float) -> jax.Array:
 def _mask(sq: int, sk: int, *, causal: bool, window: Optional[int],
           q_offset: int | jax.Array = 0) -> Optional[jax.Array]:
     """Boolean (Sq, Sk) mask (True = keep). q_offset is the absolute position
-    of q[0] minus that of k[0] (for prefill/decode with caches)."""
+    of q[0] minus that of k[0] (for prefill/decode with caches); a (B,)
+    array gives each batch row its own offset (chunked prefill cursors) and
+    widens the mask to (B, Sq, Sk)."""
     if not causal and window is None:
         return None
-    qpos = jnp.arange(sq)[:, None] + q_offset
-    kpos = jnp.arange(sk)[None, :]
-    keep = jnp.ones((sq, sk), bool)
-    if causal:
-        keep &= kpos <= qpos
+    qoff = jnp.asarray(q_offset)
+    if qoff.ndim:
+        qpos = jnp.arange(sq)[None, :, None] + qoff.reshape(-1, 1, 1)
+        kpos = jnp.arange(sk)[None, None, :]
+    else:
+        qpos = jnp.arange(sq)[:, None] + qoff
+        kpos = jnp.arange(sk)[None, :]
+    keep = kpos <= qpos if causal else jnp.ones_like(kpos <= qpos)
     if window is not None:
         keep &= kpos > qpos - window
     return keep
@@ -75,11 +80,11 @@ def attention_xla(q, k, v, *, causal=True, window=None, exp_impl="vexp",
     s = _gqa_scores(q.astype(jnp.float32), k.astype(jnp.float32), scale)
     msk = _mask(q.shape[1], k.shape[1], causal=causal, window=window,
                 q_offset=q_offset)
-    if kv_valid is not None:
-        kvm = kv_valid[:, None, :]                 # (B, 1, Sk)
-        msk = kvm if msk is None else msk[None] & kvm
     if msk is not None and msk.ndim == 2:
         msk = msk[None]                            # -> (1|B, Sq, Sk)
+    if kv_valid is not None:
+        kvm = kv_valid[:, None, :]                 # (B, 1, Sk)
+        msk = kvm if msk is None else msk & kvm
     if msk is not None:
         s = jnp.where(msk[:, None, None], s, NEG_INF)
     m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
@@ -136,7 +141,9 @@ def attention_flash(q, k, v, *, causal=True, window=None, exp_impl="vexp",
     qg = (q.astype(jnp.float32) * scale).astype(mdt) \
         .reshape(b, sq, hkv, g, d)
 
-    qpos = jnp.arange(sq) + q_offset
+    # q_offset may be a (B,) array (chunked prefill: per-slot cursors) —
+    # qpos is then per-row and the block mask widens over the batch.
+    qpos = jnp.arange(sq)[None, :] + jnp.asarray(q_offset).reshape(-1, 1)
 
     def body(carry, blk):
         m, l, acc = carry
@@ -144,12 +151,13 @@ def attention_flash(q, k, v, *, causal=True, window=None, exp_impl="vexp",
         s = jnp.einsum("bskgd,btkd->bkgst", qg, kblk.astype(mdt),
                        preferred_element_type=jnp.float32)
         kpos = iblk * block_k + jnp.arange(block_k)
-        keep = kpos[None, :] < sk
+        keep = jnp.broadcast_to(kpos[None, None, :] < sk,
+                                (qpos.shape[0], sq, block_k))
         if causal:
-            keep &= kpos[None, :] <= qpos[:, None]
+            keep &= kpos[None, None, :] <= qpos[:, :, None]
         if window is not None:
-            keep &= kpos[None, :] > qpos[:, None] - window
-        keep = keep[None] & kvblk[:, None, :]        # (B|1, Sq, bk)
+            keep &= kpos[None, None, :] > qpos[:, :, None] - window
+        keep = keep & kvblk[:, None, :]              # (B|1, Sq, bk)
         s = jnp.where(keep[:, None, None], s, NEG_INF)
         m_blk = jnp.max(s, axis=-1)
         m_new = jnp.maximum(m, m_blk)

@@ -53,6 +53,22 @@ The decode hot loop is collective- and copy-minimal:
   re-allocation per step), positions advance device-side (`pos + live`),
   and emitted tokens stay device-resident — a steady-state decode step
   performs zero host syncs and zero host->device transfers.
+
+Chunked prefill (``ExecPolicy.prefill_chunk > 0``): instead of one
+monolithic admission wave per prefill bucket, the scheduler becomes
+two-queue — each engine tick runs one decode step plus AT MOST ONE
+bounded prefill chunk. Queued prompts are admitted per-request into
+freed slots (``DecodeState.begin_chunk``) and stream into their slot
+``chunk_width`` tokens per tick through one fixed-shape resumable
+program (``prefill_chunk_into``: rows not prefilling this tick carry
+``clens == 0`` and pass through bit-untouched), so a long prompt never
+stalls decode for longer than one chunk and TTFT for short requests no
+longer queues behind long prompts' prefill. Mid-prefill slots are dead
+to decode (``live == 0``; their position is pinned at the prompt length
+by ``begin_chunk``), and the completion tick flips them live with no
+extra device traffic. The chunk-step path keeps the decode loop's
+zero-host-sync discipline: chunks are dispatched async, and TTFT /
+per-chunk wall time are sampled only at scheduling events.
 """
 
 from __future__ import annotations
@@ -142,6 +158,22 @@ class _Group:
                                     # latency, measured at the finish sync)
         self.admit_s: list = []     # per-wave admission (prefill) wall time
         self.req_lat: list = []     # per-request submit->done wall latency
+        # ---- chunked prefill (policy.prefill_chunk > 0) ----
+        # resolved chunk width: 0 keeps the monolithic wave path, either
+        # because the policy asked for it or because this pool cannot
+        # chunk (a protocol capability: sharded/windowed paged pools
+        # admit monolithically). Families round the requested budget up
+        # to their invariant unit (ssm: cfg.ssm_chunk) so chunk
+        # boundaries keep the fp summation order admission-invariant.
+        self.chunk_c = (self.state.chunk_width(policy.prefill_chunk)
+                        if policy.prefill_chunk
+                        and self.state.supports_chunked() else 0)
+        self.prefilling: dict = {}  # slot -> (Request, cursor tokens cached)
+        self.chunk_s: list = []     # per-chunk *dispatch* wall time (async,
+                                    # like decode_s; real first-token latency
+                                    # is ttft below)
+        self.ttft: list = []        # submit -> first-token-dispatch wall
+                                    # time, sampled at scheduling events only
         self.peak_logical = 0       # max summed live tokens (paged bench)
         self.peak_pages = 0         # max physical pages in use
         self._toks: dict = {}                       # slot -> [(B,1) arrays]
@@ -197,7 +229,11 @@ class _Group:
 
     @hot_path
     def admit(self, admit_log=None):
-        """Fill freed slots from the queue with one ragged batched prefill."""
+        """Fill freed slots from the queue: one ragged batched prefill
+        (monolithic), or per-request chunk admission when the group runs
+        chunked prefill."""
+        if self.chunk_c:
+            return self.admit_chunked(admit_log)
         free = [j for j in range(self.max_batch) if self.reqs[j] is None]
         take, sp = self._take_wave(free)
         if not take:
@@ -251,8 +287,100 @@ class _Group:
             self.ntok[j] = 1
             self._toks[j] = [first]
             r.t_first = now
+            self.ttft.append(now - r.t_submit)
             if admit_log is not None:
                 admit_log.append(r.rid)
+            if self.ntok[j] >= r.max_new:
+                self._finish(j, "max_new")
+        self._bump_peaks()
+
+    # --------------------------------------------------- chunked admission
+
+    @hot_path
+    def admit_chunked(self, admit_log=None):
+        """Begin chunked admission: one queued request per freed slot,
+        strictly FIFO. No wave bucketing — admission is per-request, so a
+        long prompt at the head claims its own slot and streams across
+        ticks while the next tick admits the short request behind it into
+        another slot. Paged pools reserve the slot's pages (and attach
+        its own prefix-cache hits) in ``begin_chunk``; admission blocks
+        on pages — the chunk/decode loop never does."""
+        free = [j for j in range(self.max_batch)
+                if self.reqs[j] is None and j not in self.prefilling]
+        while free and self.queue:
+            r = self.queue[0]
+            try:
+                cur = self.state.begin_chunk(free[0], r.prompt,
+                                             len(r.prompt))
+            except OutOfBlocks:
+                # pool exhausted: leave the head queued and retry once
+                # in-flight work (decoding OR mid-prefill slots) frees
+                # pages. With nothing in flight no page can ever free —
+                # surface the error instead of spinning forever.
+                if (not any(q is not None for q in self.reqs)
+                        and not self.prefilling):
+                    raise
+                break
+            self.prefilling[free.pop(0)] = (self.queue.popleft(), cur)
+            if admit_log is not None:
+                admit_log.append(r.rid)
+        self._bump_peaks()
+
+    @hot_path
+    def prefill_chunk_once(self):
+        """Advance every mid-prefill slot by ONE bounded chunk — the
+        at-most-one-prefill-chunk half of the engine tick (no-op when
+        nothing is prefilling). One fixed-shape (pool, chunk_c) program
+        call per tick: each prefilling row contributes its next
+        ``clens[j] <= chunk_c`` prompt tokens at its cursor; every other
+        row rides along inert (``clens == 0``). Fully async — the chunk
+        is dispatched, never synced (chunk_s records dispatch wall time,
+        exactly like decode_s), so the host runs ahead and XLA pipelines
+        chunk and decode steps back to back."""
+        if not self.prefilling:
+            return
+        toks = np.zeros((self.max_batch, self.chunk_c), np.int32)
+        offs = np.zeros(self.max_batch, np.int32)
+        clens = np.zeros(self.max_batch, np.int32)
+        done = []
+        for j in list(self.prefilling):
+            r, cur = self.prefilling[j]
+            n = min(self.chunk_c, len(r.prompt) - cur)
+            toks[j, :n] = r.prompt[cur:cur + n]
+            offs[j] = cur
+            clens[j] = n
+            if cur + n >= len(r.prompt):
+                done.append(j)
+            else:
+                self.prefilling[j] = (r, cur + n)
+        t0 = time.perf_counter()
+        first = self.state.prefill_chunk_into(toks, offs, clens)
+        self.chunk_s.append(time.perf_counter() - t0)
+        if done:
+            self._chunk_done(done, first)
+
+    @hot_path
+    def _chunk_done(self, done, first):
+        """Completion dispatch for slots whose prompt finished this
+        chunk: flip them live and seed decode — all device-async (the
+        chunk program already pinned positions and wrote the state; the
+        only device work here is the batched last-token/liveness update).
+        TTFT is sampled here, at the scheduling event, not at a sync —
+        the zero-host-sync discipline of the decode loop holds on the
+        chunk-step path too."""
+        sl = jnp.asarray(done)
+        self.last = self.last.at[sl].set(first[sl])
+        self.live_dev = self.live_dev.at[sl].set(1)
+        now = time.perf_counter()
+        for j in done:
+            r, _ = self.prefilling.pop(j)
+            self.reqs[j] = r
+            self.lens[j] = len(r.prompt)
+            self.ntok[j] = 1
+            self._toks[j] = [first]
+            r.t_first = now
+            self.ttft.append(now - r.t_submit)
+            self.state.finish_chunk(j, r.prompt, len(r.prompt))
             if self.ntok[j] >= r.max_new:
                 self._finish(j, "max_new")
         self._bump_peaks()
@@ -325,7 +453,8 @@ class _Group:
 
     @property
     def busy(self) -> bool:
-        return bool(self.queue) or any(r is not None for r in self.reqs)
+        return (bool(self.queue) or bool(self.prefilling)
+                or any(r is not None for r in self.reqs))
 
 
 class Server:
@@ -431,10 +560,15 @@ class Server:
 
     @hot_path
     def step(self) -> bool:
-        """One scheduler tick: admit into freed slots, then one decode step
-        per busy group. Returns True while any work remains."""
+        """One scheduler tick: admit into freed slots, then (chunked
+        groups) at most one bounded prefill chunk, then one decode step
+        per busy group. Chunk before decode: a prompt completing its last
+        chunk goes live the same tick, so its first decode step follows
+        immediately. Returns True while any work remains."""
         for g in self._groups.values():
             g.admit(self.admit_log)
+        for g in self._groups.values():
+            g.prefill_chunk_once()
         for g in self._groups.values():
             g.decode_once()
         return any(g.busy for g in self._groups.values())
@@ -455,19 +589,38 @@ class Server:
 
     @hot_path
     def stats(self) -> dict:
-        """Per-group decode-step count and request-latency tail (submit ->
+        """Per-group decode-step count, request-latency tail (submit ->
         tokens materialized; measured at a real device sync, unlike the
-        async per-step dispatch times)."""
+        async per-step dispatch times), queue/prefill occupancy and TTFT.
+        Everything here is assembled from host mirrors maintained at
+        scheduling events — calling stats() mid-serve costs zero device
+        syncs (the paged peak sample below reads allocator counters, not
+        device state)."""
         out = {}
         for name, g in self._groups.items():
             lat = sorted(g.req_lat)
+            ttft = sorted(g.ttft)
+
+            def pct(xs, q):
+                return xs[min(len(xs) * q // 100, len(xs) - 1)] \
+                    if xs else 0.0
+
             out[name] = {
                 "decode_steps": g.decode_steps,
                 "p50_req_s": lat[len(lat) // 2] if lat else 0.0,
-                "p95_req_s": lat[min(len(lat) * 19 // 20,
-                                     len(lat) - 1)] if lat else 0.0,
+                "p95_req_s": pct(lat, 95),
                 "admit_waves": len(g.admit_s),
                 "admit_s_total": sum(g.admit_s, 0.0),
+                # two-queue scheduler occupancy + chunk telemetry (the
+                # monolithic path reports 0 chunks and admission-time
+                # TTFT through the same keys)
+                "queue_depth": len(g.queue),
+                "prefilling": len(g.prefilling),
+                "prefill_chunk": g.chunk_c,
+                "prefill_chunks": len(g.chunk_s),
+                "chunk_s_total": sum(g.chunk_s, 0.0),
+                "p50_ttft_s": ttft[len(ttft) // 2] if ttft else 0.0,
+                "p95_ttft_s": pct(ttft, 95),
                 "policy": g.policy.describe(),
                 "kv_axis": g.kv_axis,
             }
@@ -510,6 +663,12 @@ def main():
                          'round-robin); omit for a single default group')
     ap.add_argument("--autotune", action="store_true",
                     help="autotune kernel block sizes per shape bucket")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="serving prefill chunk size in tokens (0 = "
+                         "monolithic wave prefill; > 0 streams prompts "
+                         "into their slots chunk by chunk, one bounded "
+                         "chunk per engine tick, overlapped with decode; "
+                         "families may round up — ssm to cfg.ssm_chunk)")
     ap.add_argument("--paged", action="store_true",
                     help="serve through the paged KV block pool (per-slot "
                          "block tables + refcounted allocator + shared-"
@@ -542,7 +701,8 @@ def main():
         cfg = cfg.reduced()
     policy = resolve_policy(cfg, exp_backend=args.exp_backend,
                             kernel_backend=args.kernel_backend,
-                            autotune=args.autotune or None)
+                            autotune=args.autotune or None,
+                            prefill_chunk=args.prefill_chunk)
     groups = None
     if args.policy_groups:
         groups = parse_policy_groups(args.policy_groups, cfg, base=policy)
@@ -584,7 +744,13 @@ def main():
     for name, s in server.stats().items():
         print(f"  group {name}: {s['decode_steps']} decode steps, "
               f"request latency p50 {s['p50_req_s'] * 1e3:.1f}ms "
-              f"p95 {s['p95_req_s'] * 1e3:.1f}ms")
+              f"p95 {s['p95_req_s'] * 1e3:.1f}ms, "
+              f"ttft p50 {s['p50_ttft_s'] * 1e3:.1f}ms "
+              f"p95 {s['p95_ttft_s'] * 1e3:.1f}ms")
+        if s["prefill_chunks"]:
+            print(f"    chunked prefill: width={s['prefill_chunk']}, "
+                  f"{s['prefill_chunks']} chunks dispatched "
+                  f"({s['chunk_s_total'] * 1e3:.1f}ms host dispatch)")
         if "pool" in s:
             p = s["pool"]
             line = (f"    pool: page={p['page']} used {p['pages_used']}/"

@@ -103,15 +103,48 @@ def init_cache(cfg, batch_size, seq_len):
     return _mod(cfg).init_cache(cfg, batch_size, seq_len)
 
 
-def decode_step(params, cfg, token, cache, pos, *, policy=None):
+def prefill_chunk(params, cfg, tokens, cache, off, clens, *, policy=None):
+    """Resumable chunked prefill: advance every prefilling slot by one
+    fixed-width (B, C) chunk against the contiguous slot-pool ``cache``.
+    ``off`` (B,) per-slot progress cursors (tokens already cached);
+    ``clens`` (B,) valid tokens per row this chunk — 0 marks rows not
+    prefilling this tick, whose state passes through bit-untouched.
+    Returns (last-valid-lane logits, new_cache). KV families write chunk
+    KV at the cursor offset; recurrent families carry (h, conv) across
+    chunks and ignore ``off``."""
+    cfg = _apply_policy(cfg, policy)
+    if cfg.family in ("audio", "vlm"):
+        raise ValueError(f"{cfg.family} family has no chunked prefill")
+    return _mod(cfg).prefill_chunk(params, cfg, tokens, cache, off, clens,
+                                   policy=policy)
+
+
+def prefill_chunk_paged(params, cfg, tokens, cache, tables, off, clens, *,
+                        policy=None):
+    """``prefill_chunk`` over a paged cache: chunk KV scatters into each
+    slot's reserved pages via ``tables`` (B, nS) at its cursor. Linear
+    transformer caches and hybrid ring tables (prompts fit the window)
+    only; the recurrent family has nothing to page."""
+    cfg = _apply_policy(cfg, policy)
+    if cfg.family in ("audio", "vlm", "ssm"):
+        raise ValueError(f"{cfg.family} family has no paged chunked prefill")
+    return _mod(cfg).prefill_chunk_paged(params, cfg, tokens, cache, tables,
+                                         off, clens, policy=policy)
+
+
+def decode_step(params, cfg, token, cache, pos, *, policy=None, live=None):
     """One decode step. ``pos`` may be a scalar (whole batch at one
     position) or a per-slot (B,) vector (continuous batching) for every
-    decoding family — recurrences ignore it, KV caches scatter by it."""
+    decoding family — recurrences ignore it, KV caches scatter by it.
+    ``live`` (B,) int32 (serving only): rows with ``live == 0`` — free
+    slots and slots mid-chunked-prefill — leave their state untouched
+    (KV writes park at a droppable position, recurrent updates are
+    where-masked)."""
     cfg = _apply_policy(cfg, policy)
     if cfg.family == "audio":
         raise ValueError("encoder-only arch has no decode step")
     return _mod(cfg).decode_step(params, cfg, token, cache, pos,
-                                 policy=policy)
+                                 policy=policy, live=live)
 
 
 def init_paged_cache(cfg, batch_size, n_pages, page):
@@ -129,15 +162,17 @@ def init_paged_cache(cfg, batch_size, n_pages, page):
     return transformer.init_paged_cache(cfg, n_pages, page)
 
 
-def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
+def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None,
+                      live=None):
     """One decode step over a paged cache (see ``init_paged_cache``).
     ``tables`` (B, nS) int32 maps each slot's logical pages to physical
-    pool pages; read-only inside the step."""
+    pool pages; read-only inside the step. ``live`` as in
+    ``decode_step`` (dead rows' writes park at gid == N)."""
     cfg = _apply_policy(cfg, policy)
     if cfg.family in ("audio", "ssm"):
         raise ValueError(f"{cfg.family} family has no paged decode step")
     return _mod(cfg).decode_step_paged(params, cfg, token, cache, tables,
-                                       pos, policy=policy)
+                                       pos, policy=policy, live=live)
 
 
 # ----------------------------------------------------------- input specs

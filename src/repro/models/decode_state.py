@@ -95,14 +95,24 @@ def _programs(cfg, policy, mesh=None, kv_axis=None, decode_policy=None):
                                         policy=pol)
             return jnp.argmax(logits, -1).astype(jnp.int32), state
 
+        # chunk_fn(params, toks, state, off, clens) -> (next, state): one
+        # fixed-shape resumable-prefill step over the whole pool. The
+        # state is DONATED like the decode carry; rows with clens == 0
+        # pass through bit-untouched, so decoding slots ride along free.
+        def chunk_fn(p, toks, c, off, clens):
+            logits, c = api.prefill_chunk(p, cfg, toks, c, off, clens,
+                                          policy=pol)
+            return jnp.argmax(logits, -1).astype(jnp.int32), c
+
         if kv_axis is None:
             def decode_fn(p, t, c, pos, live):
                 logits, state = api.decode_step(p, cfg, t, c, pos,
-                                                policy=dpol)
+                                                policy=dpol, live=live)
                 return (jnp.argmax(logits, -1).astype(jnp.int32), state,
                         pos + live)
 
             decode = jax.jit(decode_fn, donate_argnums=(2, 3))
+            chunk = jax.jit(chunk_fn, donate_argnums=(2,))
         else:
             # Sequence-sharded decode (a KVDecodeState-only capability —
             # probed via supports_seq_sharding, never via the family):
@@ -119,13 +129,15 @@ def _programs(cfg, policy, mesh=None, kv_axis=None, decode_policy=None):
             # one source of truth for the pool placement: the program's
             # in/out specs are the spec of the sharding the engine
             # allocates the pool under.
-            cspec = {name: s.spec for name, s in
-                     serve_cache_sharding(cfg, mesh, kv_axis).items()}
+            from jax.sharding import NamedSharding
+            cshard = serve_cache_sharding(cfg, mesh, kv_axis)
+            cspec = {name: s.spec for name, s in cshard.items()}
 
             def decode_local(p, t, c, pos, live):
                 logits, c = decode_step_sharded(p, cfg, t, c, pos,
                                                 policy=dpol,
-                                                seq_axis=kv_axis)
+                                                seq_axis=kv_axis,
+                                                live=live)
                 return (jnp.argmax(logits, -1).astype(jnp.int32), c,
                         pos + live)
 
@@ -134,10 +146,19 @@ def _programs(cfg, policy, mesh=None, kv_axis=None, decode_policy=None):
                           in_specs=(P(), P(), cspec, P(), P()),
                           out_specs=(P(), cspec, P())),
                 donate_argnums=(2, 3))
+            # Sharded chunk prefill: plain GSPMD with the carry pinned to
+            # the pool placement on BOTH sides, so prefill compute lands
+            # on the mesh and admitted rows are produced *under the pool
+            # sharding* — no post-prefill re-placement device_put.
+            repl = NamedSharding(mesh, P())
+            chunk = jax.jit(chunk_fn,
+                            in_shardings=(repl, repl, cshard, repl, repl),
+                            out_shardings=(repl, cshard),
+                            donate_argnums=(2,))
 
         _PROGRAM_CACHE[key] = (jax.jit(prefill_fn),
                                jax.jit(prefill_plain_fn),
-                               decode)
+                               decode, chunk)
     return _PROGRAM_CACHE[key]
 
 
@@ -173,9 +194,9 @@ class DecodeState:
             self.params_decode = jax.device_put(params, self._repl)
             self.pos_dev = jax.device_put(self.pos_dev, self._repl)
         decode_policy = self._autotune_warmup()
-        (self._prefill, self._prefill_plain,
-         self._decode) = _programs(cfg, policy, mesh, kv_axis,
-                                   decode_policy)
+        (self._prefill, self._prefill_plain, self._decode,
+         self._chunk) = _programs(cfg, policy, mesh, kv_axis,
+                                  decode_policy)
 
     # ------------------------------------------------------- family hooks
 
@@ -296,6 +317,57 @@ class DecodeState:
         out-cost a decode step."""
         return True
 
+    # ------------------------------------------------- chunked prefill
+
+    def supports_chunked(self) -> bool:
+        """Whether this pool admits prompts through the resumable chunk
+        path (``begin_chunk`` / ``prefill_chunk_into`` /
+        ``finish_chunk``). Contiguous pools always can: prefill positions
+        never wrap a ring (prompts fit the allocated width — the same
+        invariant monolithic admission relies on), so cache slot ==
+        absolute position throughout prefill."""
+        return True
+
+    def chunk_width(self, c: int) -> int:
+        """Resolve a requested chunk budget of ``c`` tokens to this
+        family's program width. Families with chunk-decomposed
+        recurrences round up so chunk boundaries stay on their native
+        block size (admission-invariant fp summation order)."""
+        return max(1, int(c))
+
+    def begin_chunk(self, slot, prompt, plen) -> int:
+        """Start chunked admission of a ``plen``-token prompt into
+        ``slot``; returns the starting cursor (tokens already cached —
+        nonzero when a paged pool attaches prefix-cache hit pages). The
+        slot's position is pinned at ``plen`` now: decode steps in
+        between see the row as dead (live == 0) and leave both the state
+        row and the parked position untouched, so the completion tick
+        flips the slot live with no extra device write."""
+        del prompt
+        self.pos_dev = self.pos_dev.at[int(slot)].set(int(plen))
+        return 0
+
+    def finish_chunk(self, slot, prompt, plen):
+        """Complete a chunked admission (paged pools publish the
+        prompt's full pages to the prefix cache here)."""
+
+    @hot_path
+    def prefill_chunk_into(self, toks, offs, clens):
+        """One fixed-shape chunk step over the whole pool: ``toks``
+        (pool_width, C) chunk tokens, ``offs``/``clens`` (pool_width,)
+        per-slot cursors and valid counts (0 = row not prefilling this
+        tick; such rows pass through bit-untouched). Returns the
+        (pool_width, 1) greedy tokens at each row's last valid lane —
+        meaningful only for rows whose prompt completes this chunk."""
+        if self.data is None:
+            self.data = self._place_state(
+                api.init_cache(self.cfg, self.pool_width, self.cache_s))
+        first, self.data = self._chunk(
+            self.params_decode, self.place_tokens(jnp.asarray(toks)),
+            self.data, self.place_tokens(jnp.asarray(offs, jnp.int32)),
+            self.place_tokens(jnp.asarray(clens, jnp.int32)))
+        return first
+
     # ----------------------------------------------------------- shared
 
     def _linear_cap(self):
@@ -401,6 +473,14 @@ class RecurrentDecodeState(DecodeState):
         from .ssm import state_axes
         return state_axes(cfg)
 
+    def chunk_width(self, c: int) -> int:
+        # Chunk boundaries pinned to the SSD block size: a boundary on a
+        # ``cfg.ssm_chunk`` multiple keeps the per-block decomposition —
+        # and so the fp summation order — identical to a one-shot pass,
+        # making chunked prefill bitwise admission-invariant.
+        q = self.cfg.ssm_chunk
+        return -(-max(1, int(c)) // q) * q
+
 
 class HybridDecodeState(DecodeState):
     """hybrid (recurrentgemma/griffin): mixed per-period state — RG-LRU
@@ -465,11 +545,23 @@ def _paged_programs(cfg, policy, page, mesh=None, kv_axis=None,
         if kv_axis is None:
             def decode_fn(p, t, c, tab, pos, live):
                 logits, c = api.decode_step_paged(p, cfg, t, c, tab, pos,
-                                                  policy=dpol)
+                                                  policy=dpol, live=live)
                 return (jnp.argmax(logits, -1).astype(jnp.int32), c,
                         pos + live)
 
             decode = jax.jit(decode_fn, donate_argnums=pool_d + (4,))
+
+            # chunk_fn(params, toks, pool, tables, off, clens): resumable
+            # prefill scattered straight into the slots' reserved pages.
+            # Sharded paged pools hold partition-local page ids the host
+            # allocator owns — they admit monolithically (no chunk
+            # program is built for them).
+            def chunk_fn(p, toks, c, tab, off, clens):
+                logits, c = api.prefill_chunk_paged(
+                    p, cfg, toks, c, tab, off, clens, policy=pol)
+                return jnp.argmax(logits, -1).astype(jnp.int32), c
+
+            chunk = jax.jit(chunk_fn, donate_argnums=pool_d)
         else:
             from jax.sharding import PartitionSpec as P
             from repro.distributed.compression import shard_map
@@ -479,7 +571,8 @@ def _paged_programs(cfg, policy, page, mesh=None, kv_axis=None,
 
             def decode_local(p, t, c, tab, pos, live):
                 logits, c = decode_step_paged_sharded(
-                    p, cfg, t, c, tab, pos, policy=dpol, seq_axis=kv_axis)
+                    p, cfg, t, c, tab, pos, policy=dpol, seq_axis=kv_axis,
+                    live=live)
                 return (jnp.argmax(logits, -1).astype(jnp.int32), c,
                         pos + live)
 
@@ -488,8 +581,10 @@ def _paged_programs(cfg, policy, page, mesh=None, kv_axis=None,
                           in_specs=(P(), P(), cspec, tspec, P(), P()),
                           out_specs=(P(), cspec, P())),
                 donate_argnums=pool_d + (4,))
+            chunk = None
 
-        _PAGED_PROGRAM_CACHE[key] = (jax.jit(prefill_hist_fn), decode)
+        _PAGED_PROGRAM_CACHE[key] = (jax.jit(prefill_hist_fn), decode,
+                                     chunk)
     return _PAGED_PROGRAM_CACHE[key]
 
 
@@ -649,9 +744,11 @@ class PagedKVDecodeState(KVDecodeState):
             if self.use_prefix else None
         self.slot_pages = [[] for _ in range(pool_width)]
         self.tables = None                          # device (B, nS) int32
+        self._chunk_hit = {}       # slot -> prefix-hit depth (pages)
         super().__init__(cfg, params, policy, pool_width, cache_s,
                          mesh=mesh, kv_axis=kv_axis)
-        self._hist_prefill, self._decode_paged = _paged_programs(
+        (self._hist_prefill, self._decode_paged,
+         self._chunk_paged) = _paged_programs(
             cfg, policy, self.page, mesh, kv_axis, self._decode_policy)
 
     # ------------------------------------------------------------ plumbing
@@ -898,6 +995,67 @@ class PagedKVDecodeState(KVDecodeState):
             live)
         return nxt
 
+    # ------------------------------------------------- chunked prefill
+
+    def supports_chunked(self) -> bool:
+        # per-slot chunk admission writes through the device tables, so
+        # it needs global == partition-local page ids (unsharded pools)
+        # and a linear, non-wrapping table (no sliding window). Sharded
+        # and windowed paged pools admit monolithically.
+        return self.kv_axis is None and self.cfg.sliding_window is None
+
+    def begin_chunk(self, slot, prompt, plen) -> int:
+        """Reserve the slot's whole table up front (the same full-
+        reservation invariant as monolithic admission) and attach this
+        prompt's own prefix-cache hits — per-request, not the wave-min
+        depth of batched admission, so a chunked request's hit depth is
+        independent of who it was admitted with. The cursor starts past
+        the attached pages; shared pages are never written by chunks
+        (only full pages are shared, and writes begin at the cursor)."""
+        self._ensure_pool()
+        from .block_pool import OutOfBlocks
+        j, plen = int(slot), int(plen)
+        prompt = np.asarray(prompt).reshape(-1)[:plen]
+        page, ns = self.page, self.ns
+        h_pages, held = 0, []
+        if self.pcache is not None:
+            # a hit must leave >= 1 suffix token to emit logits from
+            h_pages = min(self.pcache.probe(prompt), (plen - 1) // page)
+            if h_pages:
+                held = self.pcache.attach(prompt, max_pages=h_pages)
+                h_pages = len(held)
+        try:
+            tab = held + self.alloc.alloc_cols(range(h_pages, ns))
+        except OutOfBlocks:
+            for gid in held:
+                self.alloc.decref(int(gid))
+            raise
+        self.slot_pages[j] = tab
+        self._chunk_hit[j] = h_pages
+        self.tables = self.tables.at[j].set(
+            jnp.asarray(self._local_ids(tab), jnp.int32))
+        self.pos_dev = self.pos_dev.at[j].set(plen)
+        return h_pages * page
+
+    def finish_chunk(self, slot, prompt, plen):
+        # publish the prompt's full pages (past the attached hits) so
+        # later requests share them — the cache takes its own refs
+        j, plen = int(slot), int(plen)
+        h0 = self._chunk_hit.pop(j, 0)
+        if self.pcache is None:
+            return
+        prompt = np.asarray(prompt).reshape(-1)[:plen]
+        for c in range(h0, plen // self.page):
+            self.pcache.insert(prompt, c, self.slot_pages[j][c])
+
+    @hot_path
+    def prefill_chunk_into(self, toks, offs, clens):
+        self._ensure_pool()
+        first, self.data = self._chunk_paged(
+            self.params, jnp.asarray(toks), self.data, self.tables,
+            jnp.asarray(offs, jnp.int32), jnp.asarray(clens, jnp.int32))
+        return first
+
     def reset_slots(self, slots):
         sl = jnp.asarray(np.asarray(slots))
         self.pos_dev = self.pos_dev.at[sl].set(0)
@@ -905,6 +1063,7 @@ class PagedKVDecodeState(KVDecodeState):
             for gid in self.slot_pages[int(j)]:
                 self.alloc.decref(int(gid))
             self.slot_pages[int(j)] = []
+            self._chunk_hit.pop(int(j), None)
         if self.tables is not None:
             self.tables = self.tables.at[sl].set(0)
 
@@ -938,8 +1097,9 @@ class PagedHybridDecodeState(HybridDecodeState):
         self.tables = None
         super().__init__(cfg, params, policy, pool_width, cache_s,
                          mesh=mesh, kv_axis=kv_axis)
-        _, self._decode_paged = _paged_programs(cfg, policy, self.page,
-                                                None, None, policy)
+        (_, self._decode_paged,
+         self._chunk_paged) = _paged_programs(cfg, policy, self.page,
+                                              None, None, policy)
 
     def can_admit(self, n_slots: int) -> bool:
         return self.alloc.n_free() >= n_slots * self.ns
@@ -1022,6 +1182,29 @@ class PagedHybridDecodeState(HybridDecodeState):
             self.params_decode, last, self.data, self.tables, self.pos_dev,
             live)
         return nxt
+
+    # ------------------------------------------------- chunked prefill
+
+    def begin_chunk(self, slot, prompt, plen) -> int:
+        # allocate the slot's whole ring up front, exactly like
+        # monolithic admission; prompts fit the window so prefill
+        # positions never wrap the ring table
+        self._ensure_pool()
+        j = int(slot)
+        held = self.alloc.alloc_cols(range(self.ns))
+        self.slot_pages[j] = held
+        self.tables = self.tables.at[j].set(
+            jnp.asarray(np.asarray(held), jnp.int32))
+        self.pos_dev = self.pos_dev.at[j].set(int(plen))
+        return 0
+
+    @hot_path
+    def prefill_chunk_into(self, toks, offs, clens):
+        self._ensure_pool()
+        first, self.data = self._chunk_paged(
+            self.params, jnp.asarray(toks), self.data, self.tables,
+            jnp.asarray(offs, jnp.int32), jnp.asarray(clens, jnp.int32))
+        return first
 
     def reset_slots(self, slots):
         super().reset_slots(slots)       # positions + recurrent leaf rows

@@ -24,7 +24,8 @@ from .layers import (dense_init, embed_init, norm_init, norm_apply,
                      mask_padded_logits)
 from .state_spec import LeafAxes
 from .transformer import (attn_init, attn_apply, attn_decode, _qkv,
-                          _rope_pos, _write_token_kv)
+                          _rope_pos, _write_token_kv, _write_chunk_kv,
+                          _write_chunk_kv_paged, PARKED_POS)
 
 RG_LRU_C = 8.0     # Griffin's fixed exponent scale
 
@@ -158,18 +159,20 @@ def attn_layer_apply(x, p, cfg, pos, kv_valid=None, policy=None):
     return x, kv
 
 
-def attn_layer_decode(x, p, cfg, ck, cv, pos, wpos, policy=None):
+def attn_layer_decode(x, p, cfg, ck, cv, pos, wpos, policy=None,
+                      oob_drop=False):
     """Single-token local-attention decode. ``pos`` (and the ring-buffer
     write cursor ``wpos``) may be a scalar or a per-slot (B,) vector — the
     continuous-batching engine's slots each advance at their own
     position; the scatter write and the per-row cache_len mask keep them
-    independent."""
+    independent. ``oob_drop`` lets parked rows (wpos == PARKED_POS) skip
+    their cache write entirely."""
     from repro.core.attention import decode_attention
     b = x.shape[0]
     h = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
     q, k, v = _qkv(h, p["attn"], cfg, _rope_pos(b, pos))
-    ck = _write_token_kv(ck, k, wpos, "bshd")
-    cv = _write_token_kv(cv, v, wpos, "bshd")
+    ck = _write_token_kv(ck, k, wpos, "bshd", oob_drop=oob_drop)
+    cv = _write_token_kv(cv, v, wpos, "bshd", oob_drop=oob_drop)
     w = cfg.sliding_window
     pos = jnp.asarray(pos, jnp.int32)
     valid = jnp.minimum(pos + 1, w) if w else pos + 1
@@ -370,6 +373,169 @@ def prefill(params, cfg, tokens, *, prompt_len=None, policy=None):
     return mask_padded_logits(logits, cfg.vocab), cache
 
 
+def _attn_chunk(h, p, cfg, ck, cv, off, clens, policy=None):
+    """Chunk-prefill local attention: scatter the chunk's K/V into the
+    ring cache at per-row cursor offsets, then attend the Q-chunk
+    causally (window-masked) over the updated cache. Prefill positions
+    never wrap the ring — prompts fit the window (the same invariant the
+    monolithic ragged path enforces) — so cache slot == absolute
+    position throughout prefill. Returns (attn_out, ck, cv)."""
+    from repro.core.attention import attention
+    b, c, _ = h.shape
+    s = ck.shape[1]
+    pos = off[:, None] + jnp.arange(c)[None, :]            # (B, C)
+    q, k, v = _qkv(h, p, cfg, pos)
+    lane = jnp.arange(c)[None, :] < clens[:, None]
+    k = jnp.where(lane[:, :, None, None], k, 0)            # pad hygiene
+    v = jnp.where(lane[:, :, None, None], v, 0)
+    rows = jnp.where(lane, pos, s)                         # invalid -> drop
+    ck = _write_chunk_kv(ck, k, rows, "bshd")
+    cv = _write_chunk_kv(cv, v, rows, "bshd")
+    kv_valid = jnp.arange(s)[None, :] < (off + clens)[:, None]
+    o = attention(q, ck, cv, causal=True, window=cfg.sliding_window,
+                  q_offset=off, exp_impl=cfg.exp_impl,
+                  impl=cfg.attention_impl, unroll=cfg.unroll_scans,
+                  block_k=cfg.attn_block_k, mm_dtype=cfg.attn_mm_dtype,
+                  kv_valid=kv_valid, policy=policy)
+    return o.reshape(b, c, -1) @ p["wo"], ck, cv
+
+
+def _chunk_last_logits(params, cfg, x, last_idx):
+    b = x.shape[0]
+    x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    idx = last_idx[:, None, None]
+    xl = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+    ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
+    logits = jnp.einsum("bsd,dv->bsv", xl.astype(ldt),
+                        params["unembed"].astype(ldt),
+                        preferred_element_type=jnp.float32)
+    return mask_padded_logits(logits, cfg.vocab)
+
+
+def _prefill_chunk_impl(params, cfg, tokens, cache, off, clens, policy,
+                        attn_fn):
+    """Shared chunked-prefill driver: recurrent layers continue from the
+    carried (h, conv) snapshots; the per-period attention layer is
+    supplied by ``attn_fn(x_normed, period_attn_p, kv_leaves) ->
+    (attn_out, new_kv_leaves)``. Rows with ``clens == 0`` are inert: the
+    RG-LRU keeps its carried state explicitly (``last_idx`` would clamp
+    to 0 and take one real recurrence step otherwise), the conv state
+    gathers back its own left context, and KV writes park."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    b, c = tokens.shape
+    clens = jnp.asarray(clens, jnp.int32).reshape(-1)
+    period, n_per, tail = _period_counts(cfg)
+    last_idx = jnp.clip(clens - 1, 0, c - 1)
+    alive = clens > 0
+
+    def rec_chunk(x, rec_p, h, conv):
+        y, (h_last, new_conv) = rec_layer_apply(
+            x, rec_p, cfg, h0=h, conv_state=conv, last_idx=last_idx,
+            valid_len=clens, policy=policy)
+        h_last = jnp.where(alive[:, None], h_last, h)
+        return y, (h_last, new_conv.astype(jnp.float32))
+
+    def body(x, inp):
+        period_p, pc = inp
+        period_p = _cast(period_p, dt)
+
+        def rec_body(x, rec_inp):
+            rec_p, h, conv = rec_inp
+            return rec_chunk(x, rec_p, h, conv)
+
+        x, (hs, convs) = jax.lax.scan(
+            rec_body, x, (period_p["recs"], pc["rec_h"], pc["rec_conv"]),
+            unroll=cfg.unroll_scans)
+        ap = period_p["attn"]
+        h = norm_apply(x, ap["ln"], cfg.norm, cfg.norm_eps)
+        a, kv = attn_fn(h, ap["attn"], {"k": pc["k"], "v": pc["v"]})
+        x = x + a
+        h2 = norm_apply(x, ap["ln_mlp"], cfg.norm, cfg.norm_eps)
+        x = x + mlp_apply(h2, ap["mlp"], cfg.act, cfg.exp_impl)
+        return x, {"rec_h": hs, "rec_conv": convs,
+                   "k": kv["k"], "v": kv["v"]}
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, pcache = jax.lax.scan(body, x, (params["periods"], cache["periods"]),
+                             unroll=n_per if cfg.unroll_scans else 1)
+    new_cache = {"periods": pcache}
+    if tail:
+        def tail_body(x, rec_inp):
+            rec_p, h, conv = rec_inp
+            y, (h_last, conv2) = rec_chunk(x, rec_p, h, conv)
+            return y, {"h": h_last, "conv": conv2}
+        x, tcache = jax.lax.scan(
+            tail_body, x, (_cast(params["tail"], dt), cache["tail"]["h"],
+                           cache["tail"]["conv"]), unroll=cfg.unroll_scans)
+        new_cache["tail"] = tcache
+    return _chunk_last_logits(params, cfg, x, last_idx), new_cache
+
+
+def prefill_chunk(params, cfg, tokens, cache, off, clens, *, policy=None):
+    """Resumable chunked prefill over the contiguous hybrid cache: each
+    recurrent layer continues from its carried (h, conv) snapshot and the
+    local-attention layers write/attend the ring KV at per-row cursors.
+    The RG-LRU combine tree depends on the scan length, so chunk widths
+    must be pinned (scan-length-invariant) for run-to-run determinism;
+    chunked output is token-identical — not bitwise — to one-shot prefill
+    (whose combine tree spans the full padded width). Arguments and
+    semantics as ``transformer.prefill_chunk``."""
+    off = jnp.asarray(off, jnp.int32).reshape(-1)
+    clens = jnp.asarray(clens, jnp.int32).reshape(-1)
+
+    def attn_fn(h, ap, kv):
+        a, ck, cv = _attn_chunk(h, ap, cfg, kv["k"], kv["v"], off, clens,
+                                policy=policy)
+        return a, {"k": ck, "v": cv}
+
+    return _prefill_chunk_impl(params, cfg, tokens, cache, off, clens,
+                               policy, attn_fn)
+
+
+def prefill_chunk_paged(params, cfg, tokens, cache, tables, off, clens, *,
+                        policy=None):
+    """Chunked prefill over a paged hybrid cache: recurrent snapshots as
+    in ``prefill_chunk``; the chunk's K/V scatter into each slot's ring
+    pages at its cursor and the Q-chunk attends the gathered pages.
+    Prefill positions never wrap the ring (prompts fit the window), so
+    ``tables[b, pos // page]`` is cursor-monotonic during prefill."""
+    from repro.kernels.decode_attention.ops import paged_gather
+    from repro.core.attention import attention
+    b, c = tokens.shape
+    off = jnp.asarray(off, jnp.int32).reshape(-1)
+    clens = jnp.asarray(clens, jnp.int32).reshape(-1)
+    page = cache["periods"]["k"].shape[2]      # (n_per, N, page, Hkv, hd)
+    n = cache["periods"]["k"].shape[1]
+    ns = tables.shape[1]
+    pos = off[:, None] + jnp.arange(c)[None, :]
+    lane = jnp.arange(c)[None, :] < clens[:, None]
+    cols = jnp.clip(pos // page, 0, ns - 1)
+    gids = jnp.where(lane, tables[jnp.arange(b)[:, None], cols], n)
+    inpage = jnp.where(lane, pos % page, 0)
+    kv_valid = jnp.arange(ns * page)[None, :] < (off + clens)[:, None]
+
+    def attn_fn(h, ap, kv):
+        q, k, v = _qkv(h, ap, cfg, pos)
+        k = jnp.where(lane[:, :, None, None], k, 0)
+        v = jnp.where(lane[:, :, None, None], v, 0)
+        pk = _write_chunk_kv_paged(kv["k"], k, gids, inpage, "bshd")
+        pv = _write_chunk_kv_paged(kv["v"], v, gids, inpage, "bshd")
+        kk = paged_gather(pk, tables, "bshd")
+        vv = paged_gather(pv, tables, "bshd")
+        o = attention(q, kk, vv, causal=True, window=cfg.sliding_window,
+                      q_offset=off, exp_impl=cfg.exp_impl,
+                      impl=cfg.attention_impl, unroll=cfg.unroll_scans,
+                      block_k=cfg.attn_block_k, mm_dtype=cfg.attn_mm_dtype,
+                      kv_valid=kv_valid, policy=policy)
+        return o.reshape(h.shape[0], c, -1) @ ap["wo"], {"k": pk, "v": pv}
+
+    return _prefill_chunk_impl(params, cfg, tokens, cache, off, clens,
+                               policy, attn_fn)
+
+
 def init_paged_cache(cfg, batch, n_pages, page, dtype=jnp.bfloat16):
     """Paged hybrid state: the recurrent leaves keep their slot axis
     (O(1) per slot — nothing to page), the local-attention KV leaves
@@ -398,18 +564,27 @@ def init_paged_cache(cfg, batch, n_pages, page, dtype=jnp.bfloat16):
 
 
 def attn_layer_decode_paged(x, p, cfg, pk, pv, tables, pos, wpos,
-                            policy=None):
+                            policy=None, live=None):
     """``attn_layer_decode`` against a page pool: the ring write lands in
     page ``tables[b, wpos // page]`` at offset ``wpos % page``; validity
-    stays by-length (the ring holds exactly the window)."""
+    stays by-length (the ring holds exactly the window). ``live`` parks
+    dead rows' writes at gid == N (droppable) — the write position can't
+    be parked directly, a parked ``wpos // page`` would clamp back into
+    the table."""
     from .transformer import _paged_attn, _write_token_kv_paged
     b = x.shape[0]
     page = pk.shape[1]
     h = norm_apply(x, p["ln"], cfg.norm, cfg.norm_eps)
     q, k, v = _qkv(h, p["attn"], cfg, _rope_pos(b, pos))
     gids = tables[jnp.arange(b), wpos // page]
-    pk = _write_token_kv_paged(pk, k, gids, wpos % page, "bshd")
-    pv = _write_token_kv_paged(pv, v, gids, wpos % page, "bshd")
+    drop = live is not None
+    if drop:
+        gids = jnp.where(jnp.asarray(live).reshape(-1) > 0, gids,
+                         pk.shape[0])
+    pk = _write_token_kv_paged(pk, k, gids, wpos % page, "bshd",
+                               oob_drop=drop)
+    pv = _write_token_kv_paged(pv, v, gids, wpos % page, "bshd",
+                               oob_drop=drop)
     w = cfg.sliding_window
     pos = jnp.asarray(pos, jnp.int32)
     valid = jnp.minimum(pos + 1, w) if w else pos + 1
@@ -420,10 +595,12 @@ def attn_layer_decode_paged(x, p, cfg, pk, pv, tables, pos, wpos,
     return x, pk, pv
 
 
-def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
+def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None,
+                      live=None):
     """One decode step over a paged hybrid cache (see init_paged_cache).
     ``tables`` (B, W/page) int32 ring block table shared by every period;
-    ``pos`` per-slot (B,) int32."""
+    ``pos`` per-slot (B,) int32. ``live`` (B,) masks dead rows' state
+    updates (recurrent snapshots kept, KV writes parked at gid == N)."""
     dt = jnp.dtype(cfg.compute_dtype)
     x = jnp.take(params["embed"], token, axis=0).astype(dt)
     b = x.shape[0]
@@ -431,6 +608,7 @@ def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
     w = cfg.sliding_window
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
     wpos = pos % w if w else pos
+    keep = None if live is None else jnp.asarray(live).reshape(-1) > 0
 
     def body(x, inp):
         period_p, pc = inp
@@ -440,14 +618,18 @@ def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
             rec_p, h, conv = rec_inp
             y, new = rec_layer_decode(x, rec_p, cfg, {"h": h, "conv": conv},
                                       policy=policy)
-            return y, (new["h"], new["conv"].astype(jnp.float32))
+            hnew, cnew = new["h"], new["conv"].astype(jnp.float32)
+            if keep is not None:
+                hnew = jnp.where(keep[:, None], hnew, h)
+                cnew = jnp.where(keep[:, None, None], cnew, conv)
+            return y, (hnew, cnew)
 
         x, (hs, convs) = jax.lax.scan(
             rec_body, x, (period_p["recs"], pc["rec_h"], pc["rec_conv"]),
             unroll=cfg.unroll_scans)
         x, pk, pv = attn_layer_decode_paged(x, period_p["attn"], cfg,
                                             pc["k"], pc["v"], tables, pos,
-                                            wpos, policy=policy)
+                                            wpos, policy=policy, live=live)
         return x, {"rec_h": hs, "rec_conv": convs, "k": pk, "v": pv}
 
     n_per = cfg.n_layers // cfg.attn_period
@@ -459,7 +641,11 @@ def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
             rec_p, h, conv = inp
             y, new = rec_layer_decode(x, rec_p, cfg,
                                       {"h": h, "conv": conv}, policy=policy)
-            return y, {"h": new["h"], "conv": new["conv"].astype(jnp.float32)}
+            hnew, cnew = new["h"], new["conv"].astype(jnp.float32)
+            if keep is not None:
+                hnew = jnp.where(keep[:, None], hnew, h)
+                cnew = jnp.where(keep[:, None, None], cnew, conv)
+            return y, {"h": hnew, "conv": cnew}
         x, tcache = jax.lax.scan(
             tail_body, x, (_cast(params["tail"], dt), cache["tail"]["h"],
                            cache["tail"]["conv"]), unroll=cfg.unroll_scans)
@@ -472,16 +658,28 @@ def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
     return mask_padded_logits(logits, cfg.vocab), new_cache
 
 
-def decode_step(params, cfg, token, cache, pos, *, policy=None):
+def decode_step(params, cfg, token, cache, pos, *, policy=None, live=None):
     """One decode step. ``pos`` is a scalar (whole batch at one position)
     or a per-slot (B,) vector — the continuous-batching engine's slots
-    each advance independently through their own ring-buffer cursor."""
+    each advance independently through their own ring-buffer cursor.
+    ``live`` (B,) masks dead rows' state updates: recurrent snapshots
+    pass through bit-untouched and ring writes park at PARKED_POS."""
     dt = jnp.dtype(cfg.compute_dtype)
     x = jnp.take(params["embed"], token, axis=0).astype(dt)
+    b = x.shape[0]
     period, n_per, tail = _period_counts(cfg)
     w = cfg.sliding_window
     pos = jnp.asarray(pos, jnp.int32)
     wpos = pos % w if w else pos
+    keep = None if live is None else jnp.asarray(live).reshape(-1) > 0
+    drop = live is not None
+    if drop:
+        # Park AFTER the ring wrap — a post-modulo position is always in
+        # range, so masking before the wrap would alias into the ring.
+        wpos = jnp.where(keep,
+                         jnp.broadcast_to(
+                             jnp.asarray(wpos, jnp.int32).reshape(-1), (b,)),
+                         PARKED_POS)
 
     def body(x, inp):
         period_p, pc = inp
@@ -491,14 +689,18 @@ def decode_step(params, cfg, token, cache, pos, *, policy=None):
             rec_p, h, conv = rec_inp
             y, new = rec_layer_decode(x, rec_p, cfg, {"h": h, "conv": conv},
                                       policy=policy)
-            return y, (new["h"], new["conv"].astype(jnp.float32))
+            hnew, cnew = new["h"], new["conv"].astype(jnp.float32)
+            if keep is not None:
+                hnew = jnp.where(keep[:, None], hnew, h)
+                cnew = jnp.where(keep[:, None, None], cnew, conv)
+            return y, (hnew, cnew)
 
         x, (hs, convs) = jax.lax.scan(
             rec_body, x, (period_p["recs"], pc["rec_h"], pc["rec_conv"]),
             unroll=cfg.unroll_scans)
         x, ck, cv = attn_layer_decode(x, period_p["attn"], cfg,
                                       pc["k"], pc["v"], pos, wpos,
-                                      policy=policy)
+                                      policy=policy, oob_drop=drop)
         return x, {"rec_h": hs, "rec_conv": convs, "k": ck, "v": cv}
 
     n_per = cfg.n_layers // cfg.attn_period
@@ -510,7 +712,11 @@ def decode_step(params, cfg, token, cache, pos, *, policy=None):
             rec_p, h, conv = inp
             y, new = rec_layer_decode(x, rec_p, cfg,
                                       {"h": h, "conv": conv}, policy=policy)
-            return y, {"h": new["h"], "conv": new["conv"].astype(jnp.float32)}
+            hnew, cnew = new["h"], new["conv"].astype(jnp.float32)
+            if keep is not None:
+                hnew = jnp.where(keep[:, None], hnew, h)
+                cnew = jnp.where(keep[:, None, None], cnew, conv)
+            return y, {"h": hnew, "conv": cnew}
         x, tcache = jax.lax.scan(
             tail_body, x, (_cast(params["tail"], dt), cache["tail"]["h"],
                            cache["tail"]["conv"]), unroll=cfg.unroll_scans)

@@ -88,8 +88,16 @@ def _causal_conv(u, w, b, state=None, valid_len=None):
 
 
 def ssm_layer_apply(x, p, cfg, return_state=False, prompt_len=None,
-                    policy=None):
+                    policy=None, h0=None, conv_state=None):
     """Full-sequence SSD. x: (B, S, D) -> (B, S, D) [, final state].
+
+    ``h0`` (B, nh, hd, ds) and ``conv_state`` (B, W-1, C) resume the
+    recurrence from a carried state (chunked prefill): the inter-chunk
+    scan starts at ``h0`` instead of zeros and the causal conv reads its
+    left context from ``conv_state``. When the chunk boundary falls on a
+    ``cfg.ssm_chunk`` multiple the per-block decomposition — and so the
+    fp summation order — is identical to a one-shot pass, making chunked
+    prefill bitwise equal to monolithic prefill.
 
     Arbitrary sequence lengths are supported: the sequence is padded to
     the next ``cfg.ssm_chunk`` multiple and the pad steps are masked by
@@ -128,6 +136,7 @@ def ssm_layer_apply(x, p, cfg, return_state=False, prompt_len=None,
     if return_state:
         state_at = plen if prompt_len is not None else s
     conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                        state=conv_state,
                                         valid_len=state_at)
     conv_out = vexp_silu(conv_out, exp_fn)
     xin, Bc, Cc = jnp.split(conv_out, [di, di + ng * ds], axis=-1)
@@ -191,9 +200,10 @@ def ssm_layer_apply(x, p, cfg, return_state=False, prompt_len=None,
         hnew = hprev * exp_fn(ltot)[..., None, None] + st
         return hnew, hprev
 
-    h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    hstart = (jnp.zeros((b, nh, hd, ds), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
     h_final, hprevs = jax.lax.scan(
-        scan_body, h0,
+        scan_body, hstart,
         (states.transpose(1, 0, 2, 3, 4), Ltot.transpose(1, 0, 2)),
         unroll=cfg.unroll_scans)
     hprevs = hprevs.transpose(1, 0, 2, 3, 4)        # (B,nc,nh,hd,ds)
@@ -357,13 +367,63 @@ def prefill(params, cfg, tokens, *, prompt_len=None, policy=None):
     return mask_padded_logits(logits, cfg.vocab), state
 
 
-def decode_step(params, cfg, token, state, pos, *, policy=None):
+def prefill_chunk(params, cfg, tokens, state, off, clens, *, policy=None):
+    """Resumable chunked prefill: one SSD pass over a (B, C) token chunk,
+    continuing each layer's recurrence from the carried ``state``.
+
+    ``off`` is accepted for the family-uniform chunk signature and unused
+    — the recurrence carries all positional information in its state.
+    ``clens`` (B,) is the number of valid tokens per row in this chunk;
+    rows with ``clens == 0`` are inert (dt-masked no-op recurrence, conv
+    state gathered back from the carried left context), so their state
+    passes through bit-untouched. Chunk widths must be a multiple of
+    ``cfg.ssm_chunk`` so the per-block decomposition — and the fp
+    summation order — matches a one-shot pass bitwise.
+
+    Returns (last_logits, new_state) with logits taken at each row's
+    last valid chunk token."""
+    del off
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    b, s = tokens.shape
+    clens = jnp.asarray(clens, jnp.int32).reshape(-1)
+
+    def body(x, inp):
+        layer_p, h, conv = inp
+        layer_p = jax.tree.map(
+            lambda a: a.astype(dt)
+            if a.dtype == jnp.float32 and a.ndim > 1 else a, layer_p)
+        y, new = ssm_layer_apply(x, layer_p, cfg, return_state=True,
+                                 prompt_len=clens, policy=policy,
+                                 h0=h, conv_state=conv)
+        return y, new
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, new_state = jax.lax.scan(
+        body, x, (params["layers"], state["h"], state["conv"]),
+        unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    idx = jnp.clip(clens - 1, 0, s - 1)[:, None, None]
+    xl = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+    ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
+    logits = jnp.einsum("bsd,dv->bsv", xl.astype(ldt),
+                        params["unembed"].astype(ldt),
+                        preferred_element_type=jnp.float32)
+    return mask_padded_logits(logits, cfg.vocab), new_state
+
+
+def decode_step(params, cfg, token, state, pos, *, policy=None, live=None):
     """One decode step. ``pos`` (scalar or per-slot (B,)) is accepted for
     the family-uniform signature and unused — the recurrence carries all
-    positional information in its state."""
+    positional information in its state. ``live`` (B,) masks state
+    updates for parked rows (e.g. slots mid-chunked-prefill): rows with
+    ``live == 0`` keep their carried (h, conv) bit-untouched."""
     del pos
     dt = jnp.dtype(cfg.compute_dtype)
     x = jnp.take(params["embed"], token, axis=0).astype(dt)
+    keep = None if live is None else jnp.asarray(live).reshape(-1) > 0
 
     def body(x, inp):
         layer_p, h, conv = inp
@@ -372,6 +432,9 @@ def decode_step(params, cfg, token, state, pos, *, policy=None):
             if a.dtype == jnp.float32 and a.ndim > 1 else a, layer_p)
         y, new = ssm_layer_decode(x, layer_p, cfg, {"h": h, "conv": conv},
                                   policy=policy)
+        if keep is not None:
+            new = {"h": jnp.where(keep[:, None, None, None], new["h"], h),
+                   "conv": jnp.where(keep[:, None, None], new["conv"], conv)}
         return y, new
 
     x, new_state = jax.lax.scan(

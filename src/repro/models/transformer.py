@@ -148,27 +148,40 @@ def _write_token_kv(cache, kv, pos, layout, *, oob_drop=False):
 
 
 def attn_decode(x, p, cfg, cache_k, cache_v, pos, *, window=None,
-                policy=None):
+                policy=None, write_pos=None, oob_drop=False):
     """Single-token decode. cache_[kv]: (B, Smax, Hkv, hd) for "bshd"
     layout, (B, Hkv, Smax, hd) for "bhsd"; pos: scalar int or per-slot
     (B,) vector of current positions. Returns y, (new_k_cache,
-    new_v_cache)."""
+    new_v_cache).
+
+    ``write_pos`` (with ``oob_drop``) splits the write coordinate from the
+    attention position: the serving engine parks dead / mid-chunk-prefill
+    slots at a droppable sentinel so the step never mutates their cache
+    rows while still computing (discarded) attention for them."""
     b = x.shape[0]
     lay = cfg.kv_cache_layout
     q, k, v = _qkv(x, p, cfg, _rope_pos(b, pos))
     if lay == "bhsd":
         k = k.transpose(0, 2, 1, 3)          # (B, Hkv, 1, hd) — tiny
         v = v.transpose(0, 2, 1, 3)
-    ck = _write_token_kv(cache_k, k, pos, lay)
-    cv = _write_token_kv(cache_v, v, pos, lay)
+    wp = pos if write_pos is None else write_pos
+    ck = _write_token_kv(cache_k, k, wp, lay, oob_drop=oob_drop)
+    cv = _write_token_kv(cache_v, v, wp, lay, oob_drop=oob_drop)
     o = decode_attention(q, ck, cv, cache_len=pos + 1, window=window,
                          exp_impl=cfg.exp_impl, mm_dtype=cfg.attn_mm_dtype,
                          layout=lay, policy=policy)
     return o.reshape(b, 1, -1) @ p["wo"], (ck, cv)
 
 
+# Droppable write sentinel for dead / mid-chunk-prefill slots: far above
+# any cache extent, so an oob_drop scatter (which remaps >= S to the
+# droppable index) never lands it. Must be applied AFTER any ring-buffer
+# wrap — a post-modulo position is always in range.
+PARKED_POS = jnp.int32(1 << 30)
+
+
 def attn_decode_sharded(x, p, cfg, cache_k, cache_v, pos, *, seq_axis,
-                        policy):
+                        policy, write_pos=None):
     """Single-token decode over a sequence-sharded KV cache (call INSIDE
     ``shard_map``). ``cache_[kv]`` are each shard's *local* S-slice; every
     shard computes the token's K/V (tiny, replicated work), lands it with
@@ -187,7 +200,8 @@ def attn_decode_sharded(x, p, cfg, cache_k, cache_v, pos, *, seq_axis,
     local_s = cache_k.shape[s_ax]
     off = jax.lax.axis_index(seq_axis) * local_s
     gpos = jnp.asarray(pos, jnp.int32)
-    lpos = jnp.broadcast_to(gpos.reshape(-1), (b,)) - off
+    gw = gpos if write_pos is None else jnp.asarray(write_pos, jnp.int32)
+    lpos = jnp.broadcast_to(gw.reshape(-1), (b,)) - off
     ck = _write_token_kv(cache_k, k, lpos, lay, oob_drop=True)
     cv = _write_token_kv(cache_v, v, lpos, lay, oob_drop=True)
     from repro.kernels.decode_attention.ops import \
@@ -486,16 +500,128 @@ def prefill(params, cfg, tokens, extra=None, *, prompt_len=None, policy=None,
     return mask_padded_logits(logits, cfg.vocab), cache
 
 
+# ------------------------------------------------------------ chunked prefill
+
+def _write_chunk_kv(cache, kv, rows, layout):
+    """Scatter a C-token chunk into per-row cache positions.
+
+    kv: (B, C, Hkv, hd); rows: (B, C) absolute cache positions with
+    invalid lanes pre-remapped to S (a droppable index); cache is one
+    layer's slot pool row block — (B, S, Hkv, hd) "bshd" / (B, Hkv, S, hd)
+    "bhsd"."""
+    kv = kv.astype(cache.dtype)
+    b, c = rows.shape
+    if layout == "bhsd":
+        hkv = cache.shape[1]
+        return cache.at[jnp.arange(b)[:, None, None],
+                        jnp.arange(hkv)[None, :, None],
+                        rows[:, None, :]].set(kv.transpose(0, 2, 1, 3),
+                                              mode="drop")
+    return cache.at[jnp.arange(b)[:, None], rows].set(kv, mode="drop")
+
+
+def _attn_chunk(x, p, cfg, ck, cv, off, clens, *, policy=None):
+    """Chunk-prefill attention: write the chunk's K/V into the slot cache
+    at per-row cursor offsets, then attend the Q-chunk causally over the
+    *updated* cache — already-cached prefix and intra-chunk keys in one
+    sweep, masked by per-row ``q_offset``/``kv_valid`` (the flash path;
+    no new kernel). Returns y, (ck, cv)."""
+    b, c, _ = x.shape
+    lay = cfg.kv_cache_layout
+    s = ck.shape[cache_seq_axis(lay, stacked=False)]
+    pos = off[:, None] + jnp.arange(c)[None, :]            # (B, C)
+    q, k, v = _qkv(x, p, cfg, pos)
+    lane = jnp.arange(c)[None, :] < clens[:, None]         # (B, C)
+    k = jnp.where(lane[:, :, None, None], k, 0)            # pad hygiene
+    v = jnp.where(lane[:, :, None, None], v, 0)
+    rows = jnp.where(lane, pos, s)                         # invalid -> drop
+    ck = _write_chunk_kv(ck, k, rows, lay)
+    cv = _write_chunk_kv(cv, v, rows, lay)
+    kk, vv = ((ck, cv) if lay == "bshd"
+              else (ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3)))
+    # stale rows of a reused slot (and rows beyond this row's progress)
+    # are masked out of both weights and normalizer.
+    kv_valid = jnp.arange(s)[None, :] < (off + clens)[:, None]
+    o = attention(q, kk, vv, causal=True, window=cfg.sliding_window,
+                  q_offset=off, exp_impl=cfg.exp_impl,
+                  impl=cfg.attention_impl, unroll=cfg.unroll_scans,
+                  block_k=cfg.attn_block_k, mm_dtype=cfg.attn_mm_dtype,
+                  kv_valid=kv_valid, policy=policy)
+    return o.reshape(b, c, -1) @ p["wo"], (ck, cv)
+
+
+def _chunk_logits(params, cfg, x, clens):
+    """Last-valid-lane logits of a chunk program: (B, 1, V)."""
+    x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    b, c, d = x.shape
+    idx = jnp.clip(clens - 1, 0, c - 1)[:, None, None]
+    xl = jnp.take_along_axis(x, jnp.broadcast_to(idx, (b, 1, d)), axis=1)
+    ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
+    logits = jnp.einsum("bsd,dv->bsv", xl.astype(ldt),
+                        unembed_matrix(params, cfg).astype(ldt),
+                        preferred_element_type=jnp.float32)
+    return mask_padded_logits(logits, cfg.vocab)
+
+
+def prefill_chunk(params, cfg, tokens, cache, off, clens, *, policy=None):
+    """Resumable prefill: advance every prefilling slot by one fixed-size
+    chunk, writing chunk KV directly into the slot-pool cache carry.
+
+    tokens (B, C) int32; cache: the *pool* stacked KV (all slots); off
+    (B,) per-slot progress cursors (tokens already cached); clens (B,)
+    valid tokens in this chunk — 0 marks rows not prefilling this tick
+    (decoding / free slots), which pass through bit-untouched. Returns
+    (logits, cache): logits are each row's last-valid-lane next-token
+    distribution, meaningful only for rows whose prompt completes with
+    this chunk (off + clens == prompt_len)."""
+    x = embed_inputs(params, cfg, tokens)
+    off = jnp.asarray(off, jnp.int32).reshape(-1)
+    clens = jnp.asarray(clens, jnp.int32).reshape(-1)
+    dt = _cdtype(cfg)
+
+    def body(x, inp):
+        layer_p, ck, cv = inp
+        layer_p = jax.tree.map(lambda a: a.astype(dt)
+                               if a.dtype == jnp.float32 and a.ndim > 1
+                               else a, layer_p)
+        h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
+        a, (ck, cv) = _attn_chunk(h, layer_p["attn"], cfg, ck, cv, off,
+                                  clens, policy=policy)
+        x = _finish_block(x, h, a, layer_p, cfg, policy=policy)
+        return x, {"k": ck, "v": cv}
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, cache = jax.lax.scan(body, x, (params["layers"],
+                                      cache["k"], cache["v"]),
+                            unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    return _chunk_logits(params, cfg, x, clens), cache
+
+
 @hot_path
-def decode_step(params, cfg, token, cache, pos, *, policy=None):
+def decode_step(params, cfg, token, cache, pos, *, policy=None, live=None):
     """One decode step. token: (B, 1) int32; pos: scalar int32 or per-slot
     (B,) int32 (position of each row's token — the serving engine's slots
     advance independently); cache: stacked KV. Returns (logits,
-    new_cache)."""
+    new_cache).
+
+    ``live`` (B,) int32, serving only: rows with ``live == 0`` (free slots
+    and slots mid-chunk-prefill) must not mutate their cache rows — their
+    write position is parked at a droppable sentinel. Their (garbage)
+    logits are discarded by the engine as before."""
     x = embed_inputs(params, cfg, token)
     dt = _cdtype(cfg)
     # Windowed caches are sized `window`; write position wraps.
     wpos = (pos % cfg.sliding_window) if cfg.sliding_window else pos
+    drop = live is not None
+    if drop:
+        # Park AFTER the ring wrap: a post-modulo position is always in
+        # range, so masking before the wrap would alias back into the ring.
+        b = token.shape[0]
+        wpos = jnp.where(jnp.asarray(live).reshape(-1) > 0,
+                         jnp.broadcast_to(
+                             jnp.asarray(wpos, jnp.int32).reshape(-1), (b,)),
+                         PARKED_POS)
 
     def body(x, inp):
         layer_p, ck, cv = inp
@@ -507,8 +633,10 @@ def decode_step(params, cfg, token, cache, pos, *, policy=None):
             k, v, q = _qkv_single(x, layer_p, cfg, pos)
             if cfg.kv_cache_layout == "bhsd":
                 k, v = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
-            ck = _write_token_kv(ck, k, wpos, cfg.kv_cache_layout)
-            cv = _write_token_kv(cv, v, wpos, cfg.kv_cache_layout)
+            ck = _write_token_kv(ck, k, wpos, cfg.kv_cache_layout,
+                                 oob_drop=drop)
+            cv = _write_token_kv(cv, v, wpos, cfg.kv_cache_layout,
+                                 oob_drop=drop)
             h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
             y, _ = _decode_windowed(h, layer_p, cfg, ck, cv, pos, wpos,
                                     policy=policy)
@@ -516,7 +644,8 @@ def decode_step(params, cfg, token, cache, pos, *, policy=None):
             return x, {"k": ck, "v": cv}
         h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
         a, (ck, cv) = attn_decode(h, layer_p["attn"], cfg, ck, cv, pos,
-                                  policy=policy)
+                                  policy=policy, write_pos=wpos,
+                                  oob_drop=drop)
         x = _finish_block(x, h, a, layer_p, cfg, policy=policy)
         return x, {"k": ck, "v": cv}
 
@@ -536,7 +665,8 @@ def _final_logits(params, cfg, x):
 
 
 @hot_path
-def decode_step_sharded(params, cfg, token, cache, pos, *, policy, seq_axis):
+def decode_step_sharded(params, cfg, token, cache, pos, *, policy, seq_axis,
+                        live=None):
     """One decode step over a sequence-sharded KV cache — the body the
     serving engine wraps in ``shard_map`` (params/token/pos replicated,
     cache sharded along its S axis over ``seq_axis``).
@@ -555,6 +685,15 @@ def decode_step_sharded(params, cfg, token, cache, pos, *, policy, seq_axis):
             "ring-buffer caches decode through the GSPMD path")
     x = embed_inputs(params, cfg, token)
     dt = _cdtype(cfg)
+    wpos = None
+    if live is not None:
+        # Dead / mid-chunk-prefill rows: every shard sees a parked global
+        # position, localizes it out of its slice, and drops the write.
+        b = token.shape[0]
+        wpos = jnp.where(jnp.asarray(live).reshape(-1) > 0,
+                         jnp.broadcast_to(
+                             jnp.asarray(pos, jnp.int32).reshape(-1), (b,)),
+                         PARKED_POS)
 
     def body(x, inp):
         layer_p, ck, cv = inp
@@ -564,7 +703,7 @@ def decode_step_sharded(params, cfg, token, cache, pos, *, policy, seq_axis):
         h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
         a, (ck, cv) = attn_decode_sharded(h, layer_p["attn"], cfg, ck, cv,
                                           pos, seq_axis=seq_axis,
-                                          policy=policy)
+                                          policy=policy, write_pos=wpos)
         x = _finish_block(x, h, a, layer_p, cfg, policy=policy)
         return x, {"k": ck, "v": cv}
 
@@ -657,7 +796,8 @@ def _paged_attn(q, pool_k, pool_v, tab, cache_len, cfg, policy, lay=None):
 
 
 @hot_path
-def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
+def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None,
+                      live=None):
     """One decode step over a paged KV pool. token: (B, 1) int32; cache:
     stacked pools from ``init_paged_cache``; ``tables`` (B, nS) int32
     block table shared by every layer (each layer's pool is indexed by
@@ -681,6 +821,11 @@ def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
         wpos, clen = pos, pos + 1
     gids = tables[jnp.arange(b), wpos // page]
     offs = wpos % page
+    drop = live is not None
+    if drop:
+        # Dead / mid-chunk-prefill rows write to gid == N — droppable.
+        gids = jnp.where(jnp.asarray(live).reshape(-1) > 0, gids,
+                         cache["k"].shape[1])
 
     def body(x, inp):
         layer_p, pk, pv = inp
@@ -691,8 +836,8 @@ def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
         q, k, v = _qkv(h, layer_p["attn"], cfg, _rope_pos(b, pos))
         if lay == "bhsd":
             k, v = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
-        pk = _write_token_kv_paged(pk, k, gids, offs, lay)
-        pv = _write_token_kv_paged(pv, v, gids, offs, lay)
+        pk = _write_token_kv_paged(pk, k, gids, offs, lay, oob_drop=drop)
+        pv = _write_token_kv_paged(pv, v, gids, offs, lay, oob_drop=drop)
         o = _paged_attn(q, pk, pv, tables, clen, cfg, policy)
         a = o.reshape(b, 1, -1) @ layer_p["attn"]["wo"]
         x = _finish_block(x, h, a, layer_p, cfg, policy=policy)
@@ -706,7 +851,7 @@ def decode_step_paged(params, cfg, token, cache, tables, pos, *, policy=None):
 
 @hot_path
 def decode_step_paged_sharded(params, cfg, token, cache, tables, pos, *,
-                              policy, seq_axis):
+                              policy, seq_axis, live=None):
     """Paged decode over a sequence-sharded pool — the body the serving
     engine wraps in ``shard_map``. The pool's page axis is sharded over
     ``seq_axis``; ``tables`` is each shard's (B, nS_local) slice holding
@@ -731,6 +876,8 @@ def decode_step_paged_sharded(params, cfg, token, cache, tables, pos, *,
     off = jax.lax.axis_index(seq_axis) * s_local
     lp = pos - off
     own = (lp >= 0) & (lp < s_local)
+    if live is not None:
+        own &= jnp.asarray(live).reshape(-1) > 0
     lpc = jnp.clip(lp, 0, s_local - 1)
     gids = jnp.where(own, tables[jnp.arange(b), lpc // page], n_local)
     offs = jnp.where(own, lpc % page, 0)
@@ -759,6 +906,85 @@ def decode_step_paged_sharded(params, cfg, token, cache, tables, pos, *,
                                       cache["k"], cache["v"]),
                             unroll=cfg.n_layers if cfg.unroll_scans else 1)
     return _final_logits(params, cfg, x), cache
+
+
+def _write_chunk_kv_paged(pool, kv, gids, inpage, layout):
+    """Scatter a C-token chunk into physical pages.
+
+    kv: (B, C, Hkv, hd); gids/inpage: (B, C) physical page id and in-page
+    offset per token, with invalid lanes pre-remapped to gid == N
+    (droppable). Same flattened single-index scatter as the decode-step
+    write."""
+    kv = kv.astype(pool.dtype)
+    kw = {"mode": "drop"}
+    if layout == "bhsd":
+        n, hkv, page, hd = pool.shape
+        idx = (gids[:, :, None] * hkv
+               + jnp.arange(hkv)[None, None, :]) * page + inpage[:, :, None]
+        flat = pool.reshape(n * hkv * page, hd)
+        return flat.at[idx].set(kv, **kw).reshape(pool.shape)
+    n, page = pool.shape[0], pool.shape[1]
+    flat = pool.reshape((n * page,) + pool.shape[2:])
+    return flat.at[gids * page + inpage].set(kv, **kw).reshape(pool.shape)
+
+
+def prefill_chunk_paged(params, cfg, tokens, cache, tables, off, clens, *,
+                        policy=None):
+    """Resumable prefill over a paged KV pool: the chunk's K/V scatter
+    into each slot's reserved pages at its cursor, then the Q-chunk
+    attends causally over the slot's gathered pages — shared-prefix pages
+    (attached read-only at admission; the cursor starts past them) and
+    intra-chunk keys included. Linear caches only; windowed ring tables
+    admit monolithically. Arguments as ``prefill_chunk`` plus ``tables``
+    (B, nS) physical page tables. Returns (logits, cache)."""
+    from repro.kernels.decode_attention.ops import paged_gather
+    x = embed_inputs(params, cfg, tokens)
+    b, c, _ = x.shape
+    off = jnp.asarray(off, jnp.int32).reshape(-1)
+    clens = jnp.asarray(clens, jnp.int32).reshape(-1)
+    dt = _cdtype(cfg)
+    lay = cfg.kv_cache_layout
+    page = cache["k"].shape[3 if lay == "bhsd" else 2]
+    n = cache["k"].shape[1]
+    ns = tables.shape[1]
+    pos = off[:, None] + jnp.arange(c)[None, :]            # (B, C)
+    lane = jnp.arange(c)[None, :] < clens[:, None]
+    cols = jnp.clip(pos // page, 0, ns - 1)
+    gids = jnp.where(lane, tables[jnp.arange(b)[:, None], cols], n)
+    inpage = jnp.where(lane, pos % page, 0)
+    kv_valid = (jnp.arange(ns * page)[None, :]
+                < (off + clens)[:, None])                  # (B, nS*page)
+
+    def body(x, inp):
+        layer_p, pk, pv = inp
+        layer_p = jax.tree.map(lambda a: a.astype(dt)
+                               if a.dtype == jnp.float32 and a.ndim > 1
+                               else a, layer_p)
+        h = norm_apply(x, layer_p["ln_attn"], cfg.norm, cfg.norm_eps)
+        q, k, v = _qkv(h, layer_p["attn"], cfg, pos)
+        k = jnp.where(lane[:, :, None, None], k, 0)
+        v = jnp.where(lane[:, :, None, None], v, 0)
+        pk = _write_chunk_kv_paged(pk, k, gids, inpage, lay)
+        pv = _write_chunk_kv_paged(pv, v, gids, inpage, lay)
+        kk = paged_gather(pk, tables, lay)
+        vv = paged_gather(pv, tables, lay)
+        if lay == "bhsd":
+            kk, vv = kk.transpose(0, 2, 1, 3), vv.transpose(0, 2, 1, 3)
+        o = attention(q, kk, vv, causal=True, window=None, q_offset=off,
+                      exp_impl=cfg.exp_impl, impl=cfg.attention_impl,
+                      unroll=cfg.unroll_scans, block_k=cfg.attn_block_k,
+                      mm_dtype=cfg.attn_mm_dtype, kv_valid=kv_valid,
+                      policy=policy)
+        a = o.reshape(b, c, -1) @ layer_p["attn"]["wo"]
+        x = _finish_block(x, h, a, layer_p, cfg, policy=policy)
+        return x, {"k": pk, "v": pv}
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, cache = jax.lax.scan(body, x, (params["layers"],
+                                      cache["k"], cache["v"]),
+                            unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    return _chunk_logits(params, cfg, x, clens), cache
 
 
 def _finish_block(x, h, a, layer_p, cfg, *, policy=None):

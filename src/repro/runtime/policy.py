@@ -52,6 +52,7 @@ _ENV_FIELDS = {
     "ACCUM_DTYPE": "accum_dtype",
     "AUTOTUNE": "autotune",
     "MERGE_STRATEGY": "merge_strategy",
+    "PREFILL_CHUNK": "prefill_chunk",
 }
 
 _TRUTHY = ("1", "true", "yes", "on")
@@ -97,6 +98,14 @@ class ExecPolicy:
                     and folds locally; "split" is the pmax + 2×psum
                     three-collective form. Identical algebra either way;
                     autotune times both per (device kind, shape bucket).
+    prefill_chunk   serving prefill chunk size in tokens. 0 (default) keeps
+                    the monolithic one-wave prefill; > 0 streams each
+                    prompt into its slot in fixed-size chunks interleaved
+                    with decode steps (the engine runs at most one chunk
+                    per tick, bounding the decode latency any single
+                    prompt can add). Families may round the width up to
+                    their invariant unit (ssm: ``cfg.ssm_chunk``) — see
+                    ``DecodeState.chunk_width``.
     """
 
     exp_backend: str = "vexp"
@@ -110,6 +119,7 @@ class ExecPolicy:
     accum_dtype: str = "float32"
     autotune: bool = False
     merge_strategy: str = "packed"
+    prefill_chunk: int = 0
 
     def __post_init__(self):
         if self.exp_backend not in EXP_BACKENDS:
@@ -142,6 +152,10 @@ class ExecPolicy:
             v = getattr(self, f)
             if not (isinstance(v, int) and v > 0):
                 raise ValueError(f"{f} must be a positive int, got {v!r}")
+        pc = self.prefill_chunk
+        if not (isinstance(pc, int) and pc >= 0):
+            raise ValueError(f"prefill_chunk must be an int >= 0 "
+                             f"(0 = monolithic prefill), got {pc!r}")
 
     # ------------------------------------------------------------ accessors
 
@@ -166,7 +180,7 @@ class ExecPolicy:
                 f"r{self.block_rows},s{self.block_s},"
                 f"p{self.block_page}) "
                 f"accum={self.accum_dtype} merge={self.merge_strategy} "
-                f"autotune={self.autotune}")
+                f"autotune={self.autotune} chunk={self.prefill_chunk}")
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -176,7 +190,7 @@ class ExecPolicy:
 
 def _parse(field: str, raw: str):
     if field in ("block_q", "block_k", "block_rows", "block_s",
-                 "block_page"):
+                 "block_page", "prefill_chunk"):
         try:
             return int(raw)
         except ValueError:

@@ -1,0 +1,328 @@
+"""Chunked, decode-overlapped prefill (PR-8).
+
+The headline contract: serving with ``ExecPolicy.prefill_chunk > 0``
+(prompts streamed into their slots in fixed-size chunks, one bounded
+chunk per engine tick, interleaved with decode) must produce EXACTLY the
+greedy tokens of monolithic one-wave prefill — for every decoding family
+(transformer / ssm / hybrid), every exp backend (exact / vexp /
+vexp_hw), and both pool kinds (contiguous slot rows and the paged block
+pool), including chunks straddling a page boundary, prompts shorter than
+one chunk, and chunk admission into slots freed mid-decode.
+
+The recurrent family is held to a stronger bar: chunked prefill is
+BITWISE identical in its final (h, conv) state, not just argmax-equal —
+chunk boundaries are pinned to ``cfg.ssm_chunk`` so the fp summation
+order of the SSD chunk math is admission-invariant. (Hybrid is
+token-identical but not bitwise: the RG-LRU associative-combine tree
+depends on scan length, which is why the engine pins the chunk width
+instead of bucketing it.)
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import api
+from repro.launch.serve import Server, Request
+from repro.runtime import resolve_policy
+
+EXP_BACKENDS = ("exact", "vexp", "vexp_hw")
+FAMILY_ARCH = {"transformer": "gpt2-small", "ssm": "mamba2-1.3b",
+               "hybrid": "recurrentgemma-9b"}
+# hybrid's reduced sliding window is 16: its serve pool is the window,
+# so hybrid prompts stay <= 16 (the same bound monolithic admission
+# enforces) while the linear families exercise longer prompts.
+FAMILY_LENS = {"transformer": (21, 5, 33, 12), "ssm": (21, 5, 33, 12),
+               "hybrid": (13, 5, 16, 9)}
+
+_cfg_cache, _params_cache = {}, {}
+
+
+def _cfg(family):
+    if family not in _cfg_cache:
+        _cfg_cache[family] = get_config(FAMILY_ARCH[family]).reduced()
+    return _cfg_cache[family]
+
+
+def _params(family):
+    if family not in _params_cache:
+        _params_cache[family] = api.init_params(_cfg(family),
+                                                jax.random.PRNGKey(0))
+    return _params_cache[family]
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, (n,), dtype=np.int32) for n in lens]
+
+
+def _serve(family, prompts, *, chunk, exp="vexp", paged=False,
+           block_page=None, max_new=6, max_batch=2, max_news=None):
+    cfg = _cfg(family)
+    pol = resolve_policy(cfg, env={}, exp_backend=exp, prefill_chunk=chunk)
+    srv = Server(cfg, _params(family), max_batch=max_batch,
+                 max_seq=cfg.sliding_window or 64, policy=pol,
+                 paged=paged, block_page=block_page)
+    reqs = [Request(i, p.copy(), (max_news or {}).get(i, max_new))
+            for i, p in enumerate(prompts)]
+    srv.run(reqs)
+    return {r.rid: tuple(r.out) for r in reqs}, srv
+
+
+def _group(srv):
+    return srv._groups["default"]
+
+
+# -------------------------------------------------- chunked == monolithic
+
+class TestChunkedEqualsMonolithic:
+    @pytest.mark.parametrize("exp", EXP_BACKENDS)
+    @pytest.mark.parametrize("family", sorted(FAMILY_ARCH))
+    def test_contiguous(self, family, exp):
+        """family x exp backend over contiguous slot pools: more
+        requests than slots, so completion frees slots and later
+        requests are chunk-admitted mid-decode — and every emitted
+        token must match the monolithic wave path."""
+        prompts = _prompts(_cfg(family), FAMILY_LENS[family])
+        mono, msrv = _serve(family, prompts, chunk=0, exp=exp)
+        chk, csrv = _serve(family, prompts, chunk=6, exp=exp)
+        assert chk == mono
+        g = _group(csrv)
+        assert g.chunk_c >= 6 and len(g.chunk_s) > 0
+        assert not g.admit_s                 # no monolithic wave ran
+        assert _group(msrv).admit_s          # ... and the baseline did
+
+    @pytest.mark.parametrize("exp", EXP_BACKENDS)
+    @pytest.mark.parametrize("family", ("transformer", "hybrid"))
+    def test_paged_chunk_straddles_page_boundary(self, family, exp):
+        """Paged pools with page=8 and chunk width 6: the second chunk
+        of every long prompt spans tokens [6, 12) — straddling the first
+        page boundary — so one chunk's KV scatter must split across two
+        physical pages. Tokens must still match monolithic paged
+        serving exactly."""
+        prompts = _prompts(_cfg(family), FAMILY_LENS[family])
+        mono, _ = _serve(family, prompts, chunk=0, exp=exp, paged=True,
+                         block_page=8)
+        chk, csrv = _serve(family, prompts, chunk=6, exp=exp, paged=True,
+                           block_page=8)
+        assert chk == mono
+        g = _group(csrv)
+        assert g.chunk_c == 6 and len(g.chunk_s) > 0
+        # drained: only the prefix cache's own references remain resident
+        # (hybrid rings are not content-addressable — no cache, zero held)
+        pool = csrv.stats()["default"]["pool"]
+        assert pool["pages_used"] == pool.get("prefix", {}).get("pages", 0)
+
+    def test_chunked_batched_matches_monolithic_solo(self):
+        """The full identity chain in one place: chunk-admitted batched
+        serving == monolithic SOLO serving per request (the strictest
+        form — batching and chunking together must change nothing)."""
+        prompts = _prompts(_cfg("transformer"), (21, 5, 33))
+        chk, _ = _serve("transformer", prompts, chunk=4)
+        for i, p in enumerate(prompts):
+            solo, _ = _serve("transformer", [p], chunk=0)
+            assert chk[i] == solo[0], i
+
+    def test_prompt_shorter_than_one_chunk(self):
+        """A prompt shorter than the chunk width completes in its first
+        chunk (clens < chunk_c): one chunk dispatch, identical tokens."""
+        prompts = _prompts(_cfg("transformer"), (5, 3))
+        mono, _ = _serve("transformer", prompts, chunk=0)
+        chk, csrv = _serve("transformer", prompts, chunk=64)
+        assert chk == mono
+        # both admitted the same tick -> exactly one chunk dispatched
+        assert len(_group(csrv).chunk_s) == 1
+
+    def test_chunk_width_one(self):
+        """Degenerate width-1 chunks (one token per tick) stress the
+        cursor/offset bookkeeping hardest; tokens must not change."""
+        prompts = _prompts(_cfg("transformer"), (7, 3))
+        mono, _ = _serve("transformer", prompts, chunk=0)
+        chk, _ = _serve("transformer", prompts, chunk=1)
+        assert chk == mono
+
+    def test_ssm_chunk_width_rounds_to_native_block(self):
+        """The recurrent family rounds the requested chunk budget up to
+        a multiple of cfg.ssm_chunk — chunk boundaries pinned to the SSD
+        block keep the fp summation order admission-invariant."""
+        cfg = _cfg("ssm")
+        _, srv = _serve("ssm", _prompts(cfg, (5,)), chunk=3)
+        g = _group(srv)
+        q = cfg.ssm_chunk
+        assert g.chunk_c % q == 0 and g.chunk_c >= 3
+
+
+# ------------------------------------------- mid-decode chunk admission
+
+class TestMidDecodeAdmission:
+    def test_freed_slots_readmit_chunked(self):
+        """More requests than slots with staggered max_new: slots free
+        mid-serve and the queue chunk-admits into them while the other
+        slot keeps decoding. Every request's tokens must match the
+        monolithic engine, and admission order must stay FIFO."""
+        prompts = _prompts(_cfg("transformer"), (21, 5, 33, 12, 9))
+        news = {0: 3, 1: 8, 2: 5, 3: 2, 4: 6}
+        mono, _ = _serve("transformer", prompts, chunk=0, max_news=news)
+        chk, csrv = _serve("transformer", prompts, chunk=6, max_news=news)
+        assert chk == mono
+        assert csrv.admit_log == [0, 1, 2, 3, 4]
+
+    def test_paged_freed_pages_recycle_through_chunked_admission(self):
+        """Paged pool sized for ~2 slots: chunk admission must block on
+        pages (never crash), recycle pages freed by finished requests,
+        and still serve every request with monolithic-identical
+        tokens."""
+        cfg = _cfg("transformer")
+        prompts = _prompts(cfg, (21, 5, 33, 12))
+        pol0 = resolve_policy(cfg, env={}, prefill_chunk=0)
+        polc = resolve_policy(cfg, env={}, prefill_chunk=6)
+        out = {}
+        for name, pol in (("mono", pol0), ("chunk", polc)):
+            srv = Server(cfg, _params("transformer"), max_batch=2,
+                         max_seq=64, policy=pol, paged=True, block_page=8,
+                         block_budget=2 * 8 + 1)
+            reqs = [Request(i, p.copy(), 4) for i, p in enumerate(prompts)]
+            srv.run(reqs)
+            out[name] = {r.rid: tuple(r.out) for r in reqs}
+            pool = srv.stats()["default"]["pool"]
+            assert pool["pages_used"] == pool.get("prefix",
+                                                  {}).get("pages", 0)
+        assert out["chunk"] == out["mono"]
+
+    def test_decode_overlaps_long_prefill(self):
+        """The two-queue point: with one long and one short prompt in
+        flight, the short request finishes its ENTIRE service (prefill +
+        all decode steps) while the long prompt is still prefilling —
+        decode steps ran interleaved between the long prompt's chunks,
+        which the monolithic wave scheduler cannot do."""
+        cfg = _cfg("transformer")
+        rng = np.random.default_rng(1)
+        long_p = rng.integers(0, cfg.vocab, (33,), dtype=np.int32)
+        short_p = rng.integers(0, cfg.vocab, (4,), dtype=np.int32)
+        pol = resolve_policy(cfg, env={}, prefill_chunk=2)
+        srv = Server(cfg, _params("transformer"), max_batch=2, max_seq=64,
+                     policy=pol)
+        reqs = [Request(0, long_p, 4), Request(1, short_p, 3)]
+        srv.run(reqs)
+        # short served end to end before the long prompt's first token
+        assert reqs[1].t_done < reqs[0].t_first
+        g = _group(srv)
+        # and the long prompt really streamed: ceil(33/2) chunk ticks
+        assert len(g.chunk_s) >= 17
+
+
+# ------------------------------------------------ protocol-level identity
+
+class TestChunkProgramIdentity:
+    def test_ssm_state_bitwise_identical(self):
+        """Chunked ssm prefill == one-shot ragged prefill BITWISE in the
+        final (h, conv) state, per row, with chunk boundaries on
+        cfg.ssm_chunk — and argmax-identical in the completion logits."""
+        cfg, params = _cfg("ssm"), _params("ssm")
+        b, s = 3, 64
+        plens = np.array([17, 5, 33], np.int32)
+        rng = np.random.default_rng(2)
+        toks = np.zeros((b, s), np.int32)
+        for i, n in enumerate(plens):
+            toks[i, :n] = rng.integers(0, cfg.vocab, (n,))
+        logits_m, state_m = api.prefill(
+            params, cfg, {"tokens": jnp.asarray(toks),
+                          "prompt_len": jnp.asarray(plens)})
+        c = -(-16 // cfg.ssm_chunk) * cfg.ssm_chunk
+        cache = api.init_cache(cfg, b, s)
+        off = np.zeros(b, np.int32)
+        final = [None] * b
+        while (off < plens).any():
+            clens = np.clip(plens - off, 0, c).astype(np.int32)
+            ck = np.zeros((b, c), np.int32)
+            for i in range(b):
+                ck[i, :clens[i]] = toks[i, off[i]:off[i] + clens[i]]
+            logits_c, cache = api.prefill_chunk(
+                params, cfg, jnp.asarray(ck), cache, jnp.asarray(off),
+                jnp.asarray(clens))
+            off = off + clens
+            for i in range(b):
+                if clens[i] and off[i] == plens[i]:
+                    final[i] = np.asarray(logits_c[i])
+        for la, lb in zip(jax.tree_util.tree_leaves(state_m),
+                          jax.tree_util.tree_leaves(cache)):
+            assert la.shape == lb.shape and la.dtype == lb.dtype
+            assert bool(jnp.array_equal(la, lb))
+        for i in range(b):
+            assert int(np.argmax(final[i])) == int(jnp.argmax(logits_m[i]))
+
+    def test_inert_rows_pass_through_bit_untouched(self):
+        """Rows with clens == 0 (slots decoding, or empty) must come out
+        of the chunk program with their state bitwise unchanged — the
+        property that lets decoding slots ride along the fixed-shape
+        chunk step for free."""
+        cfg, params = _cfg("transformer"), _params("transformer")
+        b, s, c = 2, 64, 8
+        rng = np.random.default_rng(3)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, c), np.int64)
+                           .astype(np.int32))
+        cache = api.init_cache(cfg, b, s)
+        # populate row 0 with a real chunk first
+        _, cache = api.prefill_chunk(
+            params, cfg, toks, cache,
+            jnp.zeros((b,), jnp.int32),
+            jnp.asarray([c, 0], jnp.int32))
+        before = jax.tree_util.tree_leaves(jax.tree.map(
+            lambda x: np.asarray(x), cache))
+        # now advance only row 1; row 0 is inert (clens == 0)
+        _, cache = api.prefill_chunk(
+            params, cfg, toks, cache,
+            jnp.zeros((b,), jnp.int32),
+            jnp.asarray([0, c], jnp.int32))
+        after = jax.tree_util.tree_leaves(jax.tree.map(
+            lambda x: np.asarray(x), cache))
+        # transformer cache leaves stack layers first: (L, B, S, Hkv, d)
+        for x, y in zip(before, after):
+            assert np.array_equal(x[:, 0], y[:, 0])   # row 0 bit-untouched
+            assert not np.array_equal(x[:, 1], y[:, 1])  # row 1 advanced
+
+
+# ----------------------------------------------------- scheduler surface
+
+class TestSchedulerSurface:
+    def test_stats_report_chunk_telemetry(self):
+        """stats() carries the two-queue scheduler's telemetry — queue
+        depth, prefilling count, chunk count/dispatch time and TTFT
+        percentiles — all assembled from host mirrors at scheduling
+        events (no device syncs; the analyzer pins that separately)."""
+        prompts = _prompts(_cfg("transformer"), (21, 5, 33))
+        _, csrv = _serve("transformer", prompts, chunk=6)
+        s = csrv.stats()["default"]
+        assert s["prefill_chunk"] == 6
+        assert s["prefill_chunks"] >= 6          # 33-token prompt alone
+        assert s["chunk_s_total"] > 0.0
+        assert s["queue_depth"] == 0 and s["prefilling"] == 0
+        assert s["p95_ttft_s"] >= s["p50_ttft_s"] > 0.0
+        _, msrv = _serve("transformer", prompts, chunk=0)
+        m = msrv.stats()["default"]
+        assert m["prefill_chunks"] == 0 and m["prefill_chunk"] == 0
+        assert m["p50_ttft_s"] > 0.0             # same keys, wave-sampled
+
+    def test_unchunkable_pool_falls_back_to_monolithic(self):
+        """A paged pool that cannot chunk (windowed KV ring tables are
+        only chunkable through the hybrid state; the pure-KV paged pool
+        gates on sliding_window is None) must silently keep the
+        monolithic wave path even when the policy asks for chunks —
+        capability lives behind the DecodeState protocol."""
+        wcfg = get_config("h2o-danube3-4b").reduced()
+        assert wcfg.sliding_window
+        params = api.init_params(wcfg, jax.random.PRNGKey(0))
+        pol = resolve_policy(wcfg, env={}, prefill_chunk=8)
+        srv = Server(wcfg, params, max_batch=2,
+                     max_seq=wcfg.sliding_window, policy=pol, paged=True,
+                     block_page=8)
+        rng = np.random.default_rng(0)
+        reqs = [Request(i, rng.integers(0, wcfg.vocab, (n,),
+                                        dtype=np.int32), 4)
+                for i, n in enumerate((5, 11))]
+        srv.run(reqs)
+        g = _group(srv)
+        assert g.chunk_c == 0 and not g.chunk_s and g.admit_s
+        assert all(len(r.out) == 4 for r in reqs)

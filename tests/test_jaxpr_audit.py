@@ -87,7 +87,7 @@ class TestEngineDecodePrograms:
         arch = FAMILY_ARCH[family]
         cfg = _cfg(arch)
         pol = resolve_policy(cfg, env={}, exp_backend=exp)
-        _, _, decode = _programs(cfg, pol)
+        _, _, decode, _ = _programs(cfg, pol)
         args = _decode_args(arch)
         txt = decode.lower(*args).as_text()
 
@@ -112,7 +112,7 @@ class TestEngineDecodePrograms:
                 jnp.ones((b,), jnp.int32), jnp.ones((b,), jnp.int32))
 
         pol = resolve_policy(cfg, env={}, exp_backend=exp)
-        _, decode = _paged_programs(cfg, pol, page)
+        _, decode, _ = _paged_programs(cfg, pol, page)
         txt = decode.lower(*args).as_text()
 
         ja.assert_collective_budget(txt, {})
@@ -122,6 +122,54 @@ class TestEngineDecodePrograms:
         ja.assert_all_donated(txt, donated)
         # carry stability is unconditional — pool AND positions
         ja.assert_carry_stable(decode, args, {2: 1, 4: 2})
+
+    @pytest.mark.parametrize("exp", EXP_BACKENDS)
+    @pytest.mark.parametrize("family", sorted(FAMILY_ARCH))
+    def test_chunk_prefill_program(self, family, exp):
+        """The resumable chunk-prefill program (PR-8) is held to the
+        decode-step contracts: collective-free, fully donates its cache
+        carry, and returns the pool pytree structurally unchanged —
+        rows with ``clens == 0`` ride along bit-untouched, which starts
+        with the carry coming back identical in treedef/shape/dtype."""
+        arch = FAMILY_ARCH[family]
+        cfg = _cfg(arch)
+        pol = resolve_policy(cfg, env={}, exp_backend=exp)
+        _, _, _, chunk = _programs(cfg, pol)
+        b, c = 2, 8
+        s = cfg.sliding_window or 64    # hybrid pool = its window
+        cache = api.init_cache(cfg, b, s)
+        args = (_params(arch), jnp.zeros((b, c), jnp.int32), cache,
+                jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32))
+        txt = chunk.lower(*args).as_text()
+
+        ja.assert_collective_budget(txt, {})
+        ja.assert_all_donated(txt, len(jax.tree_util.tree_leaves(cache)))
+        ja.assert_carry_stable(chunk, args, {2: 1})
+
+    @pytest.mark.parametrize("family", ("kv", "hybrid"))
+    def test_paged_chunk_prefill_program(self, family):
+        """Paged chunk prefill: collective-free and pool-carry-stable;
+        donation mirrors the paged decode builder (the pool donates
+        everywhere but XLA-CPU, where the page scatter materializes the
+        pool regardless)."""
+        arch = FAMILY_ARCH[family]
+        cfg = _cfg(arch)
+        b, page = 2, 8
+        s = cfg.sliding_window or 64
+        ns = -(-s // page)
+        pool = api.init_paged_cache(cfg, b, 1 + b * ns, page)
+        tab = jnp.zeros((b, ns), jnp.int32)
+        pol = resolve_policy(cfg, env={})
+        _, _, chunk = _paged_programs(cfg, pol, page)
+        args = (_params(arch), jnp.zeros((b, 8), jnp.int32), pool, tab,
+                jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32))
+        txt = chunk.lower(*args).as_text()
+
+        ja.assert_collective_budget(txt, {})
+        donated = (0 if jax.default_backend() == "cpu"
+                   else len(jax.tree_util.tree_leaves(pool)))
+        ja.assert_all_donated(txt, donated)
+        ja.assert_carry_stable(chunk, args, {2: 1})
 
     def test_paged_hybrid_decode_program(self):
         """The hybrid family through the paged program builder (its KV
@@ -135,7 +183,7 @@ class TestEngineDecodePrograms:
         args = (_params(arch), jnp.zeros((b, 1), jnp.int32), pool, tab,
                 jnp.ones((b,), jnp.int32), jnp.ones((b,), jnp.int32))
         pol = resolve_policy(cfg, env={})
-        _, decode = _paged_programs(cfg, pol, page)
+        _, decode, _ = _paged_programs(cfg, pol, page)
         ja.assert_collective_budget(decode.lower(*args).as_text(), {})
         ja.assert_carry_stable(decode, args, {2: 1, 4: 2})
 
@@ -195,6 +243,83 @@ def test_sharded_decode_one_collective_per_layer_and_donation():
     assert res["counts"] == {"all_gather": 1}
     assert res["donated"]
     assert res["carry_msgs"] == []
+
+
+@pytest.mark.slow
+def test_sharded_chunk_prefill_outputs_carry_pool_sharding():
+    """PR-8 re-placement contract (subprocess, 8 host devices): the
+    sharded chunk-prefill program's cache output carries exactly the
+    pool sharding (``serve_cache_sharding``), so chunked admission
+    writes prefill rows into the sharded pool IN PLACE — the engine
+    performs no post-prefill ``device_put`` of cache rows. Also pins
+    carry stability (sharding included: ``carry_report`` compares
+    shardings on live arrays) and sanity-checks the audit itself
+    rejects a deliberately wrong expectation."""
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["REPRO_AUTOTUNE_CACHE"] = "off"
+        import sys
+        sys.path.insert(0, {src!r})
+        import json
+        import numpy as np
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.models import api
+        from repro.launch.serve import Server, Request
+        from repro.launch.mesh import make_host_mesh
+        from repro.runtime import resolve_policy
+        from repro.distributed.sharding import serve_cache_sharding
+        from repro.analysis import jaxpr_audit as ja
+
+        cfg = get_config("gpt2-small").reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        pol = resolve_policy(cfg, env={{}}, kernel_backend="pallas",
+                             prefill_chunk=8)
+        srv = Server(cfg, params, max_batch=2, max_seq=64,
+                     mesh=make_host_mesh(1, 8), policy=pol, kv_mode="seq")
+        assert srv.kv_axis is not None
+        rng = np.random.default_rng(0)
+        out = srv.run([Request(i, rng.integers(0, cfg.vocab, (p,),
+                                               dtype=np.int32), 4)
+                       for i, p in enumerate((21, 5))])
+        g = srv._groups["default"]
+        st = g.state
+        want = serve_cache_sharding(cfg, srv.mesh, srv.kv_axis)
+        args = (st.params_decode, jnp.zeros((2, 8), jnp.int32), st.data,
+                jnp.zeros((2,), jnp.int32), jnp.zeros((2,), jnp.int32))
+        msgs = ja.output_sharding_report(st._chunk, 1, want, *args)
+        ja.assert_output_sharding(st._chunk, 1, want, *args)
+        # the audit must actually discriminate: a wrong expectation
+        # (head-axis sharding instead of the pool's seq axis) fails
+        wrong = {{k: NamedSharding(srv.mesh,
+                                   P(None, None, None, "model", None))
+                  for k in want}}
+        bad = ja.output_sharding_report(st._chunk, 1, wrong, *args)
+        # the live pool ended chunked serving under the pool sharding
+        # (produced in place by the chunk program, never re-placed)
+        pool_in_place = all(
+            st.data[k].sharding.is_equivalent_to(want[k], st.data[k].ndim)
+            for k in ("k", "v"))
+        print(json.dumps({{
+            "chunks": len(g.chunk_s),
+            "served": sorted(len(r.out) for r in out),
+            "msgs": msgs, "bad_nonempty": bool(bad),
+            "pool_in_place": pool_in_place}}))
+    """).format(src=src)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-3000:]}"
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["chunks"] >= 3          # prompts streamed across ticks
+    assert res["served"] == [4, 4]
+    assert res["msgs"] == []
+    assert res["bad_nonempty"]
+    assert res["pool_in_place"]
 
 
 # --------------------------------------------------------- planted fixtures
