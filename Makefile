@@ -6,8 +6,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: ci test analyze analysis-test bench sweep serve-smoke \
 	serve-smoke-recurrent serve-smoke-paged serve-smoke-chunked \
-	spmd-test spmd-serve-smoke spmd-serve-smoke-paged \
-	spmd-serve-smoke-chunked
+	serve-smoke-chaos spmd-test spmd-serve-smoke \
+	spmd-serve-smoke-paged spmd-serve-smoke-chunked
 
 ci:
 	$(PY) -m pytest -x -q
@@ -81,6 +81,33 @@ serve-smoke-chunked:
 	    --requests 6 --prompt-len 40 --mixed-lengths --max-new 8 \
 	    --max-batch 2 --max-seq 64 --prefill-chunk 8 \
 	    --paged --block-page 8 --shared-prefix 16
+
+# Chaos smoke: the same workloads with a seeded FaultInjector firing
+# every catalog point (REPRO_FAULT_SEED replays a run exactly), request
+# deadlines, cancellations and degradable groups enabled. Each run ends
+# on Server.assert_idle_clean — zero leaked pages/slots after the storm
+# or the process exits nonzero. Covers contiguous, paged, paged+chunked
+# and sequence-sharded pools.
+serve-smoke-chaos:
+	$(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 8 --prompt-len 24 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 --chaos --fault-seed 3 \
+	    --cancel-frac 0.25 --deadline 30 --degrade-groups default
+	$(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 8 --prompt-len 32 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 --paged --block-page 8 \
+	    --shared-prefix 24 --chaos --fault-seed 5 --cancel-frac 0.25 \
+	    --deadline 30
+	$(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 8 --prompt-len 40 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 --prefill-chunk 8 --paged \
+	    --block-page 8 --shared-prefix 16 --chaos --fault-seed 7 \
+	    --cancel-frac 0.25 --deadline 30 --degrade-groups default
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	    $(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 8 --prompt-len 24 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 --kv-mode seq --chaos --fault-seed 9 \
+	    --cancel-frac 0.25 --deadline 30 --degrade-groups default
 
 # The same slot engine end-to-end through the SPMD serve loop: KV cache
 # sequence-sharded over 8 fake host devices, decode through the fused

@@ -37,6 +37,15 @@ chunked arm's per-tick p95 must beat the monolithic arm's — one bounded
 chunk per tick is the whole point. Run just this section with
 ``python -m benchmarks.serving --load-mode open [--rate R]``.
 
+The ``chaos`` section serves the identical workload twice — fault-free
+and threaded with a seeded ``repro.ft.FaultInjector`` at the default
+chaos rates (``REPRO_FAULT_SEED`` seeds it) — and reports goodput
+(tokens from cleanly-finished requests per second), tail latency and
+fault/quarantine counts for both, plus their ratio. Every chaos run
+ends on ``Server.assert_idle_clean``, so the benchmark doubles as a
+zero-leak check under storm conditions. Run just this section with
+``python -m benchmarks.serving --chaos``.
+
 Rows carry tokens/s as the primary scalar; per-request p50/p95 completion
 latency (submit -> tokens materialized, measured at the finish-time
 device sync) rides in the note. Results persist to ``BENCH_serving.json``.
@@ -337,6 +346,70 @@ def _open_loop_arm(cfg, params, *, policy, rate=OPEN_RATE,
     }
 
 
+def _chaos_arm(cfg, params, *, n_timed=OPEN_TIMED):
+    """Goodput under injected faults vs fault-free on the IDENTICAL
+    workload: same prompts, same engine, one arm threaded with a seeded
+    FaultInjector at the default chaos rates (REPRO_FAULT_SEED seeds
+    it). Goodput counts only tokens from cleanly-finished requests —
+    quarantined/shed work is overhead, not progress — so the ratio row
+    is the price of the faults plus the recovery machinery. Every run
+    ends on ``assert_idle_clean``: the benchmark doubles as a leak
+    check under storm conditions."""
+    from repro.ft import FAULT_SEED_ENV, FaultInjector, default_chaos_rates
+    from repro.launch.serve import Server
+
+    seed = int(os.environ.get(FAULT_SEED_ENV, "0") or "0")
+    rng = np.random.default_rng(7)
+    lens = [int(x) for x in rng.integers(8, 49, N_REQUESTS)]
+
+    def once(inj_seed):
+        inj = (FaultInjector(seed=inj_seed, rates=default_chaos_rates())
+               if inj_seed is not None else None)
+        srv = Server(cfg, params, max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                     injector=inj, degrade_groups=("default",))
+        reqs = _requests(cfg, lens)
+        t0 = time.perf_counter()
+        srv.run(reqs)
+        wall = time.perf_counter() - t0
+        clean = [r for r in reqs
+                 if r.finish_reason in ("max_new", "length_cap")]
+        good = sum(len(r.out) for r in clean)
+        lat = sorted(x for g in srv._groups.values() for x in g.req_lat)
+        st = srv.stats()["default"]
+        out = {
+            "goodput_tok_s": good / wall,
+            "good_tokens": good,
+            "clean_requests": len(clean),
+            "n_requests": len(reqs),
+            "wall_s": wall,
+            "p95_req_ms": 1e3 * (lat[min(int(len(lat) * 0.95),
+                                         len(lat) - 1)] if lat else 0.0),
+            "quarantined": st["quarantined"],
+            "step_faults": st["step_faults"],
+            "requeued": st["requeued"],
+            "shed": st["shed"],
+            "admit_retries": st["admit_retries"],
+        }
+        if inj is not None:
+            out["faults_fired"] = srv.fault_stats()["injector"]["fired"]
+        srv.assert_idle_clean()        # zero leaked pages/slots, or raise
+        return out
+
+    once(None)                         # warmup: compiles both paths
+    key = lambda r: r["goodput_tok_s"]          # noqa: E731
+    fault_free = _median([once(None) for _ in range(n_timed)], key=key)
+    # nearby seeds sample different fault mixes; median by goodput
+    chaos = _median([once(seed + i) for i in range(n_timed)], key=key)
+    return {
+        "seed": seed,
+        "rates": default_chaos_rates(),
+        "fault_free": fault_free,
+        "chaos": chaos,
+        "goodput_ratio": chaos["goodput_tok_s"]
+        / max(fault_free["goodput_tok_s"], 1e-9),
+    }
+
+
 def run_bench() -> dict:
     from repro.configs import get_config
     from repro.models import api
@@ -375,6 +448,7 @@ def run_bench() -> dict:
         "steady_state": _steady_state(cfg, params, policy=pol),
         "recurrent": _recurrent_arm(),
         "open_loop": _open_loop_arm(cfg, params, policy=pol),
+        "chaos": _chaos_arm(cfg, params),
     }
     # sharded serving needs a multi-device host platform: XLA_FLAGS must
     # precede jax init, so the arm runs in a subprocess (best-effort — a
@@ -447,6 +521,20 @@ def report():
                      f"{r['arch']} mixed-length slot engine; "
                      f"req_p50={r['p50_req_ms']:.1f}ms;"
                      f"req_p95={r['p95_req_ms']:.1f}ms"))
+    ch = res.get("chaos", {})
+    if ch:
+        c = ch["chaos"]
+        rows.append(("chaos_goodput_tok_s", c["goodput_tok_s"],
+                     f"seed={ch['seed']}; clean={c['clean_requests']}/"
+                     f"{c['n_requests']} requests; fired="
+                     f"{c.get('faults_fired', {})}; "
+                     f"quarantined={c['quarantined']} shed={c['shed']} "
+                     f"step_faults={c['step_faults']}; "
+                     f"req_p95={c['p95_req_ms']:.1f}ms"))
+        rows.append(("chaos_goodput_ratio", ch["goodput_ratio"],
+                     f"chaos / fault-free goodput (fault-free="
+                     f"{ch['fault_free']['goodput_tok_s']:.1f}tok/s, "
+                     f"req_p95={ch['fault_free']['p95_req_ms']:.1f}ms)"))
     sh = res.get("sharded", {})
     if "error" not in sh and sh:
         rows.append(("sharded_decode_tok_s",
@@ -499,6 +587,23 @@ if __name__ == "__main__":
         # subprocess mode (parent sets XLA_FLAGS before we ever import
         # jax): print one JSON line with the sharded phase measurement.
         print(json.dumps(_sharded_arm()))
+        sys.exit(0)
+    if "--chaos" in sys.argv:
+        # run just the chaos arm and print its rows (no JSON write —
+        # the full report() refreshes BENCH_serving.json)
+        from repro.configs import get_config
+        from repro.models import api
+        cfg = get_config("gpt2-small").reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        ch = _chaos_arm(cfg, params)
+        for arm in ("fault_free", "chaos"):
+            r = ch[arm]
+            print(f"serving/chaos_{arm},{r['goodput_tok_s']:.6g},"
+                  f"clean={r['clean_requests']}/{r['n_requests']} "
+                  f"req_p95={r['p95_req_ms']:.1f}ms "
+                  f"fired={r.get('faults_fired', {})}")
+        print(f"serving/chaos_goodput_ratio,{ch['goodput_ratio']:.6g},"
+              f"seed={ch['seed']}")
         sys.exit(0)
     if "--load-mode" in sys.argv:
         mode = sys.argv[sys.argv.index("--load-mode") + 1]

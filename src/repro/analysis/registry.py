@@ -113,6 +113,22 @@ ALLOC_CALLS = ("_alloc_one", "alloc_cols", "incref", "attach")
 # Call names that release page references (what a guard must reach).
 RELEASE_CALLS = ("decref", "_evict_one", "drop_all", "release")
 
+# Slot-reservation pairing in the serving engine (PR-9). ``begin_chunk``
+# takes a slot's full pool reservation (pages, prefix refs, table row)
+# and hands the engine a cursor; until the request is published into
+# ``prefilling`` the engine is the only holder. A reserve call issued
+# inside an admission loop therefore needs a release reachable on the
+# exception path — one raise between reserve and publish strands the
+# whole reservation. (``prefill_into`` is all-or-nothing inside the
+# state and releases internally, so only ``begin_chunk`` is engine-side
+# pairing.)
+SLOT_RESERVE_CALLS = ("begin_chunk",)
+SLOT_RELEASE_CALLS = ("abort_chunk", "reset_slots", "decref", "recover")
+SLOT_CONTRACT_FILES = (
+    "repro/launch/serve.py",
+    "fixtures/analysis/bad_slot_leak.py",       # planted-violation fixture
+)
+
 # Engine source contracts (promoted from test source-string greps).
 # serve.py: no family branch, no not-implemented escape hatch.
 ENGINE_CONTRACT_FILES = (

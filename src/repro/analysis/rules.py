@@ -285,20 +285,27 @@ class RefcountRule(Rule):
 
     name = "refcount-pairing"
 
-    def __init__(self, targets=None):
+    def __init__(self, targets=None, slot_targets=None):
         self.targets = tuple(targets or registry.ALLOC_MODULES)
+        self.slot_targets = tuple(slot_targets
+                                  or registry.SLOT_CONTRACT_FILES)
 
     def applies(self, mod):
-        return _suffix_match(mod.path, self.targets)
+        return _suffix_match(mod.path, self.targets + self.slot_targets)
 
     def check(self, mod):
         if not self.applies(mod):
             return []
         out = []
-        for node in ast.walk(mod.tree):
-            out.extend(self._raw_refs(mod, node))
-            if isinstance(node, ast.Call):
-                out.extend(self._unguarded_alloc(mod, node))
+        if _suffix_match(mod.path, self.targets):
+            for node in ast.walk(mod.tree):
+                out.extend(self._raw_refs(mod, node))
+                if isinstance(node, ast.Call):
+                    out.extend(self._unguarded_alloc(mod, node))
+        if _suffix_match(mod.path, self.slot_targets):
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Call):
+                    out.extend(self._unguarded_slot_reserve(mod, node))
         return out
 
     def _raw_refs(self, mod, node):
@@ -357,8 +364,53 @@ class RefcountRule(Rule):
                         f"raise strands every page already taken")]
         return []
 
+    def _unguarded_slot_reserve(self, mod, call):
+        """Slot-reservation pairing in the engine (PR-9).
+
+        ``begin_chunk`` reserves a slot's pool state (pages, prefix
+        refs, table row) and hands back a cursor; until the request is
+        published into the engine's in-flight map, the loop body is the
+        only holder. A reserve issued inside an admission loop must
+        therefore have SOME try in that loop whose handlers/finally
+        reach a slot release (abort_chunk/reset_slots/...) — otherwise
+        one raise between reserve and publish strands the reservation,
+        which is exactly the leak class the cancellation and abort
+        paths can reintroduce."""
+        name = None
+        if isinstance(call.func, ast.Attribute):
+            name = call.func.attr
+        elif isinstance(call.func, ast.Name):
+            name = call.func.id
+        if name not in registry.SLOT_RESERVE_CALLS:
+            return []
+        qual = mod.enclosing_function(call)
+        loop = None
+        for anc in mod.ancestors(call):
+            if loop is None and isinstance(anc, (ast.For, ast.While)):
+                loop = anc
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break
+        if loop is None:
+            return []
+        guarded = any(
+            isinstance(n, ast.Try) and self._releases(
+                n, names=registry.SLOT_RELEASE_CALLS)
+            for n in ast.walk(loop))
+        if guarded:
+            return []
+        return [Finding(
+            rule=self.name, severity=Severity.ERROR, path=mod.path,
+            line=call.lineno, symbol=qual,
+            detail="unguarded-slot-reserve",
+            message=f"{name}(...) reserves a slot's pages/prefix refs "
+                    f"inside an admission loop with no slot release "
+                    f"(abort_chunk/reset_slots) reachable on the "
+                    f"exception path — one raise between reserve and "
+                    f"publish strands the reservation")]
+
     @staticmethod
-    def _releases(try_node) -> bool:
+    def _releases(try_node, names=None) -> bool:
+        names = names if names is not None else registry.RELEASE_CALLS
         region = [s for h in try_node.handlers for s in h.body]
         region += try_node.finalbody
         for stmt in region:
@@ -367,7 +419,7 @@ class RefcountRule(Rule):
                     nm = (n.func.attr if isinstance(n.func, ast.Attribute)
                           else n.func.id if isinstance(n.func, ast.Name)
                           else None)
-                    if nm in registry.RELEASE_CALLS:
+                    if nm in names:
                         return True
         return False
 

@@ -1,1 +1,3 @@
+from .inject import (FAULT_SEED_ENV, FaultInjector, InjectedFault, POINTS,
+                     default_chaos_rates)
 from .runtime import PreemptionGuard, StragglerDetector, run_supervised

@@ -226,24 +226,45 @@ def count_cell(cfg, shape, chips: int) -> dict:
 
 
 def run_cell(arch: str, shape_name: str, mesh_name: str,
-             out_dir: str = ART_DIR, force: bool = False) -> dict:
+             out_dir: str = ART_DIR, force: bool = False,
+             max_attempts: int = 3, backoff_s: float = 60.0,
+             now: float = None) -> dict:
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    now = time.time() if now is None else now
+    attempts = 0
     if os.path.exists(path) and not force:
         with open(path) as f:
             cached = json.load(f)
-        if cached.get("ok"):              # failures always retry
+        if cached.get("ok"):
+            return cached
+        # Bounded failure retry: a failed cell re-runs only while it has
+        # attempts left AND its exponential backoff window has elapsed.
+        # (The old rule was "failures always retry": one permanently
+        # broken cell re-burned its full lower+compile wall time on
+        # every sweep, forever, and back-to-back sweeps hammered flaky
+        # cells with zero spacing.)
+        attempts = int(cached.get("attempts", 1))
+        if attempts >= max_attempts:
+            return cached
+        window = backoff_s * (2.0 ** (attempts - 1))
+        if now - float(cached.get("t_attempt", 0.0)) < window:
             return cached
 
-    cfg = get_config(arch)
-    shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
-    fsdp = arch in FSDP_ARCHS
+    # config/shape/mesh resolution inside the try: an unknown arch or
+    # shape produces a bounded-retry failure record like any other
+    # failure, instead of an uncached raise that dodges the backoff.
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
-           "mesh_shape": dict(mesh.shape), "fsdp": fsdp,
-           "kind": shape.kind, "ok": False}
+           "kind": None, "ok": False,
+           "attempts": attempts + 1, "t_attempt": now}
     t0 = time.time()
     try:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        fsdp = arch in FSDP_ARCHS
+        rec.update({"mesh_shape": dict(mesh.shape), "fsdp": fsdp,
+                    "kind": shape.kind})
         with mesh:
             fn, inputs = build_cell(cfg, shape, mesh, fsdp)
             lowered = fn.lower(*inputs)
@@ -308,18 +329,26 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--out-dir", default=ART_DIR)
+    ap.add_argument("--max-attempts", type=int, default=3,
+                    help="give up on a failing cell after this many runs")
+    ap.add_argument("--retry-backoff", type=float, default=60.0,
+                    help="base seconds between retries of a failed cell "
+                         "(doubles per attempt)")
     args = ap.parse_args()
     meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
     fails = 0
     if args.all:
         for arch, shape_name in all_cells():
             for m in meshes:
-                rec = run_cell(arch, shape_name, m, args.out_dir, args.force)
+                rec = run_cell(arch, shape_name, m, args.out_dir,
+                               args.force, max_attempts=args.max_attempts,
+                               backoff_s=args.retry_backoff)
                 fails += 0 if rec["ok"] else 1
     else:
         for m in meshes:
             rec = run_cell(args.arch, args.shape, m, args.out_dir,
-                           args.force)
+                           args.force, max_attempts=args.max_attempts,
+                           backoff_s=args.retry_backoff)
             fails += 0 if rec["ok"] else 1
     if fails:
         raise SystemExit(f"{fails} cells failed")

@@ -69,11 +69,25 @@ by ``begin_chunk``), and the completion tick flips them live with no
 extra device traffic. The chunk-step path keeps the decode loop's
 zero-host-sync discipline: chunks are dispatched async, and TTFT /
 per-chunk wall time are sampled only at scheduling events.
+
+Fault tolerance (PR 9): requests carry deadlines and cooperative
+cancellation (``reap`` drops them at scheduling events and releases
+their slot/pages through ``DecodeState.abort_chunk`` / ``reset_slots``);
+a seeded ``ft.inject.FaultInjector`` can be threaded through the engine
+(``Server(injector=...)``) to force OutOfBlocks, step failures, slot
+poisoning, straggler chunks and prefix corruption — off by default and
+guarded at scheduling events only, so the hot loop stays sync-free; the
+decode programs' finite-logits sentinel (token ``-1``) quarantines
+poisoned slots at finish instead of streaming garbage; and a hysteretic
+degradation ladder sheds load under sustained pool pressure (L1 halves
+the prefill chunk width, L2 drops ``--degrade-groups`` to the policy's
+``degrade_exp_backend``), restoring when pressure clears.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -85,11 +99,33 @@ import jax.numpy as jnp
 
 from repro.analysis.registry import hot_path
 from repro.configs import get_config
+from repro.ft import (FAULT_SEED_ENV, FaultInjector, InjectedFault,
+                      default_chaos_rates)
 from repro.models import api
 from repro.models.block_pool import OutOfBlocks
 from repro.models.decode_state import decode_state_for, _len_bucket  # noqa: F401  (re-export)
 from repro.runtime import ExecPolicy, resolve_policy, parse_policy_groups
 from .mesh import make_host_mesh
+
+# Bounded admission retry: with work in flight a rejected admission just
+# waits for the next tick (pages WILL free); with nothing in flight no
+# page can ever free on its own, so the engine retries with exponential
+# backoff a bounded number of times — absorbing transient/injected
+# rejections — then sheds the head request instead of spinning forever
+# (the old behavior) or crashing the loop (the other old behavior).
+MAX_ADMIT_RETRIES = 8
+ADMIT_BACKOFF_S = 0.002
+ADMIT_BACKOFF_CAP_S = 0.05
+# A step-fault victim is re-queued and re-served this many times before
+# the engine concludes the request itself kills the step and sheds it.
+MAX_STEP_RETRIES = 3
+# Degradation-ladder hysteresis, in scheduler ticks: escalation needs
+# DEGRADE_AFTER consecutive pressured ticks, restoration RESTORE_AFTER
+# clear ones — sticky both ways so a boundary workload cannot thrash
+# the (cached) program swaps.
+PRESSURE_HIGH = 0.85
+DEGRADE_AFTER = 3
+RESTORE_AFTER = 8
 
 
 @dataclass
@@ -99,11 +135,24 @@ class Request:
     max_new: int = 16
     group: str = "default"              # policy group (Server.policy_groups)
     out: list = field(default_factory=list)
-    finish_reason: Optional[str] = None  # "max_new" | "length_cap"
+    # "max_new" | "length_cap" on success; "cancelled" | "deadline" |
+    # "quarantined" | "failed" when the engine stopped the request
+    # without materializing tokens
+    finish_reason: Optional[str] = None
     # wall-clock latency markers (filled by the engine)
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    # ---- lifecycle ----
+    deadline_s: Optional[float] = None  # TTL from submit (None = server's)
+    cancel_requested: bool = False
+    retries: int = 0                    # step-fault re-serves so far
+
+    def cancel(self):
+        """Cooperative cancellation: flags the request; the engine honors
+        it at the next scheduling event (``reap``), releasing the slot
+        and any pages/prefix refs it holds."""
+        self.cancel_requested = True
 
 
 class _Group:
@@ -177,6 +226,202 @@ class _Group:
         self.peak_logical = 0       # max summed live tokens (paged bench)
         self.peak_pages = 0         # max physical pages in use
         self._toks: dict = {}                       # slot -> [(B,1) arrays]
+        # ---- fault tolerance / lifecycle ----
+        self.injector = None         # FaultInjector (Server threads it)
+        self.base_policy = policy    # restore target for the ladder
+        self.base_chunk = self.chunk_c
+        self.degradable = False      # named in Server's --degrade-groups
+        self.degraded = 0            # ladder rung applied to this group
+        self.cancelled = 0
+        self.deadline_missed = 0
+        self.quarantined = 0
+        self.step_faults = 0
+        self.requeued = 0            # step-fault victims re-queued
+        self.shed = 0                # requests dropped as unservable
+        self.admit_retries = 0
+        self._admit_fail = 0         # consecutive nothing-in-flight fails
+        self._admit_pressure = False  # admission rejected this tick
+
+    # --------------------------------------------- lifecycle / fault paths
+
+    @hot_path
+    def reap(self, now=None):
+        """Request-lifecycle sweep, once per scheduler tick: drop
+        cancelled and deadline-expired requests. Queued requests hold no
+        pool state, so dropping them is free; a mid-prefill slot releases
+        its reservation (pages, prefix refs, table row) through
+        ``abort_chunk``; a decoding slot releases through the same abort
+        path a quarantine uses. All host bookkeeping plus async device
+        parking — the sweep that DOES sync runs only on the abort
+        events themselves, never on the fault-free tick."""
+        now = time.perf_counter() if now is None else now
+
+        def expired(r):
+            if r.cancel_requested:
+                return "cancelled"
+            if r.deadline_s is not None and \
+                    now - r.t_submit > r.deadline_s:
+                return "deadline"
+            return None
+
+        if self.queue and any(expired(r) for r in self.queue):
+            kept: deque = deque()
+            for r in self.queue:
+                why = expired(r)
+                if why is None:
+                    kept.append(r)
+                else:
+                    self._finish_host(r, why)
+            self.queue = kept
+        for j in list(self.prefilling):
+            why = expired(self.prefilling[j][0])
+            if why is not None:
+                r, _ = self.prefilling.pop(j)
+                self.state.abort_chunk(j)
+                self._finish_host(r, why)
+                self.sweep()
+        for j in range(self.max_batch):
+            if self.reqs[j] is not None:
+                why = expired(self.reqs[j])
+                if why is not None:
+                    self._abort_slot(j, why)
+
+    def _finish_host(self, r, reason):
+        """Terminal bookkeeping for a request stopped WITHOUT its tokens
+        materializing (cancel/deadline/quarantine/shed): no req_lat
+        sample — latency percentiles describe served traffic only."""
+        r.finish_reason = reason
+        r.t_done = time.perf_counter()
+        if reason == "cancelled":
+            self.cancelled += 1
+        elif reason == "deadline":
+            self.deadline_missed += 1
+        elif reason == "quarantined":
+            self.quarantined += 1
+
+    def _abort_slot(self, j, reason):
+        """Release a decoding slot without materializing its tokens:
+        free + park the slot, reset its state (paged pools decref its
+        pages), then run the invariant sweep."""
+        self._bump_peaks()
+        r = self.reqs[j]
+        self._toks.pop(j, None)
+        self.reqs[j] = None
+        self.live_dev = self.live_dev.at[j].set(0)
+        self.state.reset_slots([j])
+        self._finish_host(r, reason)
+        self.sweep()
+
+    def sweep(self):
+        """Post-fault invariant sweep: refcount conservation, no orphaned
+        block-table entries, freed slots parked at position zero —
+        everything the pool holds is accounted to a live request or a
+        cache entry. Runs after every quarantine/abort/recovery (and in
+        tests after every chaos storm); deliberately NOT on the
+        fault-free hot path, because it syncs on positions/tables."""
+        occupied = {j for j in range(self.max_batch)
+                    if self.reqs[j] is not None} | set(self.prefilling)
+        self.state.check_integrity(occupied)
+
+    def _admit_backoff(self) -> bool:
+        """The one bounded-retry policy for a rejected admission (both
+        admission modes' OutOfBlocks paths land here). In-flight work
+        means pages WILL free: retry next tick, no sleep, reset the
+        failure budget. Nothing in flight means no page can ever free on
+        its own: retry MAX_ADMIT_RETRIES times with exponential backoff
+        (transient/injected rejections clear), then shed the head
+        request — it can never be admitted — instead of spinning forever
+        or crashing the serve loop. Returns True if admission should be
+        retried."""
+        self.admit_retries += 1
+        self._admit_pressure = True
+        if any(q is not None for q in self.reqs) or self.prefilling:
+            self._admit_fail = 0
+            return True
+        self._admit_fail += 1
+        if self._admit_fail <= MAX_ADMIT_RETRIES:
+            time.sleep(min(ADMIT_BACKOFF_S * 2 ** (self._admit_fail - 1),
+                           ADMIT_BACKOFF_CAP_S))
+            return True
+        self._admit_fail = 0
+        if self.queue:
+            r = self.queue.popleft()
+            self._finish_host(r, "failed")
+            self.shed += 1
+        return False
+
+    def _recover_step_fault(self):
+        """Self-heal after a failed decode dispatch. The donated carry
+        must be presumed consumed, so ``DecodeState.recover`` drops the
+        pool (paged pools also release every held page and the prefix
+        cache, whose entries point into the dropped buffers). Every
+        in-flight request — decoding AND mid-prefill — is a victim:
+        re-queued at the head in submit order for a fresh admission, up
+        to MAX_STEP_RETRIES re-serves each (a request that keeps killing
+        the step is shed, not retried forever). Tokens emitted so far are
+        dropped with the pool; re-admission replays the prompt, so a
+        re-served request is token-identical to an undisturbed run."""
+        victims = []
+        for j in range(self.max_batch):
+            if self.reqs[j] is not None:
+                victims.append(self.reqs[j])
+                self.reqs[j] = None
+            self._toks.pop(j, None)
+        for j in sorted(self.prefilling):
+            victims.append(self.prefilling[j][0])
+        self.prefilling.clear()
+        self.state.recover()
+        self.last = self.state.place_tokens(
+            jnp.zeros((self.max_batch, 1), jnp.int32))
+        self.live_dev = self.state.place_tokens(
+            jnp.zeros((self.max_batch,), jnp.int32))
+        self.lens[:] = 0
+        self.ntok[:] = 0
+        for r in sorted(victims, key=lambda v: v.t_submit, reverse=True):
+            r.retries += 1
+            if r.retries > MAX_STEP_RETRIES:
+                self._finish_host(r, "failed")
+                self.shed += 1
+            else:
+                r.out.clear()
+                r.t_first = 0.0
+                self.requeued += 1
+                self.queue.appendleft(r)
+        self.sweep()
+
+    def under_pressure(self) -> bool:
+        """Pool-pressure signal, sampled at scheduling events only:
+        admission was rejected this tick, or a paged pool's utilization
+        (allocator counters — no device reads) crossed PRESSURE_HIGH."""
+        if self._admit_pressure:
+            return True
+        if self.paged:
+            return self.state.pool_stats()["utilization"] >= PRESSURE_HIGH
+        return False
+
+    def set_degraded(self, level: int):
+        """Apply one rung of the degradation ladder. L1 halves the
+        prefill chunk width — smaller prefill bites per tick, so decode
+        drains page-holding slots sooner; L2 additionally drops a
+        *degradable* group to the policy's ``degrade_exp_backend`` (the
+        paper's ~0.78%-error envelope is the license). Both directions go
+        through the module-level program caches, so after the first
+        application stepping up or down never recompiles."""
+        level = max(0, min(2, int(level)))
+        if level == self.degraded:
+            return
+        self.degraded = level
+        if self.base_chunk:
+            self.chunk_c = (self.base_chunk if level == 0 else
+                            self.state.chunk_width(
+                                max(1, self.base_chunk // 2)))
+        pol = self.base_policy
+        if level >= 2 and self.degradable and \
+                pol.exp_backend != pol.degrade_exp_backend:
+            pol = pol.replace(exp_backend=pol.degrade_exp_backend)
+        if pol != self.policy:
+            self.policy = pol
+            self.state.set_policy(pol)
 
     # ------------------------------------------------------------ admission
 
@@ -232,11 +477,27 @@ class _Group:
         """Fill freed slots from the queue: one ragged batched prefill
         (monolithic), or per-request chunk admission when the group runs
         chunked prefill."""
+        self._admit_pressure = False     # re-armed by a rejection below
+        if self.injector is not None and \
+                self.injector.fire("prefix.corrupt"):
+            # detected prefix corruption is handled by invalidating the
+            # chains — later admissions re-prefill instead of serving a
+            # corrupt history (host-side cache surgery, no device sync)
+            self.state.corrupt_prefix(self.injector)
         if self.chunk_c:
             return self.admit_chunked(admit_log)
         free = [j for j in range(self.max_batch) if self.reqs[j] is None]
         take, sp = self._take_wave(free)
         if not take:
+            if free and self.queue and not self.prefilling and \
+                    all(q is None for q in self.reqs):
+                # free slots, a queued request, and NOTHING in flight —
+                # yet the wave gate still couldn't take the head: its
+                # page need exceeds anything the pool can ever supply.
+                # Route through the bounded-retry policy (retry clears
+                # transient/injected shortfalls, then shed) instead of
+                # spinning the drain loop forever on an unservable head.
+                self._admit_backoff()
             return
         slots = np.array([j for j, _ in take])
         # prefill always runs at the full pool width so admitting 1 or
@@ -260,19 +521,19 @@ class _Group:
             first = self.state.prefill_into(slots, toks, plens, full=full,
                                             uniform=uniform)
         except OutOfBlocks:
-            # Defensive backstop: the admission gate debits fresh need AND
-            # pinned evictable supply per row, so this is unreachable by
-            # construction — but a failed allocation must never crash the
-            # server. prefill_into released every page the wave held;
-            # re-queue it in FIFO order and retry once live slots free
-            # pages. With nothing in flight no page can ever free, so
-            # retrying would spin forever — surface the error instead.
+            # The admission gate debits fresh need AND pinned evictable
+            # supply per row, so absent injected faults this is
+            # unreachable by construction — but a failed allocation must
+            # never crash the server. prefill_into released every page
+            # the wave held; re-queue it in FIFO order and let the one
+            # bounded-retry policy decide (retry next tick with work in
+            # flight; bounded backoff then shed with nothing in flight).
             for _, r in reversed(take):
                 self.queue.appendleft(r)
-            if not any(q is not None for q in self.reqs):
-                raise
+            self._admit_backoff()
             return
         jax.block_until_ready(first)
+        self._admit_fail = 0
         self.admit_s.append(time.perf_counter() - t0)
         if full:
             self.last = first
@@ -309,19 +570,29 @@ class _Group:
                 if self.reqs[j] is None and j not in self.prefilling]
         while free and self.queue:
             r = self.queue[0]
+            j = free[0]
             try:
-                cur = self.state.begin_chunk(free[0], r.prompt,
-                                             len(r.prompt))
-            except OutOfBlocks:
-                # pool exhausted: leave the head queued and retry once
-                # in-flight work (decoding OR mid-prefill slots) frees
-                # pages. With nothing in flight no page can ever free —
-                # surface the error instead of spinning forever.
-                if (not any(q is not None for q in self.reqs)
-                        and not self.prefilling):
+                cur = self.state.begin_chunk(j, r.prompt, len(r.prompt))
+                try:
+                    # the slot now holds its full reservation; it is
+                    # released only by _chunk_done -> eventual finish, by
+                    # reap/abort_chunk, or — if publishing the slot to
+                    # the prefilling map itself fails — right here.
+                    self.prefilling[j] = (self.queue.popleft(), cur)
+                except BaseException:
+                    self.state.abort_chunk(j)
                     raise
-                break
-            self.prefilling[free.pop(0)] = (self.queue.popleft(), cur)
+            except OutOfBlocks:
+                # pool exhausted (or an injected admission fault):
+                # begin_chunk released anything it held; the one
+                # bounded-retry policy decides — retry next tick with
+                # work in flight, bounded backoff then shed the head
+                # with nothing in flight (it can never be admitted).
+                if self._admit_backoff():
+                    break
+                continue             # head was shed; try the next request
+            free.pop(0)
+            self._admit_fail = 0
             if admit_log is not None:
                 admit_log.append(r.rid)
         self._bump_peaks()
@@ -339,6 +610,9 @@ class _Group:
         chunk and decode steps back to back."""
         if not self.prefilling:
             return
+        if self.injector is not None and \
+                self.injector.fire("chunk.delay"):
+            time.sleep(self.injector.delay_s)   # straggler chunk
         toks = np.zeros((self.max_batch, self.chunk_c), np.int32)
         offs = np.zeros(self.max_batch, np.int32)
         clens = np.zeros(self.max_batch, np.int32)
@@ -412,13 +686,30 @@ class _Group:
         live = [j for j in range(self.max_batch) if self.reqs[j] is not None]
         if not live:
             return
+        if self.injector is not None and \
+                self.injector.fire("decode.poison"):
+            # NaN one live slot's private state BEFORE the step: the
+            # decode program's finite-logits sentinel must absorb it
+            self.state.poison_slot(self.injector.choose(live))
         # dead slots decode their stale token over zeroed/parked state:
         # harmless (the slot has no request, and admission overwrites the
         # slot's state before it is read again). Positions live on device
         # (live slots advance by +1 inside the donated program), so the
         # hot loop ships nothing host->device and syncs on nothing.
         t0 = time.perf_counter()
-        nxt = self.state.step(self.last, self.live_dev)
+        try:
+            if self.injector is not None and \
+                    self.injector.fire("decode.step_error"):
+                raise InjectedFault("decode dispatch failed")
+            nxt = self.state.step(self.last, self.live_dev)
+        except Exception:
+            # A raised decode dispatch consumed the donated carry (real
+            # async XLA failures usually surface at the finish-time sync
+            # instead; the injected fault exercises the same recovery):
+            # rebuild the pool and re-queue the victims.
+            self.step_faults += 1
+            self._recover_step_fault()
+            return
         self.last = nxt
         self.decode_s.append(time.perf_counter() - t0)
         self.decode_steps += 1
@@ -440,6 +731,20 @@ class _Group:
         # one device->host sync per finished request: gather its column
         # from the logged per-step argmax vectors.
         toks = np.asarray(jnp.stack(self._toks.pop(j)))[:, j, 0]
+        if (toks < 0).any():
+            # the decode programs' sticky finite-logits sentinel: some
+            # step saw non-finite logits for this row. Quarantine — never
+            # stream the garbage — and scrub the slot (deep zero, not a
+            # plain reset: surviving NaN rows would contaminate the next
+            # occupant through additively-masked attention). Detection
+            # costs nothing extra: the token column was already
+            # materialized here.
+            self.reqs[j] = None
+            self.live_dev = self.live_dev.at[j].set(0)
+            self.state.scrub_slot(j)
+            self._finish_host(r, "quarantined")
+            self.sweep()
+            return
         r.out.extend(int(t) for t in toks)
         r.finish_reason = reason
         r.t_done = time.perf_counter()   # after the sync: true completion
@@ -478,7 +783,10 @@ class Server:
                  kv_mode: str = "auto", paged: bool = False,
                  block_page: Optional[int] = None,
                  block_budget: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 injector: Optional[FaultInjector] = None,
+                 deadline_s: Optional[float] = None,
+                 degrade_groups=()):
         # raises for encoder-only archs; under --paged this resolves the
         # paged state class so the seq-sharding capability probe below
         # reflects what will actually serve
@@ -539,6 +847,28 @@ class Server:
                          prefix_cache=prefix_cache)
             for name, pol in groups.items()}
         self.admit_log: list = []    # rids in admission order (tests/debug)
+        # ---- fault tolerance / lifecycle ----
+        self.injector = injector
+        self.deadline_s = deadline_s     # default TTL for submitted requests
+        degrade = set(degrade_groups or ())
+        unknown = degrade - set(self._groups)
+        if unknown:
+            raise ValueError(f"unknown degrade group(s) {sorted(unknown)}; "
+                             f"have {sorted(self._groups)}")
+        for name, g in self._groups.items():
+            g.degradable = name in degrade
+            if injector is not None:
+                g.injector = injector
+                g.state.set_injector(injector)
+        # The ladder is strictly opt-in: with no --degrade-groups the
+        # engine never trades chunk width or numerics for pressure —
+        # tight paged pools run at high utilization as a matter of
+        # course, and an un-opted operator gets exactly the configured
+        # schedule (the chunked-prefill identity tests pin chunk_c).
+        self._degrade_enabled = bool(degrade)
+        self.degrade_level = 0
+        self._pressure_ticks = 0
+        self._clear_ticks = 0
 
     # ------------------------------------------------------------ scheduling
 
@@ -555,23 +885,79 @@ class Server:
                 f"cache capacity ({self.cache_s})")
         if r.max_new < 1:
             raise ValueError(f"request {r.rid}: max_new must be >= 1")
+        if r.deadline_s is None:
+            r.deadline_s = self.deadline_s
         r.t_submit = time.perf_counter()
         self._groups[r.group].queue.append(r)
 
+    def cancel(self, rid: int) -> bool:
+        """Cooperative cancellation by request id: flag the request
+        wherever it lives (queued, mid-prefill or decoding); the next
+        tick's reap drops it and releases whatever it holds. Returns
+        False for an unknown or already-finished rid."""
+        for g in self._groups.values():
+            for r in g.queue:
+                if r.rid == rid:
+                    r.cancel()
+                    return True
+            for r in g.reqs:
+                if r is not None and r.rid == rid:
+                    r.cancel()
+                    return True
+            for r, _ in g.prefilling.values():
+                if r.rid == rid:
+                    r.cancel()
+                    return True
+        return False
+
     @hot_path
     def step(self) -> bool:
-        """One scheduler tick: admit into freed slots, then (chunked
-        groups) at most one bounded prefill chunk, then one decode step
+        """One scheduler tick: reap cancelled/expired requests, admit
+        into freed slots, evaluate the degradation ladder, then (chunked
+        groups) at most one bounded prefill chunk and one decode step
         per busy group. Chunk before decode: a prompt completing its last
         chunk goes live the same tick, so its first decode step follows
         immediately. Returns True while any work remains."""
         for g in self._groups.values():
+            g.reap()
+        for g in self._groups.values():
             g.admit(self.admit_log)
+        self._degradation_tick()
         for g in self._groups.values():
             g.prefill_chunk_once()
         for g in self._groups.values():
             g.decode_once()
         return any(g.busy for g in self._groups.values())
+
+    def _degradation_tick(self):
+        """The ladder's hysteresis, from host-side pressure signals only
+        (admission rejections this tick, allocator utilization):
+        DEGRADE_AFTER consecutive pressured ticks escalate one rung —
+        L1 halves the prefill chunk width, L2 also downgrades the
+        --degrade-groups to their policy's ``degrade_exp_backend`` —
+        and RESTORE_AFTER clear ticks step back down. The engine heals
+        to full fidelity on its own; nothing stays degraded forever.
+        Inert unless at least one group opted in via degrade_groups."""
+        if not self._degrade_enabled:
+            return
+        pressured = any(g.under_pressure() for g in self._groups.values())
+        if pressured:
+            self._pressure_ticks += 1
+            self._clear_ticks = 0
+        else:
+            self._clear_ticks += 1
+            self._pressure_ticks = 0
+        level = self.degrade_level
+        if pressured and self._pressure_ticks >= DEGRADE_AFTER \
+                and level < 2:
+            level, self._pressure_ticks = level + 1, 0
+        elif not pressured and self._clear_ticks >= RESTORE_AFTER \
+                and level > 0:
+            level, self._clear_ticks = level - 1, 0
+        if level != self.degrade_level:
+            self.degrade_level = level
+            for g in self._groups.values():
+                g.set_degraded(level)
 
     def drain(self) -> None:
         with self.mesh:
@@ -623,6 +1009,15 @@ class Server:
                 "p95_ttft_s": pct(ttft, 95),
                 "policy": g.policy.describe(),
                 "kv_axis": g.kv_axis,
+                # ---- lifecycle / fault counters ----
+                "cancelled": g.cancelled,
+                "deadline_missed": g.deadline_missed,
+                "quarantined": g.quarantined,
+                "step_faults": g.step_faults,
+                "requeued": g.requeued,
+                "shed": g.shed,
+                "admit_retries": g.admit_retries,
+                "degraded": g.degraded,
             }
             if g.paged:
                 g._bump_peaks()          # sample mid-decode footprint
@@ -637,6 +1032,43 @@ class Server:
                                                  if cap else 0.0)
                 out[name]["pool"] = pool
         return out
+
+    def fault_stats(self) -> dict:
+        """Chaos-harness summary: the engine's degradation level plus the
+        injector's per-point seen/fired counters (empty when no injector
+        is threaded). Kept out of stats(), whose keys are per-group."""
+        out = {"degrade_level": self.degrade_level}
+        if self.injector is not None:
+            out["injector"] = self.injector.stats()
+        return out
+
+    # ----------------------------------------------------------- invariants
+
+    def check_invariants(self):
+        """Run every group's post-fault invariant sweep now: refcount
+        conservation, no orphaned block-table entries, freed slots
+        parked. Raises AssertionError on the first violation."""
+        for g in self._groups.values():
+            g.sweep()
+
+    def assert_idle_clean(self):
+        """Terminal leak check for a drained server: nothing queued or in
+        flight anywhere, invariants hold, and — after dropping the prefix
+        cache's own references — every paged group's allocator reports
+        zero pages in use. Destructive to the prefix cache (this is a
+        shutdown check); serving can continue but restarts cold."""
+        for name, g in self._groups.items():
+            if g.busy:
+                raise AssertionError(f"group {name} still busy at "
+                                     f"shutdown")
+            g.sweep()
+            if g.paged:
+                if g.state.pcache is not None:
+                    g.state.pcache.drop_all()
+                used = g.state.alloc.n_used()
+                if used:
+                    raise AssertionError(
+                        f"group {name}: {used} pages leaked")
 
 
 def main():
@@ -686,6 +1118,28 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="give all generated requests an identical first N "
                          "tokens (exercises the paged prefix cache)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="default per-request TTL in seconds (from "
+                         "submit); expired requests are reaped at the "
+                         "next scheduler tick and release their slot "
+                         "and pages")
+    ap.add_argument("--degrade-groups", default=None,
+                    help='comma-separated policy groups the degradation '
+                         'ladder may drop to the policy\'s '
+                         'degrade_exp_backend under sustained pool '
+                         'pressure, e.g. "bulk" (restored when pressure '
+                         'clears)')
+    ap.add_argument("--chaos", action="store_true",
+                    help="thread a seeded FaultInjector through the "
+                         "engine at the default chaos rates, assert "
+                         "clean shutdown (zero leaked pages/slots) and "
+                         "print the fault report")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help=f"chaos seed (default: ${FAULT_SEED_ENV} or 0)")
+    ap.add_argument("--cancel-frac", type=float, default=0.0,
+                    help="cancel roughly this fraction of the submitted "
+                         "requests mid-serve (exercises cooperative "
+                         "cancellation)")
     ap.add_argument("--kv-mode", default="auto",
                     choices=["auto", "seq", "batch"],
                     help='decode-cache placement: "seq" shards the KV '
@@ -714,12 +1168,22 @@ def main():
     n_model = args.mesh_model or (len(jax.devices())
                                   if args.kv_mode == "seq" else 1)
     mesh = make_host_mesh(1, n_model)
+    injector = None
+    if args.chaos:
+        seed = (args.fault_seed if args.fault_seed is not None
+                else int(os.environ.get(FAULT_SEED_ENV, "0") or "0"))
+        injector = FaultInjector(seed=seed, rates=default_chaos_rates())
+        print(f"[serve] chaos: seed={seed} rates={default_chaos_rates()}")
+    degrade = tuple(s.strip() for s in (args.degrade_groups or "").split(",")
+                    if s.strip())
     server = Server(cfg, params, max_batch=args.max_batch,
                     max_seq=args.max_seq, mesh=mesh, policy=policy,
                     policy_groups=groups, kv_mode=args.kv_mode,
                     paged=args.paged, block_page=args.block_page,
                     block_budget=args.block_budget,
-                    prefix_cache=not args.no_prefix_cache)
+                    prefix_cache=not args.no_prefix_cache,
+                    injector=injector, deadline_s=args.deadline,
+                    degrade_groups=degrade)
     print(f"[serve] mesh {dict(server.mesh.shape)}; sharded decode axis: "
           f"{server.kv_axis}" + ("; paged" if server.paged else ""))
     rng = np.random.default_rng(0)
@@ -736,10 +1200,18 @@ def main():
         reqs.append(Request(i, prompt, args.max_new,
                             group=names[i % len(names)]))
     t0 = time.perf_counter()
-    out = server.run(reqs)
+    for r in reqs:
+        server.submit(r)
+    if args.cancel_frac > 0:
+        stride = max(1, int(round(1.0 / args.cancel_frac)))
+        for r in reqs[::stride]:
+            server.cancel(r.rid)
+    server.drain()
+    out = reqs
     dt = time.perf_counter() - t0
     ntok = sum(len(r.out) for r in out)
-    print(f"served {len(out)} requests, {ntok} tokens in {dt:.2f}s "
+    ok = sum(r.finish_reason in ("max_new", "length_cap") for r in out)
+    print(f"served {ok}/{len(out)} requests, {ntok} tokens in {dt:.2f}s "
           f"({ntok / dt:.1f} tok/s)")
     for name, s in server.stats().items():
         print(f"  group {name}: {s['decode_steps']} decode steps, "
@@ -761,6 +1233,23 @@ def main():
                 line += (f", prefix hit rate "
                          f"{p['prefix']['hit_rate']:.2f}")
             print(line)
+    for name, s in server.stats().items():
+        dropped = (s["cancelled"] + s["deadline_missed"]
+                   + s["quarantined"] + s["shed"])
+        if dropped or s["step_faults"] or s["admit_retries"]:
+            print(f"    lifecycle: cancelled={s['cancelled']} "
+                  f"deadline={s['deadline_missed']} "
+                  f"quarantined={s['quarantined']} shed={s['shed']} "
+                  f"step_faults={s['step_faults']} "
+                  f"requeued={s['requeued']} "
+                  f"admit_retries={s['admit_retries']}")
+    if args.chaos:
+        server.assert_idle_clean()
+        fs = server.fault_stats()
+        fired = fs.get("injector", {}).get("fired", {})
+        print(f"[serve] chaos clean shutdown: zero leaked pages/slots; "
+              f"faults fired: {fired or 'none'}; "
+              f"degrade level at exit: {fs['degrade_level']}")
     for r in out[:3]:
         print(f"  req {r.rid} [{r.group}] len={len(r.prompt)}: "
               f"{r.out[:8]}... ({r.finish_reason})")

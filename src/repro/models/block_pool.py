@@ -92,6 +92,11 @@ class BlockAllocator:
         # eviction hook wired by PrefixCache: evict_cb(partition, n) must
         # try to release >= n pages of that partition; returns #released.
         self._evict_cb: Optional[Callable[[int, int], int]] = None
+        # chaos harness (ft.inject): when set, _alloc_one consults it for
+        # forced OutOfBlocks — mid-alloc_cols, so every rollback path
+        # upstream (all-or-nothing release, attach decref, wave requeue)
+        # is exercised, not just the clean "pool actually full" case.
+        self.injector = None
 
     # ------------------------------------------------------------ queries
 
@@ -127,6 +132,9 @@ class BlockAllocator:
     # -------------------------------------------------------- alloc / free
 
     def _alloc_one(self, part: int) -> int:
+        if self.injector is not None and \
+                self.injector.fire("alloc.out_of_blocks"):
+            raise OutOfBlocks(f"partition {part}: injected allocation fault")
         if not self._free[part]:
             if self._evict_cb is not None:
                 self._evict_cb(part, 1)
@@ -355,6 +363,27 @@ class PrefixCache:
             if was == 1 and self.alloc.part_of(gid) == part:
                 freed += 1
         return freed
+
+    def invalidate(self, n: Optional[int] = None, rng=None) -> int:
+        """Drop ``n`` cached entries (all of them when ``n`` is None),
+        leaf-first so chains stay walkable, releasing the cache's own
+        reference on each page. This is the recovery action for detected
+        prefix corruption — a suspect entry is dropped, never served —
+        and the chaos harness's ``prefix.corrupt`` fault. Live slots are
+        untouched: only the cache's claim is released, and the cache is
+        transparent to serving semantics (a dropped entry costs a future
+        re-prefill, never a wrong token). ``rng`` (numpy Generator)
+        picks victims; None peels deterministically."""
+        want = len(self._entries) if n is None else min(int(n),
+                                                       len(self._entries))
+        dropped = 0
+        while dropped < want and self._entries:
+            leaves = [h for h in self._entries if h not in self._children]
+            pick = leaves[int(rng.integers(len(leaves)))] \
+                if rng is not None else leaves[0]
+            self._evict_one(pick)
+            dropped += 1
+        return dropped
 
     # ------------------------------------------------------------ teardown
 

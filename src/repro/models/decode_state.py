@@ -46,6 +46,24 @@ import numpy as np
 from repro.analysis.registry import hot_path
 
 from . import api
+from .block_pool import OutOfBlocks
+
+
+def _guard_tokens(logits, last=None):
+    """Greedy next-token with the non-finite sentinel folded in: a row
+    whose logits are not all finite emits token ``-1`` (never a valid
+    vocab id) instead of whatever ``argmax`` makes of NaN/inf. Passing
+    ``last`` (the decode carry's previous tokens) makes the sentinel
+    *sticky* — one poisoned step marks the slot until the engine
+    quarantines it at the next scheduling event, even if later logits
+    look finite again. Elementwise + one lane reduction, fused into the
+    surrounding program: no collectives, no host work, no new outputs —
+    the device-side per-slot finite-logits flag IS the token stream."""
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
+    if last is not None:
+        bad = bad | (last < 0)
+    return jnp.where(bad, jnp.int32(-1), tok)
 
 
 def _len_bucket(n: int, cap: int) -> int:
@@ -86,14 +104,14 @@ def _programs(cfg, policy, mesh=None, kv_axis=None, decode_policy=None):
         def prefill_fn(p, toks, plens):
             logits, state = api.prefill(
                 p, cfg, {"tokens": toks, "prompt_len": plens}, policy=pol)
-            return jnp.argmax(logits, -1).astype(jnp.int32), state
+            return _guard_tokens(logits), state
 
         def prefill_plain_fn(p, toks):
             # every row full-length: no padding mask to apply (the common
             # uniform-traffic admission; skips the ragged machinery)
             logits, state = api.prefill(p, cfg, {"tokens": toks},
                                         policy=pol)
-            return jnp.argmax(logits, -1).astype(jnp.int32), state
+            return _guard_tokens(logits), state
 
         # chunk_fn(params, toks, state, off, clens) -> (next, state): one
         # fixed-shape resumable-prefill step over the whole pool. The
@@ -102,14 +120,13 @@ def _programs(cfg, policy, mesh=None, kv_axis=None, decode_policy=None):
         def chunk_fn(p, toks, c, off, clens):
             logits, c = api.prefill_chunk(p, cfg, toks, c, off, clens,
                                           policy=pol)
-            return jnp.argmax(logits, -1).astype(jnp.int32), c
+            return _guard_tokens(logits), c
 
         if kv_axis is None:
             def decode_fn(p, t, c, pos, live):
                 logits, state = api.decode_step(p, cfg, t, c, pos,
                                                 policy=dpol, live=live)
-                return (jnp.argmax(logits, -1).astype(jnp.int32), state,
-                        pos + live)
+                return _guard_tokens(logits, t), state, pos + live
 
             decode = jax.jit(decode_fn, donate_argnums=(2, 3))
             chunk = jax.jit(chunk_fn, donate_argnums=(2,))
@@ -138,8 +155,7 @@ def _programs(cfg, policy, mesh=None, kv_axis=None, decode_policy=None):
                                                 policy=dpol,
                                                 seq_axis=kv_axis,
                                                 live=live)
-                return (jnp.argmax(logits, -1).astype(jnp.int32), c,
-                        pos + live)
+                return _guard_tokens(logits, t), c, pos + live
 
             decode = jax.jit(
                 shard_map(decode_local, mesh=mesh,
@@ -193,7 +209,11 @@ class DecodeState:
         if self._repl is not None:
             self.params_decode = jax.device_put(params, self._repl)
             self.pos_dev = jax.device_put(self.pos_dev, self._repl)
+        self.injector = None             # chaos harness (ft.inject)
         decode_policy = self._autotune_warmup()
+        # remembered so set_policy can restore the EXACT original
+        # programs (incl. the autotuned decode policy) after degradation
+        self._policy0, self._dpol0 = policy, decode_policy
         (self._prefill, self._prefill_plain, self._decode,
          self._chunk) = _programs(cfg, policy, mesh, kv_axis,
                                   decode_policy)
@@ -240,6 +260,7 @@ class DecodeState:
         *is* the pool, padded to capacity — no scatter); ``uniform`` =
         run the unmasked plain prefill (no padding exists). Returns the
         (pool_width, 1) first greedy tokens, placed for decode."""
+        self._maybe_inject_admission_fault()
         if uniform:
             first, pref = self._prefill_plain(self.params,
                                               jnp.asarray(toks))
@@ -344,6 +365,7 @@ class DecodeState:
         row and the parked position untouched, so the completion tick
         flips the slot live with no extra device write."""
         del prompt
+        self._maybe_inject_admission_fault()
         self.pos_dev = self.pos_dev.at[int(slot)].set(int(plen))
         return 0
 
@@ -380,6 +402,112 @@ class DecodeState:
         if w is None or self.cache_s < w:
             return self.cache_s
         return None
+
+    # ----------------------------------------- fault tolerance / lifecycle
+
+    def set_injector(self, inj):
+        """Wire the chaos harness (``ft.inject.FaultInjector``) into this
+        pool's scheduling-event paths. ``None`` (the default) disables
+        injection; every guarded site then pays one attribute check."""
+        self.injector = inj
+
+    def _maybe_inject_admission_fault(self):
+        if self.injector is not None and \
+                self.injector.fire("admit.out_of_blocks"):
+            raise OutOfBlocks("injected: admission rejected")
+
+    def abort_chunk(self, slot):
+        """Abandon a mid-chunk admission: release everything
+        ``begin_chunk`` reserved for ``slot`` (pages, prefix refs, table
+        row, pinned position) and park the slot. ``reset_slots`` already
+        IS that release for every implementation — paged pools decref the
+        slot's pages, drop its pending hit depth and zero its table row —
+        so the protocol method is the documented alias; the engine calls
+        ``abort_chunk`` so the intent (reservation rollback, not a
+        finished request) reads at the call site."""
+        self.reset_slots([int(slot)])
+
+    def poison_slot(self, slot) -> bool:
+        """Corrupt one slot's private state with NaNs (the
+        ``decode.poison`` chaos fault). Returns False when there is
+        nothing to poison yet (pool unallocated). The decode program's
+        finite-logits guard must turn this into sentinel tokens — never
+        into silently-wrong samples."""
+        if self.data is None:
+            return False
+        j = int(slot)
+
+        def nanify(leaf, ax):
+            if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                return leaf
+            idx = [slice(None)] * leaf.ndim
+            idx[ax.batch] = j
+            return leaf.at[tuple(idx)].set(jnp.nan)
+
+        self.data = jax.tree.map(nanify, self.data, self.axes)
+        return True
+
+    def corrupt_prefix(self, injector) -> int:
+        """Invalidate prefix-cache chains (the ``prefix.corrupt`` fault:
+        detected corruption is handled by dropping the entry, never by
+        serving it). Contiguous pools have no cache; paged KV overrides.
+        Returns the number of entries invalidated."""
+        return 0
+
+    def scrub_slot(self, slot):
+        """Quarantine release: zero EVERY floating leaf row of the slot
+        — not just the rows ``reset_slots`` zeroes — then park it. A
+        poisoned row's NaNs must not outlive its request: KV rows past a
+        later occupant's ``cache_len`` still flow through additively-
+        masked attention scores (NaN + -inf = NaN), so the plain reset
+        (which skips cache_len-masked leaves by design) is not enough."""
+        j = int(slot)
+        if self.data is not None:
+            def zero(leaf, ax):
+                if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                    return leaf
+                idx = [slice(None)] * leaf.ndim
+                idx[ax.batch] = j
+                return leaf.at[tuple(idx)].set(0)
+
+            self.data = jax.tree.map(zero, self.data, self.axes)
+        self.reset_slots([j])
+
+    def recover(self):
+        """Rebuild the pool after a failed (donated) decode dispatch. A
+        raised step must be presumed to have consumed the donated carry
+        buffers, so the only safe move is to drop the pool and park every
+        slot; the engine re-queues the victims through normal
+        admission."""
+        self.data = None
+        self.pos_dev = jnp.zeros((self.pool_width,), jnp.int32)
+        if self._repl is not None:
+            self.pos_dev = jax.device_put(self.pos_dev, self._repl)
+
+    def set_policy(self, policy):
+        """Swap the group's execution policy in place (the degradation
+        ladder's lever). Programs come from the module-level cache, so
+        flipping to a previously-used policy — including back to the
+        original — is a dict lookup, not a recompile. Returns the decode
+        policy the programs were built against (the original autotuned
+        one when restoring)."""
+        dpol = self._dpol0 if policy == self._policy0 else policy
+        self.policy = policy
+        (self._prefill, self._prefill_plain, self._decode,
+         self._chunk) = _programs(self.cfg, policy, self.mesh,
+                                  self.kv_axis, dpol)
+        return dpol
+
+    def check_integrity(self, live_slots=()):
+        """Post-fault invariant sweep (deliberately NOT hot-path: it
+        syncs). Freed slots must be parked at position 0 — a nonzero
+        parked position means an abort path skipped ``reset_slots``."""
+        live = {int(j) for j in live_slots}
+        pos = np.asarray(self.pos_dev)
+        for j in range(self.pool_width):
+            if j not in live and int(pos[j]) != 0:
+                raise AssertionError(
+                    f"freed slot {j} parked at pos {int(pos[j])}")
 
 
 class KVDecodeState(DecodeState):
@@ -532,7 +660,7 @@ def _paged_programs(cfg, policy, page, mesh=None, kv_axis=None,
             logits, state = api.prefill(
                 p, cfg, {"tokens": toks, "prompt_len": plens,
                          "hist": hist}, policy=pol)
-            return jnp.argmax(logits, -1).astype(jnp.int32), state
+            return _guard_tokens(logits), state
 
         # The pool donates everywhere except the CPU backend: XLA-CPU
         # lowers the page scatter to a full-pool materialization whether
@@ -546,8 +674,7 @@ def _paged_programs(cfg, policy, page, mesh=None, kv_axis=None,
             def decode_fn(p, t, c, tab, pos, live):
                 logits, c = api.decode_step_paged(p, cfg, t, c, tab, pos,
                                                   policy=dpol, live=live)
-                return (jnp.argmax(logits, -1).astype(jnp.int32), c,
-                        pos + live)
+                return _guard_tokens(logits, t), c, pos + live
 
             decode = jax.jit(decode_fn, donate_argnums=pool_d + (4,))
 
@@ -559,7 +686,7 @@ def _paged_programs(cfg, policy, page, mesh=None, kv_axis=None,
             def chunk_fn(p, toks, c, tab, off, clens):
                 logits, c = api.prefill_chunk_paged(
                     p, cfg, toks, c, tab, off, clens, policy=pol)
-                return jnp.argmax(logits, -1).astype(jnp.int32), c
+                return _guard_tokens(logits), c
 
             chunk = jax.jit(chunk_fn, donate_argnums=pool_d)
         else:
@@ -573,8 +700,7 @@ def _paged_programs(cfg, policy, page, mesh=None, kv_axis=None,
                 logits, c = decode_step_paged_sharded(
                     p, cfg, t, c, tab, pos, policy=dpol, seq_axis=kv_axis,
                     live=live)
-                return (jnp.argmax(logits, -1).astype(jnp.int32), c,
-                        pos + live)
+                return _guard_tokens(logits, t), c, pos + live
 
             decode = jax.jit(
                 shard_map(decode_local, mesh=mesh,
@@ -684,6 +810,41 @@ _paged_gather_jit = jax.jit(_paged_gather_hist_impl,
 _admit_rows_jit = jax.jit(
     lambda tab, pos, sl, rows, pl: (tab.at[sl].set(rows),
                                     pos.at[sl].set(pl)))
+
+
+def _paged_integrity(state, live):
+    """Shared paged-pool invariant sweep: allocator self-check (free-list
+    conservation), freed slots hold no pages and have all-zero table
+    rows, and every page's refcount exactly equals its holders (slot
+    tables + prefix-cache entries) — conservation with no orphans. Host
+    work over host mirrors plus one table readback; runs only at
+    fault-recovery events and in tests."""
+    state.alloc.check()
+    holders: dict = {}
+    for j, pages in enumerate(state.slot_pages):
+        if j not in live and pages:
+            raise AssertionError(
+                f"freed slot {j} still holds {len(pages)} pages")
+        for gid in pages:
+            holders[int(gid)] = holders.get(int(gid), 0) + 1
+    pcache = getattr(state, "pcache", None)
+    if pcache is not None:
+        for gid, _, _ in pcache._entries.values():
+            holders[int(gid)] = holders.get(int(gid), 0) + 1
+    for gid in range(state.n_pages):
+        if gid % state.alloc.per_part == 0:
+            continue                      # scratch pages are never held
+        refs = state.alloc.refcount(gid)
+        held = holders.get(gid, 0)
+        if refs != held:
+            raise AssertionError(
+                f"page {gid}: refcount {refs} != {held} holders")
+    if state.tables is not None:
+        tab = np.asarray(state.tables)
+        for j in range(state.pool_width):
+            if j not in live and tab[j].any():
+                raise AssertionError(
+                    f"freed slot {j} has a nonzero table row")
 
 
 def _paged_gather_hist(pool, gids, page, lay):
@@ -864,6 +1025,7 @@ class PagedKVDecodeState(KVDecodeState):
 
     def prefill_into(self, slots, toks, plens, *, full, uniform=False):
         self._ensure_pool()
+        self._maybe_inject_admission_fault()
         slots = list(np.asarray(slots).reshape(-1))
         toks_np = np.asarray(toks)
         plens_np = np.asarray(plens).reshape(-1)
@@ -1013,6 +1175,7 @@ class PagedKVDecodeState(KVDecodeState):
         the attached pages; shared pages are never written by chunks
         (only full pages are shared, and writes begin at the cursor)."""
         self._ensure_pool()
+        self._maybe_inject_admission_fault()
         from .block_pool import OutOfBlocks
         j, plen = int(slot), int(plen)
         prompt = np.asarray(prompt).reshape(-1)[:plen]
@@ -1066,6 +1229,77 @@ class PagedKVDecodeState(KVDecodeState):
             self._chunk_hit.pop(int(j), None)
         if self.tables is not None:
             self.tables = self.tables.at[sl].set(0)
+
+    # ----------------------------------------- fault tolerance / lifecycle
+
+    def set_injector(self, inj):
+        super().set_injector(inj)
+        self.alloc.injector = inj        # alloc.out_of_blocks fires there
+
+    def poison_slot(self, slot) -> bool:
+        # NaN only the slot's PRIVATE pages (refcount 1): shared /
+        # published prefix pages back other requests' histories, and the
+        # fault model is "this slot's state went bad", not "the cache
+        # lied to everyone". A fully-shared slot (aligned prompt, all
+        # pages published) has no private page yet — report False so the
+        # chaos driver picks another victim.
+        if self.data is None:
+            return False
+        gids = [int(g) for g in self.slot_pages[int(slot)]
+                if self.alloc.refcount(int(g)) == 1]
+        if not gids:
+            return False
+        ids = jnp.asarray(self._local_ids(gids), jnp.int32)
+        for kname in ("k", "v"):
+            self.data[kname] = self.data[kname].at[:, ids].set(jnp.nan)
+        return True
+
+    def corrupt_prefix(self, injector) -> int:
+        if self.pcache is None or not self.pcache._entries:
+            return 0
+        n = max(1, len(self.pcache._entries) // 2)
+        return self.pcache.invalidate(n=n, rng=injector.rng)
+
+    def scrub_slot(self, slot):
+        # zero the slot's PRIVATE pages in the pool BEFORE the reset
+        # returns them to the free list: a NaN page reallocated to a
+        # later request sits past its cache_len but still flows through
+        # additively-masked attention scores. Shared/published pages are
+        # never poisoned (poison_slot skips them) and never written.
+        j = int(slot)
+        gids = [int(g) for g in self.slot_pages[j]
+                if self.alloc.refcount(int(g)) == 1]
+        if gids and self.data is not None:
+            ids = jnp.asarray(self._local_ids(gids), jnp.int32)
+            for kname in ("k", "v"):
+                self.data[kname] = self.data[kname].at[:, ids].set(0)
+        self.reset_slots([j])
+
+    def recover(self):
+        # the donated carry (pool + tables' target) is gone; every page
+        # the slots hold AND every cached prefix page points into it —
+        # release them all, then drop the pool itself
+        for j in range(self.pool_width):
+            for gid in self.slot_pages[j]:
+                self.alloc.decref(int(gid))
+            self.slot_pages[j] = []
+        self._chunk_hit.clear()
+        if self.pcache is not None:
+            self.pcache.drop_all()
+        self.tables = None
+        super().recover()
+
+    def set_policy(self, policy):
+        dpol = super().set_policy(policy)
+        self._decode_policy = dpol
+        (self._hist_prefill, self._decode_paged,
+         self._chunk_paged) = _paged_programs(
+            self.cfg, policy, self.page, self.mesh, self.kv_axis, dpol)
+        return dpol
+
+    def check_integrity(self, live_slots=()):
+        super().check_integrity(live_slots)
+        _paged_integrity(self, {int(j) for j in live_slots})
 
 
 class PagedHybridDecodeState(HybridDecodeState):
@@ -1132,6 +1366,7 @@ class PagedHybridDecodeState(HybridDecodeState):
 
     def prefill_into(self, slots, toks, plens, *, full, uniform=False):
         self._ensure_pool()
+        self._maybe_inject_admission_fault()
         slots = list(np.asarray(slots).reshape(-1))
         plens_np = np.asarray(plens).reshape(-1)
         if uniform:
@@ -1190,6 +1425,7 @@ class PagedHybridDecodeState(HybridDecodeState):
         # monolithic admission; prompts fit the window so prefill
         # positions never wrap the ring table
         self._ensure_pool()
+        self._maybe_inject_admission_fault()
         j = int(slot)
         held = self.alloc.alloc_cols(range(self.ns))
         self.slot_pages[j] = held
@@ -1215,6 +1451,72 @@ class PagedHybridDecodeState(HybridDecodeState):
             self.slot_pages[int(j)] = []
         if self.tables is not None:
             self.tables = self.tables.at[sl].set(0)
+
+    # ----------------------------------------- fault tolerance / lifecycle
+
+    def set_injector(self, inj):
+        super().set_injector(inj)
+        self.alloc.injector = inj
+
+    def poison_slot(self, slot) -> bool:
+        # NaN only the recurrent snapshots: the paged KV leaves are
+        # slotless pools whose batch axis the contiguous nanify would
+        # mis-index. The RG-LRU state is read unconditionally every step,
+        # so recurrent NaNs alone are guaranteed to reach the logits.
+        if self.data is None:
+            return False
+        j = int(slot)
+
+        def nanify(leaf, ax):
+            if ax.seq is not None or \
+                    not jnp.issubdtype(leaf.dtype, jnp.floating):
+                return leaf
+            idx = [slice(None)] * leaf.ndim
+            idx[ax.batch] = j
+            return leaf.at[tuple(idx)].set(jnp.nan)
+
+        self.data = jax.tree.map(nanify, self.data, self.axes)
+        return True
+
+    def recover(self):
+        for j in range(self.pool_width):
+            for gid in self.slot_pages[j]:
+                self.alloc.decref(int(gid))
+            self.slot_pages[j] = []
+        self.tables = None
+        super().recover()
+
+    def scrub_slot(self, slot):
+        # recurrent rows zero through the generic scrub; the slot's ring
+        # pages are zeroed in the slotless pools before they return to
+        # the free list (same NaN-reallocation hazard as paged KV)
+        j = int(slot)
+        gids = [int(g) for g in self.slot_pages[j]]
+        if gids and self.data is not None:
+            ids = jnp.asarray(np.asarray(gids), jnp.int32)
+
+            def zero(leaf, ax):
+                if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                    return leaf
+                if ax.seq is None:
+                    idx = [slice(None)] * leaf.ndim
+                    idx[ax.batch] = j
+                    return leaf.at[tuple(idx)].set(0)
+                return leaf.at[:, ids].set(0)
+
+            self.data = jax.tree.map(zero, self.data, self.axes)
+        self.reset_slots([j])
+
+    def set_policy(self, policy):
+        dpol = super().set_policy(policy)
+        (_, self._decode_paged,
+         self._chunk_paged) = _paged_programs(self.cfg, policy, self.page,
+                                              None, None, dpol)
+        return dpol
+
+    def check_integrity(self, live_slots=()):
+        super().check_integrity(live_slots)
+        _paged_integrity(self, {int(j) for j in live_slots})
 
 
 def decode_state_for(cfg, paged=False):

@@ -53,6 +53,7 @@ _ENV_FIELDS = {
     "AUTOTUNE": "autotune",
     "MERGE_STRATEGY": "merge_strategy",
     "PREFILL_CHUNK": "prefill_chunk",
+    "DEGRADE_EXP_BACKEND": "degrade_exp_backend",
 }
 
 _TRUTHY = ("1", "true", "yes", "on")
@@ -106,6 +107,14 @@ class ExecPolicy:
                     prompt can add). Families may round the width up to
                     their invariant unit (ssm: ``cfg.ssm_chunk``) — see
                     ``DecodeState.chunk_width``.
+    degrade_exp_backend
+                    the exp backend a serving group flagged as
+                    degradable (``--degrade-groups``) drops to under
+                    sustained pool pressure. Defaults to "vexp_hw" — the
+                    paper's bit-exact RTL model, whose ~0.78% accuracy
+                    envelope is exactly the license for trading numerics
+                    for throughput on bulk traffic. The engine restores
+                    the group's own backend when pressure clears.
     """
 
     exp_backend: str = "vexp"
@@ -120,11 +129,16 @@ class ExecPolicy:
     autotune: bool = False
     merge_strategy: str = "packed"
     prefill_chunk: int = 0
+    degrade_exp_backend: str = "vexp_hw"
 
     def __post_init__(self):
         if self.exp_backend not in EXP_BACKENDS:
             raise ValueError(
                 f"exp_backend {self.exp_backend!r} not in {EXP_BACKENDS}")
+        if self.degrade_exp_backend not in EXP_BACKENDS:
+            raise ValueError(
+                f"degrade_exp_backend {self.degrade_exp_backend!r} "
+                f"not in {EXP_BACKENDS}")
         if self.kernel_backend not in KERNEL_BACKENDS:
             raise ValueError(
                 f"kernel_backend {self.kernel_backend!r} "
@@ -180,7 +194,8 @@ class ExecPolicy:
                 f"r{self.block_rows},s{self.block_s},"
                 f"p{self.block_page}) "
                 f"accum={self.accum_dtype} merge={self.merge_strategy} "
-                f"autotune={self.autotune} chunk={self.prefill_chunk}")
+                f"autotune={self.autotune} chunk={self.prefill_chunk} "
+                f"degrade={self.degrade_exp_backend}")
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)

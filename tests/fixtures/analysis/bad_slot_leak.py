@@ -1,0 +1,19 @@
+"""Planted violation for the refcount-pairing rule's slot-reservation
+pass: ``begin_chunk`` reserves a slot's pages/prefix refs inside an
+admission loop, but no try in the loop releases the reservation on the
+exception path — the ``popleft()`` (or any raise between reserve and
+publish) strands the slot's pages forever (unguarded-slot-reserve)."""
+
+
+class BadEngine:
+    def admit_chunked(self):
+        free = [j for j in range(len(self.reqs)) if self.reqs[j] is None]
+        while free and self.queue:
+            r = self.queue[0]
+            j = free[0]
+            cur = self.state.begin_chunk(j, r.prompt, len(r.prompt))
+            # BUG: a raise here (popleft on a concurrently drained queue,
+            # an allocator fault, a cancellation) leaks the reservation —
+            # nothing aborts the chunk cursor.
+            self.prefilling[j] = (self.queue.popleft(), cur)
+            free.pop(0)

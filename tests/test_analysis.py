@@ -89,6 +89,23 @@ class TestPlantedViolations:
         assert det == ["call-core_decode", "call-core_decode",
                        "if-layout", "if-window"]
 
+    def test_slot_leak_fixture(self):
+        fs = _findings("bad_slot_leak.py")
+        assert _details(fs, "refcount-pairing") == ["unguarded-slot-reserve"]
+        f = fs[0]
+        assert f.symbol == "BadEngine.admit_chunked"
+        assert f.severity is Severity.ERROR
+
+    def test_slot_reserve_guarded_in_engine(self):
+        """The real admission loop publishes reservations under a guard
+        that aborts the chunk on the exception path — the slot rule must
+        see it as clean (it applies to serve.py, so any regression in
+        that structure fails the repo gate)."""
+        findings, _ = run_rules([str(SRC / "repro" / "launch"
+                                     / "serve.py")])
+        assert not [f for f in findings
+                    if f.detail == "unguarded-slot-reserve"]
+
     def test_clean_fixture_quiet(self):
         assert _findings("clean.py") == []
 
@@ -131,7 +148,7 @@ class TestRepoGate:
 class TestCli:
     @pytest.mark.parametrize("name", [
         "bad_host_sync.py", "bad_refcount.py", "bad_retrace.py",
-        "bad_family_branch.py", "bad_fallback.py"])
+        "bad_family_branch.py", "bad_fallback.py", "bad_slot_leak.py"])
     def test_nonzero_on_each_planted_fixture(self, name):
         assert main([str(FIX / name), "--no-baseline"]) == 1
 

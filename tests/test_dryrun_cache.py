@@ -1,0 +1,84 @@
+"""Dry-run artifact-cache semantics: ok records short-circuit, failed
+records retry on a bounded attempt count with exponential backoff, and
+``--force`` starts the count over. All through failure records from a
+bogus arch — no cell is ever actually compiled here."""
+
+import importlib
+import json
+import os
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def dryrun():
+    # importing the module sets XLA_FLAGS (host-device-count override)
+    # as a side effect; restore the env immediately so no later jax
+    # initialization in this process can pick up 512 fake devices.
+    saved = os.environ.get("XLA_FLAGS")
+    try:
+        mod = importlib.import_module("repro.launch.dryrun")
+    finally:
+        if saved is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = saved
+    return mod
+
+
+def _run(dryrun, tmp_path, now, **kw):
+    kw.setdefault("max_attempts", 3)
+    kw.setdefault("backoff_s", 60.0)
+    return dryrun.run_cell("no-such-arch", "no-such-shape", "single",
+                           out_dir=str(tmp_path), now=now, **kw)
+
+
+def test_ok_record_short_circuits(dryrun, tmp_path):
+    path = tmp_path / "no-such-arch__no-such-shape__single.json"
+    path.write_text(json.dumps({"ok": True, "sentinel": 7}))
+    # the bogus arch would fail if anything recomputed
+    rec = _run(dryrun, tmp_path, now=0.0)
+    assert rec["sentinel"] == 7
+
+
+def test_failed_cell_backs_off_then_gives_up(dryrun, tmp_path):
+    r1 = _run(dryrun, tmp_path, now=1000.0)
+    assert not r1["ok"] and r1["attempts"] == 1
+    assert "no-such-arch" in r1["error"] or "KeyError" in r1["error"]
+
+    # inside the 60s backoff window: cached failure, no new attempt
+    r2 = _run(dryrun, tmp_path, now=1030.0)
+    assert r2["attempts"] == 1 and r2["t_attempt"] == 1000.0
+
+    # window elapsed: retried, attempt count and timestamp advance
+    r3 = _run(dryrun, tmp_path, now=1061.0)
+    assert r3["attempts"] == 2 and r3["t_attempt"] == 1061.0
+
+    # second window doubles (120s): still cached at +59s...
+    r4 = _run(dryrun, tmp_path, now=1120.0)
+    assert r4["attempts"] == 2
+
+    # ...retried once it elapses
+    r5 = _run(dryrun, tmp_path, now=1290.0)
+    assert r5["attempts"] == 3
+
+    # attempts exhausted: the cell never runs again, however long we wait
+    r6 = _run(dryrun, tmp_path, now=10_000_000.0)
+    assert r6["attempts"] == 3 and r6["t_attempt"] == 1290.0
+
+
+def test_force_restarts_the_attempt_count(dryrun, tmp_path):
+    for now in (0.0, 100.0, 400.0):
+        _run(dryrun, tmp_path, now=now)
+    assert _run(dryrun, tmp_path, now=1e9)["attempts"] == 3
+    r = _run(dryrun, tmp_path, now=1e9, force=True)
+    assert r["attempts"] == 1 and not r["ok"]
+
+
+def test_legacy_failure_record_is_retried(dryrun, tmp_path):
+    # pre-backoff records have no attempts/t_attempt bookkeeping: they
+    # count as one attempt made at epoch, so the next sweep retries them
+    path = tmp_path / "no-such-arch__no-such-shape__single.json"
+    path.write_text(json.dumps({"ok": False, "error": "old"}))
+    r = _run(dryrun, tmp_path, now=1e6)
+    assert r["attempts"] == 2 and "error" in r

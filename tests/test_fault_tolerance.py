@@ -1,0 +1,397 @@
+"""Fault-injected serving: request lifecycle (deadline/cancel), chaos
+harness determinism, quarantine isolation, step-fault self-healing,
+bounded admission retry, and the degradation ladder.
+
+The load-bearing contract everywhere: a fault may cost the FAULTED
+request its tokens, but never changes any other request's tokens, and
+never leaks a page or a slot — every test ends on the engine's own
+invariant sweep (``check_invariants`` / ``assert_idle_clean``)."""
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_config
+from repro.ft import FaultInjector, default_chaos_rates
+from repro.launch.serve import (ADMIT_BACKOFF_S, DEGRADE_AFTER,
+                                MAX_ADMIT_RETRIES, RESTORE_AFTER,
+                                Request, Server)
+from repro.models import api
+from repro.runtime import resolve_policy
+
+EXP_BACKENDS = ("exact", "vexp", "vexp_hw")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("gpt2-small").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, (n,), dtype=np.int32) for n in lens]
+
+
+def _oracle(cfg, params, prompts, *, max_new=6, max_batch=4, max_seq=64,
+            policy=None, **kw):
+    """Fault-free tokens, one request per rid."""
+    srv = Server(cfg, params, max_batch=max_batch, max_seq=max_seq,
+                 policy=policy, **kw)
+    reqs = [Request(i, p.copy(), max_new) for i, p in enumerate(prompts)]
+    srv.run(reqs)
+    return {r.rid: list(r.out) for r in reqs}
+
+
+# ------------------------------------------------------- request lifecycle
+
+class TestLifecycle:
+    def test_deadline_expires_queued_requests(self, cfg, params):
+        prompts = _prompts(cfg, (5, 7, 9))
+        srv = Server(cfg, params, max_batch=2, max_seq=64,
+                     deadline_s=1e-6)
+        reqs = [Request(i, p.copy(), 4) for i, p in enumerate(prompts)]
+        for r in reqs:
+            srv.submit(r)
+        import time
+        time.sleep(0.01)                  # everyone is past their TTL
+        srv.drain()
+        for r in reqs:
+            assert r.finish_reason == "deadline" and r.out == []
+            assert r.t_done > 0
+        assert srv.stats()["default"]["deadline_missed"] == 3
+        srv.check_invariants()
+        srv.assert_idle_clean()
+
+    def test_per_request_deadline_overrides_server_default(self, cfg,
+                                                           params):
+        prompts = _prompts(cfg, (5, 5))
+        srv = Server(cfg, params, max_batch=1, max_seq=64, deadline_s=60.0)
+        a = Request(0, prompts[0].copy(), 4)
+        b = Request(1, prompts[1].copy(), 4, deadline_s=1e-6)
+        srv.run([a, b])
+        assert a.finish_reason == "max_new" and len(a.out) == 4
+        assert b.finish_reason == "deadline" and b.out == []
+        srv.assert_idle_clean()
+
+    def test_cancel_queued_and_mid_decode(self, cfg, params):
+        prompts = _prompts(cfg, (5, 11, 7))
+        oracle = _oracle(cfg, params, prompts, max_batch=1, max_new=6)
+        srv = Server(cfg, params, max_batch=1, max_seq=64)
+        reqs = [Request(i, p.copy(), 6) for i, p in enumerate(prompts)]
+        for r in reqs:
+            srv.submit(r)
+        for _ in range(3):                # req 0 is now mid-decode
+            srv.step()
+        assert srv._groups["default"].reqs[0] is not None
+        assert srv.cancel(0)              # mid-decode
+        assert srv.cancel(2)              # still queued
+        assert not srv.cancel(99)         # unknown rid
+        srv.drain()
+        assert reqs[0].finish_reason == "cancelled"
+        assert reqs[2].finish_reason == "cancelled" and reqs[2].out == []
+        # the untouched request is token-identical to a fault-free run
+        assert reqs[1].finish_reason == "max_new"
+        assert list(reqs[1].out) == oracle[1]
+        assert srv.stats()["default"]["cancelled"] == 2
+        srv.assert_idle_clean()
+
+    def test_cancel_mid_chunk_releases_paged_reservation(self, cfg,
+                                                         params):
+        """Cancel a request while its prompt is mid-chunked-prefill in a
+        paged pool: ``abort_chunk`` must hand back the slot's pages and
+        prefix refs (this is the new DecodeState protocol capability)."""
+        pol = resolve_policy(cfg, env={}, prefill_chunk=16)
+        prompts = _prompts(cfg, (40, 5))
+        srv = Server(cfg, params, max_batch=2, max_seq=64, policy=pol,
+                     paged=True, block_page=8)
+        reqs = [Request(i, p.copy(), 4) for i, p in enumerate(prompts)]
+        for r in reqs:
+            srv.submit(r)
+        g = srv._groups["default"]
+        srv.step()                        # req 0 enters chunked prefill
+        assert 0 in [r.rid for r, _ in g.prefilling.values()]
+        held = g.state.alloc.n_used()
+        assert held > 0                   # the reservation is real
+        assert srv.cancel(0)
+        srv.drain()
+        assert reqs[0].finish_reason == "cancelled" and reqs[0].out == []
+        assert reqs[1].finish_reason == "max_new" and len(reqs[1].out) == 4
+        srv.check_invariants()
+        srv.assert_idle_clean()           # zero pages outlive the cancel
+
+
+# -------------------------------------------------- quarantine / isolation
+
+class TestQuarantine:
+    @pytest.mark.parametrize("exp", EXP_BACKENDS)
+    def test_poisoned_slot_quarantined_others_exact(self, cfg, params,
+                                                    exp):
+        """Non-finite logits in one slot quarantine THAT request; the
+        other slot's tokens stay identical to a fault-free run — under
+        every exp backend (the sticky sentinel rides the decode carry,
+        so this also pins that no garbage token is ever streamed)."""
+        pol = resolve_policy(cfg, env={}, exp_backend=exp)
+        prompts = _prompts(cfg, (5, 11))
+        oracle = _oracle(cfg, params, prompts, policy=pol)
+        srv = Server(cfg, params, max_batch=2, max_seq=64, policy=pol)
+        reqs = [Request(i, p.copy(), 6) for i, p in enumerate(prompts)]
+        for r in reqs:
+            srv.submit(r)
+        srv.step()                        # both admitted, decoding
+        g = srv._groups["default"]
+        j = next(j for j in range(2)
+                 if g.reqs[j] is not None and g.reqs[j].rid == 0)
+        assert g.state.poison_slot(j)
+        srv.drain()
+        assert reqs[0].finish_reason == "quarantined" and reqs[0].out == []
+        assert reqs[1].finish_reason == "max_new"
+        assert list(reqs[1].out) == oracle[1]
+        assert srv.stats()["default"]["quarantined"] == 1
+        srv.assert_idle_clean()
+
+    def test_paged_poison_and_slot_reuse_after_scrub(self, cfg, params):
+        """Paged pool: poison a slot with a private (partial) page, let
+        quarantine scrub it, then serve ANOTHER request through the same
+        pool — it must match fault-free tokens (the scrub zeroes the
+        NaN'd pages before the free list can hand them out again)."""
+        prompts = _prompts(cfg, (11, 11))    # 11 % 8 != 0: private page
+        oracle = _oracle(cfg, params, prompts, max_batch=1, paged=True,
+                         block_page=8, prefix_cache=False)
+        srv = Server(cfg, params, max_batch=1, max_seq=64, paged=True,
+                     block_page=8, prefix_cache=False)
+        reqs = [Request(i, p.copy(), 6) for i, p in enumerate(prompts)]
+        for r in reqs:
+            srv.submit(r)
+        srv.step()
+        g = srv._groups["default"]
+        assert g.state.poison_slot(0)
+        srv.drain()
+        assert reqs[0].finish_reason == "quarantined"
+        assert reqs[1].finish_reason == "max_new"
+        assert list(reqs[1].out) == oracle[1]
+        srv.assert_idle_clean()
+
+
+# ------------------------------------------------------ step-fault healing
+
+class TestStepFaultRecovery:
+    def test_injected_step_error_reserves_token_identically(self, cfg,
+                                                            params):
+        """A decode-dispatch fault drops the pool; every in-flight
+        request is re-queued and re-served from scratch — finishing with
+        EXACTLY the tokens of an undisturbed run."""
+        prompts = _prompts(cfg, (5, 11))
+        oracle = _oracle(cfg, params, prompts)
+        inj = FaultInjector(seed=0, schedule={"decode.step_error": [2]})
+        srv = Server(cfg, params, max_batch=2, max_seq=64, injector=inj)
+        reqs = [Request(i, p.copy(), 6) for i, p in enumerate(prompts)]
+        srv.run(reqs)
+        st = srv.stats()["default"]
+        assert st["step_faults"] == 1 and st["requeued"] == 2
+        for r in reqs:
+            assert r.finish_reason == "max_new" and r.retries == 1
+            assert list(r.out) == oracle[r.rid], r.rid
+        srv.assert_idle_clean()
+
+    def test_repeat_offender_is_shed_not_retried_forever(self, cfg,
+                                                         params):
+        """A request whose slot keeps killing the step burns its
+        MAX_STEP_RETRIES budget and is shed with finish_reason="failed"
+        — the drain loop terminates instead of thrashing recovery."""
+        prompts = _prompts(cfg, (5,))
+        inj = FaultInjector(seed=0,
+                            schedule={"decode.step_error": range(100)})
+        srv = Server(cfg, params, max_batch=1, max_seq=64, injector=inj)
+        r = Request(0, prompts[0].copy(), 6)
+        srv.run([r])
+        assert r.finish_reason == "failed" and r.out == []
+        st = srv.stats()["default"]
+        assert st["shed"] == 1 and st["step_faults"] == 4  # 1 + 3 retries
+        srv.assert_idle_clean()
+
+
+# ------------------------------------------------- bounded admission retry
+
+class TestBoundedAdmission:
+    def test_unservable_requests_shed_not_hung(self, cfg, params):
+        """The nothing-in-flight starvation case. Paged admission
+        reserves a slot's full table (``ns`` pages minus prefix hits),
+        so a pool whose budget is below one cold reservation can NEVER
+        admit anything and no page will ever free on its own. The old
+        split spun the drain loop forever (monolithic wave gate) or
+        raised out of it (chunked); both paths now take the one bounded
+        retry/backoff helper and shed with finish_reason="failed"."""
+        prompts = _prompts(cfg, (40, 9))
+        # cache_s=64 / page=8 -> 8 pages per cold reservation; the pool
+        # allocates at most 3
+        srv = Server(cfg, params, max_batch=2, max_seq=64, paged=True,
+                     block_page=8, block_budget=4)
+        reqs = [Request(i, p.copy(), 4) for i, p in enumerate(prompts)]
+        srv.run(reqs)                         # must terminate
+        for r in reqs:
+            assert r.finish_reason == "failed" and r.out == []
+        st = srv.stats()["default"]
+        assert st["shed"] == 2
+        assert st["admit_retries"] >= MAX_ADMIT_RETRIES
+        srv.assert_idle_clean()
+
+    def test_unservable_requests_shed_chunked(self, cfg, params):
+        """Same starvation case through the chunked-admission path
+        (there it surfaces as OutOfBlocks from ``begin_chunk``)."""
+        pol = resolve_policy(cfg, env={}, prefill_chunk=16)
+        prompts = _prompts(cfg, (40, 9))
+        srv = Server(cfg, params, max_batch=2, max_seq=64, policy=pol,
+                     paged=True, block_page=8, block_budget=4)
+        reqs = [Request(i, p.copy(), 4) for i, p in enumerate(prompts)]
+        srv.run(reqs)
+        for r in reqs:
+            assert r.finish_reason == "failed" and r.out == []
+        assert srv.stats()["default"]["shed"] == 2
+        srv.assert_idle_clean()
+
+    def test_transient_rejection_retries_with_work_in_flight(self, cfg,
+                                                             params):
+        """An injected admission rejection with decode in flight: retry
+        next tick (pages WILL free), and every request still completes
+        with fault-free tokens — the retry is invisible to correctness.
+        Scheduled on the SECOND admission wave, which lands while the
+        first wave is still decoding."""
+        prompts = _prompts(cfg, (5, 7, 9, 11))
+        oracle = _oracle(cfg, params, prompts, max_batch=2)
+        inj = FaultInjector(seed=0, schedule={"admit.out_of_blocks": [1]})
+        srv = Server(cfg, params, max_batch=2, max_seq=64, injector=inj)
+        reqs = [Request(i, p.copy(), 6) for i, p in enumerate(prompts)]
+        srv.run(reqs)
+        for r in reqs:
+            assert r.finish_reason == "max_new"
+            assert list(r.out) == oracle[r.rid], r.rid
+        assert inj.stats()["fired"] == {"admit.out_of_blocks": 1}
+        assert srv.stats()["default"]["admit_retries"] >= 1
+        srv.assert_idle_clean()
+
+
+# ------------------------------------------------------ degradation ladder
+
+class TestDegradationLadder:
+    def test_escalates_and_restores_with_hysteresis(self, cfg, params):
+        pol = resolve_policy(cfg, env={}, exp_backend="exact",
+                             prefill_chunk=16)
+        srv = Server(cfg, params, max_batch=2, max_seq=64, policy=pol,
+                     degrade_groups=("default",))
+        g = srv._groups["default"]
+        base_chunk = g.chunk_c
+        assert g.degradable and srv.degrade_level == 0
+
+        def tick(pressured):
+            g._admit_pressure = pressured
+            srv._degradation_tick()
+
+        for _ in range(DEGRADE_AFTER - 1):
+            tick(True)
+        assert srv.degrade_level == 0     # hysteresis: not yet
+        tick(True)
+        assert srv.degrade_level == 1     # L1: narrower prefill chunks
+        assert 0 < g.chunk_c < base_chunk
+        assert g.policy.exp_backend == "exact"
+        for _ in range(DEGRADE_AFTER):
+            tick(True)
+        assert srv.degrade_level == 2     # L2: cheaper exp backend
+        assert g.policy.exp_backend == pol.degrade_exp_backend == "vexp_hw"
+        # sustained clear pressure walks the ladder back down
+        for _ in range(RESTORE_AFTER):
+            tick(False)
+        assert srv.degrade_level == 1
+        for _ in range(RESTORE_AFTER):
+            tick(False)
+        assert srv.degrade_level == 0
+        assert g.chunk_c == base_chunk
+        assert g.policy.exp_backend == "exact"
+
+    def test_non_degradable_group_keeps_its_backend(self, cfg, params):
+        """Without --degrade-groups membership, L2 still shrinks chunks
+        but NEVER swaps the exp backend (an eval group's numerics are
+        not the scheduler's to trade away)."""
+        pol = resolve_policy(cfg, env={}, exp_backend="exact")
+        srv = Server(cfg, params, max_batch=2, max_seq=64, policy=pol)
+        g = srv._groups["default"]
+        g.set_degraded(2)
+        assert g.policy.exp_backend == "exact"
+
+    def test_unknown_degrade_group_rejected(self, cfg, params):
+        with pytest.raises(ValueError, match="unknown degrade group"):
+            Server(cfg, params, max_batch=2, max_seq=64,
+                   degrade_groups=("nope",))
+
+    def test_degraded_serving_matches_degraded_oracle(self, cfg, params):
+        """Tokens served at L2 equal a server RUN at vexp_hw outright —
+        degradation swaps programs through the cache, it does not invent
+        a third numerics path."""
+        pol = resolve_policy(cfg, env={}, exp_backend="exact")
+        hw = _oracle(cfg, params, _prompts(cfg, (5, 11)),
+                     policy=pol.replace(exp_backend="vexp_hw"))
+        srv = Server(cfg, params, max_batch=2, max_seq=64, policy=pol,
+                     degrade_groups=("default",))
+        srv._groups["default"].set_degraded(2)
+        reqs = [Request(i, p.copy(), 6)
+                for i, p in enumerate(_prompts(cfg, (5, 11)))]
+        srv.run(reqs)
+        for r in reqs:
+            assert list(r.out) == hw[r.rid], r.rid
+        srv.assert_idle_clean()
+
+
+# --------------------------------------------------------- chaos storms
+
+def _storm(cfg, params, *, seed, paged, prompts, oracle, max_batch=4):
+    inj = FaultInjector(seed=seed, rates=default_chaos_rates())
+    kw = dict(paged=True, block_page=8) if paged else {}
+    srv = Server(cfg, params, max_batch=max_batch, max_seq=64,
+                 injector=inj, **kw)
+    reqs = [Request(i, p.copy(), 6) for i, p in enumerate(prompts)]
+    for r in reqs:
+        srv.submit(r)
+    srv.cancel(3)                         # a cancellation mid-storm too
+    srv.drain()
+    for r in reqs:                        # nobody is left in limbo
+        assert r.finish_reason is not None, r.rid
+    # unaffected requests are token-identical to the fault-free run
+    for r in reqs:
+        if r.finish_reason in ("max_new", "length_cap"):
+            assert list(r.out) == oracle[r.rid], r.rid
+    srv.check_invariants()
+    srv.assert_idle_clean()               # zero leaked pages/slots
+    return srv, reqs
+
+
+class TestChaosStorm:
+    @pytest.mark.parametrize("paged", (False, True),
+                             ids=("contiguous", "paged"))
+    def test_seeded_storm_clean_shutdown(self, cfg, params, paged):
+        lens = (5, 11, 7, 9, 13, 6, 8, 10)
+        prompts = _prompts(cfg, lens)
+        kw = dict(paged=True, block_page=8) if paged else {}
+        oracle = _oracle(cfg, params, prompts, **kw)
+        srv, _ = _storm(cfg, params, seed=11, paged=paged,
+                        prompts=prompts, oracle=oracle)
+        fired = srv.fault_stats()["injector"]["fired"]
+        assert sum(fired.values()) >= 1   # the storm actually stormed
+
+    def test_storm_is_replayable_by_seed(self, cfg, params):
+        """Same seed -> same fired counts and same per-request outcomes;
+        the REPRO_FAULT_SEED contract at the engine level."""
+        lens = (5, 11, 7, 9, 13, 6)
+        prompts = _prompts(cfg, lens)
+        oracle = _oracle(cfg, params, prompts)
+        runs = []
+        for _ in range(2):
+            srv, reqs = _storm(cfg, params, seed=5, paged=False,
+                               prompts=prompts, oracle=oracle)
+            runs.append((srv.fault_stats()["injector"]["fired"],
+                         [(r.rid, r.finish_reason, list(r.out))
+                          for r in reqs]))
+        assert runs[0] == runs[1]

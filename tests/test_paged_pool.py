@@ -332,3 +332,131 @@ def test_prefix_cache_random_trace_invariants(seed):
             alloc.decref(g)
     cache.drop_all()
     assert alloc.n_used() == 0
+
+
+# ------------------------------------------------------------- chaos storms
+
+def _held_counts(held):
+    counts = {}
+    for gids in held:
+        for g in gids:
+            counts[g] = counts.get(g, 0) + 1
+    return counts
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(8, 32))
+def test_chaos_storm_conserves_refcounts(seed, n_pages):
+    """PR-9 chaos storm: random admit/share/cow/release traffic with a
+    seeded FaultInjector wired into the allocator (forced OutOfBlocks)
+    and corrupting cached prefix chains mid-flight. After EVERY op the
+    allocator stays structurally consistent and each page's refcount is
+    exactly slot-holds + cache-holds; at the end nothing leaks."""
+    from repro.ft import FaultInjector
+
+    rng = np.random.default_rng(seed)
+    inj = FaultInjector(seed=seed, rates={"alloc.out_of_blocks": 0.15,
+                                          "prefix.corrupt": 0.10})
+    page = 4
+    alloc = BlockAllocator(n_pages)
+    alloc.injector = inj
+    cache = PrefixCache(alloc, page)
+    prompts = [_prompt(rng, page * int(rng.integers(1, 5)))
+               for _ in range(5)]
+    held = []                          # one gid-list per live "slot"
+    for _ in range(80):
+        op = int(rng.integers(0, 4))
+        if op == 0:                    # admit: attach shared prefix, alloc rest
+            p = prompts[int(rng.integers(len(prompts)))]
+            n_full = len(p) // page
+            h = cache.probe(p)
+            got = cache.attach(p, max_pages=h)   # pin refs before eviction
+            try:
+                fresh = alloc.alloc_cols(range(h, n_full))
+            except OutOfBlocks:        # injected or real: all-or-nothing
+                for g in got:
+                    alloc.decref(g)
+            else:
+                gids = got + fresh
+                for i in range(h, n_full):
+                    # eviction during alloc_cols may have peeled the
+                    # chain below h; only extend a still-walkable chain
+                    if cache.probe(p) >= i:
+                        cache.insert(p, i, gids[i])
+                held.append(gids)
+        elif op == 1 and held:         # finish/abort a random slot
+            for g in held.pop(int(rng.integers(len(held)))):
+                alloc.decref(g)
+        elif op == 2 and held:         # cow write on a random held page
+            slot = held[int(rng.integers(len(held)))]
+            k = int(rng.integers(len(slot)))
+            try:
+                slot[k] = alloc.cow(slot[k])
+            except OutOfBlocks:
+                pass
+        elif inj.fire("prefix.corrupt"):   # detected corruption: drop chains
+            cache.invalidate(n=1 + int(rng.integers(3)), rng=inj.rng)
+        alloc.check()
+        holds = _held_counts(held)
+        cached = {}
+        for gid, _, _ in cache._entries.values():
+            cached[gid] = cached.get(gid, 0) + 1
+        for g in set(holds) | set(cached):
+            assert alloc.refcount(g) == holds.get(g, 0) + cached.get(g, 0)
+    for gids in held:
+        for g in gids:
+            alloc.decref(g)
+    cache.drop_all()
+    alloc.check()
+    assert alloc.n_used() == 0 and alloc.n_free() == n_pages - 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_chaos_storm_partitioned_pool(seed):
+    """Same storm against a sequence-sharded (partitioned) allocator:
+    injected allocation faults in one partition never corrupt another,
+    and the all-or-nothing alloc_cols rollback holds under injection."""
+    from repro.ft import FaultInjector
+
+    rng = np.random.default_rng(seed)
+    inj = FaultInjector(seed=seed, rates={"alloc.out_of_blocks": 0.2})
+    alloc = BlockAllocator(24, n_partitions=2, cols_per_part=3)
+    alloc.injector = inj
+    held = []
+    for _ in range(60):
+        op = int(rng.integers(0, 2))
+        if op == 0:
+            cols = list(range(int(rng.integers(1, 6))))
+            before = alloc.free_counts().copy()
+            try:
+                held.append(alloc.alloc_cols(cols))
+            except OutOfBlocks:
+                assert (alloc.free_counts() == before).all(), \
+                    "injected fault broke alloc_cols rollback"
+        elif held:
+            for g in held.pop(int(rng.integers(len(held)))):
+                alloc.decref(g)
+        alloc.check()
+    for gids in held:
+        for g in gids:
+            alloc.decref(g)
+    alloc.check()
+    assert alloc.n_used() == 0
+
+
+def test_injector_is_deterministic():
+    """Two injectors with the same seed fire identically; a different
+    seed diverges somewhere. (The replay contract behind
+    REPRO_FAULT_SEED.)"""
+    from repro.ft import FaultInjector, default_chaos_rates
+
+    a = FaultInjector(seed=7, rates=default_chaos_rates())
+    b = FaultInjector(seed=7, rates=default_chaos_rates())
+    points = list(default_chaos_rates())
+    rng = np.random.default_rng(0)
+    trace = [points[int(rng.integers(len(points)))] for _ in range(300)]
+    assert [a.fire(p) for p in trace] == [b.fire(p) for p in trace]
+    assert a.stats() == b.stats()
+    c = FaultInjector(seed=8, rates=default_chaos_rates())
+    assert [c.fire(p) for p in trace] != [a.fire(p) for p in trace]
