@@ -6,7 +6,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: ci test analyze analysis-test bench sweep serve-smoke \
 	serve-smoke-recurrent serve-smoke-paged serve-smoke-chunked \
-	serve-smoke-chaos spmd-test spmd-serve-smoke \
+	serve-smoke-chaos serve-smoke-spec spmd-test spmd-serve-smoke \
 	spmd-serve-smoke-paged spmd-serve-smoke-chunked
 
 ci:
@@ -108,6 +108,25 @@ serve-smoke-chaos:
 	    --requests 8 --prompt-len 24 --mixed-lengths --max-new 8 \
 	    --max-batch 2 --max-seq 64 --kv-mode seq --chaos --fault-seed 9 \
 	    --cancel-frac 0.25 --deadline 30 --degrade-groups default
+
+# Speculative smoke: k-step vexp_hw draft bursts + one batched exact
+# verify through the slot engine, on the contiguous and paged pools and
+# once inside a chaos storm (rollback + fault recovery composing). Each
+# run ends on Server.assert_idle_clean — speculative rollback leaks
+# nothing or the process exits nonzero.
+serve-smoke-spec:
+	$(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 6 --prompt-len 24 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 --spec-k 4 --draft-backend vexp_hw
+	$(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 6 --prompt-len 32 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 --paged --block-page 8 \
+	    --shared-prefix 24 --spec-k 4 --spec-verify chunk \
+	    --policy-groups "eval=exact,bulk=vexp" --spec-groups eval
+	$(PY) -m repro.launch.serve --arch gpt2-small --reduced \
+	    --requests 8 --prompt-len 24 --mixed-lengths --max-new 8 \
+	    --max-batch 2 --max-seq 64 --spec-k 4 --chaos --fault-seed 11 \
+	    --cancel-frac 0.25 --deadline 30
 
 # The same slot engine end-to-end through the SPMD serve loop: KV cache
 # sequence-sharded over 8 fake host devices, decode through the fused

@@ -72,6 +72,30 @@ def perf_table():
               f"{fl/PEAK_FLOPS:.4f}s | {by/HBM_BW:.4f}s | {r['desc']} |")
 
 
+def speculative_table(path="BENCH_speculative.json"):
+    """Speculative-decode summary from benchmarks/speculative.py."""
+    if not os.path.exists(path):
+        print(f"(no {path}; run `python -m benchmarks.speculative`)")
+        return
+    r = json.load(open(path))
+    res = r["results"]
+    steady = res["measured"]["steady"]
+    plain = steady["plain"]["tok_s"]
+    print("| arm | CPU tok/s | vs plain | accept/burst | "
+          "VEXP-target tok/s | target speedup |")
+    print("|---|---|---|---|---|---|")
+    print(f"| plain exact | {plain:.0f} | 1.00x | — | — | — |")
+    for name, row in steady.items():
+        if name == "plain":
+            continue
+        proj = res["projected"].get(name)
+        t_tok = f"{proj['spec_tok_s']:.0f}" if proj else "—"
+        t_spd = f"{proj['speedup']:.2f}x" if proj else "—"
+        print(f"| {name} | {row['tok_s']:.0f} | "
+              f"{row['tok_s'] / plain:.2f}x | "
+              f"{row['accept_per_burst']:.2f} | {t_tok} | {t_spd} |")
+
+
 def skips_table():
     from repro.configs import REGISTRY, SHAPES
     print("| arch | shape | status |")
@@ -97,6 +121,9 @@ if __name__ == "__main__":
     if which in ("perf", "all"):
         print("\n### Perf iterations\n")
         perf_table()
+    if which in ("speculative", "all"):
+        print("\n### Speculative decoding\n")
+        speculative_table()
     if which in ("skips", "all"):
         print("\n### Shape applicability\n")
         skips_table()

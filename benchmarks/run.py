@@ -60,7 +60,7 @@ def main() -> None:
 
     from . import (snitch_model, exp_accuracy, model_accuracy,
                    softmax_speed, flashattention, e2e_models,
-                   policy_sweep, serving, paged_serving)
+                   policy_sweep, serving, paged_serving, speculative)
 
     sections = {
         "snitch_model": snitch_model.report,       # Fig.6 + Table III
@@ -72,6 +72,7 @@ def main() -> None:
         "policy_sweep": policy_sweep.report,       # ExecPolicy backends
         "serving": serving.report,                 # continuous batching
         "paged_serving": paged_serving.report,     # paged KV + prefix cache
+        "speculative": speculative.report,         # draft/verify decode
         "sharded_decode": _sharded_decode_report,  # seq-parallel decode
         "collective_merge": _collective_merge_report,  # packed vs split
     }

@@ -68,6 +68,10 @@ HOT_PATH_FUNCTIONS = {
         "_paged_programs.decode_local",
         "_paged_programs.prefill_hist_fn",
         "_paged_programs.chunk_fn",
+        "_spec_programs.score_fn",
+        "_spec_programs.verify_fn",
+        "_spec_programs._scan",
+        "_spec_programs._scan.body",
     ),
 }
 
@@ -84,6 +88,12 @@ STEP_STRICT = (
     # at a sync)
     ("repro/launch/serve.py", "_Group.prefill_chunk_once"),
     ("repro/launch/serve.py", "_Group._chunk_done"),
+    # the speculative burst runs in place of the decode step — same
+    # bar: acceptance folds into the device carry, mirrors advance as
+    # upper bounds, the one settling sync lives in _settle_slot (a
+    # scheduling event, not here)
+    ("repro/launch/serve.py", "_Group.decode_spec_once"),
+    ("repro/models/decode_state.py", "_spec_programs.*"),
     ("repro/models/decode_state.py", "*step"),
     ("repro/models/decode_state.py", "*prefill_chunk_into"),
     ("repro/models/decode_state.py", "_programs.*"),
@@ -124,9 +134,22 @@ RELEASE_CALLS = ("decref", "_evict_one", "drop_all", "release")
 # pairing.)
 SLOT_RESERVE_CALLS = ("begin_chunk",)
 SLOT_RELEASE_CALLS = ("abort_chunk", "reset_slots", "decref", "recover")
+
+# Speculative-burst snapshot pairing (PR-10). ``spec_snapshot`` hands
+# the engine the only rollback token for the burst; the draft steps and
+# the donated verify program then consume the carry. A raise anywhere
+# between snapshot and verify (injected dispatch fault, cancellation)
+# leaves the pool positions advanced by the drafts with no way back —
+# so a snapshot must sit inside a try whose exception path reaches a
+# rollback/recovery call. ``verify_step`` is listed because a
+# finally-block settling through verify also discharges the token.
+SPEC_SNAPSHOT_CALLS = ("spec_snapshot",)
+SPEC_SNAPSHOT_RELEASES = ("spec_restore", "verify_step", "reset_slots",
+                          "_recover_step_fault")
 SLOT_CONTRACT_FILES = (
     "repro/launch/serve.py",
     "fixtures/analysis/bad_slot_leak.py",       # planted-violation fixture
+    "fixtures/analysis/bad_snapshot_leak.py",   # planted-violation fixture
 )
 
 # Engine source contracts (promoted from test source-string greps).

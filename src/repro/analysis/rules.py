@@ -306,6 +306,7 @@ class RefcountRule(Rule):
             for node in ast.walk(mod.tree):
                 if isinstance(node, ast.Call):
                     out.extend(self._unguarded_slot_reserve(mod, node))
+                    out.extend(self._unguarded_spec_snapshot(mod, node))
         return out
 
     def _raw_refs(self, mod, node):
@@ -407,6 +408,48 @@ class RefcountRule(Rule):
                     f"(abort_chunk/reset_slots) reachable on the "
                     f"exception path — one raise between reserve and "
                     f"publish strands the reservation")]
+
+    def _unguarded_spec_snapshot(self, mod, call):
+        """Speculative-burst snapshot pairing (PR-10).
+
+        Unlike ``begin_chunk`` (loop-shaped admission), a
+        ``spec_snapshot`` is a straight-line reserve: it hands back the
+        burst's only rollback token, then the draft steps advance the
+        donated pool positions in place. Any raise between snapshot and
+        the verify that folds the rollback into the carry (an injected
+        dispatch fault, a cancellation surfacing mid-burst) strands the
+        pool mid-draft — so the snapshot must sit inside SOME try whose
+        handlers/finally reach a rollback or recovery call
+        (spec_restore / verify_step / reset_slots / recovery). Checked
+        on every snapshot call, loop or not."""
+        name = None
+        if isinstance(call.func, ast.Attribute):
+            name = call.func.attr
+        elif isinstance(call.func, ast.Name):
+            name = call.func.id
+        if name not in registry.SPEC_SNAPSHOT_CALLS:
+            return []
+        qual = mod.enclosing_function(call)
+        guarded = False
+        for anc in mod.ancestors(call):
+            if isinstance(anc, ast.Try):
+                in_body = any(_contains(s, call) for s in anc.body)
+                if in_body and self._releases(
+                        anc, names=registry.SPEC_SNAPSHOT_RELEASES):
+                    guarded = True
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break
+        if guarded:
+            return []
+        return [Finding(
+            rule=self.name, severity=Severity.ERROR, path=mod.path,
+            line=call.lineno, symbol=qual,
+            detail="unguarded-spec-snapshot",
+            message=f"{name}() takes the burst's rollback token with no "
+                    f"rollback/recovery (spec_restore/verify_step/"
+                    f"reset_slots) reachable on the exception path — a "
+                    f"raise mid-burst strands the pool with draft "
+                    f"positions advanced and no way back")]
 
     @staticmethod
     def _releases(try_node, names=None) -> bool:

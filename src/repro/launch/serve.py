@@ -103,7 +103,8 @@ from repro.ft import (FAULT_SEED_ENV, FaultInjector, InjectedFault,
                       default_chaos_rates)
 from repro.models import api
 from repro.models.block_pool import OutOfBlocks
-from repro.models.decode_state import decode_state_for, _len_bucket  # noqa: F401  (re-export)
+from repro.models.decode_state import (decode_state_for, _len_bucket,  # noqa: F401  (re-export)
+                                       SPEC_PAD)
 from repro.runtime import ExecPolicy, resolve_policy, parse_policy_groups
 from .mesh import make_host_mesh
 
@@ -225,7 +226,16 @@ class _Group:
                                     # time, sampled at scheduling events only
         self.peak_logical = 0       # max summed live tokens (paged bench)
         self.peak_pages = 0         # max physical pages in use
-        self._toks: dict = {}                       # slot -> [(B,1) arrays]
+        self._toks: dict = {}       # slot -> [(B,1) / (B,W) token arrays]
+        # ---- speculative decoding (policy.spec_k >= 2; Server wires it
+        # per group through enable_spec) ----
+        self.spec_k = 0             # 0 = plain one-token decode
+        self.rem_dev = None         # (B,) int32 device emission budgets
+        self._bursts = np.zeros(max_batch, np.int64)  # bursts per occupant
+        self.spec_bursts = 0        # finished-request burst total
+        self.spec_drafted = 0       # draft tokens proposed
+        self.spec_accepted = 0      # draft tokens accepted by verify
+        self.spec_rolled_back = 0   # draft tokens rolled back
         # ---- fault tolerance / lifecycle ----
         self.injector = None         # FaultInjector (Server threads it)
         self.base_policy = policy    # restore target for the ladder
@@ -308,6 +318,9 @@ class _Group:
         self._toks.pop(j, None)
         self.reqs[j] = None
         self.live_dev = self.live_dev.at[j].set(0)
+        if self.rem_dev is not None:
+            self.rem_dev = self.rem_dev.at[j].set(0)
+        self._bursts[j] = 0
         self.state.reset_slots([j])
         self._finish_host(r, reason)
         self.sweep()
@@ -375,8 +388,12 @@ class _Group:
             jnp.zeros((self.max_batch, 1), jnp.int32))
         self.live_dev = self.state.place_tokens(
             jnp.zeros((self.max_batch,), jnp.int32))
+        if self.rem_dev is not None:
+            self.rem_dev = self.state.place_tokens(
+                jnp.zeros((self.max_batch,), jnp.int32))
         self.lens[:] = 0
         self.ntok[:] = 0
+        self._bursts[:] = 0
         for r in sorted(victims, key=lambda v: v.t_submit, reverse=True):
             r.retries += 1
             if r.retries > MAX_STEP_RETRIES:
@@ -422,6 +439,20 @@ class _Group:
         if pol != self.policy:
             self.policy = pol
             self.state.set_policy(pol)
+
+    def enable_spec(self, spec_k: int):
+        """Opt this group into self-speculative decode: each tick runs
+        ``spec_k`` draft steps under the policy's ``draft_exp_backend``
+        and ONE batched exact-policy verify. Raises if the state pool
+        cannot roll back a rejected burst (``supports_speculative``).
+        Emission budgets move on device (``rem_dev``): the host mirrors
+        advance as upper bounds and are corrected at ``_settle_slot``
+        syncs, which fire only when a budget *may* have crossed — the
+        zero-host-sync-per-tick discipline of the plain loop holds."""
+        self.state.enable_speculative(spec_k)
+        self.spec_k = int(spec_k)
+        self.rem_dev = self.state.place_tokens(
+            jnp.zeros((self.max_batch,), jnp.int32))
 
     # ------------------------------------------------------------ admission
 
@@ -541,6 +572,11 @@ class _Group:
             self.last = self.last.at[slots].set(first[slots])
         # one batched device-side liveness update per admission wave
         self.live_dev = self.live_dev.at[jnp.asarray(slots)].set(1)
+        if self.spec_k:
+            # seed the device emission budget (tokens after the first);
+            # verify bursts decrement it by the true acceptance length
+            self.rem_dev = self.rem_dev.at[jnp.asarray(slots)].set(
+                jnp.asarray([r.max_new - 1 for _, r in take], jnp.int32))
         now = time.perf_counter()
         for j, r in take:
             self.reqs[j] = r
@@ -645,6 +681,10 @@ class _Group:
         sl = jnp.asarray(done)
         self.last = self.last.at[sl].set(first[sl])
         self.live_dev = self.live_dev.at[sl].set(1)
+        if self.spec_k:
+            self.rem_dev = self.rem_dev.at[sl].set(jnp.asarray(
+                [self.prefilling[j][0].max_new - 1 for j in done],
+                jnp.int32))
         now = time.perf_counter()
         for j in done:
             r, _ = self.prefilling.pop(j)
@@ -721,6 +761,90 @@ class _Group:
                 self._finish(j, "max_new")
 
     @hot_path
+    def decode_spec_once(self):
+        """One speculative decode burst over the live slots (no-op when
+        idle): snapshot, ``spec_k`` draft steps under the draft policy,
+        ONE batched exact-policy verify that accepts the longest agreeing
+        prefix + 1 bonus token and folds the rollback into the device
+        carry. The burst is fully async — acceptance lengths never reach
+        the host; the mirrors below advance by the burst width W as
+        UPPER bounds, and a mirror crossing its budget routes through
+        the one ``_settle_slot`` sync, which either finishes the request
+        or restores exact mirrors. Every emitted token is an exact-policy
+        argmax, so (scan verify) greedy output is token-identical to the
+        plain loop."""
+        live = [j for j in range(self.max_batch) if self.reqs[j] is not None]
+        if not live:
+            return
+        if self.injector is not None and \
+                self.injector.fire("decode.poison"):
+            self.state.poison_slot(self.injector.choose(live))
+        t0 = time.perf_counter()
+        try:
+            if self.injector is not None and \
+                    self.injector.fire("decode.step_error"):
+                raise InjectedFault("decode dispatch failed")
+            snap = self.state.spec_snapshot()
+            cand = [self.last]
+            cur = self.last
+            for _ in range(self.spec_k):
+                cur = self.state.draft_step(cur, self.live_dev)
+                cand.append(cur)
+            toks = jnp.concatenate(cand, axis=1)        # (B, W)
+            block, nlast, self.rem_dev = self.state.verify_step(
+                toks, snap, self.rem_dev, self.live_dev)
+        except Exception:
+            # same recovery contract as the plain step: the donated
+            # carry (and the snapshot fed to verify) must be presumed
+            # consumed; rebuild the pool and re-queue the victims.
+            self.step_faults += 1
+            self._recover_step_fault()
+            return
+        self.last = nlast
+        self.decode_s.append(time.perf_counter() - t0)
+        self.decode_steps += 1
+        cap = self.state.max_len()
+        w = self.spec_k + 1
+        for j in live:
+            r = self.reqs[j]
+            self._bursts[j] += 1
+            self._toks[j].append(block)
+            # upper-bound mirror advance: the true per-burst acceptance
+            # m <= W lives in the device carry. Mirrors only ever
+            # over-estimate, so every budget crossing lands in
+            # _settle_slot — which corrects them exactly.
+            self.ntok[j] = min(self.ntok[j] + w, r.max_new)
+            self.lens[j] = (min(self.lens[j] + w, cap) if cap is not None
+                            else self.lens[j] + w)
+            if self.ntok[j] >= r.max_new or \
+                    (cap is not None and self.lens[j] >= cap):
+                self._settle_slot(j)
+
+    def _settle_slot(self, j):
+        """A speculative slot whose upper-bound mirrors crossed its
+        emission budget (max_new) or the linear cache cap: ONE
+        device->host sync materializes the slot's real token column
+        (PAD-filtered). If the budget truly is exhausted the request
+        finishes through the normal path; otherwise the mirrors are
+        corrected to exact values and the slot keeps decoding. Each
+        settle-and-continue makes >= 1 token of progress per following
+        burst (device clamps guarantee m >= 1 while budget and cap
+        room remain), so settling cannot spin."""
+        r = self.reqs[j]
+        col = np.asarray(jnp.concatenate(self._toks[j], axis=1))[j]
+        col = col[col != SPEC_PAD]
+        n = int(col.size)
+        pos = len(r.prompt) + n - 1     # cache rows the slot holds
+        cap = self.state.max_len()
+        if (col < 0).any() or n >= r.max_new:
+            self._finish(j, "max_new")  # quarantine is decided inside
+        elif cap is not None and pos >= cap:
+            self._finish(j, "length_cap")
+        else:
+            self.ntok[j] = n
+            self.lens[j] = pos
+
+    @hot_path
     def _finish(self, j, reason):
         # logical footprint and held pages grow monotonically between
         # scheduling events, so sampling the peak just before a slot
@@ -729,8 +853,22 @@ class _Group:
         self._bump_peaks()
         r = self.reqs[j]
         # one device->host sync per finished request: gather its column
-        # from the logged per-step argmax vectors.
-        toks = np.asarray(jnp.stack(self._toks.pop(j)))[:, j, 0]
+        # from the logged per-step argmax vectors / per-burst accepted
+        # blocks (speculative groups; SPEC_PAD marks lanes past each
+        # burst's accepted length and is filtered out here).
+        toks = np.asarray(jnp.concatenate(self._toks.pop(j), axis=1))[j]
+        toks = toks[toks != SPEC_PAD]
+        if self.spec_k:
+            b = int(self._bursts[j])
+            self._bursts[j] = 0
+            self.spec_bursts += b
+            self.spec_drafted += b * self.spec_k
+            # every burst that emitted anything spent one bonus token;
+            # the rest of the column is accepted draft proposals
+            acc = min(max(0, len(toks) - 1 - b), b * self.spec_k)
+            self.spec_accepted += acc
+            self.spec_rolled_back += b * self.spec_k - acc
+            self.rem_dev = self.rem_dev.at[j].set(0)
         if (toks < 0).any():
             # the decode programs' sticky finite-logits sentinel: some
             # step saw non-finite logits for this row. Quarantine — never
@@ -786,7 +924,7 @@ class Server:
                  prefix_cache: bool = True,
                  injector: Optional[FaultInjector] = None,
                  deadline_s: Optional[float] = None,
-                 degrade_groups=()):
+                 degrade_groups=(), spec_groups=None):
         # raises for encoder-only archs; under --paged this resolves the
         # paged state class so the seq-sharding capability probe below
         # reflects what will actually serve
@@ -860,6 +998,26 @@ class Server:
             if injector is not None:
                 g.injector = injector
                 g.state.set_injector(injector)
+        # Speculative decoding is per-group opt-in, twice over: the
+        # group's policy must ask for it (spec_k >= 2) AND — when
+        # --spec-groups names groups — the group must be named. With
+        # spec_groups=None every spec_k group speculates. Enabling
+        # raises for pools that cannot roll back a rejected burst
+        # (ring-buffer KV, sharded pools, vlm extras).
+        spec = None if spec_groups is None else set(spec_groups)
+        if spec is not None:
+            unknown = spec - set(self._groups)
+            if unknown:
+                raise ValueError(
+                    f"unknown spec group(s) {sorted(unknown)}; "
+                    f"have {sorted(self._groups)}")
+        for name, g in self._groups.items():
+            if spec is not None and name in spec and g.policy.spec_k < 2:
+                raise ValueError(
+                    f"group {name} named in spec_groups but its policy "
+                    f"has spec_k={g.policy.spec_k} (need >= 2)")
+            if g.policy.spec_k >= 2 and (spec is None or name in spec):
+                g.enable_spec(g.policy.spec_k)
         # The ladder is strictly opt-in: with no --degrade-groups the
         # engine never trades chunk width or numerics for pressure —
         # tight paged pools run at high utilization as a matter of
@@ -926,7 +1084,10 @@ class Server:
         for g in self._groups.values():
             g.prefill_chunk_once()
         for g in self._groups.values():
-            g.decode_once()
+            if g.spec_k:
+                g.decode_spec_once()
+            else:
+                g.decode_once()
         return any(g.busy for g in self._groups.values())
 
     def _degradation_tick(self):
@@ -1019,6 +1180,20 @@ class Server:
                 "admit_retries": g.admit_retries,
                 "degraded": g.degraded,
             }
+            if g.spec_k:
+                # burst counters maintained at finish-time scheduling
+                # events only (the burst itself never syncs acceptance)
+                drafted = g.spec_drafted
+                out[name].update({
+                    "spec_k": g.spec_k,
+                    "spec_verify": g.policy.spec_verify,
+                    "spec_bursts": g.spec_bursts,
+                    "spec_drafted": drafted,
+                    "spec_accepted": g.spec_accepted,
+                    "spec_rolled_back": g.spec_rolled_back,
+                    "spec_acceptance": (g.spec_accepted / drafted
+                                        if drafted else 0.0),
+                })
             if g.paged:
                 g._bump_peaks()          # sample mid-decode footprint
                 pool = g.state.pool_stats()
@@ -1140,6 +1315,32 @@ def main():
                     help="cancel roughly this fraction of the submitted "
                          "requests mid-serve (exercises cooperative "
                          "cancellation)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="speculative decoding: draft tokens per decode "
+                         "burst (0 = plain decode; >= 2 enables the "
+                         "draft/verify loop — k cheap draft steps under "
+                         "--draft-backend, then ONE batched exact-policy "
+                         "verify accepting the longest agreeing prefix "
+                         "+ 1 bonus token)")
+    ap.add_argument("--draft-backend", default=None,
+                    choices=["exact", "vexp", "vexp_hw"],
+                    help="exp backend the draft steps run under "
+                         "(default: vexp_hw, the paper's bit-exact RTL "
+                         "model; emitted tokens always come from the "
+                         "exact verify pass)")
+    ap.add_argument("--spec-verify", default=None,
+                    choices=["scan", "chunk"],
+                    help='how verify scores the burst: "scan" replays '
+                         'the exact decode step per lane (bitwise '
+                         'speculative == plain, every family); "chunk" '
+                         'scores all lanes in one batched pass (reads '
+                         'cache + weights once per burst — the '
+                         'throughput mode; KV caches only, may break '
+                         'fp near-ties differently than plain decode)')
+    ap.add_argument("--spec-groups", default=None,
+                    help='comma-separated policy groups that speculate '
+                         '(their policies need spec_k >= 2); omit to '
+                         'speculate in every group whose policy asks')
     ap.add_argument("--kv-mode", default="auto",
                     choices=["auto", "seq", "batch"],
                     help='decode-cache placement: "seq" shards the KV '
@@ -1156,7 +1357,10 @@ def main():
     policy = resolve_policy(cfg, exp_backend=args.exp_backend,
                             kernel_backend=args.kernel_backend,
                             autotune=args.autotune or None,
-                            prefill_chunk=args.prefill_chunk)
+                            prefill_chunk=args.prefill_chunk,
+                            spec_k=args.spec_k,
+                            draft_exp_backend=args.draft_backend,
+                            spec_verify=args.spec_verify)
     groups = None
     if args.policy_groups:
         groups = parse_policy_groups(args.policy_groups, cfg, base=policy)
@@ -1176,6 +1380,9 @@ def main():
         print(f"[serve] chaos: seed={seed} rates={default_chaos_rates()}")
     degrade = tuple(s.strip() for s in (args.degrade_groups or "").split(",")
                     if s.strip())
+    spec_groups = (tuple(s.strip() for s in args.spec_groups.split(",")
+                         if s.strip())
+                   if args.spec_groups is not None else None)
     server = Server(cfg, params, max_batch=args.max_batch,
                     max_seq=args.max_seq, mesh=mesh, policy=policy,
                     policy_groups=groups, kv_mode=args.kv_mode,
@@ -1183,7 +1390,12 @@ def main():
                     block_budget=args.block_budget,
                     prefix_cache=not args.no_prefix_cache,
                     injector=injector, deadline_s=args.deadline,
-                    degrade_groups=degrade)
+                    degrade_groups=degrade, spec_groups=spec_groups)
+    for name, g in server._groups.items():
+        if g.spec_k:
+            print(f"[serve] group {name}: speculative decode k={g.spec_k} "
+                  f"draft={g.policy.draft_exp_backend} "
+                  f"verify={g.policy.spec_verify}")
     print(f"[serve] mesh {dict(server.mesh.shape)}; sharded decode axis: "
           f"{server.kv_axis}" + ("; paged" if server.paged else ""))
     rng = np.random.default_rng(0)
@@ -1223,6 +1435,13 @@ def main():
             print(f"    chunked prefill: width={s['prefill_chunk']}, "
                   f"{s['prefill_chunks']} chunks dispatched "
                   f"({s['chunk_s_total'] * 1e3:.1f}ms host dispatch)")
+        if s.get("spec_k"):
+            print(f"    speculative: k={s['spec_k']} "
+                  f"verify={s['spec_verify']} bursts={s['spec_bursts']} "
+                  f"drafted={s['spec_drafted']} "
+                  f"accepted={s['spec_accepted']} "
+                  f"rolled_back={s['spec_rolled_back']} "
+                  f"(acceptance {s['spec_acceptance']:.2f})")
         if "pool" in s:
             p = s["pool"]
             line = (f"    pool: page={p['page']} used {p['pages_used']}/"

@@ -103,7 +103,8 @@ def init_cache(cfg, batch_size, seq_len):
     return _mod(cfg).init_cache(cfg, batch_size, seq_len)
 
 
-def prefill_chunk(params, cfg, tokens, cache, off, clens, *, policy=None):
+def prefill_chunk(params, cfg, tokens, cache, off, clens, *, policy=None,
+                  all_lanes=False):
     """Resumable chunked prefill: advance every prefilling slot by one
     fixed-width (B, C) chunk against the contiguous slot-pool ``cache``.
     ``off`` (B,) per-slot progress cursors (tokens already cached);
@@ -111,23 +112,39 @@ def prefill_chunk(params, cfg, tokens, cache, off, clens, *, policy=None):
     prefilling this tick, whose state passes through bit-untouched.
     Returns (last-valid-lane logits, new_cache). KV families write chunk
     KV at the cursor offset; recurrent families carry (h, conv) across
-    chunks and ignore ``off``."""
+    chunks and ignore ``off``. ``all_lanes=True`` (speculative chunk
+    verify) returns per-lane (B, C, V) logits — transformer caches
+    only."""
     cfg = _apply_policy(cfg, policy)
     if cfg.family in ("audio", "vlm"):
         raise ValueError(f"{cfg.family} family has no chunked prefill")
+    if all_lanes:
+        if cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"{cfg.family} family has no all-lanes chunk scoring")
+        return _mod(cfg).prefill_chunk(params, cfg, tokens, cache, off,
+                                       clens, policy=policy, all_lanes=True)
     return _mod(cfg).prefill_chunk(params, cfg, tokens, cache, off, clens,
                                    policy=policy)
 
 
 def prefill_chunk_paged(params, cfg, tokens, cache, tables, off, clens, *,
-                        policy=None):
+                        policy=None, all_lanes=False):
     """``prefill_chunk`` over a paged cache: chunk KV scatters into each
     slot's reserved pages via ``tables`` (B, nS) at its cursor. Linear
     transformer caches and hybrid ring tables (prompts fit the window)
-    only; the recurrent family has nothing to page."""
+    only; the recurrent family has nothing to page. ``all_lanes`` as in
+    ``prefill_chunk`` (linear transformer caches only)."""
     cfg = _apply_policy(cfg, policy)
     if cfg.family in ("audio", "vlm", "ssm"):
         raise ValueError(f"{cfg.family} family has no paged chunked prefill")
+    if all_lanes:
+        if cfg.family == "hybrid":
+            raise ValueError(
+                "hybrid family has no all-lanes chunk scoring")
+        return _mod(cfg).prefill_chunk_paged(params, cfg, tokens, cache,
+                                             tables, off, clens,
+                                             policy=policy, all_lanes=True)
     return _mod(cfg).prefill_chunk_paged(params, cfg, tokens, cache, tables,
                                          off, clens, policy=policy)
 

@@ -178,6 +178,206 @@ def _programs(cfg, policy, mesh=None, kv_axis=None, decode_policy=None):
     return _PROGRAM_CACHE[key]
 
 
+# ---------------------------------------------------- speculative decoding
+
+# Block-padding sentinel for token positions past a burst's accepted
+# length. Distinct from the poison sentinel (-1): the engine filters PAD
+# out of finished streams, while -1 still quarantines the slot.
+SPEC_PAD = -2
+
+
+def _spec_accept(toks, logits, clens, rem, live):
+    """Device-side acceptance fold of one verify pass.
+
+    ``toks`` (B, W) are the burst's candidates [t0, d1..dk] (t0 the
+    pre-burst last token, d_i the draft proposals); ``logits`` (B, W, V)
+    the exact-policy all-lane scores; ``clens`` (B,) the lanes actually
+    scored (0 = dead/cap-full row); ``rem`` (B,) the per-slot remaining
+    emission budget. Emits ``m = min(n_acc + 1, clens, rem)`` tokens per
+    row: the longest draft prefix agreeing with the exact argmaxes plus
+    the bonus token the exact pass proposes after it — so every emitted
+    token is an exact-policy argmax and greedy output is identical to
+    plain decode by construction. The non-finite poison sentinel is
+    folded in lane-cumulatively (one bad lane poisons the rest of the
+    burst) and stays sticky across bursts via t0 < 0. Elementwise + lane
+    reductions only: no collectives, no host work."""
+    b, w = toks.shape
+    lanes = jnp.arange(w, dtype=jnp.int32)[None, :]
+    e = jnp.argmax(logits, -1).astype(jnp.int32)                 # (B, W)
+    badlane = ~jnp.all(jnp.isfinite(logits), axis=-1)
+    bad = (jnp.cumsum(badlane.astype(jnp.int32), axis=1) > 0) \
+        | (toks[:, :1] < 0)
+    agree = (toks[:, 1:] == e[:, :-1]).astype(jnp.int32)         # (B, k)
+    n_acc = jnp.sum(jnp.cumprod(agree, axis=1), axis=1)
+    m = jnp.minimum(jnp.minimum(n_acc + 1, clens), rem)
+    m = jnp.where(live > 0, jnp.maximum(m, 0), 0)
+    tokv = jnp.where(bad, jnp.int32(-1), e)
+    block = jnp.where(lanes < m[:, None], tokv, jnp.int32(SPEC_PAD))
+    nlast = jnp.take_along_axis(tokv, jnp.clip(m - 1, 0, w - 1)[:, None], 1)
+    nlast = jnp.where((m > 0)[:, None], nlast, toks[:, :1])
+    return block, nlast, m
+
+
+# (repr(cfg), policy, W, mode, cap[, page]) -> verify program. Same
+# lifetime rationale as _PROGRAM_CACHE.
+_SPEC_PROGRAM_CACHE: dict = {}
+
+
+def _spec_programs(cfg, policy, w, mode, cap, page=None, impl="scan"):
+    """ONE jitted exact-policy verify program for a W = spec_k + 1 draft
+    burst, per (cfg, policy, W, pool flavor, impl).
+
+    ``impl="scan"`` (default): the scoring pass is a ``lax.scan`` of W
+    exact DECODE steps — the same per-token program math plain serving
+    runs — fused with the acceptance fold into one dispatch. A
+    chunk-shaped (all-lanes parallel) scoring pass was measured to
+    differ from the decode-step path by ~1 bf16 ulp (different
+    attention program shape, different XLA fusions), which flips argmax
+    on near-tie logits and silently breaks the speculative == plain
+    token-identity contract; the scan of decode steps makes identity
+    hold by CONSTRUCTION, not by fp luck.
+
+    ``impl="chunk"`` (KV modes only): scores all W lanes in ONE batched
+    ``prefill_chunk`` pass — cache and weights are read once per burst
+    instead of once per lane, which is the whole speculative speedup
+    (a W-lane chunk costs about half of ONE decode step at serving
+    sequence lengths). The price is the ~1-ulp divergence above: tokens
+    remain exact-policy argmaxes of the chunk program, but near-tie
+    logits may break ties differently than plain decode. Throughput
+    mode; the identity contract holds only for "scan".
+
+    Acceptance length ``m = min(n_agree + 1, clens, rem)`` is computed
+    device-side and folded into the carry (positions advance by m,
+    budgets shrink by m), so a burst costs zero host syncs. Modes:
+
+      "kv"              single pass over the post-draft pool (donated):
+                        the scan rewrites every burst row with exact
+                        KV before any later step reads it, so the
+                        cursor rewind IS the rollback — rows past the
+                        new cursor are stale but cache_len-masked.
+      "kv_paged"        same over a paged pool; tables are read-only
+                        and NO page moves: full reservation means
+                        rollback touches the allocator zero times.
+      "recurrent"       two scans from the pre-burst snapshot c0
+                        (recurrent state/ring KV has no rewindable
+                        addressing): scan 1 scores all W lanes (state
+                        discarded), scan 2 replays c0 through exactly
+                        the accepted tokens with per-step live masking
+                        — bit-identical to plain decode stopping at m.
+                        c0 feeds both scans, so it is never donated.
+      "recurrent_paged" the same two scans over the hybrid ring pools.
+
+    ``cap`` is the linear cache capacity (lanes at positions >= cap are
+    live-masked so the scan never writes past the pool) or None
+    (recurrent state and ring buffers never exhaust)."""
+    if impl not in ("scan", "chunk"):
+        raise ValueError(f"unknown speculative verify impl {impl!r}")
+    if impl == "chunk" and mode not in ("kv", "kv_paged"):
+        raise ValueError(
+            f"chunk verify needs a rewindable KV cache; mode {mode!r} "
+            f"replays state step-exactly (use impl='scan')")
+    key = (repr(cfg), policy, int(w), mode, cap, page, impl)
+    if key not in _SPEC_PROGRAM_CACHE:
+        pol = policy
+        paged = mode.endswith("_paged")
+
+        def _clens(pos0, live):
+            room = (jnp.full_like(pos0, w) if cap is None
+                    else jnp.int32(cap) - pos0)
+            return jnp.where(live > 0, jnp.clip(room, 0, w), 0)
+
+        def _lanes(toks):
+            # scan inputs: ((W, B, 1) tokens, (W,) lane index)
+            return (toks.T[:, :, None], jnp.arange(w, dtype=jnp.int32))
+
+        def _scan(p, toks, c, tab, pos0, live, nlive, want_logits):
+            # W decode steps fused into one program; step i runs with
+            # live_i = live * (i < nlive), so masked lanes leave state
+            # AND position bit-untouched — exactly a plain decode loop
+            # that stopped after nlive steps.
+            def body(carry, x):
+                c, pos = carry
+                ti, i = x
+                lv = live * (i < nlive).astype(jnp.int32)
+                if paged:
+                    logits, c = api.decode_step_paged(
+                        p, cfg, ti, c, tab, pos, policy=pol, live=lv)
+                else:
+                    logits, c = api.decode_step(p, cfg, ti, c, pos,
+                                                policy=pol, live=lv)
+                return (c, pos + lv), (logits[:, 0] if want_logits
+                                       else jnp.zeros((), jnp.int32))
+            (c, pos), ls = jax.lax.scan(body, (c, pos0), _lanes(toks))
+            logits = (jnp.transpose(ls, (1, 0, 2)) if want_logits
+                      else None)                              # (B, W, V)
+            return logits, c, pos
+
+        if mode in ("kv", "kv_paged") and impl == "chunk":
+            def score_fn(p, toks, c, tab, pos0, rem, live):
+                clens = _clens(pos0, live)
+                if paged:
+                    logits, c = api.prefill_chunk_paged(
+                        p, cfg, toks, c, tab, pos0, clens, policy=pol,
+                        all_lanes=True)
+                else:
+                    logits, c = api.prefill_chunk(
+                        p, cfg, toks, c, pos0, clens, policy=pol,
+                        all_lanes=True)
+                block, nlast, m = _spec_accept(toks, logits, clens, rem,
+                                               live)
+                return block, nlast, c, pos0 + m, rem - m
+        elif mode in ("kv", "kv_paged"):
+            def score_fn(p, toks, c, tab, pos0, rem, live):
+                clens = _clens(pos0, live)
+                logits, c, _ = _scan(p, toks, c, tab, pos0, live, clens,
+                                     True)
+                block, nlast, m = _spec_accept(toks, logits, clens, rem,
+                                               live)
+                return block, nlast, c, pos0 + m, rem - m
+        else:
+            def score_fn(p, toks, c0, tab, pos0, rem, live):
+                clens = _clens(pos0, live)
+                logits, _, _ = _scan(p, toks, c0, tab, pos0, live, clens,
+                                     True)
+                block, nlast, m = _spec_accept(toks, logits, clens, rem,
+                                               live)
+                # the accepted tokens ARE toks[:, :m] (draft i agreed
+                # with exact for i < m), so the replay feeds toks again
+                c2, pos2 = _scan(p, toks, c0, tab, pos0, live, m,
+                                 False)[1:]
+                return block, nlast, c2, pos2, rem - m
+
+        if mode == "kv":
+            def verify_fn(p, toks, c, pos0, rem, live):
+                return score_fn(p, toks, c, None, pos0, rem, live)
+
+            verify = jax.jit(verify_fn, donate_argnums=(2, 3, 4))
+        elif mode == "kv_paged":
+            # XLA-CPU materializes the pool copy regardless; donation
+            # would only add copies (mirrors _paged_programs).
+            pool_d = () if jax.default_backend() == "cpu" else (2,)
+
+            def verify_fn(p, toks, c, tab, pos0, rem, live):
+                return score_fn(p, toks, c, tab, pos0, rem, live)
+
+            verify = jax.jit(verify_fn, donate_argnums=pool_d + (4, 5))
+        elif mode == "recurrent":
+            def verify_fn(p, toks, c0, pos0, rem, live):
+                return score_fn(p, toks, c0, None, pos0, rem, live)
+
+            verify = jax.jit(verify_fn, donate_argnums=(3, 4))
+        elif mode == "recurrent_paged":
+            def verify_fn(p, toks, c0, tab, pos0, rem, live):
+                return score_fn(p, toks, c0, tab, pos0, rem, live)
+
+            verify = jax.jit(verify_fn, donate_argnums=(4, 5))
+        else:
+            raise ValueError(f"unknown speculative mode {mode!r}")
+
+        _SPEC_PROGRAM_CACHE[key] = verify
+    return _SPEC_PROGRAM_CACHE[key]
+
+
 class DecodeState:
     """Base of the per-family serving-state implementations.
 
@@ -214,6 +414,8 @@ class DecodeState:
         # remembered so set_policy can restore the EXACT original
         # programs (incl. the autotuned decode policy) after degradation
         self._policy0, self._dpol0 = policy, decode_policy
+        self._dpol = decode_policy       # ACTIVE decode policy
+        self._spec_k = 0                 # 0 = plain decode (no draft burst)
         (self._prefill, self._prefill_plain, self._decode,
          self._chunk) = _programs(cfg, policy, mesh, kv_axis,
                                   decode_policy)
@@ -493,10 +695,119 @@ class DecodeState:
         one when restoring)."""
         dpol = self._dpol0 if policy == self._policy0 else policy
         self.policy = policy
+        self._dpol = dpol
         (self._prefill, self._prefill_plain, self._decode,
          self._chunk) = _programs(self.cfg, policy, self.mesh,
                                   self.kv_axis, dpol)
+        if self._spec_k:
+            # degradation rebuilds the draft + verify programs against
+            # the group's ACTIVE policy: "speculative == plain decode
+            # under this policy" holds on every ladder rung.
+            self._wire_spec()
         return dpol
+
+    # ------------------------------------------------- speculative decoding
+
+    def supports_speculative(self) -> bool:
+        """Whether this pool can run draft bursts + batched verify (the
+        self-speculative decode path). Gated per subclass on the chunk
+        program's addressing model (linear, unsharded)."""
+        return False
+
+    def _spec_mode(self) -> str:
+        raise NotImplementedError
+
+    def _spec_copy_state(self) -> bool:
+        """Whether a burst snapshot must copy the state pytree. False
+        for positional (KV) pools — the verify chunk overwrites draft
+        rows with exact rows and the cursor rewind IS the rollback;
+        True for recurrent state, which has no positions to rewind."""
+        return False
+
+    def enable_speculative(self, spec_k: int) -> None:
+        """Switch the pool to self-speculative decode: k-step draft
+        bursts under the policy's ``draft_exp_backend`` verified by ONE
+        batched exact-policy pass. Builds (cache-hits) the draft decode
+        and verify programs; re-wired by ``set_policy`` so degradation
+        keeps draft/verify consistent with the active rung."""
+        if not self.supports_speculative():
+            raise ValueError(
+                f"{self.kind} state cannot run speculative decode")
+        if not (isinstance(spec_k, int) and spec_k >= 2):
+            raise ValueError(f"spec_k must be an int >= 2, got {spec_k!r}")
+        self._spec_k = int(spec_k)
+        self._wire_spec()
+
+    def _draft_policy(self):
+        # the ACTIVE decode policy with only its exp backend swapped:
+        # autotuned fields and degradation state carry over, so draft
+        # and exact programs differ in exactly one execution choice.
+        return self._dpol.replace(exp_backend=self.policy.draft_exp_backend)
+
+    def _spec_impl(self) -> str:
+        # recurrent replays must be step-exact; KV modes honor the
+        # policy's scan/chunk verify choice.
+        mode = self._spec_mode()
+        return (self.policy.spec_verify if mode in ("kv", "kv_paged")
+                else "scan")
+
+    def _wire_spec(self):
+        self._draft_decode = _programs(self.cfg, self.policy, self.mesh,
+                                       self.kv_axis,
+                                       self._draft_policy())[2]
+        self._verify = _spec_programs(self.cfg, self.policy,
+                                      self._spec_k + 1, self._spec_mode(),
+                                      self.max_len(),
+                                      impl=self._spec_impl())
+
+    def spec_snapshot(self):
+        """Pre-burst snapshot: a FRESH positions buffer (draft steps
+        donate ``pos_dev``) plus, for recurrent families, a copy of the
+        state the burst will advance. Cheap where rollback is cheap: KV
+        pools snapshot positions only."""
+        pos0 = self.pos_dev + 0
+        state0 = (jax.tree.map(jnp.copy, self.data)
+                  if self._spec_copy_state() else None)
+        return (pos0, state0)
+
+    def spec_restore(self, snap):
+        """Roll every slot back to a snapshot (bitwise). ``verify_step``
+        is the normal consumer of a snapshot — acceptance folds the
+        rewind into the verify program — so the explicit restore is the
+        abort/fault path and the protocol's testable rollback contract.
+        On KV pools the cursor rewind is the whole rollback (stale draft
+        rows past the cursor are cache_len-masked and overwritten by the
+        next burst); paged pools additionally touch the allocator ZERO
+        times — full reservation means every page is already held and
+        no accepted-prefix page is ever freed."""
+        pos0, state0 = snap
+        self.pos_dev = pos0 + 0
+        if state0 is not None:
+            self.data = jax.tree.map(jnp.copy, state0)
+
+    @hot_path
+    def draft_step(self, last, live):
+        """One decode step under the DRAFT policy's program — the same
+        carry contract as ``step`` (state + positions donated, zero host
+        work), differing only in the exp backend the kernels route to."""
+        nxt, self.data, self.pos_dev = self._draft_decode(
+            self.params_decode, last, self.data, self.pos_dev, live)
+        return nxt
+
+    @hot_path
+    def verify_step(self, toks, snap, rem, live):
+        """ONE batched exact-policy pass scoring all W = k + 1 burst
+        candidates at their per-slot offsets. Returns ``(block, last,
+        rem)``: the (B, W) accepted-token block (SPEC_PAD past each
+        row's accepted length), the new last token, and the advanced
+        budget. Acceptance length is computed device-side and folded
+        into the carry — positions advance by m inside the program, so
+        a burst adds zero host syncs over a plain decode tick."""
+        pos0, state0 = snap
+        carry = self.data if state0 is None else state0
+        block, nlast, self.data, self.pos_dev, rem = self._verify(
+            self.params_decode, toks, carry, pos0, rem, live)
+        return block, nlast, rem
 
     def check_integrity(self, live_slots=()):
         """Post-fault invariant sweep (deliberately NOT hot-path: it
@@ -530,6 +841,19 @@ class KVDecodeState(DecodeState):
         # a linear cache is exhausted when the next write would fall past
         # the last slot; ring-buffer windows wrap instead.
         return self._linear_cap()
+
+    def supports_speculative(self) -> bool:
+        # linear caches only: the cheap position-only rollback relies
+        # on rejected rows staying cache_len-masked until overwritten —
+        # a ring-buffer wrap instead DESTROYS the pre-burst row it
+        # lands on, which only a (costly) pool snapshot could restore.
+        # Single-partition (the verify program is unsharded) and
+        # token-only families (vlm extras don't fit a decode scan).
+        return (self.kv_axis is None and self.max_len() is not None
+                and self.cfg.family not in ("vlm", "audio"))
+
+    def _spec_mode(self) -> str:
+        return "kv"
 
     def _setup_placement(self):
         if self.kv_axis is None:
@@ -609,6 +933,15 @@ class RecurrentDecodeState(DecodeState):
         q = self.cfg.ssm_chunk
         return -(-max(1, int(c)) // q) * q
 
+    def supports_speculative(self) -> bool:
+        return True                      # O(1) state: no cap, no shards
+
+    def _spec_mode(self) -> str:
+        return "recurrent"
+
+    def _spec_copy_state(self) -> bool:
+        return True
+
 
 class HybridDecodeState(DecodeState):
     """hybrid (recurrentgemma/griffin): mixed per-period state — RG-LRU
@@ -637,6 +970,20 @@ class HybridDecodeState(DecodeState):
         # width keeps batched tokens bit-identical to solo tokens; it is
         # bounded by the sliding window, so the cost stays modest.
         return self.cache_s
+
+    def supports_speculative(self) -> bool:
+        # both regimes: the verify scans run plain decode steps, which
+        # wrap the ring natively, and the snapshot copies the WHOLE
+        # mixed state (RG-LRU rows AND ring KV) — a rejected burst's
+        # ring overwrites are rebuilt from c0 by the replay scan, so
+        # wrap-destroyed rows are never lost.
+        return self.kv_axis is None
+
+    def _spec_mode(self) -> str:
+        return "recurrent"
+
+    def _spec_copy_state(self) -> bool:
+        return True
 
 
 # --------------------------------------------------------------- paged pool
@@ -1157,6 +1504,42 @@ class PagedKVDecodeState(KVDecodeState):
             live)
         return nxt
 
+    # ------------------------------------------------- speculative decoding
+
+    def supports_speculative(self) -> bool:
+        # same preconditions as per-slot chunk admission: the verify
+        # chunk writes through the device tables (unsharded, linear)
+        return self.supports_chunked()
+
+    def _spec_mode(self) -> str:
+        return "kv_paged"
+
+    def _wire_spec(self):
+        self._draft_decode_paged = _paged_programs(
+            self.cfg, self.policy, self.page, self.mesh, self.kv_axis,
+            self._draft_policy())[1]
+        self._verify = _spec_programs(self.cfg, self.policy,
+                                      self._spec_k + 1, self._spec_mode(),
+                                      self.max_len(), page=self.page,
+                                      impl=self._spec_impl())
+
+    @hot_path
+    def draft_step(self, last, live):
+        nxt, self.data, self.pos_dev = self._draft_decode_paged(
+            self.params_decode, last, self.data, self.tables, self.pos_dev,
+            live)
+        return nxt
+
+    @hot_path
+    def verify_step(self, toks, snap, rem, live):
+        # tables are read-only and rollback never frees a page (full
+        # reservation holds every column, accepted prefix included)
+        pos0, _ = snap
+        block, nlast, self.data, self.pos_dev, rem = self._verify(
+            self.params_decode, toks, self.data, self.tables, pos0, rem,
+            live)
+        return block, nlast, rem
+
     # ------------------------------------------------- chunked prefill
 
     def supports_chunked(self) -> bool:
@@ -1417,6 +1800,43 @@ class PagedHybridDecodeState(HybridDecodeState):
             self.params_decode, last, self.data, self.tables, self.pos_dev,
             live)
         return nxt
+
+    # ------------------------------------------------- speculative decoding
+
+    def supports_speculative(self) -> bool:
+        # both ring regimes (see HybridDecodeState): the verify scans
+        # wrap natively and the snapshot copies the ring pools too.
+        # Single-partition by construction.
+        return True
+
+    def _spec_mode(self) -> str:
+        return "recurrent_paged"
+
+    def _wire_spec(self):
+        self._draft_decode_paged = _paged_programs(
+            self.cfg, self.policy, self.page, None, None,
+            self._draft_policy())[1]
+        self._verify = _spec_programs(self.cfg, self.policy,
+                                      self._spec_k + 1, self._spec_mode(),
+                                      self.max_len(), page=self.page)
+
+    @hot_path
+    def draft_step(self, last, live):
+        nxt, self.data, self.pos_dev = self._draft_decode_paged(
+            self.params_decode, last, self.data, self.tables, self.pos_dev,
+            live)
+        return nxt
+
+    @hot_path
+    def verify_step(self, toks, snap, rem, live):
+        # the snapshot copy carries BOTH the RG-LRU rows and the ring
+        # page pools; the two-pass verify rebuilds the exact post-accept
+        # state from it. Tables read-only, zero allocator work.
+        pos0, state0 = snap
+        block, nlast, self.data, self.pos_dev, rem = self._verify(
+            self.params_decode, toks, state0, self.tables, pos0, rem,
+            live)
+        return block, nlast, rem
 
     # ------------------------------------------------- chunked prefill
 

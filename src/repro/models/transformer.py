@@ -563,7 +563,21 @@ def _chunk_logits(params, cfg, x, clens):
     return mask_padded_logits(logits, cfg.vocab)
 
 
-def prefill_chunk(params, cfg, tokens, cache, off, clens, *, policy=None):
+def _chunk_all_logits(params, cfg, x):
+    """Every-lane logits of a chunk program: (B, C, V). The batched
+    speculative verify scores all k+1 candidate tokens from one chunk
+    pass; lanes at or past a row's ``clens`` carry garbage the caller
+    masks out of acceptance."""
+    x = norm_apply(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    ldt = jnp.bfloat16 if cfg.logits_mm_dtype == "bf16" else jnp.float32
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(ldt),
+                        unembed_matrix(params, cfg).astype(ldt),
+                        preferred_element_type=jnp.float32)
+    return mask_padded_logits(logits, cfg.vocab)
+
+
+def prefill_chunk(params, cfg, tokens, cache, off, clens, *, policy=None,
+                  all_lanes=False):
     """Resumable prefill: advance every prefilling slot by one fixed-size
     chunk, writing chunk KV directly into the slot-pool cache carry.
 
@@ -573,7 +587,9 @@ def prefill_chunk(params, cfg, tokens, cache, off, clens, *, policy=None):
     (decoding / free slots), which pass through bit-untouched. Returns
     (logits, cache): logits are each row's last-valid-lane next-token
     distribution, meaningful only for rows whose prompt completes with
-    this chunk (off + clens == prompt_len)."""
+    this chunk (off + clens == prompt_len). ``all_lanes=True``
+    (speculative verify) returns (B, C, V) logits for every lane instead
+    — lanes >= clens are garbage the caller masks."""
     x = embed_inputs(params, cfg, tokens)
     off = jnp.asarray(off, jnp.int32).reshape(-1)
     clens = jnp.asarray(clens, jnp.int32).reshape(-1)
@@ -595,6 +611,8 @@ def prefill_chunk(params, cfg, tokens, cache, off, clens, *, policy=None):
     x, cache = jax.lax.scan(body, x, (params["layers"],
                                       cache["k"], cache["v"]),
                             unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    if all_lanes:
+        return _chunk_all_logits(params, cfg, x), cache
     return _chunk_logits(params, cfg, x, clens), cache
 
 
@@ -929,14 +947,16 @@ def _write_chunk_kv_paged(pool, kv, gids, inpage, layout):
 
 
 def prefill_chunk_paged(params, cfg, tokens, cache, tables, off, clens, *,
-                        policy=None):
+                        policy=None, all_lanes=False):
     """Resumable prefill over a paged KV pool: the chunk's K/V scatter
     into each slot's reserved pages at its cursor, then the Q-chunk
     attends causally over the slot's gathered pages — shared-prefix pages
     (attached read-only at admission; the cursor starts past them) and
     intra-chunk keys included. Linear caches only; windowed ring tables
     admit monolithically. Arguments as ``prefill_chunk`` plus ``tables``
-    (B, nS) physical page tables. Returns (logits, cache)."""
+    (B, nS) physical page tables. Returns (logits, cache);
+    ``all_lanes=True`` (speculative verify) returns every lane's
+    logits."""
     from repro.kernels.decode_attention.ops import paged_gather
     x = embed_inputs(params, cfg, tokens)
     b, c, _ = x.shape
@@ -984,6 +1004,8 @@ def prefill_chunk_paged(params, cfg, tokens, cache, tables, off, clens, *,
     x, cache = jax.lax.scan(body, x, (params["layers"],
                                       cache["k"], cache["v"]),
                             unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    if all_lanes:
+        return _chunk_all_logits(params, cfg, x), cache
     return _chunk_logits(params, cfg, x, clens), cache
 
 

@@ -54,6 +54,9 @@ _ENV_FIELDS = {
     "MERGE_STRATEGY": "merge_strategy",
     "PREFILL_CHUNK": "prefill_chunk",
     "DEGRADE_EXP_BACKEND": "degrade_exp_backend",
+    "SPEC_K": "spec_k",
+    "DRAFT_EXP_BACKEND": "draft_exp_backend",
+    "SPEC_VERIFY": "spec_verify",
 }
 
 _TRUTHY = ("1", "true", "yes", "on")
@@ -115,6 +118,31 @@ class ExecPolicy:
                     envelope is exactly the license for trading numerics
                     for throughput on bulk traffic. The engine restores
                     the group's own backend when pressure clears.
+    spec_k          policy-speculative decoding: number of draft tokens
+                    proposed per decode burst under the draft policy
+                    before ONE batched verify step under this policy
+                    scores all of them (longest agreeing prefix + bonus
+                    token accepted — lossless for greedy decoding). 0
+                    (default) keeps plain one-token decode; >= 2 enables
+                    the speculative loop for serving groups that opt in
+                    (``--spec-groups``) on families with cheap rollback.
+    draft_exp_backend
+                    the exp backend the k draft steps run under. Defaults
+                    to "vexp_hw" — the paper's bit-exact RTL model: its
+                    ~0.78% relative error rarely moves an argmax, so the
+                    draft chain agrees with the exact verifier almost
+                    always while every *emitted* token still comes from
+                    the verify program under this policy's own backend.
+    spec_verify     how the exact verifier scores the k+1 candidates:
+                    "scan" (default) replays them as a fused scan of the
+                    *same* decode-step program plain decode runs —
+                    bitwise-identical tokens and cache by construction,
+                    every family. "chunk" scores all lanes in ONE
+                    batched prefill-chunk pass (reads cache + weights
+                    once per burst — the throughput mode) but its
+                    attention program differs from the decode step's by
+                    ~1 bf16 ulp, which can flip argmax on near-tie
+                    logits; KV-cache states only.
     """
 
     exp_backend: str = "vexp"
@@ -130,6 +158,9 @@ class ExecPolicy:
     merge_strategy: str = "packed"
     prefill_chunk: int = 0
     degrade_exp_backend: str = "vexp_hw"
+    spec_k: int = 0
+    draft_exp_backend: str = "vexp_hw"
+    spec_verify: str = "scan"
 
     def __post_init__(self):
         if self.exp_backend not in EXP_BACKENDS:
@@ -170,6 +201,21 @@ class ExecPolicy:
         if not (isinstance(pc, int) and pc >= 0):
             raise ValueError(f"prefill_chunk must be an int >= 0 "
                              f"(0 = monolithic prefill), got {pc!r}")
+        if self.draft_exp_backend not in EXP_BACKENDS:
+            raise ValueError(
+                f"draft_exp_backend {self.draft_exp_backend!r} "
+                f"not in {EXP_BACKENDS}")
+        sk = self.spec_k
+        if not (isinstance(sk, int) and sk >= 0) or sk == 1:
+            raise ValueError(
+                f"spec_k must be 0 (plain decode) or an int >= 2 "
+                f"(draft burst length), got {sk!r}")
+        if self.spec_verify not in ("scan", "chunk"):
+            raise ValueError(
+                f"spec_verify must be 'scan' (bitwise-identical replay "
+                f"of exact decode steps) or 'chunk' (one batched "
+                f"all-lanes scoring pass; KV caches only), "
+                f"got {self.spec_verify!r}")
 
     # ------------------------------------------------------------ accessors
 
@@ -195,7 +241,9 @@ class ExecPolicy:
                 f"p{self.block_page}) "
                 f"accum={self.accum_dtype} merge={self.merge_strategy} "
                 f"autotune={self.autotune} chunk={self.prefill_chunk} "
-                f"degrade={self.degrade_exp_backend}")
+                f"degrade={self.degrade_exp_backend} "
+                f"spec_k={self.spec_k} draft={self.draft_exp_backend} "
+                f"spec_verify={self.spec_verify}")
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -205,7 +253,7 @@ class ExecPolicy:
 
 def _parse(field: str, raw: str):
     if field in ("block_q", "block_k", "block_rows", "block_s",
-                 "block_page", "prefill_chunk"):
+                 "block_page", "prefill_chunk", "spec_k"):
         try:
             return int(raw)
         except ValueError:

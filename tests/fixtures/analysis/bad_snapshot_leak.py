@@ -1,0 +1,28 @@
+"""Planted violation for the refcount-pairing rule's speculative-
+snapshot pass: ``spec_snapshot`` takes the burst's only rollback token
+and the draft steps then advance the donated pool positions in place,
+but no try around the burst reaches a rollback/recovery call — an
+injected dispatch fault (or any raise between snapshot and verify)
+strands the pool mid-draft with no way back (unguarded-spec-snapshot)."""
+
+
+class BadSpecEngine:
+    def decode_spec_once(self):
+        snap = self.state.spec_snapshot()
+        cur = self.last
+        for _ in range(self.spec_k):
+            # BUG: a raise here (injected decode.step_error, a
+            # cancellation surfacing mid-burst) leaves the positions
+            # advanced by the drafts already run — nothing restores snap.
+            cur = self.state.draft_step(cur, self.live_dev)
+        self.pending = (snap, cur)
+
+    def logging_is_not_a_guard(self):
+        snap = self.state.spec_snapshot()
+        try:
+            self.state.draft_step(self.last, self.live_dev)
+        except Exception:
+            # BUG: the handler observes the fault but discharges nothing
+            # — the rollback token dies here with the pool mid-draft.
+            self.log.append(("spec fault", snap))
+            raise

@@ -96,6 +96,24 @@ class TestPlantedViolations:
         assert f.symbol == "BadEngine.admit_chunked"
         assert f.severity is Severity.ERROR
 
+    def test_snapshot_leak_fixture(self):
+        fs = _findings("bad_snapshot_leak.py")
+        assert _details(fs, "refcount-pairing") == \
+            ["unguarded-spec-snapshot"] * 2
+        assert {f.symbol for f in fs} == \
+            {"BadSpecEngine.decode_spec_once",
+             "BadSpecEngine.logging_is_not_a_guard"}
+        assert all(f.severity is Severity.ERROR for f in fs)
+
+    def test_spec_snapshot_guarded_in_engine(self):
+        """The real speculative burst wraps snapshot..verify in a try
+        whose handler routes through the step-fault recovery — the
+        snapshot rule must see it as clean."""
+        findings, _ = run_rules([str(SRC / "repro" / "launch"
+                                     / "serve.py")])
+        assert not [f for f in findings
+                    if f.detail == "unguarded-spec-snapshot"]
+
     def test_slot_reserve_guarded_in_engine(self):
         """The real admission loop publishes reservations under a guard
         that aborts the chunk on the exception path — the slot rule must
@@ -148,7 +166,8 @@ class TestRepoGate:
 class TestCli:
     @pytest.mark.parametrize("name", [
         "bad_host_sync.py", "bad_refcount.py", "bad_retrace.py",
-        "bad_family_branch.py", "bad_fallback.py", "bad_slot_leak.py"])
+        "bad_family_branch.py", "bad_fallback.py", "bad_slot_leak.py",
+        "bad_snapshot_leak.py"])
     def test_nonzero_on_each_planted_fixture(self, name):
         assert main([str(FIX / name), "--no-baseline"]) == 1
 

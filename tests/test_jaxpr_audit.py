@@ -171,6 +171,84 @@ class TestEngineDecodePrograms:
         ja.assert_all_donated(txt, donated)
         ja.assert_carry_stable(chunk, args, {2: 1})
 
+    W = 4                               # spec_k = 3 draft lanes + bonus
+
+    def _spec_args(self, arch, b=2, s=64):
+        cache = api.init_cache(_cfg(arch), b, s)
+        toks = jnp.zeros((b, self.W), jnp.int32)
+        pos0 = jnp.ones((b,), jnp.int32)
+        rem = jnp.full((b,), 8, jnp.int32)
+        live = jnp.ones((b,), jnp.int32)
+        return (_params(arch), toks, cache, pos0, rem, live)
+
+    @pytest.mark.parametrize("impl", ["scan", "chunk"])
+    @pytest.mark.parametrize("exp", EXP_BACKENDS)
+    def test_spec_verify_kv_program(self, exp, impl):
+        """The speculative verify program (PR-10) is held to the decode
+        contracts under both impls: collective-free, fully consumes the
+        donated (cache, positions, remaining-budget) carry, and keeps
+        it dtype/shape-stable — acceptance folds into the carry, so any
+        drift here would defeat donation for EVERY burst."""
+        from repro.models.decode_state import _spec_programs
+        arch = FAMILY_ARCH["kv"]
+        cfg = _cfg(arch)
+        pol = resolve_policy(cfg, env={}, exp_backend=exp)
+        verify = _spec_programs(cfg, pol, self.W, "kv", 64, impl=impl)
+        args = self._spec_args(arch)
+        txt = verify.lower(*args).as_text()
+
+        ja.assert_collective_budget(txt, {})
+        n = len(jax.tree_util.tree_leaves(args[2])) + 2
+        ja.assert_all_donated(txt, n)           # cache + pos + rem
+        # verify returns (block, nlast, cache, pos, rem)
+        ja.assert_carry_stable(verify, args, {2: 2, 3: 3, 4: 4})
+
+    @pytest.mark.parametrize("family", ["recurrent", "hybrid"])
+    def test_spec_verify_recurrent_program(self, family):
+        """Recurrent/hybrid verify (two-scan: score + replay from the
+        snapshot): collective-free; the snapshot c0 is deliberately NOT
+        donated (the replay reads it twice) but positions and budget
+        are; the replayed state must come back carry-stable."""
+        from repro.models.decode_state import _spec_programs
+        arch = FAMILY_ARCH[family]
+        cfg = _cfg(arch)
+        pol = resolve_policy(cfg, env={}, exp_backend="exact")
+        cap = None if family == "recurrent" else 64
+        verify = _spec_programs(cfg, pol, self.W, "recurrent", cap)
+        args = self._spec_args(arch)
+        txt = verify.lower(*args).as_text()
+
+        ja.assert_collective_budget(txt, {})
+        ja.assert_all_donated(txt, 2)           # pos + rem only
+        ja.assert_carry_stable(verify, args, {2: 2, 3: 3, 4: 4})
+
+    @pytest.mark.parametrize("impl", ["scan", "chunk"])
+    def test_spec_verify_paged_program(self, impl):
+        """Paged verify: donation mirrors the paged decode builder (the
+        pool donates everywhere but XLA-CPU); pool, tables, positions
+        and budget all come back carry-stable, and the program never
+        touches the allocator — it is pure device code."""
+        from repro.models.decode_state import _spec_programs
+        arch = FAMILY_ARCH["kv"]
+        cfg = _cfg(arch)
+        b, s, page = 2, 64, 16
+        ns = -(-s // page)
+        pool = api.init_paged_cache(cfg, b, 1 + b * ns, page)
+        tab = jnp.zeros((b, ns), jnp.int32)
+        pol = resolve_policy(cfg, env={}, exp_backend="exact")
+        verify = _spec_programs(cfg, pol, self.W, "kv_paged", s,
+                                page=page, impl=impl)
+        args = (_params(arch), jnp.zeros((b, self.W), jnp.int32), pool,
+                tab, jnp.ones((b,), jnp.int32),
+                jnp.full((b,), 8, jnp.int32), jnp.ones((b,), jnp.int32))
+        txt = verify.lower(*args).as_text()
+
+        ja.assert_collective_budget(txt, {})
+        donated = (2 if jax.default_backend() == "cpu"
+                   else len(jax.tree_util.tree_leaves(pool)) + 2)
+        ja.assert_all_donated(txt, donated)
+        ja.assert_carry_stable(verify, args, {2: 2, 4: 3, 5: 4})
+
     def test_paged_hybrid_decode_program(self):
         """The hybrid family through the paged program builder (its KV
         periods page; recurrent periods carry their snapshots)."""

@@ -445,6 +445,130 @@ def test_chaos_storm_partitioned_pool(seed):
     assert alloc.n_used() == 0
 
 
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(16, 48))
+def test_speculative_rollback_storm_conserves_refcounts(seed, n_pages):
+    """PR-10 rollback storm: speculative decode appends up to W = spec_k+1
+    tokens per burst and rewinds the rejected suffix, under the paged
+    pool's full-reservation contract — every page a slot can EVER touch
+    is allocated at admission, so a burst (append then partial rollback,
+    including the dangerous page-straddling rewind where the cursor
+    crosses a page boundary) must leave the allocator bitwise untouched:
+    no page freed (the accepted prefix keeps its pages; the rejected
+    suffix's pages stay reserved for the next burst), no page allocated,
+    no refcount moved. Interleaved cow/finish/invalidate traffic and a
+    seeded FaultInjector keep the exact-conservation invariant honest
+    after every op."""
+    from repro.ft import FaultInjector
+
+    rng = np.random.default_rng(seed)
+    inj = FaultInjector(seed=seed, rates={"alloc.out_of_blocks": 0.15,
+                                          "prefix.corrupt": 0.10})
+    page = 4
+    spec_w = 6                          # draft burst width (> page: straddles)
+    alloc = BlockAllocator(n_pages)
+    alloc.injector = inj
+    cache = PrefixCache(alloc, page)
+    prompts = [_prompt(rng, page * int(rng.integers(1, 4)))
+               for _ in range(4)]
+    slots = []           # {"gids": full reservation, "cur": token cursor}
+    for _ in range(100):
+        op = int(rng.integers(0, 5))
+        if op == 0:                    # admit under FULL reservation
+            p = prompts[int(rng.integers(len(prompts)))]
+            room = int(rng.integers(1, 3)) * page   # decode growth budget
+            ns = -(-(len(p) + room) // page)        # ceil: whole table now
+            n_full = len(p) // page
+            h = cache.probe(p)
+            got = cache.attach(p, max_pages=h)
+            try:
+                fresh = alloc.alloc_cols(range(h, ns))
+            except OutOfBlocks:        # all-or-nothing admission
+                for g in got:
+                    alloc.decref(g)
+            else:
+                gids = got + fresh
+                for i in range(h, n_full):
+                    if cache.probe(p) >= i:
+                        cache.insert(p, i, gids[i])
+                slots.append({"gids": gids, "cur": len(p)})
+        elif op == 1 and slots:        # speculative burst: append + rollback
+            slot = slots[int(rng.integers(len(slots)))]
+            cap = len(slot["gids"]) * page
+            w = int(min(rng.integers(1, spec_w + 1), cap - slot["cur"]))
+            if w > 0:
+                snap = slot["cur"]
+                before_free = alloc.n_free()
+                before_refs = {g: alloc.refcount(g)
+                               for g in set(slot["gids"])}
+                slot["cur"] += w               # multi-token draft append
+                # exact verify accepts m, rejects the rest: cursor rewind
+                # IS the rollback — often straddling back across a page
+                # boundary. The allocator must not notice any of it.
+                m = int(rng.integers(0, w + 1))
+                slot["cur"] = snap + m
+                assert -(-slot["cur"] // page) <= len(slot["gids"]), \
+                    "cursor escaped the full reservation"
+                assert alloc.n_free() == before_free, \
+                    "burst/rollback freed or allocated a page"
+                for g, r in before_refs.items():
+                    assert alloc.refcount(g) == r, \
+                        "burst/rollback moved a reserved page's refcount"
+        elif op == 2 and slots:        # finish: release the whole table
+            for g in slots.pop(int(rng.integers(len(slots))))["gids"]:
+                alloc.decref(g)
+        elif op == 3 and slots:        # cow a shared page under the cursor
+            slot = slots[int(rng.integers(len(slots)))]
+            k = int(rng.integers(len(slot["gids"])))
+            try:
+                slot["gids"][k] = alloc.cow(slot["gids"][k])
+            except OutOfBlocks:
+                pass
+        elif inj.fire("prefix.corrupt"):   # detected corruption: drop chains
+            cache.invalidate(n=1 + int(rng.integers(3)), rng=inj.rng)
+        alloc.check()
+        holds = _held_counts([s["gids"] for s in slots])
+        cached = {}
+        for gid, _, _ in cache._entries.values():
+            cached[gid] = cached.get(gid, 0) + 1
+        for g in set(holds) | set(cached):
+            assert alloc.refcount(g) == holds.get(g, 0) + cached.get(g, 0)
+    for s in slots:
+        for g in s["gids"]:
+            alloc.decref(g)
+    cache.drop_all()
+    alloc.check()
+    assert alloc.n_used() == 0 and alloc.n_free() == n_pages - 1
+
+
+def test_page_straddling_rollback_frees_nothing():
+    """The single dangerous case, deterministically: a slot whose cursor
+    sits one token into page 2 drafts W=4 tokens (crossing into page 3)
+    and has them ALL rejected. The rewind crosses a page boundary
+    backwards; a naive rollback would free the straddled page (still
+    covering reserved-but-unwritten columns) and a later burst would
+    write into a page the allocator re-issued to another slot. Under
+    full reservation the rollback must not touch the allocator at all."""
+    page, ns = 4, 4
+    alloc = BlockAllocator(16)
+    other = alloc.alloc_cols(range(2))          # a neighbour slot
+    gids = alloc.alloc_cols(range(ns))          # full reservation, cap=16
+    cur = 2 * page + 1                          # one token into page 2
+    snap = cur
+    cur += 4                                    # draft burst -> page 3
+    assert (cur - 1) // page == 3
+    before = ([alloc.refcount(g) for g in gids], alloc.n_free())
+    cur = snap                                  # verify rejects everything
+    assert ([alloc.refcount(g) for g in gids], alloc.n_free()) == before
+    alloc.check()
+    # the next burst reuses the same reserved pages without allocating
+    cur += 4
+    assert -(-cur // page) <= ns and alloc.n_free() == before[1]
+    for g in gids + other:
+        alloc.decref(g)
+    assert alloc.n_used() == 0
+
+
 def test_injector_is_deterministic():
     """Two injectors with the same seed fire identically; a different
     seed diverges somewhere. (The replay contract behind

